@@ -1,0 +1,92 @@
+//! Fault-tolerance demo (paper Section 3.3): run a value-carrying
+//! allreduce while injecting random packet loss and killing a spine
+//! switch mid-operation, then verify every host still holds the exact
+//! saturating fixed-point sum.
+//!
+//!     cargo run --release --example fault_tolerance -- \
+//!         [--loss 0.02] [--hosts 8] [--kill-spine]
+
+use canary::collectives::{expected_block_sum, runner, Algo};
+use canary::config::{FatTreeConfig, SimConfig};
+use canary::faults::FaultPlan;
+use canary::loadbalance::LoadBalancer;
+use canary::sim::US;
+use canary::util::cli::Args;
+use canary::workload::{build_scenario, Scenario};
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(argv, &["loss", "hosts", "kill-spine", "seed"])
+        .map_err(anyhow::Error::msg)?;
+    let loss: f64 = args.get_parse("loss", 0.02).map_err(anyhow::Error::msg)?;
+    let hosts: u32 = args.get_parse("hosts", 8).map_err(anyhow::Error::msg)?;
+    let seed: u64 = args.get_parse("seed", 7).map_err(anyhow::Error::msg)?;
+
+    let sc = Scenario {
+        topo: FatTreeConfig::tiny(),
+        sim: SimConfig::default()
+            .with_values(true)
+            .with_retrans(200 * US, true),
+        lb: LoadBalancer::default(),
+        algo: Algo::Canary,
+        n_allreduce_hosts: hosts,
+        congestion: false,
+        data_bytes: 64 * 1024,
+        record_results: true,
+    };
+    let mut exp = build_scenario(&sc, seed);
+    exp.net.faults = FaultPlan::default().with_loss(loss);
+    if args.flag("kill-spine") {
+        let spine = exp.ft.spine_id(0);
+        exp.net.faults = exp
+            .net
+            .faults
+            .clone()
+            .with_switch_failure(5 * US, spine);
+        println!("scheduled: spine {spine} dies at t=5us");
+    }
+    println!("injecting {:.1}% random packet loss", loss * 100.0);
+
+    let results = runner::run_to_completion(&mut exp.net, 10_000_000 * US);
+    let r = &results[0];
+    let m = &exp.net.metrics;
+    println!(
+        "finished: runtime {:?} us",
+        r.runtime_ps.map(|t| t as f64 / 1e6)
+    );
+    println!(
+        "recovery activity: {} drops injected, {} retrans requests, \
+         {} failure rounds, {} fallbacks, {} switch failures",
+        m.drops_injected,
+        m.retrans_requests,
+        m.failures,
+        m.fallbacks,
+        m.switch_failures
+    );
+
+    // verify every host's every block
+    let job = &exp.net.jobs[exp.job as usize];
+    let lanes = job.spec.lanes();
+    let mut verified = 0;
+    for block in 0..job.spec.total_blocks() {
+        let expected = expected_block_sum(
+            job.spec.tenant,
+            &job.spec.participants,
+            block,
+            lanes,
+        );
+        for rank in 0..job.spec.participants.len() as u32 {
+            let got = job
+                .results
+                .get(&(rank, block))
+                .expect("host missing a block result");
+            assert_eq!(got, &expected, "rank {rank} block {block}");
+            verified += 1;
+        }
+    }
+    println!(
+        "verified {verified} (host, block) results — all exact \
+         saturating fixed-point sums. Recovery preserved correctness."
+    );
+    Ok(())
+}

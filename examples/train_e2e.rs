@@ -1,0 +1,100 @@
+//! End-to-end validation driver (DESIGN.md §6): data-parallel training
+//! of the AOT-compiled transformer LM with its gradient allreduce
+//! simulated on the congested fat tree.
+//!
+//! All three layers compose here:
+//!   L1  Pallas quantize kernel — inside the train_step HLO
+//!   L2  JAX transformer fwd/bwd — AOT HLO executed via PJRT from Rust
+//!   L3  this coordinator — the Canary network simulation + the
+//!       saturating fixed-point gradient aggregation (switch ALU)
+//!
+//!     cargo run --release --example train_e2e -- \
+//!         [--preset tiny|base] [--workers N] [--steps N] [--algo canary]
+//!
+//! Results are recorded in EXPERIMENTS.md.
+
+use canary::collectives::Algo;
+use canary::runtime::Runtime;
+use canary::sim::ps_to_us;
+use canary::train::{TrainConfig, Trainer};
+use canary::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(
+        argv,
+        &["preset", "workers", "steps", "lr", "algo", "comm-every", "seed"],
+    )
+    .map_err(anyhow::Error::msg)?;
+
+    let algo = match args.get_or("algo", "canary") {
+        "canary" => Algo::Canary,
+        "ring" => Algo::Ring,
+        "static1" => Algo::StaticTree { n_trees: 1 },
+        "static4" => Algo::StaticTree { n_trees: 4 },
+        other => anyhow::bail!("unknown algo {other}"),
+    };
+    let cfg = TrainConfig {
+        preset: args.get_or("preset", "base").to_string(),
+        workers: args.get_parse("workers", 4).map_err(anyhow::Error::msg)?,
+        steps: args.get_parse("steps", 200).map_err(anyhow::Error::msg)?,
+        lr: args.get_parse("lr", 0.5).map_err(anyhow::Error::msg)?,
+        algo,
+        comm_every: args
+            .get_parse("comm-every", 10)
+            .map_err(anyhow::Error::msg)?,
+        congestion: true,
+        seed: args.get_parse("seed", 0xBEEF).map_err(anyhow::Error::msg)?,
+    };
+
+    let rt = Runtime::load(Runtime::default_dir())?;
+    let mut trainer = Trainer::new(&rt, cfg)?;
+    println!(
+        "# train_e2e preset={} params={} workers={} steps={} algo={}",
+        trainer.cfg.preset,
+        trainer.param_count,
+        trainer.cfg.workers,
+        trainer.cfg.steps,
+        trainer.cfg.algo.name(),
+    );
+    println!("step,loss,comm_us,wall_ms");
+    let t0 = std::time::Instant::now();
+    let logs = trainer.train()?;
+    for l in &logs {
+        println!(
+            "{},{:.4},{},{:.0}",
+            l.step,
+            l.mean_loss,
+            l.comm_ps
+                .map(|c| format!("{:.1}", ps_to_us(c)))
+                .unwrap_or_default(),
+            l.wall_ms
+        );
+    }
+    let first = &logs[..logs.len().min(10)];
+    let last = &logs[logs.len().saturating_sub(10)..];
+    let f: f32 =
+        first.iter().map(|l| l.mean_loss).sum::<f32>() / first.len() as f32;
+    let l: f32 =
+        last.iter().map(|l| l.mean_loss).sum::<f32>() / last.len() as f32;
+    println!(
+        "# loss {f:.4} -> {l:.4} over {} steps in {:.1}s wall",
+        logs.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    let comms: Vec<f64> = logs
+        .iter()
+        .filter_map(|x| x.comm_ps.map(ps_to_us))
+        .collect();
+    if !comms.is_empty() {
+        println!(
+            "# simulated gradient allreduce: mean {:.1} us over {} samples \
+             ({} workers, {} B gradient)",
+            comms.iter().sum::<f64>() / comms.len() as f64,
+            comms.len(),
+            trainer.cfg.workers,
+            trainer.param_count * 4,
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,207 @@
+"""AOT bridge: lower the L2/L1 computations to HLO **text** artifacts.
+
+HLO text (NOT ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids, which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Run once at build time (``make artifacts``):
+
+    python -m compile.aot --outdir ../artifacts --presets tiny,base
+
+and never again at runtime — the Rust binary is self-contained afterwards.
+Also writes ``manifest.json`` describing every artifact's I/O signature,
+the model configs, and golden vectors for the Rust bit-parity tests.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import aggregate, quantize, dequantize
+from .kernels import ref
+
+# Payload lanes per Canary packet in the scale simulations: 256 x 4 B
+# elements (Section 5.1 runs all in-network algorithms with 256 elements).
+PACKET_LANES = 256
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(*args):
+    return [
+        {"dtype": str(a.dtype), "shape": list(a.shape)} for a in args
+    ]
+
+
+def lower_model_artifacts(cfg: M.ModelConfig, outdir: str, manifest: dict):
+    """Lower init/train_step/apply_update/eval_loss for one preset."""
+    p = M.param_count(cfg)
+    b, t = cfg.batch, cfg.seq_len
+    flat = jax.ShapeDtypeStruct((p,), jnp.float32)
+    tokens = jax.ShapeDtypeStruct((b, t), jnp.int32)
+    qsum = jax.ShapeDtypeStruct((p,), jnp.int32)
+    scalar_f = jax.ShapeDtypeStruct((), jnp.float32)
+    seed = jax.ShapeDtypeStruct((), jnp.uint32)
+
+    arts = {
+        "init_params": (lambda s: (M.init_params(cfg, s),), (seed,)),
+        "train_step": (
+            lambda fp, tk: M.train_step(cfg, fp, tk),
+            (flat, tokens),
+        ),
+        "apply_update": (
+            lambda fp, qs, lr, nw: (M.apply_update(cfg, fp, qs, lr, nw),),
+            (flat, qsum, scalar_f, scalar_f),
+        ),
+        "eval_loss": (
+            lambda fp, tk: (M.loss_fn(cfg, fp, tk),),
+            (flat, tokens),
+        ),
+    }
+    for name, (fn, in_spec) in arts.items():
+        fname = f"{cfg.name}_{name}.hlo.txt"
+        path = os.path.join(outdir, fname)
+        lowered = jax.jit(fn).lower(*in_spec)
+        with open(path, "w") as f:
+            f.write(to_hlo_text(lowered))
+        out_shapes = jax.eval_shape(fn, *in_spec)
+        manifest["artifacts"][f"{cfg.name}_{name}"] = {
+            "file": fname,
+            "inputs": _sig(*in_spec),
+            "outputs": _sig(*out_shapes),
+        }
+        print(f"  wrote {fname}")
+
+    manifest["models"][cfg.name] = {
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "d_ff": cfg.d_ff,
+        "seq_len": cfg.seq_len,
+        "batch": cfg.batch,
+        "frac_bits": cfg.frac_bits,
+        "param_count": p,
+    }
+
+
+def lower_kernel_artifacts(outdir: str, manifest: dict):
+    """Standalone L1 kernels: switch aggregation + quantize pair."""
+    for w in (2, 4, 8, 16):
+        spec = jax.ShapeDtypeStruct((w, PACKET_LANES), jnp.int32)
+        fn = lambda x: (aggregate(x),)
+        name = f"aggregate_w{w}"
+        lowered = jax.jit(fn).lower(spec)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(outdir, fname), "w") as f:
+            f.write(to_hlo_text(lowered))
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "inputs": _sig(spec),
+            "outputs": [{"dtype": "int32", "shape": [PACKET_LANES]}],
+        }
+        print(f"  wrote {fname}")
+
+    fspec = jax.ShapeDtypeStruct((PACKET_LANES,), jnp.float32)
+    qspec = jax.ShapeDtypeStruct((PACKET_LANES,), jnp.int32)
+    for name, fn, spec, out_dt in (
+        ("quantize_block", lambda x: (quantize(x, frac_bits=20),), fspec, "int32"),
+        ("dequantize_block", lambda q: (dequantize(q, frac_bits=20),), qspec, "float32"),
+    ):
+        lowered = jax.jit(fn).lower(spec)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(outdir, fname), "w") as f:
+            f.write(to_hlo_text(lowered))
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "inputs": _sig(spec),
+            "outputs": [{"dtype": out_dt, "shape": [PACKET_LANES]}],
+        }
+        print(f"  wrote {fname}")
+
+
+def golden_vectors() -> dict:
+    """Small reference vectors for Rust <-> Pallas bit-parity tests.
+
+    f32 arrays are encoded as u32 bit patterns so JSON round-trips exactly.
+    """
+    rng = np.random.default_rng(0xC0FFEE)
+    payloads = rng.integers(-(2**30), 2**30, size=(6, 16), dtype=np.int32)
+    # force saturation on two lanes
+    payloads[:, 0] = 2**30 + 12345
+    payloads[:, 1] = -(2**30) - 54321
+    agg = ref.aggregate_ref(payloads)
+
+    x = (rng.standard_normal(24) * 3.0).astype(np.float32)
+    x[0] = 3000.0  # saturates at frac_bits=20
+    x[1] = -3000.0
+    q = ref.quantize_ref(x, frac_bits=20)
+    dq = ref.dequantize_ref(q, frac_bits=20)
+
+    return {
+        "frac_bits": 20,
+        "aggregate": {
+            "payloads": payloads.reshape(-1).tolist(),
+            "n": int(payloads.shape[0]),
+            "lanes": int(payloads.shape[1]),
+            "expected": agg.tolist(),
+        },
+        "quantize": {
+            "x_bits": x.view(np.uint32).tolist(),
+            "expected_q": q.tolist(),
+            "expected_dq_bits": dq.view(np.uint32).tolist(),
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument(
+        "--presets",
+        default="tiny,base",
+        help="comma-separated model presets to lower (tiny,small,base,large)",
+    )
+    # kept for Makefile compatibility: --out <file> also sets outdir
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    outdir = os.path.dirname(args.out) if args.out else args.outdir
+    os.makedirs(outdir, exist_ok=True)
+
+    manifest = {
+        "packet_lanes": PACKET_LANES,
+        "artifacts": {},
+        "models": {},
+        "golden": golden_vectors(),
+    }
+    print("lowering kernel artifacts")
+    lower_kernel_artifacts(outdir, manifest)
+    for preset in args.presets.split(","):
+        cfg = M.PRESETS[preset.strip()]
+        print(f"lowering model artifacts for preset '{cfg.name}'")
+        lower_model_artifacts(cfg, outdir, manifest)
+
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {os.path.join(outdir, 'manifest.json')}")
+    # marker file used by `make -q artifacts` freshness checks
+    with open(os.path.join(outdir, ".stamp"), "w") as f:
+        f.write("ok\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Layer-1 Pallas kernels (build-time only).
+
+These kernels model the compute hot-spots of Canary:
+
+- ``aggregate``: the switch-ALU emulation — saturating int32 lane-wise
+  accumulation of packet payloads into a descriptor accumulator.
+- ``quantize`` / ``dequantize``: the host-side f32 <-> fixed-point packing
+  used to put gradients on the wire (programmable switches have no FPU,
+  Section 6 of the paper).
+
+All kernels run with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls) and are checked against the pure-jnp oracles in ``ref.py``.
+"""
+
+from .aggregate import aggregate, sat_add_i32
+from .quantize import dequantize, quantize, Q_CLIP_F32
+
+__all__ = ["aggregate", "sat_add_i32", "quantize", "dequantize", "Q_CLIP_F32"]

@@ -1,0 +1,83 @@
+"""Switch-ALU aggregation as a Pallas kernel.
+
+The Canary dataplane accumulates the int32 lanes of every reduction packet
+into the descriptor's accumulator with *saturating* adds — this is what the
+Tofino ALUs do, and what keeps fixed-point aggregation order-independent in
+the absence of overflow (and deterministic-to-the-bit even with it, given a
+fixed arrival order).
+
+TPU adaptation (DESIGN.md §3): payloads are laid out ``[n_packets, lanes]``
+in HBM; the BlockSpec streams ``[n_packets, LANE_TILE]`` tiles into VMEM and
+the accumulation runs on the VPU (element-wise work — the MXU plays no role
+here). The accumulator tile stays VMEM-resident across the sequential packet
+loop, mirroring the Tofino register array that holds the descriptor.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# One lane tile per grid step. 128 int32 lanes == 512 B == one VPU-friendly
+# vector register row; also exactly the paper's Tofino payload (128 B) x4.
+LANE_TILE = 128
+
+_I32_MAX = 2**31 - 1
+_I32_MIN = -(2**31)
+
+
+def sat_add_i32(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Element-wise saturating int32 add, pure int32 arithmetic.
+
+    Mirrors Rust's ``i32::saturating_add`` bit-for-bit: overflow is detected
+    with int32 comparisons only (``a + b`` may wrap in the untaken branch;
+    XLA integer add is two's-complement so the wrapped value is well defined
+    and then discarded by the select).
+    """
+    a = a.astype(jnp.int32)
+    b = b.astype(jnp.int32)
+    imax = jnp.full_like(a, _I32_MAX)
+    imin = jnp.full_like(a, _I32_MIN)
+    pos_ovf = (b > 0) & (a > imax - b)
+    neg_ovf = (b < 0) & (a < imin - b)
+    return jnp.where(pos_ovf, imax, jnp.where(neg_ovf, imin, a + b))
+
+
+def _aggregate_kernel(p_ref, o_ref):
+    """Sequentially fold ``n`` packet payload rows into the accumulator."""
+    n = p_ref.shape[0]
+
+    def body(i, acc):
+        return sat_add_i32(acc, p_ref[i, :])
+
+    o_ref[...] = jax.lax.fori_loop(
+        0, n, body, jnp.zeros(o_ref.shape, jnp.int32)
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def aggregate(payloads: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """Saturating int32 sum of packet payloads along axis 0.
+
+    Args:
+      payloads: ``int32[n_packets, lanes]``; ``lanes`` is padded internally
+        to a multiple of ``LANE_TILE``.
+
+    Returns:
+      ``int32[lanes]`` — the descriptor accumulator after all packets.
+    """
+    if payloads.ndim != 2:
+        raise ValueError(f"payloads must be rank 2, got {payloads.shape}")
+    n, lanes = payloads.shape
+    pad = (-lanes) % LANE_TILE
+    padded = jnp.pad(payloads.astype(jnp.int32), ((0, 0), (0, pad)))
+    out = pl.pallas_call(
+        _aggregate_kernel,
+        grid=((lanes + pad) // LANE_TILE,),
+        in_specs=[pl.BlockSpec((n, LANE_TILE), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((LANE_TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((lanes + pad,), jnp.int32),
+        interpret=interpret,
+    )(padded)
+    return out[:lanes]

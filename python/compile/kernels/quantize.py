@@ -1,0 +1,76 @@
+"""Host-side f32 <-> fixed-point packing as Pallas kernels.
+
+Programmable switches have no floating-point units (paper Section 6), so
+hosts convert gradient values to fixed point before they hit the wire:
+``q = round(x * 2^f)`` clipped to the int32 range. The inverse divides by
+the scale. Both are expressed as lane-tiled Pallas kernels so they lower
+into the same HLO module as the L2 train step.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE_TILE = 128
+
+# Largest f32 that converts to int32 without UB on either side of the
+# bridge: 2147483520 = nextafter(2^31, 0) in f32. Clamping to +/- this value
+# in the *float* domain before the cast gives bit parity with the Rust
+# mirror (`x.clamp(-Q_CLIP, Q_CLIP) as i32`).
+Q_CLIP_F32 = 2147483520.0
+
+
+def _quantize_kernel(x_ref, scale_ref, o_ref):
+    scaled = x_ref[...] * scale_ref[0]
+    clipped = jnp.clip(scaled, -Q_CLIP_F32, Q_CLIP_F32)
+    # round-half-away-from-zero, matching Rust's f32::round()
+    rounded = jnp.where(
+        clipped >= 0.0, jnp.floor(clipped + 0.5), jnp.ceil(clipped - 0.5)
+    )
+    o_ref[...] = rounded.astype(jnp.int32)
+
+
+def _dequantize_kernel(q_ref, inv_scale_ref, o_ref):
+    o_ref[...] = q_ref[...].astype(jnp.float32) * inv_scale_ref[0]
+
+
+def _tiled_call(kernel, x, aux, out_dtype, interpret):
+    (n,) = x.shape
+    pad = (-n) % LANE_TILE
+    padded = jnp.pad(x, (0, pad))
+    out = pl.pallas_call(
+        kernel,
+        grid=((n + pad) // LANE_TILE,),
+        in_specs=[
+            pl.BlockSpec((LANE_TILE,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((LANE_TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n + pad,), out_dtype),
+        interpret=interpret,
+    )(padded, aux)
+    return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("frac_bits", "interpret"))
+def quantize(
+    x: jax.Array, *, frac_bits: int = 20, interpret: bool = True
+) -> jax.Array:
+    """f32[n] -> fixed-point int32[n] with scale ``2**frac_bits``."""
+    scale = jnp.array([float(2**frac_bits)], jnp.float32)
+    return _tiled_call(
+        _quantize_kernel, x.astype(jnp.float32), scale, jnp.int32, interpret
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("frac_bits", "interpret"))
+def dequantize(
+    q: jax.Array, *, frac_bits: int = 20, interpret: bool = True
+) -> jax.Array:
+    """Fixed-point int32[n] -> f32[n] with scale ``2**frac_bits``."""
+    inv = jnp.array([1.0 / float(2**frac_bits)], jnp.float32)
+    return _tiled_call(
+        _dequantize_kernel, q.astype(jnp.int32), inv, jnp.float32, interpret
+    )

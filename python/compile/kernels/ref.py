@@ -1,0 +1,50 @@
+"""Pure-jnp/numpy oracles for the Pallas kernels.
+
+These are the CORE correctness signal: ``python/tests/test_kernels.py``
+sweeps shapes/values with hypothesis and asserts the Pallas kernels match
+these references exactly (integer kernels) / to f32 ulp (float kernels).
+They are also mirrored, bit-for-bit, by the Rust dataplane
+(``rust/src/switch/alu.rs``) — the manifest carries golden vectors produced
+here so the Rust tests can assert parity without a Python runtime.
+"""
+
+import numpy as np
+
+I32_MAX = 2**31 - 1
+I32_MIN = -(2**31)
+Q_CLIP_F32 = 2147483520.0
+
+
+def sat_add_i32_ref(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Element-wise saturating int32 add (int64 intermediate)."""
+    s = a.astype(np.int64) + b.astype(np.int64)
+    return np.clip(s, I32_MIN, I32_MAX).astype(np.int32)
+
+
+def aggregate_ref(payloads: np.ndarray) -> np.ndarray:
+    """Sequential saturating int32 fold along axis 0 (order matters only
+    when saturation occurs; otherwise equals the plain sum)."""
+    acc = np.zeros(payloads.shape[1:], np.int32)
+    for row in payloads.astype(np.int32):
+        acc = sat_add_i32_ref(acc, row)
+    return acc
+
+
+def quantize_ref(x: np.ndarray, frac_bits: int = 20) -> np.ndarray:
+    """f32 -> fixed-point int32: round-half-away-from-zero of x * 2^f,
+    clamped to the float-domain clip used by the kernel and Rust."""
+    scaled = x.astype(np.float32) * np.float32(2.0**frac_bits)
+    clipped = np.clip(scaled, -Q_CLIP_F32, Q_CLIP_F32)
+    rounded = np.where(
+        clipped >= 0.0,
+        np.floor(clipped + np.float32(0.5)),
+        np.ceil(clipped - np.float32(0.5)),
+    ).astype(np.float32)
+    return rounded.astype(np.int32)
+
+
+def dequantize_ref(q: np.ndarray, frac_bits: int = 20) -> np.ndarray:
+    """Fixed-point int32 -> f32."""
+    return (q.astype(np.float32) * np.float32(1.0 / 2.0**frac_bits)).astype(
+        np.float32
+    )

@@ -1,0 +1,207 @@
+"""Layer-2: the JAX model — a decoder-only transformer LM.
+
+This is the paper's *motivating workload* (distributed training whose
+gradient allreduce Canary accelerates). The whole training computation is
+expressed against a single **flat f32 parameter vector** so the Rust side
+manages exactly one buffer; unflattening happens inside the traced function
+and is free after XLA fusion.
+
+Artifacts lowered by ``aot.py`` (all pure functions of their inputs):
+
+- ``init_params(seed)                -> f32[P]``
+- ``train_step(flat, tokens)         -> (loss f32[], qgrads i32[P])`` —
+  fwd+bwd and fixed-point packing of the gradient via the L1 Pallas
+  quantize kernel, so L1 lowers into the same HLO module.
+- ``apply_update(flat, qsum, lr, nw) -> f32[P]`` — dequantize the
+  allreduced (summed) fixed-point gradient, average over ``nw`` workers,
+  SGD step.
+- ``eval_loss(flat, tokens)          -> f32[]``
+
+The gradient leaves ``train_step`` already quantized: the wire format of
+Canary packets *is* the int32 fixed-point produced here, and the simulated
+switches aggregate it with the saturating ALU adds of ``kernels.aggregate``.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import dequantize, quantize
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Transformer hyper-parameters; ``name`` selects a preset."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq_len: int
+    batch: int
+    frac_bits: int = 20
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+PRESETS = {
+    # tiny: unit tests / CI — sub-second end to end
+    "tiny": ModelConfig("tiny", 256, 64, 2, 4, 256, 32, 4),
+    # small: quickstart example (~0.9M params)
+    "small": ModelConfig("small", 512, 128, 2, 4, 512, 64, 8),
+    # base: default train_e2e model (~3.6M params)
+    "base": ModelConfig("base", 512, 256, 4, 8, 1024, 128, 8),
+    # large: ~100M params, the paper-scale validation target
+    "large": ModelConfig("large", 8192, 768, 12, 12, 3072, 256, 8),
+}
+
+
+def param_spec(cfg: ModelConfig):
+    """Ordered (name, shape) list defining the flat-vector layout."""
+    d, f, v, t = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.seq_len
+    spec = [("tok_emb", (v, d)), ("pos_emb", (t, d))]
+    for i in range(cfg.n_layers):
+        spec += [
+            (f"l{i}.ln1_g", (d,)),
+            (f"l{i}.ln1_b", (d,)),
+            (f"l{i}.wq", (d, d)),
+            (f"l{i}.wk", (d, d)),
+            (f"l{i}.wv", (d, d)),
+            (f"l{i}.wo", (d, d)),
+            (f"l{i}.ln2_g", (d,)),
+            (f"l{i}.ln2_b", (d,)),
+            (f"l{i}.w1", (d, f)),
+            (f"l{i}.b1", (f,)),
+            (f"l{i}.w2", (f, d)),
+            (f"l{i}.b2", (d,)),
+        ]
+    spec += [("lnf_g", (d,)), ("lnf_b", (d,)), ("head", (d, v))]
+    return spec
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Total number of scalar parameters P."""
+    total = 0
+    for _, shape in param_spec(cfg):
+        n = 1
+        for s in shape:
+            n *= s
+        total += n
+    return total
+
+
+def unflatten(cfg: ModelConfig, flat: jax.Array) -> dict:
+    """Slice the flat vector into the named parameter dict."""
+    params, off = {}, 0
+    for name, shape in param_spec(cfg):
+        n = 1
+        for s in shape:
+            n *= s
+        params[name] = jax.lax.dynamic_slice(flat, (off,), (n,)).reshape(shape)
+        off += n
+    return params
+
+
+def flatten(cfg: ModelConfig, params: dict) -> jax.Array:
+    """Concatenate the parameter dict back into the flat layout."""
+    return jnp.concatenate(
+        [params[name].reshape(-1) for name, _ in param_spec(cfg)]
+    )
+
+
+def init_params(cfg: ModelConfig, seed: jax.Array) -> jax.Array:
+    """Initialize the flat parameter vector from a uint32 seed scalar."""
+    key = jax.random.PRNGKey(seed.astype(jnp.uint32))
+    parts = []
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("_g",)):
+            parts.append(jnp.ones(shape, jnp.float32).reshape(-1))
+        elif name.endswith(("_b", ".b1", ".b2")):
+            parts.append(jnp.zeros(shape, jnp.float32).reshape(-1))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            std = (1.0 / fan_in) ** 0.5
+            parts.append(
+                (jax.random.normal(sub, shape, jnp.float32) * std).reshape(-1)
+            )
+    return jnp.concatenate(parts)
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _attention(cfg: ModelConfig, p, i, x):
+    b, t, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+
+    def proj(w):
+        return (x @ p[f"l{i}.{w}"]).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = proj("wq"), proj("wk"), proj("wv")
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    att = jnp.where(mask, att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, d)
+    return out @ p[f"l{i}.wo"]
+
+
+def _mlp(p, i, x):
+    h = jax.nn.gelu(x @ p[f"l{i}.w1"] + p[f"l{i}.b1"])
+    return h @ p[f"l{i}.w2"] + p[f"l{i}.b2"]
+
+
+def forward_logits(cfg: ModelConfig, flat: jax.Array, tokens: jax.Array):
+    """``tokens i32[B, T] -> logits f32[B, T, V]`` (causal LM)."""
+    p = unflatten(cfg, flat)
+    b, t = tokens.shape
+    x = p["tok_emb"][tokens] + p["pos_emb"][:t][None, :, :]
+    for i in range(cfg.n_layers):
+        x = x + _attention(
+            cfg, p, i, _layer_norm(x, p[f"l{i}.ln1_g"], p[f"l{i}.ln1_b"])
+        )
+        x = x + _mlp(p, i, _layer_norm(x, p[f"l{i}.ln2_g"], p[f"l{i}.ln2_b"]))
+    x = _layer_norm(x, p["lnf_g"], p["lnf_b"])
+    return x @ p["head"]
+
+
+def loss_fn(cfg: ModelConfig, flat: jax.Array, tokens: jax.Array):
+    """Mean next-token cross-entropy over ``tokens[:, 1:]``."""
+    logits = forward_logits(cfg, flat, tokens[:, :-1])
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def train_step(cfg: ModelConfig, flat: jax.Array, tokens: jax.Array):
+    """Fwd+bwd, then fixed-point-pack the gradient (L1 Pallas kernel)."""
+    loss, grads = jax.value_and_grad(
+        lambda fp: loss_fn(cfg, fp, tokens)
+    )(flat)
+    qgrads = quantize(grads, frac_bits=cfg.frac_bits)
+    return loss, qgrads
+
+
+def apply_update(
+    cfg: ModelConfig,
+    flat: jax.Array,
+    qsum: jax.Array,
+    lr: jax.Array,
+    n_workers: jax.Array,
+):
+    """SGD step from the allreduced (summed) fixed-point gradient."""
+    gsum = dequantize(qsum, frac_bits=cfg.frac_bits)
+    return flat - lr * (gsum / n_workers)

@@ -1,0 +1,87 @@
+"""AOT bridge tests: artifacts lower, parse, and the manifest is faithful."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+ARTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def artifacts_dir(tmp_path_factory):
+    """Use the repo artifacts/ if present (built by `make artifacts`),
+    otherwise lower a fresh tiny-only set into a temp dir."""
+    if os.path.exists(os.path.join(ARTS, "manifest.json")):
+        return ARTS
+    out = tmp_path_factory.mktemp("arts")
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--outdir", str(out),
+         "--presets", "tiny"],
+        check=True,
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+    )
+    return str(out)
+
+
+def _manifest(artifacts_dir):
+    with open(os.path.join(artifacts_dir, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_lists_all_files(artifacts_dir):
+    man = _manifest(artifacts_dir)
+    assert man["packet_lanes"] == 256
+    for name, art in man["artifacts"].items():
+        path = os.path.join(artifacts_dir, art["file"])
+        assert os.path.exists(path), f"missing artifact {name}"
+        assert os.path.getsize(path) > 100
+
+
+def test_hlo_text_is_parseable_hlo(artifacts_dir):
+    man = _manifest(artifacts_dir)
+    for art in man["artifacts"].values():
+        with open(os.path.join(artifacts_dir, art["file"])) as f:
+            text = f.read()
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+
+
+def test_signatures_match_model_config(artifacts_dir):
+    man = _manifest(artifacts_dir)
+    for preset, mc in man["models"].items():
+        p = mc["param_count"]
+        ts = man["artifacts"][f"{preset}_train_step"]
+        assert ts["inputs"][0] == {"dtype": "float32", "shape": [p]}
+        assert ts["inputs"][1] == {
+            "dtype": "int32",
+            "shape": [mc["batch"], mc["seq_len"]],
+        }
+        assert ts["outputs"][0]["shape"] == []
+        assert ts["outputs"][1] == {"dtype": "int32", "shape": [p]}
+
+
+def test_golden_vectors_self_consistent(artifacts_dir):
+    from compile.kernels import ref
+
+    g = _manifest(artifacts_dir)["golden"]
+    agg = g["aggregate"]
+    p = np.array(agg["payloads"], np.int32).reshape(agg["n"], agg["lanes"])
+    np.testing.assert_array_equal(
+        ref.aggregate_ref(p), np.array(agg["expected"], np.int32)
+    )
+    q = g["quantize"]
+    x = np.array(q["x_bits"], np.uint32).view(np.float32)
+    np.testing.assert_array_equal(
+        ref.quantize_ref(x, g["frac_bits"]),
+        np.array(q["expected_q"], np.int32),
+    )
+    dq = np.array(q["expected_dq_bits"], np.uint32).view(np.float32)
+    np.testing.assert_array_equal(
+        ref.dequantize_ref(np.array(q["expected_q"], np.int32),
+                           g["frac_bits"]),
+        dq,
+    )

@@ -1,0 +1,121 @@
+"""Pallas kernels vs pure-numpy oracles — the CORE correctness signal.
+
+Hypothesis sweeps shapes and value distributions (including the saturation
+and clipping edges) and asserts exact (integer) / bit-exact (float) parity
+with ``compile.kernels.ref``.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    Q_CLIP_F32,
+    aggregate,
+    dequantize,
+    quantize,
+    sat_add_i32,
+)
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=40, deadline=None)
+
+i32s = st.integers(min_value=-(2**31), max_value=2**31 - 1)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 12),
+    lanes=st.integers(1, 300),
+    seed=st.integers(0, 2**31 - 1),
+    extreme=st.booleans(),
+)
+def test_aggregate_matches_ref(n, lanes, seed, extreme):
+    rng = np.random.default_rng(seed)
+    if extreme:
+        # values near the int32 edges to exercise saturation
+        p = rng.integers(-(2**31), 2**31, size=(n, lanes), dtype=np.int64)
+        p = p.astype(np.int32)
+    else:
+        p = rng.integers(-(2**20), 2**20, size=(n, lanes), dtype=np.int32)
+    out = np.asarray(aggregate(p))
+    exp = ref.aggregate_ref(p)
+    np.testing.assert_array_equal(out, exp)
+
+
+@settings(**SETTINGS)
+@given(a=i32s, b=i32s)
+def test_sat_add_scalar_pairs(a, b):
+    av = np.array([a], np.int32)
+    bv = np.array([b], np.int32)
+    out = np.asarray(sat_add_i32(av, bv))
+    np.testing.assert_array_equal(out, ref.sat_add_i32_ref(av, bv))
+
+
+def test_aggregate_saturates_and_sticks():
+    # once saturated, further positive adds keep the lane at I32_MAX
+    p = np.full((8, 4), 2**30, np.int32)
+    out = np.asarray(aggregate(p))
+    assert (out == ref.I32_MAX).all()
+
+
+def test_aggregate_zero_identity():
+    p = np.zeros((3, 17), np.int32)
+    assert (np.asarray(aggregate(p)) == 0).all()
+
+
+def test_aggregate_order_independent_without_saturation():
+    rng = np.random.default_rng(5)
+    p = rng.integers(-(2**20), 2**20, size=(6, 64), dtype=np.int32)
+    a = np.asarray(aggregate(p))
+    b = np.asarray(aggregate(p[::-1].copy()))
+    np.testing.assert_array_equal(a, b)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 500),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([1e-4, 1.0, 100.0, 5000.0]),
+    frac_bits=st.sampled_from([8, 16, 20, 24]),
+)
+def test_quantize_matches_ref(n, seed, scale, frac_bits):
+    rng = np.random.default_rng(seed)
+    x = (rng.standard_normal(n) * scale).astype(np.float32)
+    q = np.asarray(quantize(x, frac_bits=frac_bits))
+    np.testing.assert_array_equal(q, ref.quantize_ref(x, frac_bits))
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 500), seed=st.integers(0, 2**31 - 1))
+def test_dequantize_matches_ref(n, seed):
+    rng = np.random.default_rng(seed)
+    q = rng.integers(-(2**31), 2**31, size=n, dtype=np.int64).astype(np.int32)
+    dq = np.asarray(dequantize(q))
+    np.testing.assert_array_equal(dq, ref.dequantize_ref(q))
+
+
+def test_quantize_clips_at_int_range():
+    x = np.array([1e30, -1e30, np.float32(Q_CLIP_F32)], np.float32)
+    q = np.asarray(quantize(x, frac_bits=0))
+    assert q[0] == 2147483520 and q[1] == -2147483520
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 200), seed=st.integers(0, 2**31 - 1))
+def test_quantize_roundtrip_error_bound(n, seed):
+    # |dequantize(quantize(x)) - x| <= 0.5 * 2^-f for in-range values
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(n).astype(np.float32)
+    dq = np.asarray(dequantize(quantize(x, frac_bits=20), frac_bits=20))
+    assert np.abs(dq - x).max() <= 0.5 * 2.0**-20 + 1e-9
+
+
+def test_quantize_fixed_point_sum_is_exact():
+    # the whole point of fixed point on the wire: int sums commute exactly
+    rng = np.random.default_rng(11)
+    xs = rng.standard_normal((8, 128)).astype(np.float32)
+    qs = np.stack([np.asarray(quantize(x)) for x in xs])
+    total_fwd = ref.aggregate_ref(qs)
+    total_rev = ref.aggregate_ref(qs[::-1].copy())
+    np.testing.assert_array_equal(total_fwd, total_rev)

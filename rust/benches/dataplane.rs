@@ -1,0 +1,71 @@
+//! Dataplane hot-path benches (`cargo bench --bench dataplane`): the
+//! switch ALU aggregation (L1 mirror), quantization, descriptor hashing
+//! and the multicast shard encoding. These are the per-packet costs that
+//! bound simulated packets/second.
+
+use std::time::Duration;
+
+use canary::switch::alu;
+use canary::switch::canary::Dataplane;
+use canary::switch::shards;
+use canary::util::bench::{bench, throughput};
+use canary::util::rng::Rng;
+
+fn main() {
+    println!("== dataplane benches ==");
+    let t = Duration::from_millis(400);
+
+    // saturating accumulate: 256-lane payload (the per-packet ALU work)
+    let mut rng = Rng::new(3);
+    let mut acc: Vec<i32> = (0..256).map(|_| rng.i32()).collect();
+    let pkt: Vec<i32> = (0..256).map(|_| rng.i32()).collect();
+    let m = bench("sat_accumulate_256_lanes_x1k", t, || {
+        for _ in 0..1000 {
+            alu::sat_accumulate(&mut acc, &pkt);
+        }
+        std::hint::black_box(&acc);
+    });
+    println!(
+        "   -> {:.2} G lanes/s ({:.1} M packets/s)\n",
+        throughput(&m, 256_000.0) / 1e9,
+        throughput(&m, 1000.0) / 1e6
+    );
+
+    // quantize path (host-side gradient packing)
+    let xs: Vec<f32> = (0..4096).map(|i| (i as f32).sin()).collect();
+    let m = bench("quantize_4096_f32", t, || {
+        std::hint::black_box(alu::quantize_vec(&xs, 20));
+    });
+    println!(
+        "   -> {:.2} G elems/s\n",
+        throughput(&m, 4096.0) / 1e9
+    );
+
+    // descriptor slot hashing
+    let dp = Dataplane::new(32 * 1024, 7);
+    let m = bench("descriptor_slot_hash_x1M", t, || {
+        let mut acc = 0u32;
+        for key in 0..1_000_000u64 {
+            acc = acc.wrapping_add(dp.slot_of(key));
+        }
+        std::hint::black_box(acc);
+    });
+    println!(
+        "   -> {:.0} M hashes/s\n",
+        throughput(&m, 1_000_000.0) / 1e6
+    );
+
+    // multicast shard encode/decode (Section 4.2)
+    let mut rng = Rng::new(9);
+    let bitmaps: Vec<u64> = (0..1024).map(|_| rng.next_u64()).collect();
+    let m = bench("shard_encode_decode_64p4s_x1k", t, || {
+        for &b in &bitmaps {
+            let keys = shards::encode(b, 64, 4);
+            std::hint::black_box(shards::decode(&keys, 64, 4));
+        }
+    });
+    println!(
+        "   -> {:.2} M bitmaps/s\n",
+        throughput(&m, 1024.0) / 1e6
+    );
+}

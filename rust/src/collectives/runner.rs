@@ -1,0 +1,240 @@
+//! Job installation and experiment running: wires protocol engines onto
+//! hosts, configures static trees on switches, kicks everything off and
+//! collects the results.
+
+use crate::collectives::{Algo, JobRuntime, JobSpec};
+use crate::host::{
+    background::BgHost, canary_host::CanaryHost, ring::RingHost,
+    static_host::StaticHost, Proto,
+};
+use crate::sim::{Network, NodeBody, NodeId, Time};
+use crate::switch::static_tree::{StaticJobInfo, TreeRole};
+use crate::topology::FatTree;
+
+/// Result summary of one finished (or timed-out) allreduce job.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub tenant: u16,
+    pub algo: Algo,
+    pub n_hosts: usize,
+    pub data_bytes: u64,
+    pub runtime_ps: Option<Time>,
+    pub goodput_gbps: Option<f64>,
+}
+
+fn set_proto(net: &mut Network, host: NodeId, proto: Proto) {
+    match &mut net.nodes[host as usize].body {
+        NodeBody::Host(h) => {
+            assert!(
+                matches!(h.proto, Proto::Idle),
+                "host {host} already has a protocol installed"
+            );
+            h.proto = proto;
+        }
+        _ => panic!("node {host} is not a host"),
+    }
+}
+
+/// Install a Canary allreduce job. Returns the job index.
+pub fn install_canary_job(
+    net: &mut Network,
+    tenant: u16,
+    participants: Vec<NodeId>,
+    data_bytes: u64,
+    record_results: bool,
+) -> u32 {
+    let spec = JobSpec {
+        tenant,
+        algo: Algo::Canary,
+        participants: participants.clone(),
+        data_bytes,
+        window: net.cfg.host_window,
+        payload_bytes: net.cfg.payload_bytes,
+        tree_roots: vec![],
+        record_results,
+    };
+    let total_blocks = spec.total_blocks();
+    let job = net.jobs.len() as u32;
+    net.jobs.push(JobRuntime::new(spec));
+    for (rank, &h) in participants.iter().enumerate() {
+        set_proto(
+            net,
+            h,
+            Proto::Canary(CanaryHost::new(job, rank as u32, total_blocks)),
+        );
+    }
+    job
+}
+
+/// Install a static-tree in-network allreduce with `n_trees` trees rooted
+/// at `roots` (SHARP-like for 1 tree, PANAMA-like for several).
+pub fn install_static_job(
+    net: &mut Network,
+    ft: &FatTree,
+    tenant: u16,
+    participants: Vec<NodeId>,
+    data_bytes: u64,
+    roots: Vec<NodeId>,
+    record_results: bool,
+) -> u32 {
+    assert!(!roots.is_empty());
+    let spec = JobSpec {
+        tenant,
+        algo: Algo::StaticTree {
+            n_trees: roots.len() as u8,
+        },
+        participants: participants.clone(),
+        data_bytes,
+        window: net.cfg.host_window,
+        payload_bytes: net.cfg.payload_bytes,
+        tree_roots: roots.clone(),
+        record_results,
+    };
+    let total_blocks = spec.total_blocks();
+    let job = net.jobs.len() as u32;
+    net.jobs.push(JobRuntime::new(spec));
+    for (rank, &h) in participants.iter().enumerate() {
+        set_proto(
+            net,
+            h,
+            Proto::Static(StaticHost::new(job, rank as u32, total_blocks)),
+        );
+    }
+
+    // ---- control plane: configure the trees on the switches ----
+    // participating leaves and their member hosts
+    let mut leaf_members: std::collections::BTreeMap<u32, Vec<NodeId>> =
+        Default::default();
+    for &h in &participants {
+        leaf_members.entry(ft.leaf_of_host(h)).or_default().push(h);
+    }
+    for (t, &root) in roots.iter().enumerate() {
+        let root_spine_idx = root - ft.n_hosts() - ft.cfg.n_leaf;
+        // each participating leaf aggregates its local hosts, then sends
+        // up the fixed edge to the root spine
+        for (&leaf_idx, members) in &leaf_members {
+            let leaf_id = ft.leaf_id(leaf_idx);
+            let child_ports: Vec<u16> = members
+                .iter()
+                .map(|&h| ft.leaf_host_port(h))
+                .collect();
+            let role = TreeRole::Leaf {
+                parent_port: ft.leaf_up_port(root_spine_idx),
+                expected: members.len() as u32,
+                child_ports,
+            };
+            install_tree_role(net, leaf_id, tenant, t, roots.len(), role);
+        }
+        // root spine aggregates one partial per participating leaf
+        let child_ports: Vec<u16> = leaf_members
+            .keys()
+            .map(|&l| ft.spine_down_port(l))
+            .collect();
+        let role = TreeRole::Root {
+            expected: leaf_members.len() as u32,
+            child_ports,
+        };
+        install_tree_role(net, root, tenant, t, roots.len(), role);
+    }
+    job
+}
+
+fn install_tree_role(
+    net: &mut Network,
+    switch: NodeId,
+    tenant: u16,
+    tree: usize,
+    n_trees: usize,
+    role: TreeRole,
+) {
+    match &mut net.nodes[switch as usize].body {
+        NodeBody::Switch(sw) => {
+            let info = sw
+                .static_tree
+                .jobs
+                .entry(tenant)
+                .or_insert_with(StaticJobInfo::default);
+            if info.trees.len() < n_trees {
+                info.trees.resize(n_trees, None);
+            }
+            info.trees[tree] = Some(role);
+        }
+        _ => panic!("node {switch} is not a switch"),
+    }
+}
+
+/// Install a host-based ring allreduce job.
+pub fn install_ring_job(
+    net: &mut Network,
+    tenant: u16,
+    participants: Vec<NodeId>,
+    data_bytes: u64,
+) -> u32 {
+    let n = participants.len() as u32;
+    let spec = JobSpec {
+        tenant,
+        algo: Algo::Ring,
+        participants: participants.clone(),
+        data_bytes,
+        window: net.cfg.host_window,
+        payload_bytes: net.cfg.payload_bytes,
+        tree_roots: vec![],
+        record_results: false,
+    };
+    let payload = net.cfg.payload_bytes;
+    let job = net.jobs.len() as u32;
+    net.jobs.push(JobRuntime::new(spec));
+    for (rank, &h) in participants.iter().enumerate() {
+        set_proto(
+            net,
+            h,
+            Proto::Ring(RingHost::new(
+                job,
+                rank as u32,
+                n,
+                data_bytes,
+                payload,
+            )),
+        );
+    }
+    job
+}
+
+/// Install the background random-uniform traffic job on `hosts`.
+pub fn install_background_job(net: &mut Network, hosts: Vec<NodeId>) -> u32 {
+    let spec = JobSpec {
+        tenant: u16::MAX,
+        algo: Algo::Background,
+        participants: hosts.clone(),
+        data_bytes: 0,
+        window: 0,
+        payload_bytes: net.cfg.payload_bytes,
+        tree_roots: vec![],
+        record_results: false,
+    };
+    let job = net.jobs.len() as u32;
+    net.jobs.push(JobRuntime::new(spec));
+    for &h in &hosts {
+        set_proto(net, h, Proto::Background(BgHost::new(job)));
+    }
+    job
+}
+
+/// Kick all jobs and run to completion (or `max_time`). Returns one
+/// [`JobResult`] per allreduce job, in installation order.
+pub fn run_to_completion(net: &mut Network, max_time: Time) -> Vec<JobResult> {
+    net.kick_jobs();
+    net.run(max_time);
+    net.jobs
+        .iter()
+        .filter(|j| j.spec.algo.is_allreduce())
+        .map(|j| JobResult {
+            tenant: j.spec.tenant,
+            algo: j.spec.algo,
+            n_hosts: j.spec.participants.len(),
+            data_bytes: j.spec.data_bytes,
+            runtime_ps: j.runtime_ps(),
+            goodput_gbps: j.goodput_gbps(),
+        })
+        .collect()
+}

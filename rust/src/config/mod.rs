@@ -1,0 +1,224 @@
+//! Typed simulation / experiment configuration.
+//!
+//! Defaults reproduce the paper's Section 5.2 setup: 100 Gbps links,
+//! ~300 ns per hop, 1 µs Canary timeout, 32 Ki descriptor slots (the
+//! Tofino prototype allocated 32 K descriptors), and MTU-bounded packets
+//! with 256 4-byte payload elements.
+
+use crate::sim::{Time, MS, NS, PS_PER_BYTE_100G, US};
+
+/// Physical + protocol constants for one simulation run.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    /// Serialization cost (80 ps/byte = 100 Gbps).
+    pub link_ps_per_byte: u64,
+    /// Propagation + switch pipeline latency per hop.
+    pub link_latency_ps: Time,
+    /// Logical per-port queue capacity (adaptive threshold reference;
+    /// droppable traffic overflowing it is discarded).
+    pub port_queue_capacity: u64,
+    /// Reduction-packet payload bytes. 1024 (256 x 4 B elements) in the
+    /// scale simulations (Section 5.1's extrapolated packet), 128 on the
+    /// Tofino prototype (Fig. 6).
+    pub payload_bytes: u32,
+    /// Canary descriptor timeout (Section 3.1.1).
+    pub canary_timeout_ps: Time,
+    /// Canary descriptor table slots per switch (Section 5.1: 32 K).
+    pub descriptor_slots: u32,
+    /// Per-host in-flight block cap; 0 = open-loop line-rate streaming
+    /// (the paper's calibrated setup — in-flight blocks are then bounded
+    /// by the bandwidth-delay product, Section 3.2.2).
+    pub host_window: u32,
+    /// Arm per-block loss-recovery timers. Off by default (pure timing
+    /// runs on a lossless fabric); fault-tolerance experiments turn it
+    /// on together with a FaultPlan.
+    pub arm_retrans_timers: bool,
+    /// Host retransmission timeout (Section 3.3: ~2 RTT).
+    pub retrans_timeout_ps: Time,
+    /// In-network retries before falling back to host-based reduction.
+    pub max_retries: u32,
+    /// Carry and aggregate real int32 lanes (correctness mode) instead of
+    /// modelling sizes only (perf mode).
+    pub carry_values: bool,
+    /// Probability that a host delays a send by `noise_delay_ps`
+    /// (Section 5.2.5 noise experiment).
+    pub noise_prob: f64,
+    pub noise_delay_ps: Time,
+    /// Background-traffic message size (one random destination per
+    /// message).
+    pub bg_message_bytes: u64,
+    /// Master seed; every stochastic choice derives from it.
+    pub seed: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            link_ps_per_byte: PS_PER_BYTE_100G,
+            link_latency_ps: 300 * NS,
+            port_queue_capacity: 131072,
+            payload_bytes: 1024,
+            canary_timeout_ps: US,
+            descriptor_slots: 32 * 1024,
+            host_window: 0,
+            arm_retrans_timers: false,
+            // Loss-recovery timer. The paper sets ~2 RTT, where RTT is
+            // what a host *observes* (including aggregation timeouts and
+            // queueing). A fixed default must exceed any clean completion
+            // gap or spurious failure rounds melt the operation down;
+            // fault-tolerance experiments override this downward.
+            retrans_timeout_ps: 20 * MS,
+            max_retries: 3,
+            carry_values: false,
+            noise_prob: 0.0,
+            noise_delay_ps: US,
+            bg_message_bytes: 64 * 1024,
+            seed: 0xCA11A8,
+        }
+    }
+}
+
+impl SimConfig {
+    /// Round-trip estimate host->spine->host for timer defaults.
+    pub fn rtt_estimate(&self) -> Time {
+        // 4 hops each way + serialization of one MTU packet per hop
+        let per_hop = self.link_latency_ps
+            + crate::sim::packet::WIRE_BYTES as u64 * self.link_ps_per_byte;
+        8 * per_hop
+    }
+
+    /// Builder-style helpers used throughout the experiments.
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_timeout(mut self, t: Time) -> Self {
+        self.canary_timeout_ps = t;
+        self
+    }
+
+    pub fn with_values(mut self, on: bool) -> Self {
+        self.carry_values = on;
+        self
+    }
+
+    pub fn with_noise(mut self, prob: f64, delay: Time) -> Self {
+        self.noise_prob = prob;
+        self.noise_delay_ps = delay;
+        self
+    }
+
+    pub fn with_slots(mut self, slots: u32) -> Self {
+        self.descriptor_slots = slots;
+        self
+    }
+
+    pub fn with_window(mut self, w: u32) -> Self {
+        self.host_window = w;
+        self
+    }
+
+    pub fn with_retrans(mut self, timeout: Time, arm: bool) -> Self {
+        self.retrans_timeout_ps = timeout;
+        self.arm_retrans_timers = arm;
+        self
+    }
+
+    pub fn with_payload(mut self, bytes: u32) -> Self {
+        self.payload_bytes = bytes;
+        self
+    }
+
+    /// Full wire size of a reduction data packet under this config.
+    pub fn wire_bytes(&self) -> u32 {
+        self.payload_bytes + crate::sim::packet::HEADER_OVERHEAD_BYTES
+    }
+
+    /// Payload lanes (4-byte elements) per packet.
+    pub fn lanes(&self) -> usize {
+        (self.payload_bytes / 4) as usize
+    }
+}
+
+/// Topology shape. The paper's scale setup is `FatTreeConfig::paper()`:
+/// 1024 hosts, 32 leaves x 32 hosts, 32 spines.
+#[derive(Clone, Copy, Debug)]
+pub struct FatTreeConfig {
+    pub n_leaf: u32,
+    pub hosts_per_leaf: u32,
+    pub n_spine: u32,
+}
+
+impl FatTreeConfig {
+    pub fn paper() -> Self {
+        FatTreeConfig {
+            n_leaf: 32,
+            hosts_per_leaf: 32,
+            n_spine: 32,
+        }
+    }
+
+    /// Small instance for unit tests (64 hosts).
+    pub fn small() -> Self {
+        FatTreeConfig {
+            n_leaf: 4,
+            hosts_per_leaf: 16,
+            n_spine: 4,
+        }
+    }
+
+    /// Tiny instance for exhaustive tests (8 hosts).
+    pub fn tiny() -> Self {
+        FatTreeConfig {
+            n_leaf: 2,
+            hosts_per_leaf: 4,
+            n_spine: 2,
+        }
+    }
+
+    pub fn n_hosts(&self) -> u32 {
+        self.n_leaf * self.hosts_per_leaf
+    }
+
+    pub fn n_switches(&self) -> u32 {
+        self.n_leaf + self.n_spine
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_setup() {
+        let c = SimConfig::default();
+        assert_eq!(c.link_ps_per_byte, 80); // 100 Gbps
+        assert_eq!(c.link_latency_ps, 300_000); // 300 ns
+        assert_eq!(c.canary_timeout_ps, 1_000_000); // 1 us
+        assert_eq!(c.descriptor_slots, 32768);
+        let t = FatTreeConfig::paper();
+        assert_eq!(t.n_hosts(), 1024);
+        assert_eq!(t.n_switches(), 64);
+    }
+
+    #[test]
+    fn builders_compose() {
+        let c = SimConfig::default()
+            .with_seed(7)
+            .with_timeout(3 * US)
+            .with_values(true)
+            .with_noise(0.1, US);
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.canary_timeout_ps, 3 * US);
+        assert!(c.carry_values);
+        assert_eq!(c.noise_prob, 0.1);
+    }
+
+    #[test]
+    fn rtt_estimate_is_sane() {
+        let c = SimConfig::default();
+        // ~8 hops of ~386 ns each => a few microseconds
+        assert!(c.rtt_estimate() > 2 * US && c.rtt_estimate() < 10 * US);
+    }
+}

@@ -1,0 +1,45 @@
+//! Fault injection: random packet loss and scheduled switch failures.
+//!
+//! The paper treats both identically at the protocol level (Section 3.3):
+//! the leader times out / hosts time out, retransmission requests flow to
+//! the leader, and either the finished result is re-sent or the block is
+//! reduced again from scratch under a fresh id.
+
+use crate::sim::{NodeId, Time};
+
+/// Declarative fault plan, installed before the run.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// Per-delivery probability of dropping a non-background packet.
+    pub loss_prob: f64,
+    /// (time, switch) pairs: at `time` the switch dies (its links go
+    /// down, its soft state is lost).
+    pub switch_failures: Vec<(Time, NodeId)>,
+}
+
+impl FaultPlan {
+    pub fn with_loss(mut self, p: f64) -> Self {
+        self.loss_prob = p;
+        self
+    }
+
+    pub fn with_switch_failure(mut self, t: Time, node: NodeId) -> Self {
+        self.switch_failures.push((t, node));
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder() {
+        let f = FaultPlan::default()
+            .with_loss(0.01)
+            .with_switch_failure(100, 7)
+            .with_switch_failure(200, 9);
+        assert_eq!(f.loss_prob, 0.01);
+        assert_eq!(f.switch_failures.len(), 2);
+    }
+}

@@ -1,0 +1,570 @@
+//! Figure/table regeneration harness — one function per paper figure
+//! (DESIGN.md §5 maps each to its experiment).
+//!
+//! Usage (binary `figures`):
+//!
+//! ```text
+//! figures all            [--scale full|half|ci] [--seeds N] [--out DIR]
+//! figures fig2|fig6|fig7a|fig7b|fig8|fig9|fig10a|fig10b|fig11|mem ...
+//! ```
+//!
+//! `full` reproduces the paper's parameters (1024 hosts, 4 MiB, 5 seeds —
+//! minutes of wall time); `half` shrinks data size and seeds; `ci` runs a
+//! 64-host network for smoke testing. Every series is printed and written
+//! to `results/<name>.csv`.
+
+use crate::collectives::{runner, Algo};
+use crate::config::{FatTreeConfig, SimConfig};
+use crate::loadbalance::LoadBalancer;
+use crate::metrics::{
+    average_network_utilization, memory_model_bytes, utilization_histogram,
+};
+use crate::report::Series;
+use crate::sim::{ps_to_us, US};
+use crate::util::cli::Args;
+use crate::util::stats::{mean, stddev};
+use crate::workload::{build_multi_tenant, build_scenario, Scenario};
+
+/// Experiment scale knob.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    /// Paper parameters: 1024 hosts, 4 MiB, 5 seeds.
+    Full,
+    /// Paper topology, 1 MiB, 2 seeds (good fidelity, ~10x faster).
+    Half,
+    /// 64-host network, 256 KiB, 1 seed (smoke).
+    Ci,
+}
+
+impl Scale {
+    fn parse(s: &str) -> Result<Scale, String> {
+        match s {
+            "full" => Ok(Scale::Full),
+            "half" => Ok(Scale::Half),
+            "ci" => Ok(Scale::Ci),
+            _ => Err(format!("unknown scale '{s}' (full|half|ci)")),
+        }
+    }
+
+    pub fn topo(self) -> FatTreeConfig {
+        match self {
+            Scale::Full | Scale::Half => FatTreeConfig::paper(),
+            Scale::Ci => FatTreeConfig::small(),
+        }
+    }
+
+    pub fn data_bytes(self) -> u64 {
+        match self {
+            Scale::Full => 4 << 20,
+            Scale::Half => 1 << 20,
+            Scale::Ci => 256 << 10,
+        }
+    }
+
+    pub fn seeds(self) -> u64 {
+        match self {
+            Scale::Full => 5,
+            Scale::Half => 2,
+            Scale::Ci => 1,
+        }
+    }
+}
+
+/// Shared harness options.
+pub struct Opts {
+    pub scale: Scale,
+    pub seeds: u64,
+    pub out: String,
+}
+
+impl Opts {
+    fn scaled_hosts(&self, frac_percent: u32) -> u32 {
+        (self.scale.topo().n_hosts() * frac_percent / 100).max(2)
+    }
+}
+
+fn algo_list(with_ring: bool, trees: &[u8]) -> Vec<Algo> {
+    let mut v = Vec::new();
+    if with_ring {
+        v.push(Algo::Ring);
+    }
+    for &t in trees {
+        v.push(Algo::StaticTree { n_trees: t });
+    }
+    v.push(Algo::Canary);
+    v
+}
+
+/// Run one scenario over `seeds` placements; returns per-seed goodputs.
+fn goodputs(sc: &Scenario, seeds: u64) -> Vec<f64> {
+    (0..seeds)
+        .map(|s| {
+            let mut exp = build_scenario(sc, 1000 + s);
+            let r = runner::run_to_completion(&mut exp.net, u64::MAX);
+            r[0].goodput_gbps.unwrap_or(0.0)
+        })
+        .collect()
+}
+
+fn runtimes_us(sc: &Scenario, seeds: u64) -> Vec<f64> {
+    (0..seeds)
+        .map(|s| {
+            let mut exp = build_scenario(sc, 1000 + s);
+            let r = runner::run_to_completion(&mut exp.net, u64::MAX);
+            r[0].runtime_ps.map(ps_to_us).unwrap_or(f64::NAN)
+        })
+        .collect()
+}
+
+fn base_scenario(o: &Opts, algo: Algo, hosts: u32, congestion: bool) -> Scenario {
+    Scenario {
+        topo: o.scale.topo(),
+        sim: SimConfig::default(),
+        lb: LoadBalancer::default(),
+        algo,
+        n_allreduce_hosts: hosts,
+        congestion,
+        data_bytes: o.scale.data_bytes(),
+        record_results: false,
+    }
+}
+
+fn finish(s: Series, o: &Opts) -> Series {
+    s.print();
+    match s.write_csv(&o.out) {
+        Ok(p) => println!("wrote {p}\n"),
+        Err(e) => eprintln!("csv write failed: {e}"),
+    }
+    s
+}
+
+/// Fig. 2 — goodput at 1 % and 75 % of hosts, +/- congestion.
+pub fn fig2(o: &Opts) -> Series {
+    let mut s = Series::new(
+        "fig2_goodput_small_vs_large",
+        &["hosts_pct", "algo", "congestion", "goodput_gbps", "stddev"],
+    );
+    for &pct in &[1u32, 75] {
+        let hosts = o.scaled_hosts(pct);
+        for algo in algo_list(true, &[1]) {
+            for &cong in &[false, true] {
+                let sc = base_scenario(o, algo, hosts, cong);
+                let g = goodputs(&sc, o.seeds);
+                s.push(vec![
+                    pct.to_string(),
+                    algo.name(),
+                    cong.to_string(),
+                    format!("{:.1}", mean(&g)),
+                    format!("{:.1}", stddev(&g)),
+                ]);
+            }
+        }
+    }
+    finish(s, o)
+}
+
+/// Fig. 6 — single-switch goodput vs payload size (P4 calibration).
+/// The "prototype" column is the line-rate bound 100G * payload/wire that
+/// the Tofino achieves (the paper's Fig. 6 shows both at that bound).
+pub fn fig6(o: &Opts) -> Series {
+    let mut s = Series::new(
+        "fig6_single_switch_goodput",
+        &["payload_bytes", "prototype_bound_gbps", "sim_gbps"],
+    );
+    for &payload in &[128u32, 256, 512, 1024] {
+        let wire =
+            payload + crate::sim::packet::HEADER_OVERHEAD_BYTES;
+        let bound = 100.0 * payload as f64 / wire as f64;
+        let sc = Scenario {
+            topo: FatTreeConfig::tiny(),
+            sim: SimConfig::default().with_payload(payload),
+            lb: LoadBalancer::default(),
+            algo: Algo::Canary,
+            n_allreduce_hosts: 2,
+            congestion: false,
+            data_bytes: 4 << 20,
+            record_results: false,
+        };
+        let g = goodputs(&sc, 1);
+        s.push(vec![
+            payload.to_string(),
+            format!("{bound:.1}"),
+            format!("{:.1}", g[0]),
+        ]);
+    }
+    finish(s, o)
+}
+
+/// Fig. 7a — goodput with 512 hosts vs number of static trees.
+pub fn fig7a(o: &Opts) -> Series {
+    let mut s = Series::new(
+        "fig7a_goodput_vs_trees",
+        &["algo", "congestion", "goodput_gbps", "stddev"],
+    );
+    let hosts = o.scaled_hosts(50);
+    for algo in algo_list(false, &[1, 2, 4, 8]) {
+        for &cong in &[false, true] {
+            let sc = base_scenario(o, algo, hosts, cong);
+            let g = goodputs(&sc, o.seeds);
+            s.push(vec![
+                algo.name(),
+                cong.to_string(),
+                format!("{:.1}", mean(&g)),
+                format!("{:.1}", stddev(&g)),
+            ]);
+        }
+    }
+    finish(s, o)
+}
+
+/// Fig. 7b — link-utilization distribution (10 % buckets) + the quoted
+/// average network utilization, with congestion.
+pub fn fig7b(o: &Opts) -> Series {
+    let mut s = Series::new(
+        "fig7b_link_utilization",
+        &["algo", "bucket_mid_pct", "fraction", "avg_util_pct"],
+    );
+    let hosts = o.scaled_hosts(50);
+    for algo in algo_list(false, &[1, 4]) {
+        let sc = base_scenario(o, algo, hosts, true);
+        let mut exp = build_scenario(&sc, 1000);
+        runner::run_to_completion(&mut exp.net, u64::MAX);
+        let end = exp.net.now;
+        let h = utilization_histogram(&exp.net, end);
+        let avg = 100.0 * average_network_utilization(&exp.net, end);
+        for (i, f) in h.fractions().iter().enumerate() {
+            s.push(vec![
+                algo.name(),
+                format!("{:.0}", 100.0 * h.bucket_mid(i)),
+                format!("{f:.3}"),
+                format!("{avg:.1}"),
+            ]);
+        }
+    }
+    finish(s, o)
+}
+
+/// Fig. 8 — goodput vs fraction of hosts running the allreduce.
+pub fn fig8(o: &Opts) -> Series {
+    let mut s = Series::new(
+        "fig8_goodput_vs_hosts",
+        &["hosts_pct", "algo", "goodput_gbps", "stddev"],
+    );
+    for &pct in &[5u32, 10, 20, 35, 50, 75] {
+        let hosts = o.scaled_hosts(pct);
+        for algo in algo_list(true, &[1, 4]) {
+            let sc = base_scenario(o, algo, hosts, true);
+            let g = goodputs(&sc, o.seeds);
+            s.push(vec![
+                pct.to_string(),
+                algo.name(),
+                format!("{:.1}", mean(&g)),
+                format!("{:.1}", stddev(&g)),
+            ]);
+        }
+    }
+    finish(s, o)
+}
+
+/// Fig. 9 — runtime vs message size, 20 % hosts, +/- congestion.
+pub fn fig9(o: &Opts) -> Series {
+    let mut s = Series::new(
+        "fig9_runtime_vs_size",
+        &["size_bytes", "algo", "congestion", "runtime_us", "stddev"],
+    );
+    let hosts = o.scaled_hosts(20);
+    let sizes: &[u64] = match o.scale {
+        Scale::Ci => &[1 << 10, 64 << 10, 1 << 20],
+        _ => &[1 << 10, 16 << 10, 256 << 10, 4 << 20, 16 << 20],
+    };
+    for &size in sizes {
+        for algo in algo_list(true, &[4]) {
+            for &cong in &[false, true] {
+                let mut sc = base_scenario(o, algo, hosts, cong);
+                sc.data_bytes = size;
+                let r = runtimes_us(&sc, o.seeds);
+                s.push(vec![
+                    size.to_string(),
+                    algo.name(),
+                    cong.to_string(),
+                    format!("{:.1}", mean(&r)),
+                    format!("{:.1}", stddev(&r)),
+                ]);
+            }
+        }
+    }
+    finish(s, o)
+}
+
+/// Fig. 10a — average goodput of N concurrent allreduces.
+pub fn fig10a(o: &Opts) -> Series {
+    let mut s = Series::new(
+        "fig10a_concurrent_allreduces",
+        &["n_jobs", "algo", "avg_goodput_gbps", "stddev"],
+    );
+    let jobs_list: &[u32] = match o.scale {
+        Scale::Ci => &[1, 2, 4],
+        _ => &[1, 2, 4, 8, 16, 32],
+    };
+    for &n_jobs in jobs_list {
+        for algo in algo_list(true, &[1, 4]) {
+            let mut per_seed = Vec::new();
+            for seed in 0..o.seeds {
+                let (mut net, _ft, _jobs) = build_multi_tenant(
+                    o.scale.topo(),
+                    SimConfig::default(),
+                    LoadBalancer::default(),
+                    algo,
+                    n_jobs,
+                    o.scale.data_bytes(),
+                    2000 + seed,
+                );
+                let results =
+                    runner::run_to_completion(&mut net, u64::MAX);
+                let gs: Vec<f64> = results
+                    .iter()
+                    .filter_map(|r| r.goodput_gbps)
+                    .collect();
+                per_seed.push(mean(&gs));
+            }
+            s.push(vec![
+                n_jobs.to_string(),
+                algo.name(),
+                format!("{:.1}", mean(&per_seed)),
+                format!("{:.1}", stddev(&per_seed)),
+            ]);
+        }
+    }
+    finish(s, o)
+}
+
+/// Fig. 10b — link utilization with 20 concurrent allreduces.
+pub fn fig10b(o: &Opts) -> Series {
+    let mut s = Series::new(
+        "fig10b_link_utilization_20jobs",
+        &["algo", "bucket_mid_pct", "fraction", "avg_util_pct"],
+    );
+    let n_jobs = match o.scale {
+        Scale::Ci => 4,
+        _ => 20,
+    };
+    for algo in algo_list(false, &[1, 4]) {
+        let (mut net, _ft, _jobs) = build_multi_tenant(
+            o.scale.topo(),
+            SimConfig::default(),
+            LoadBalancer::default(),
+            algo,
+            n_jobs,
+            o.scale.data_bytes(),
+            2000,
+        );
+        runner::run_to_completion(&mut net, u64::MAX);
+        let end = net.now;
+        let h = utilization_histogram(&net, end);
+        let avg = 100.0 * average_network_utilization(&net, end);
+        for (i, f) in h.fractions().iter().enumerate() {
+            s.push(vec![
+                algo.name(),
+                format!("{:.0}", 100.0 * h.bucket_mid(i)),
+                format!("{f:.3}"),
+                format!("{avg:.1}"),
+            ]);
+        }
+    }
+    finish(s, o)
+}
+
+/// Fig. 11 — goodput vs noise probability x timeout, +/- congestion.
+pub fn fig11(o: &Opts) -> Series {
+    let mut s = Series::new(
+        "fig11_noise_and_timeout",
+        &[
+            "noise_pct",
+            "timeout_us",
+            "algo",
+            "congestion",
+            "goodput_gbps",
+        ],
+    );
+    let hosts = o.scaled_hosts(50);
+    for &noise in &[0.0001f64, 0.001, 0.01, 0.1] {
+        for &cong in &[false, true] {
+            for &timeout_us in &[1u64, 2, 3] {
+                let mut sc =
+                    base_scenario(o, Algo::Canary, hosts, cong);
+                sc.sim = sc
+                    .sim
+                    .with_timeout(timeout_us * US)
+                    .with_noise(noise, US);
+                let g = goodputs(&sc, o.seeds.min(2));
+                s.push(vec![
+                    format!("{}", noise * 100.0),
+                    timeout_us.to_string(),
+                    "canary".into(),
+                    cong.to_string(),
+                    format!("{:.1}", mean(&g)),
+                ]);
+            }
+            // static-4 comparison point (timeout not applicable)
+            let mut sc = base_scenario(
+                o,
+                Algo::StaticTree { n_trees: 4 },
+                hosts,
+                cong,
+            );
+            sc.sim = sc.sim.with_noise(noise, US);
+            let g = goodputs(&sc, o.seeds.min(2));
+            s.push(vec![
+                format!("{}", noise * 100.0),
+                "-".into(),
+                "static4".into(),
+                cong.to_string(),
+                format!("{:.1}", mean(&g)),
+            ]);
+        }
+    }
+    finish(s, o)
+}
+
+/// §3.2.2 — switch memory model vs measured descriptor residency.
+pub fn mem(o: &Opts) -> Series {
+    let mut s = Series::new(
+        "mem_model_vs_measured",
+        &[
+            "timeout_us",
+            "model_kib",
+            "measured_peak_descriptors",
+            "measured_peak_kib",
+            "mean_residency_us",
+        ],
+    );
+    for &timeout_us in &[1u64, 2, 4] {
+        let model = memory_model_bytes(
+            12.5e9,
+            5,
+            300e-9,
+            timeout_us as f64 * 1e-6,
+            1e-6,
+        ) / 1024.0;
+        let mut sc = base_scenario(
+            o,
+            Algo::Canary,
+            o.scaled_hosts(50),
+            false,
+        );
+        sc.sim = sc.sim.with_timeout(timeout_us * US);
+        let mut exp = build_scenario(&sc, 3000);
+        runner::run_to_completion(&mut exp.net, u64::MAX);
+        let m = &exp.net.metrics;
+        let peak = m.descriptor_high_water;
+        let desc_bytes = sc.sim.payload_bytes as u64 + 64;
+        let freed = m.descriptors_freed.max(1);
+        s.push(vec![
+            timeout_us.to_string(),
+            format!("{model:.0}"),
+            peak.to_string(),
+            format!("{:.0}", (peak * desc_bytes) as f64 / 1024.0),
+            format!(
+                "{:.1}",
+                ps_to_us(m.descriptor_residency_ps / freed)
+            ),
+        ]);
+    }
+    finish(s, o)
+}
+
+/// Ablation: Canary goodput under different load balancers (design-choice
+/// bench called out in DESIGN.md).
+pub fn ablation_lb(o: &Opts) -> Series {
+    let mut s = Series::new(
+        "ablation_load_balancers",
+        &["lb", "congestion", "goodput_gbps", "stddev"],
+    );
+    let hosts = o.scaled_hosts(50);
+    let policies: Vec<(&str, LoadBalancer)> = vec![
+        ("adaptive", LoadBalancer::DefaultAdaptive { threshold: 0.5 }),
+        ("ecmp", LoadBalancer::Ecmp),
+        ("minqueue", LoadBalancer::MinQueue),
+        ("flowlet", LoadBalancer::Flowlet { gap_ps: 5 * US }),
+    ];
+    for (name, lb) in policies {
+        for &cong in &[false, true] {
+            let mut sc = base_scenario(o, Algo::Canary, hosts, cong);
+            sc.lb = lb.clone();
+            let g = goodputs(&sc, o.seeds);
+            s.push(vec![
+                name.to_string(),
+                cong.to_string(),
+                format!("{:.1}", mean(&g)),
+                format!("{:.1}", stddev(&g)),
+            ]);
+        }
+    }
+    finish(s, o)
+}
+
+/// Entry point for the `figures` binary.
+pub fn main_entry() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(argv, &["scale", "seeds", "out"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let scale = match Scale::parse(args.get_or("scale", "half")) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let o = Opts {
+        scale,
+        seeds: args
+            .get_parse("seeds", scale.seeds())
+            .unwrap_or(scale.seeds()),
+        out: args.get_or("out", "results").to_string(),
+    };
+    let which = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let t0 = std::time::Instant::now();
+    match which {
+        "fig2" => drop(fig2(&o)),
+        "fig6" => drop(fig6(&o)),
+        "fig7a" => drop(fig7a(&o)),
+        "fig7b" => drop(fig7b(&o)),
+        "fig8" => drop(fig8(&o)),
+        "fig9" => drop(fig9(&o)),
+        "fig10a" => drop(fig10a(&o)),
+        "fig10b" => drop(fig10b(&o)),
+        "fig11" => drop(fig11(&o)),
+        "mem" => drop(mem(&o)),
+        "ablation" => drop(ablation_lb(&o)),
+        "all" => {
+            drop(fig2(&o));
+            drop(fig6(&o));
+            drop(fig7a(&o));
+            drop(fig7b(&o));
+            drop(fig8(&o));
+            drop(fig9(&o));
+            drop(fig10a(&o));
+            drop(fig10b(&o));
+            drop(fig11(&o));
+            drop(mem(&o));
+            drop(ablation_lb(&o));
+        }
+        other => {
+            eprintln!(
+                "unknown figure '{other}' \
+                 (fig2|fig6|fig7a|fig7b|fig8|fig9|fig10a|fig10b|fig11|mem|ablation|all)"
+            );
+            std::process::exit(2);
+        }
+    }
+    eprintln!("total: {:.1}s", t0.elapsed().as_secs_f64());
+}

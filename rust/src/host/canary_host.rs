@@ -1,0 +1,481 @@
+//! Canary host protocol: line-rate self-clocked injection, the leader
+//! role (final aggregation, broadcast, tree restoration, retransmission
+//! handling — Sections 3.1.4, 3.2.1, 3.3) and the host-side loss
+//! recovery (retransmission requests, retry rounds, host-based fallback).
+//!
+//! Hosts stream their blocks open-loop at line rate, as in the paper's
+//! calibrated simulations; the number of in-flight blocks is then bounded
+//! by the bandwidth-delay product (the Section 3.2.2 memory model relies
+//! on exactly this). An optional window (`SimConfig::host_window > 0`)
+//! caps in-flight blocks for memory-constrained scenarios.
+
+use std::collections::HashMap;
+
+use crate::collectives::block_payload;
+use crate::sim::packet::{Packet, PacketKind, Payload};
+use crate::sim::{Ctx, NodeId, Time};
+use crate::util::rng::Rng;
+
+use super::{
+    encode_timer, TIMER_DELAYED_SEND, TIMER_RETRANS, TIMER_STREAM,
+};
+
+/// Leader-side state for one block this host leads (Section 3.1.4).
+#[derive(Debug, Default)]
+pub struct LeaderBlock {
+    /// Current retry round; stale-round packets are discarded.
+    pub round: u8,
+    /// Contributions aggregated so far (incl. our own once added).
+    pub counter: u32,
+    pub own_added: bool,
+    pub acc: Option<Vec<i32>>,
+    /// Collided switches -> children-port bitmap to restore.
+    pub restore: HashMap<NodeId, u64>,
+    pub complete: bool,
+    pub result: Option<Vec<i32>>,
+    /// Last failure-notice time (rate-limits retry rounds).
+    pub last_failure: Time,
+}
+
+/// Canary protocol state for one participating host.
+pub struct CanaryHost {
+    pub job: u32,
+    pub rank: u32,
+    pub total_blocks: u32,
+    /// Next block index the injection stream will emit.
+    pub next_block: u32,
+    pub inflight: u32,
+    /// Stream paused waiting for window space.
+    pub stalled: bool,
+    pub done: Vec<bool>,
+    pub done_count: u32,
+    pub finished: bool,
+    /// Blocks this host leads, by original block index.
+    pub leader: HashMap<u32, LeaderBlock>,
+    /// Retry round per block as known by this host.
+    pub round: Vec<u8>,
+}
+
+impl CanaryHost {
+    pub fn new(job: u32, rank: u32, total_blocks: u32) -> CanaryHost {
+        CanaryHost {
+            job,
+            rank,
+            total_blocks,
+            next_block: 0,
+            inflight: 0,
+            stalled: false,
+            done: vec![false; total_blocks as usize],
+            done_count: 0,
+            finished: false,
+            leader: HashMap::new(),
+            round: vec![0; total_blocks as usize],
+        }
+    }
+
+    fn wire_id(&self, idx: u32) -> u32 {
+        idx + self.round[idx as usize] as u32 * self.total_blocks
+    }
+
+    fn orig_of(&self, wire_id: u32) -> u32 {
+        wire_id % self.total_blocks
+    }
+}
+
+/// Job start: begin the line-rate injection stream.
+pub fn on_wake(me: NodeId, ch: &mut CanaryHost, rng: &mut Rng, ctx: &mut Ctx) {
+    pump(me, ch, rng, ctx);
+}
+
+/// Emit the next block, then re-arm the stream clock one serialization
+/// interval later (line-rate pacing; the NIC queue never builds up).
+fn pump(me: NodeId, ch: &mut CanaryHost, rng: &mut Rng, ctx: &mut Ctx) {
+    if ch.next_block >= ch.total_blocks {
+        return;
+    }
+    let window = ctx.jobs[ch.job as usize].spec.window;
+    if window > 0 && ch.inflight >= window {
+        ch.stalled = true; // resume on next completion
+        return;
+    }
+    // NIC pacing: when the uplink is backpressured (paused leaf), hold
+    // the stream so the host queue stays bounded
+    let wire_bytes = ctx.jobs[ch.job as usize].spec.wire_bytes() as u64;
+    if ctx.port_class0_bytes(0) > 8 * wire_bytes {
+        let retry = wire_bytes * ctx.cfg.link_ps_per_byte;
+        ctx.host_timer(retry, encode_timer(TIMER_STREAM, ch.job, 0, 0));
+        return;
+    }
+    let idx = ch.next_block;
+    ch.next_block += 1;
+    ch.inflight += 1;
+    activate_block(me, ch, ctx, idx);
+
+    let wire = ctx.jobs[ch.job as usize].spec.wire_bytes() as u64
+        * ctx.cfg.link_ps_per_byte;
+    // OS noise (Section 5.2.5): with probability p the next transmission
+    // is delayed by `noise_delay_ps` (the stream blocks, as real OS
+    // noise would block the sending process)
+    let mut gap = wire;
+    if ctx.cfg.noise_prob > 0.0 && rng.chance(ctx.cfg.noise_prob) {
+        gap += ctx.cfg.noise_delay_ps;
+    }
+    ctx.host_timer(gap, encode_timer(TIMER_STREAM, ch.job, 0, 0));
+}
+
+fn activate_block(me: NodeId, ch: &mut CanaryHost, ctx: &mut Ctx, idx: u32) {
+    let spec = &ctx.jobs[ch.job as usize].spec;
+    let leader = spec.leader_of(idx);
+    if leader == me {
+        leader_add_own(me, ch, ctx, idx);
+    } else {
+        send_data_now(me, ch, ctx, idx, false);
+        if ctx.cfg.arm_retrans_timers {
+            let retrans = ctx.cfg.retrans_timeout_ps;
+            ctx.host_timer(
+                retrans,
+                encode_timer(TIMER_RETRANS, ch.job, idx, 0),
+            );
+        }
+    }
+}
+
+fn send_data_now(
+    me: NodeId,
+    ch: &mut CanaryHost,
+    ctx: &mut Ctx,
+    idx: u32,
+    direct: bool,
+) {
+    let spec = &ctx.jobs[ch.job as usize].spec;
+    let leader = spec.leader_of(idx);
+    let tenant = spec.tenant;
+    let hosts = spec.participants.len() as u32;
+    let lanes = spec.lanes();
+    let wire = spec.wire_bytes();
+    let kind = if direct {
+        PacketKind::CanaryDirect
+    } else {
+        PacketKind::CanaryReduce
+    };
+    let mut pkt = Packet::data(kind, me, leader);
+    pkt.tenant = tenant;
+    pkt.block = ch.wire_id(idx);
+    pkt.counter = 1;
+    pkt.hosts = hosts;
+    pkt.bypass = direct;
+    pkt.wire_bytes = wire;
+    pkt.flow = ((me as u64) << 32) | pkt.block as u64;
+    if ctx.cfg.carry_values {
+        pkt.payload = Payload::Lanes(
+            block_payload(tenant, me, idx, lanes).into_boxed_slice(),
+        );
+    }
+    ctx.send(0, pkt);
+}
+
+/// Leader folds its own contribution in locally (it never hits the wire,
+/// Section 3.1.4).
+fn leader_add_own(me: NodeId, ch: &mut CanaryHost, ctx: &mut Ctx, idx: u32) {
+    let spec = &ctx.jobs[ch.job as usize].spec;
+    let tenant = spec.tenant;
+    let lanes = spec.lanes();
+    let carry = ctx.cfg.carry_values;
+    let lb = ch.leader.entry(idx).or_default();
+    debug_assert!(!lb.own_added);
+    lb.own_added = true;
+    lb.counter += 1;
+    if carry {
+        let own = block_payload(tenant, me, idx, lanes);
+        match &mut lb.acc {
+            Some(acc) => crate::switch::alu::sat_accumulate(acc, &own),
+            None => lb.acc = Some(own),
+        }
+    }
+    leader_check_complete(me, ch, ctx, idx);
+}
+
+/// Packet arrival at a Canary host.
+pub fn on_packet(
+    me: NodeId,
+    ch: &mut CanaryHost,
+    rng: &mut Rng,
+    ctx: &mut Ctx,
+    pkt: Packet,
+) {
+    match pkt.kind {
+        PacketKind::CanaryReduce | PacketKind::CanaryDirect => {
+            leader_on_contribution(me, ch, rng, ctx, pkt)
+        }
+        PacketKind::CanaryBroadcast | PacketKind::CanaryRetransData => {
+            let orig = ch.orig_of(pkt.block);
+            mark_done(me, ch, rng, ctx, orig, pkt.payload.lanes());
+        }
+        PacketKind::CanaryRetransReq => {
+            leader_on_retrans_req(me, ch, rng, ctx, pkt)
+        }
+        PacketKind::CanaryFailure => on_failure_notice(me, ch, ctx, pkt),
+        _ => {}
+    }
+}
+
+/// Leader: aggregate an arriving (partial) contribution.
+fn leader_on_contribution(
+    me: NodeId,
+    ch: &mut CanaryHost,
+    rng: &mut Rng,
+    ctx: &mut Ctx,
+    pkt: Packet,
+) {
+    let orig = ch.orig_of(pkt.block);
+    let round = (pkt.block / ch.total_blocks) as u8;
+    let lb = ch.leader.entry(orig).or_default();
+    if round != lb.round || lb.complete {
+        return; // stale round, or late straggler after completion
+    }
+    lb.counter += pkt.counter;
+    if let Payload::Lanes(v) = &pkt.payload {
+        match &mut lb.acc {
+            Some(acc) => crate::switch::alu::sat_accumulate(acc, v),
+            None => lb.acc = Some(v.to_vec()),
+        }
+    }
+    if let Some((sw, port)) = pkt.collision {
+        *lb.restore.entry(sw).or_insert(0) |= 1u64 << port;
+    }
+    leader_check_complete(me, ch, ctx, orig);
+    let _ = rng;
+}
+
+fn leader_check_complete(
+    me: NodeId,
+    ch: &mut CanaryHost,
+    ctx: &mut Ctx,
+    idx: u32,
+) {
+    let hosts = ctx.jobs[ch.job as usize].spec.participants.len() as u32;
+    let tenant = ctx.jobs[ch.job as usize].spec.tenant;
+    let wire = ctx.jobs[ch.job as usize].spec.wire_bytes();
+    let Some(lb) = ch.leader.get_mut(&idx) else { return };
+    if lb.complete || !lb.own_added || lb.counter < hosts {
+        return;
+    }
+    lb.complete = true;
+    lb.result = lb.acc.take();
+    let result = lb.result.clone();
+    let restore: Vec<(NodeId, u64)> =
+        lb.restore.iter().map(|(&k, &v)| (k, v)).collect();
+    let wire_id = ch.wire_id(idx);
+
+    // broadcast down the recorded dynamic tree (single packet up to our
+    // leaf, which fans out along descriptor children)
+    if hosts > 1 {
+        let mut pkt = Packet::data(PacketKind::CanaryBroadcast, me, me);
+        pkt.tenant = tenant;
+        pkt.block = wire_id;
+        pkt.counter = hosts;
+        pkt.hosts = hosts;
+        pkt.wire_bytes = wire;
+        if let Some(r) = &result {
+            pkt.payload = Payload::Lanes(r.clone().into_boxed_slice());
+        }
+        ctx.send(0, pkt);
+    }
+    // tree restoration packets for collided switches (Section 3.2.1)
+    for (sw, bitmap) in restore {
+        let mut pkt = Packet::data(PacketKind::CanaryRestore, me, sw);
+        pkt.tenant = tenant;
+        pkt.block = wire_id;
+        pkt.hosts = hosts;
+        pkt.restore = bitmap;
+        pkt.wire_bytes = wire;
+        if let Some(r) = &result {
+            pkt.payload = Payload::Lanes(r.clone().into_boxed_slice());
+        }
+        ctx.send(0, pkt);
+    }
+
+    // our own copy of the block is complete
+    let lanes = result;
+    let mut quiet = Rng::new(0);
+    mark_done(me, ch, &mut quiet, ctx, idx, lanes.as_deref());
+}
+
+/// Leader: a host suspects loss for `pkt.block` (Section 3.3).
+fn leader_on_retrans_req(
+    me: NodeId,
+    ch: &mut CanaryHost,
+    rng: &mut Rng,
+    ctx: &mut Ctx,
+    pkt: Packet,
+) {
+    ctx.metrics.retrans_requests += 1;
+    let orig = ch.orig_of(pkt.block);
+    let spec = &ctx.jobs[ch.job as usize].spec;
+    let tenant = spec.tenant;
+    let hosts = spec.participants.len() as u32;
+    let participants = spec.participants.clone();
+    let retrans_timeout = ctx.cfg.retrans_timeout_ps;
+    let now = ctx.now;
+
+    let wire_id = ch.wire_id(orig);
+    let lb = ch.leader.entry(orig).or_default();
+    if lb.complete {
+        // loss was in the broadcast phase: re-send the reduced data
+        let mut out = Packet::data(PacketKind::CanaryRetransData, me, pkt.src);
+        out.tenant = tenant;
+        out.block = wire_id;
+        out.hosts = hosts;
+        out.wire_bytes = pkt.wire_bytes.max(64);
+        if let Some(r) = &lb.result {
+            out.payload = Payload::Lanes(r.clone().into_boxed_slice());
+        }
+        ctx.send(0, out);
+        return;
+    }
+    // loss was in the reduce phase: the leader cannot know which packet
+    // died -> re-issue the whole block under a fresh id (rate-limited)
+    if now.saturating_sub(lb.last_failure) < retrans_timeout
+        && lb.last_failure != 0
+    {
+        return;
+    }
+    lb.last_failure = now;
+    lb.round += 1;
+    lb.counter = 0;
+    lb.acc = None;
+    lb.own_added = false;
+    lb.restore.clear();
+    let round = lb.round;
+    ch.round[orig as usize] = round;
+    ctx.metrics.failures += 1;
+
+    for &h in participants.iter() {
+        if h == me {
+            continue;
+        }
+        let mut out = Packet::data(PacketKind::CanaryFailure, me, h);
+        out.tenant = tenant;
+        out.block = orig; // original index; new round in meta
+        out.meta = round as u64;
+        out.hosts = hosts;
+        out.wire_bytes = 64;
+        ctx.send(0, out);
+    }
+    // re-fold our own contribution under the new round
+    leader_add_own(me, ch, ctx, orig);
+    let _ = rng;
+}
+
+/// Host: the leader asked us to re-issue a block under a new round.
+fn on_failure_notice(
+    me: NodeId,
+    ch: &mut CanaryHost,
+    ctx: &mut Ctx,
+    pkt: Packet,
+) {
+    let idx = pkt.block;
+    let new_round = pkt.meta as u8;
+    if idx >= ch.total_blocks
+        || ch.done[idx as usize]
+        || ch.round[idx as usize] >= new_round
+        || idx >= ch.next_block
+    {
+        return; // done, stale, or not yet streamed (leader will get it)
+    }
+    ch.round[idx as usize] = new_round;
+    // blocks that failed too often go host-based (Section 3.3)
+    let direct = new_round as u32 >= ctx.cfg.max_retries;
+    if direct {
+        ctx.metrics.fallbacks += 1;
+    }
+    send_data_now(me, ch, ctx, idx, direct);
+    if ctx.cfg.arm_retrans_timers {
+        let retrans = ctx.cfg.retrans_timeout_ps;
+        ctx.host_timer(
+            retrans,
+            encode_timer(TIMER_RETRANS, ch.job, idx, new_round),
+        );
+    }
+}
+
+/// A block's fully-reduced data arrived (broadcast or retransmission).
+fn mark_done(
+    me: NodeId,
+    ch: &mut CanaryHost,
+    rng: &mut Rng,
+    ctx: &mut Ctx,
+    idx: u32,
+    lanes: Option<&[i32]>,
+) {
+    if ch.done[idx as usize] {
+        return;
+    }
+    ch.done[idx as usize] = true;
+    ch.done_count += 1;
+    ch.inflight = ch.inflight.saturating_sub(1);
+    if let Some(lanes) = lanes {
+        let rank = ch.rank;
+        ctx.jobs[ch.job as usize].record_result(rank, idx, lanes);
+    }
+    if ch.stalled {
+        ch.stalled = false;
+        pump(me, ch, rng, ctx);
+    }
+    if ch.done_count == ch.total_blocks && !ch.finished {
+        ch.finished = true;
+        let rank = ch.rank;
+        let now = ctx.now;
+        ctx.jobs[ch.job as usize].host_finished(rank, now);
+    }
+}
+
+/// Host timers: the stream clock, retransmission checks, delayed sends.
+pub fn on_timer(
+    me: NodeId,
+    ch: &mut CanaryHost,
+    rng: &mut Rng,
+    ctx: &mut Ctx,
+    timer: u64,
+) {
+    let (kind, _job, idx, retry) = super::decode_timer(timer);
+    match kind {
+        TIMER_STREAM => pump(me, ch, rng, ctx),
+        TIMER_RETRANS => {
+            if ch.done[idx as usize] {
+                return;
+            }
+            let spec = &ctx.jobs[ch.job as usize].spec;
+            let leader = spec.leader_of(idx);
+            let tenant = spec.tenant;
+            let mut req =
+                Packet::data(PacketKind::CanaryRetransReq, me, leader);
+            req.tenant = tenant;
+            req.block = ch.wire_id(idx);
+            req.hosts = spec.participants.len() as u32;
+            req.wire_bytes = 64; // header-only control packet
+            ctx.send(0, req);
+            if retry as u32 >= ctx.cfg.max_retries {
+                ctx.metrics.fallbacks += 1;
+                send_data_now(me, ch, ctx, idx, true);
+            }
+            let backoff =
+                ctx.cfg.retrans_timeout_ps << (retry.min(5) as u64);
+            ctx.host_timer(
+                backoff,
+                encode_timer(
+                    TIMER_RETRANS,
+                    ch.job,
+                    idx,
+                    retry.saturating_add(1),
+                ),
+            );
+        }
+        TIMER_DELAYED_SEND => {
+            if !ch.done[idx as usize] {
+                send_data_now(me, ch, ctx, idx, false);
+            }
+        }
+        _ => {}
+    }
+}

@@ -1,0 +1,126 @@
+//! Host protocol engines: the Canary host/leader logic, the static-tree
+//! and ring baselines, and the background-traffic generator.
+//!
+//! Hosts are event-driven: `handle_wake` starts a job's injection,
+//! `handle_packet` advances the protocol, `handle_timer` drives
+//! retransmission and the Section 5.2.5 noise delays.
+
+pub mod background;
+pub mod canary_host;
+pub mod ring;
+pub mod static_host;
+
+use crate::sim::{Ctx, NodeId};
+use crate::util::rng::Rng;
+
+/// Per-host protocol state.
+pub enum Proto {
+    Idle,
+    Canary(canary_host::CanaryHost),
+    Static(static_host::StaticHost),
+    Ring(ring::RingHost),
+    Background(background::BgHost),
+}
+
+/// A host node.
+pub struct HostState {
+    pub id: NodeId,
+    pub rng: Rng,
+    pub proto: Proto,
+}
+
+impl HostState {
+    pub fn new(id: NodeId, rng: Rng) -> HostState {
+        HostState {
+            id,
+            rng,
+            proto: Proto::Idle,
+        }
+    }
+}
+
+// ---- host timer encoding -------------------------------------------------
+// [63:56] kind | [55:40] job | [39:8] block | [7:0] aux (retry round)
+
+pub const TIMER_RETRANS: u8 = 1;
+pub const TIMER_DELAYED_SEND: u8 = 2;
+pub const TIMER_DELAYED_STATIC: u8 = 3;
+/// Line-rate injection stream clock (one packet per serialization slot).
+pub const TIMER_STREAM: u8 = 4;
+
+#[inline]
+pub fn encode_timer(kind: u8, job: u32, block: u32, aux: u8) -> u64 {
+    debug_assert!(job < (1 << 16));
+    ((kind as u64) << 56)
+        | ((job as u64) << 40)
+        | ((block as u64) << 8)
+        | aux as u64
+}
+
+#[inline]
+pub fn decode_timer(t: u64) -> (u8, u32, u32, u8) {
+    (
+        (t >> 56) as u8,
+        ((t >> 40) & 0xFFFF) as u32,
+        ((t >> 8) & 0xFFFF_FFFF) as u32,
+        (t & 0xFF) as u8,
+    )
+}
+
+/// Packet entry point.
+pub fn handle_packet(
+    h: &mut HostState,
+    ctx: &mut Ctx,
+    _in_port: u16,
+    pkt: crate::sim::Packet,
+) {
+    use crate::sim::packet::PacketKind as K;
+    match (&mut h.proto, pkt.kind) {
+        (Proto::Canary(ch), _) => canary_host::on_packet(h.id, ch, &mut h.rng, ctx, pkt),
+        (Proto::Static(sh), K::StaticBroadcast) => {
+            static_host::on_broadcast(h.id, sh, ctx, pkt)
+        }
+        (Proto::Ring(rh), K::Ring) => ring::on_packet(h.id, rh, ctx, pkt),
+        (Proto::Background(_), _) => {} // sink
+        _ => {} // stray packet for an idle / mismatched host: drop
+    }
+}
+
+/// Timer entry point.
+pub fn handle_timer(h: &mut HostState, ctx: &mut Ctx, timer: u64) {
+    match &mut h.proto {
+        Proto::Canary(ch) => {
+            canary_host::on_timer(h.id, ch, &mut h.rng, ctx, timer)
+        }
+        Proto::Static(sh) => {
+            static_host::on_timer(h.id, sh, &mut h.rng, ctx, timer)
+        }
+        _ => {}
+    }
+}
+
+/// Job kick-off entry point.
+pub fn handle_wake(h: &mut HostState, ctx: &mut Ctx, job: u32) {
+    match &mut h.proto {
+        Proto::Canary(ch) => canary_host::on_wake(h.id, ch, &mut h.rng, ctx),
+        Proto::Static(sh) => static_host::on_wake(h.id, sh, &mut h.rng, ctx),
+        Proto::Ring(rh) => ring::on_wake(h.id, rh, ctx),
+        Proto::Background(bg) => {
+            background::on_wake(h.id, bg, &mut h.rng, ctx, job)
+        }
+        Proto::Idle => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_roundtrip() {
+        let t = encode_timer(TIMER_RETRANS, 65_535, 4_000_000_000, 255);
+        assert_eq!(decode_timer(t), (TIMER_RETRANS, 65_535, 4_000_000_000, 255));
+        let t = encode_timer(TIMER_DELAYED_SEND, 3, 17, 0);
+        assert_eq!(decode_timer(t), (TIMER_DELAYED_SEND, 3, 17, 0));
+    }
+}

@@ -1,0 +1,114 @@
+//! Host-based bandwidth-optimal ring allreduce (Patarasuk & Yuan), the
+//! paper's host-based baseline.
+//!
+//! Data is split into N chunks; 2(N-1) pipelined steps, each moving one
+//! chunk to the ring successor (reduce-scatter then allgather). The
+//! dependency is **per packet**: packet `p` of step `s+1` can be sent as
+//! soon as packet `p` of step `s` arrived (the element-wise reduction
+//! needs only that packet's elements). This is how production rings
+//! (e.g. NCCL) pipeline, and it hides the per-step hop latency under the
+//! chunk serialization time whenever `chunk_time >= hop_latency`.
+
+use crate::sim::packet::{Packet, PacketKind};
+use crate::sim::{Ctx, NodeId};
+
+/// Ring protocol state for one participating host.
+pub struct RingHost {
+    pub job: u32,
+    pub rank: u32,
+    pub n: u32,
+    /// Packets per chunk (chunk = ceil(data/N), packetized at the MTU).
+    pub chunk_packets: u32,
+    /// 2(N-1) total steps.
+    pub total_steps: u32,
+    /// Received packet count per step.
+    pub recv: Vec<u32>,
+    pub finished: bool,
+}
+
+impl RingHost {
+    pub fn new(
+        job: u32,
+        rank: u32,
+        n: u32,
+        data_bytes: u64,
+        payload_bytes: u32,
+    ) -> RingHost {
+        let payload = payload_bytes as u64;
+        let chunk_bytes = data_bytes.div_ceil(n as u64);
+        let chunk_packets = chunk_bytes.div_ceil(payload).max(1) as u32;
+        let total_steps = if n > 1 { 2 * (n - 1) } else { 0 };
+        RingHost {
+            job,
+            rank,
+            n,
+            chunk_packets,
+            total_steps,
+            recv: vec![0; total_steps as usize],
+            finished: false,
+        }
+    }
+
+    fn successor(&self, ctx: &Ctx) -> NodeId {
+        let p = &ctx.jobs[self.job as usize].spec.participants;
+        p[(self.rank as usize + 1) % p.len()]
+    }
+}
+
+pub fn on_wake(me: NodeId, rh: &mut RingHost, ctx: &mut Ctx) {
+    if rh.n == 1 {
+        // degenerate ring: nothing to exchange
+        finish(rh, ctx);
+        return;
+    }
+    // inject the whole step-0 chunk; the NIC serializes at line rate
+    for p in 0..rh.chunk_packets {
+        send_packet(me, rh, ctx, 0, p);
+    }
+}
+
+fn send_packet(
+    me: NodeId,
+    rh: &mut RingHost,
+    ctx: &mut Ctx,
+    step: u32,
+    p: u32,
+) {
+    let dst = rh.successor(ctx);
+    let wire = ctx.jobs[rh.job as usize].spec.wire_bytes();
+    let mut pkt = Packet::data(PacketKind::Ring, me, dst);
+    pkt.tenant = ctx.jobs[rh.job as usize].spec.tenant;
+    pkt.meta = step as u64;
+    pkt.block = p;
+    pkt.wire_bytes = wire;
+    pkt.flow = ((me as u64) << 32) | step as u64;
+    ctx.send(0, pkt);
+}
+
+pub fn on_packet(me: NodeId, rh: &mut RingHost, ctx: &mut Ctx, pkt: Packet) {
+    let step = pkt.meta as u32;
+    if step >= rh.total_steps || rh.finished {
+        return;
+    }
+    rh.recv[step as usize] += 1;
+    // per-packet pipelining: this packet's elements are reduced and can
+    // move on immediately
+    if step + 1 < rh.total_steps {
+        send_packet(me, rh, ctx, step + 1, pkt.block);
+    }
+    if rh.recv[step as usize] == rh.chunk_packets
+        && rh.recv.iter().all(|&c| c >= rh.chunk_packets)
+    {
+        finish(rh, ctx);
+    }
+}
+
+fn finish(rh: &mut RingHost, ctx: &mut Ctx) {
+    if rh.finished {
+        return;
+    }
+    rh.finished = true;
+    let rank = rh.rank;
+    let now = ctx.now;
+    ctx.jobs[rh.job as usize].host_finished(rank, now);
+}

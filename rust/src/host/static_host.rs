@@ -1,0 +1,142 @@
+//! Static-tree host protocol: line-rate self-clocked block injection
+//! toward the per-tree root switch; completion on the switch-initiated
+//! broadcast. (The baselines assume a reliable network, as the paper's
+//! do.)
+
+use crate::collectives::block_payload;
+use crate::sim::packet::{Packet, PacketKind, Payload};
+use crate::sim::{Ctx, NodeId};
+use crate::util::rng::Rng;
+
+use super::{encode_timer, TIMER_STREAM};
+
+/// Static-tree protocol state for one participating host.
+pub struct StaticHost {
+    pub job: u32,
+    pub rank: u32,
+    pub total_blocks: u32,
+    pub next_block: u32,
+    pub inflight: u32,
+    pub stalled: bool,
+    pub done: Vec<bool>,
+    pub done_count: u32,
+    pub finished: bool,
+}
+
+impl StaticHost {
+    pub fn new(job: u32, rank: u32, total_blocks: u32) -> StaticHost {
+        StaticHost {
+            job,
+            rank,
+            total_blocks,
+            next_block: 0,
+            inflight: 0,
+            stalled: false,
+            done: vec![false; total_blocks as usize],
+            done_count: 0,
+            finished: false,
+        }
+    }
+}
+
+pub fn on_wake(me: NodeId, sh: &mut StaticHost, rng: &mut Rng, ctx: &mut Ctx) {
+    pump(me, sh, rng, ctx);
+}
+
+/// Emit the next block at line rate (same pacing as the Canary hosts).
+fn pump(me: NodeId, sh: &mut StaticHost, rng: &mut Rng, ctx: &mut Ctx) {
+    if sh.next_block >= sh.total_blocks {
+        return;
+    }
+    let window = ctx.jobs[sh.job as usize].spec.window;
+    if window > 0 && sh.inflight >= window {
+        sh.stalled = true;
+        return;
+    }
+    // NIC pacing under backpressure (see canary_host::pump)
+    let wire_bytes = ctx.jobs[sh.job as usize].spec.wire_bytes() as u64;
+    if ctx.port_class0_bytes(0) > 8 * wire_bytes {
+        let retry = wire_bytes * ctx.cfg.link_ps_per_byte;
+        ctx.host_timer(retry, encode_timer(TIMER_STREAM, sh.job, 0, 0));
+        return;
+    }
+    let idx = sh.next_block;
+    sh.next_block += 1;
+    sh.inflight += 1;
+    send_block(me, sh, ctx, idx);
+
+    let wire = ctx.jobs[sh.job as usize].spec.wire_bytes() as u64
+        * ctx.cfg.link_ps_per_byte;
+    let mut gap = wire;
+    if ctx.cfg.noise_prob > 0.0 && rng.chance(ctx.cfg.noise_prob) {
+        gap += ctx.cfg.noise_delay_ps; // OS-noise stream stall (5.2.5)
+    }
+    ctx.host_timer(gap, encode_timer(TIMER_STREAM, sh.job, 0, 0));
+}
+
+fn send_block(me: NodeId, sh: &mut StaticHost, ctx: &mut Ctx, idx: u32) {
+    let spec = &ctx.jobs[sh.job as usize].spec;
+    let n_trees = spec.tree_roots.len().max(1);
+    let tree = (idx as usize % n_trees) as u8;
+    let root = spec.tree_roots[tree as usize];
+    let mut pkt = Packet::data(PacketKind::StaticReduce, me, root);
+    pkt.tenant = spec.tenant;
+    pkt.block = idx;
+    pkt.tree = tree;
+    pkt.counter = 1;
+    pkt.hosts = spec.participants.len() as u32;
+    pkt.wire_bytes = spec.wire_bytes();
+    pkt.flow = ((me as u64) << 32) | idx as u64;
+    if ctx.cfg.carry_values {
+        pkt.payload = Payload::Lanes(
+            block_payload(spec.tenant, me, idx, spec.lanes())
+                .into_boxed_slice(),
+        );
+    }
+    ctx.send(0, pkt);
+}
+
+pub fn on_broadcast(
+    me: NodeId,
+    sh: &mut StaticHost,
+    ctx: &mut Ctx,
+    pkt: Packet,
+) {
+    let idx = pkt.block;
+    if idx >= sh.total_blocks || sh.done[idx as usize] {
+        return;
+    }
+    sh.done[idx as usize] = true;
+    sh.done_count += 1;
+    sh.inflight = sh.inflight.saturating_sub(1);
+    if let Some(lanes) = pkt.payload.lanes() {
+        let rank = sh.rank;
+        ctx.jobs[sh.job as usize].record_result(rank, idx, lanes);
+    }
+    if sh.stalled {
+        sh.stalled = false;
+        // resume the stream; refills are not noise-delayed (the noise
+        // draw happens on the pacing clock)
+        let mut quiet = Rng::new(0);
+        pump(me, sh, &mut quiet, ctx);
+    }
+    if sh.done_count == sh.total_blocks && !sh.finished {
+        sh.finished = true;
+        let rank = sh.rank;
+        let now = ctx.now;
+        ctx.jobs[sh.job as usize].host_finished(rank, now);
+    }
+}
+
+pub fn on_timer(
+    me: NodeId,
+    sh: &mut StaticHost,
+    rng: &mut Rng,
+    ctx: &mut Ctx,
+    timer: u64,
+) {
+    let (kind, _job, _idx, _aux) = super::decode_timer(timer);
+    if kind == TIMER_STREAM {
+        pump(me, sh, rng, ctx);
+    }
+}

@@ -1,0 +1,46 @@
+//! # Canary-RS
+//!
+//! Full-system reproduction of *"Canary: Congestion-Aware In-Network
+//! Allreduce Using Dynamic Trees"* (De Sensi et al., 2023).
+//!
+//! Three layers (see DESIGN.md):
+//!
+//! - **L3 (this crate)**: the coordinator — a packet-level discrete-event
+//!   simulator of the paper's fat-tree testbed, the Canary switch
+//!   dataplane and host/leader protocol, the static-tree and ring
+//!   baselines, the figure/bench harness, and a data-parallel trainer
+//!   that drives real gradients through the simulated network.
+//! - **L2 (python/compile/model.py)**: a JAX transformer LM whose
+//!   train-step is AOT-lowered to HLO text and executed from Rust via
+//!   PJRT ([`runtime`]).
+//! - **L1 (python/compile/kernels/)**: Pallas kernels for the switch-ALU
+//!   saturating aggregation and fixed-point quantization, mirrored
+//!   bit-for-bit by [`switch::alu`].
+//!
+//! Quick start:
+//!
+//! ```no_run
+//! use canary::collectives::{runner, Algo};
+//! use canary::workload::{build_scenario, Scenario};
+//!
+//! let sc = Scenario::paper_default(Algo::Canary);
+//! let mut exp = build_scenario(&sc, 42);
+//! let results = runner::run_to_completion(&mut exp.net, u64::MAX);
+//! println!("goodput: {:?} Gbps", results[0].goodput_gbps);
+//! ```
+
+pub mod collectives;
+pub mod config;
+pub mod faults;
+pub mod figures;
+pub mod host;
+pub mod loadbalance;
+pub mod metrics;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod switch;
+pub mod topology;
+pub mod train;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,168 @@
+//! Congestion-aware traffic load balancing (paper Section 2.1, 5.2).
+//!
+//! Canary is orthogonal to the load-balancing algorithm; switches can use
+//! any scheme to pick the next hop toward the root/leader. We implement
+//! the paper's simulated default (send on a destination-derived default
+//! up-port unless its queue occupancy exceeds 50 %, then pick the up-port
+//! with the fewest enqueued bytes), plus ECMP, per-packet min-queue
+//! (DRILL-like), and flowlet switching (CONGA/LetFlow-like) for the
+//! ablation benches.
+
+use std::collections::HashMap;
+
+use crate::sim::{Ctx, Time};
+use crate::util::rng::splitmix64;
+
+/// Load-balancing policy for a switch's up-ports.
+#[derive(Clone, Debug)]
+pub enum LoadBalancer {
+    /// Paper default: destination-hash default port; if its occupancy
+    /// exceeds `threshold` (0.5 in the paper), re-route to the up-port
+    /// with the fewest enqueued bytes.
+    DefaultAdaptive { threshold: f64 },
+    /// Congestion-oblivious hash of the flow label.
+    Ecmp,
+    /// Per-packet least-loaded port (maximal adaptivity).
+    MinQueue,
+    /// Flowlet switching: a flow re-picks the least-loaded port only
+    /// after an idle gap, otherwise stays put (avoids reordering).
+    Flowlet { gap_ps: Time },
+}
+
+impl Default for LoadBalancer {
+    fn default() -> Self {
+        LoadBalancer::DefaultAdaptive { threshold: 0.5 }
+    }
+}
+
+/// Mutable per-switch LB state (only flowlets need any).
+#[derive(Clone, Debug, Default)]
+pub struct LbState {
+    /// flow -> (up-port offset, last-seen time)
+    flowlets: HashMap<u64, (u16, Time)>,
+}
+
+/// Pick an up-port offset in `[0, n_up)` for a packet with flow label
+/// `flow`, destination-derived default `dflt`, and traffic `class`
+/// (0 = reduction/control, 1 = background).
+///
+/// Signals are **per class** (virtual-channel occupancy, as in the
+/// paper's SST/merlin substrate): a flow reacts to its own class's
+/// congestion on each port. Service is a single shared FIFO, so classes
+/// share the line rate proportionally to their arrivals.
+pub fn select_up(
+    lb: &LoadBalancer,
+    state: &mut LbState,
+    ctx: &Ctx,
+    up_base_port: u16,
+    n_up: u16,
+    dflt: u16,
+    flow: u64,
+    class: usize,
+) -> u16 {
+    debug_assert!(n_up > 0 && dflt < n_up);
+    // dead up-links are never a valid choice (link-level liveness is
+    // what real adaptive fabrics key off after a failure)
+    let alive = |off: u16| ctx.port_alive(up_base_port + off);
+    match lb {
+        LoadBalancer::DefaultAdaptive { threshold } => {
+            if !alive(dflt)
+                || ctx.port_class_occupancy(up_base_port + dflt, class)
+                    > *threshold
+            {
+                min_queue_port(ctx, up_base_port, n_up, class)
+            } else {
+                dflt
+            }
+        }
+        LoadBalancer::Ecmp => {
+            let mut h = flow ^ 0x9E37_79B9_7F4A_7C15;
+            let port = (splitmix64(&mut h) % n_up as u64) as u16;
+            if alive(port) {
+                port
+            } else {
+                min_queue_port(ctx, up_base_port, n_up, class)
+            }
+        }
+        LoadBalancer::MinQueue => {
+            min_queue_port(ctx, up_base_port, n_up, class)
+        }
+        LoadBalancer::Flowlet { gap_ps } => {
+            let now = ctx.now;
+            let entry = state.flowlets.get(&flow).copied();
+            let port = match entry {
+                Some((p, last))
+                    if now.saturating_sub(last) <= *gap_ps
+                        && alive(p) =>
+                {
+                    p
+                }
+                _ => min_queue_port(ctx, up_base_port, n_up, class),
+            };
+            state.flowlets.insert(flow, (port, now));
+            port
+        }
+    }
+}
+
+/// Live up-port offset with the fewest enqueued bytes of this class
+/// (ties -> lowest index, keeping runs deterministic). Falls back to
+/// port 0 if all are dead (the packet will be dropped at the link —
+/// nothing better exists).
+fn min_queue_port(
+    ctx: &Ctx,
+    up_base_port: u16,
+    n_up: u16,
+    class: usize,
+) -> u16 {
+    let mut best = 0u16;
+    let mut best_bytes = u64::MAX;
+    for off in 0..n_up {
+        if !ctx.port_alive(up_base_port + off) {
+            continue;
+        }
+        let b = ctx.port_class_bytes(up_base_port + off, class);
+        if b < best_bytes {
+            best_bytes = b;
+            best = off;
+        }
+    }
+    best
+}
+
+/// Parse a policy name from CLI/config text.
+pub fn parse_policy(name: &str) -> Result<LoadBalancer, String> {
+    match name {
+        "adaptive" | "default" => {
+            Ok(LoadBalancer::DefaultAdaptive { threshold: 0.5 })
+        }
+        "ecmp" => Ok(LoadBalancer::Ecmp),
+        "minqueue" | "drill" => Ok(LoadBalancer::MinQueue),
+        "flowlet" => Ok(LoadBalancer::Flowlet {
+            gap_ps: 5 * crate::sim::US,
+        }),
+        other => Err(format!(
+            "unknown load balancer '{other}' \
+             (adaptive|ecmp|minqueue|flowlet)"
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_names() {
+        assert!(matches!(
+            parse_policy("adaptive").unwrap(),
+            LoadBalancer::DefaultAdaptive { .. }
+        ));
+        assert!(matches!(parse_policy("ecmp").unwrap(), LoadBalancer::Ecmp));
+        assert!(matches!(
+            parse_policy("drill").unwrap(),
+            LoadBalancer::MinQueue
+        ));
+        assert!(parse_policy("nope").is_err());
+    }
+}

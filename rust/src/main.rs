@@ -1,0 +1,251 @@
+//! `canary` — the leader CLI.
+//!
+//! Subcommands:
+//!   run      one allreduce experiment (algo/hosts/size/congestion/...)
+//!   train    data-parallel training with simulated gradient allreduce
+//!   mem      print the Section 3.2.2 switch-memory model
+//!   info     artifact manifest summary
+//!
+//! Figure regeneration lives in the `figures` binary.
+
+use anyhow::Result;
+
+use canary::collectives::{runner, Algo};
+use canary::config::{FatTreeConfig, SimConfig};
+use canary::loadbalance::parse_policy;
+use canary::metrics::{average_network_utilization, memory_model_bytes};
+use canary::report::gbps;
+use canary::runtime::Runtime;
+use canary::sim::{ps_to_us, US};
+use canary::train::{TrainConfig, Trainer};
+use canary::util::cli::Args;
+use canary::workload::{build_scenario, Scenario};
+
+const USAGE: &str = "\
+canary — congestion-aware in-network allreduce (paper reproduction)
+
+USAGE:
+  canary run   [--algo canary|static1|static4|ring] [--hosts N]
+               [--size BYTES] [--congestion true|false] [--seed S]
+               [--timeout-us T] [--lb adaptive|ecmp|minqueue|flowlet]
+               [--topo paper|small|tiny] [--values]
+  canary train [--preset tiny|base] [--workers N] [--steps N] [--lr F]
+               [--algo ...] [--comm-every N] [--seed S]
+  canary mem   [--timeout-us T] [--diameter D]
+  canary info
+";
+
+fn parse_algo(s: &str) -> Result<Algo, String> {
+    match s {
+        "canary" => Ok(Algo::Canary),
+        "ring" => Ok(Algo::Ring),
+        _ => {
+            if let Some(n) = s.strip_prefix("static") {
+                let n: u8 = n.parse().map_err(|_| format!("bad algo '{s}'"))?;
+                Ok(Algo::StaticTree { n_trees: n })
+            } else {
+                Err(format!("unknown algo '{s}'"))
+            }
+        }
+    }
+}
+
+fn parse_topo(s: &str) -> Result<FatTreeConfig, String> {
+    match s {
+        "paper" => Ok(FatTreeConfig::paper()),
+        "small" => Ok(FatTreeConfig::small()),
+        "tiny" => Ok(FatTreeConfig::tiny()),
+        _ => Err(format!("unknown topo '{s}' (paper|small|tiny)")),
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let algo = parse_algo(args.get_or("algo", "canary"))
+        .map_err(anyhow::Error::msg)?;
+    let topo = parse_topo(args.get_or("topo", "paper"))
+        .map_err(anyhow::Error::msg)?;
+    let hosts: u32 = args
+        .get_parse("hosts", topo.n_hosts() / 2)
+        .map_err(anyhow::Error::msg)?;
+    let size: u64 = args
+        .get_parse("size", 4 * 1024 * 1024)
+        .map_err(anyhow::Error::msg)?;
+    let congestion = args.get_or("congestion", "true") == "true";
+    let seed: u64 = args.get_parse("seed", 1).map_err(anyhow::Error::msg)?;
+    let timeout_us: u64 =
+        args.get_parse("timeout-us", 1).map_err(anyhow::Error::msg)?;
+    let lb = parse_policy(args.get_or("lb", "adaptive"))
+        .map_err(anyhow::Error::msg)?;
+
+    let window: u32 =
+        args.get_parse("window", 0).map_err(anyhow::Error::msg)?;
+    let sim = SimConfig::default()
+        .with_timeout(timeout_us * US)
+        .with_window(window)
+        .with_values(args.flag("values"));
+    let sc = Scenario {
+        topo,
+        sim,
+        lb,
+        algo,
+        n_allreduce_hosts: hosts,
+        congestion,
+        data_bytes: size,
+        record_results: false,
+    };
+    let mut exp = build_scenario(&sc, seed);
+    let results = runner::run_to_completion(&mut exp.net, u64::MAX);
+    let r = &results[0];
+    println!(
+        "algo={} hosts={} size={}B congestion={}",
+        r.algo.name(),
+        r.n_hosts,
+        r.data_bytes,
+        congestion
+    );
+    println!(
+        "runtime: {:.1} us   goodput: {} Gbps",
+        r.runtime_ps.map(ps_to_us).unwrap_or(f64::NAN),
+        gbps(r.goodput_gbps)
+    );
+    println!(
+        "events: {}   avg network utilization: {:.1}%",
+        exp.net.events_processed,
+        100.0 * average_network_utilization(&exp.net, exp.net.now)
+    );
+    println!(
+        "collisions: {}  stragglers: {}  restorations: {}  drops(bg): {}",
+        exp.net.metrics.collisions,
+        exp.net.metrics.stragglers,
+        exp.net.metrics.restorations,
+        exp.net.metrics.drops_overflow
+    );
+    println!(
+        "pkts by kind: reduce {} bcast {} restore {} rdata {} rreq {} fail {} direct {}",
+        exp.net.metrics.pkts_by_kind[0],
+        exp.net.metrics.pkts_by_kind[1],
+        exp.net.metrics.pkts_by_kind[2],
+        exp.net.metrics.pkts_by_kind[3],
+        exp.net.metrics.pkts_by_kind[4],
+        exp.net.metrics.pkts_by_kind[5],
+        exp.net.metrics.pkts_by_kind[6],
+    );
+    println!(
+        "descriptors: alloc {} freed {} live {} highwater {}",
+        exp.net.metrics.descriptors_allocated,
+        exp.net.metrics.descriptors_freed,
+        exp.net.metrics.descriptors_live,
+        exp.net.metrics.descriptor_high_water
+    );
+    if args.flag("debug-links") {
+        let end = exp.net.now;
+        let mut busiest: Vec<(f64, usize)> = (0..exp.net.links.len())
+            .map(|l| (exp.net.link_utilization(l, end), l))
+            .collect();
+        busiest.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        println!("busiest links:");
+        for (u, l) in busiest.iter().take(8) {
+            let link = &exp.net.links[*l];
+            println!(
+                "  {} p{} -> {} p{}  util {:.1}%  bytes {}",
+                link.from,
+                link.from_port,
+                link.to,
+                link.to_port,
+                100.0 * u,
+                link.bytes_tx
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = TrainConfig {
+        preset: args.get_or("preset", "base").to_string(),
+        workers: args.get_parse("workers", 4).map_err(anyhow::Error::msg)?,
+        steps: args.get_parse("steps", 50).map_err(anyhow::Error::msg)?,
+        lr: args.get_parse("lr", 0.5).map_err(anyhow::Error::msg)?,
+        algo: parse_algo(args.get_or("algo", "canary"))
+            .map_err(anyhow::Error::msg)?,
+        comm_every: args
+            .get_parse("comm-every", 10)
+            .map_err(anyhow::Error::msg)?,
+        congestion: true,
+        seed: args.get_parse("seed", 0xBEEF).map_err(anyhow::Error::msg)?,
+    };
+    let rt = Runtime::load(Runtime::default_dir())?;
+    let mut trainer = Trainer::new(&rt, cfg)?;
+    println!(
+        "training preset={} P={} workers={}",
+        trainer.cfg.preset, trainer.param_count, trainer.cfg.workers
+    );
+    let logs = trainer.train()?;
+    for l in &logs {
+        let comm = l
+            .comm_ps
+            .map(|c| format!("{:.1} us", ps_to_us(c)))
+            .unwrap_or_else(|| "-".into());
+        println!(
+            "step {:>4}  loss {:.4}  comm {}  wall {:.0} ms",
+            l.step, l.mean_loss, comm, l.wall_ms
+        );
+    }
+    Ok(())
+}
+
+fn cmd_mem(args: &Args) -> Result<()> {
+    let timeout_us: f64 =
+        args.get_parse("timeout-us", 1.0).map_err(anyhow::Error::msg)?;
+    let d: u32 = args.get_parse("diameter", 5).map_err(anyhow::Error::msg)?;
+    let bytes =
+        memory_model_bytes(12.5e9, d, 300e-9, timeout_us * 1e-6, 1e-6);
+    println!(
+        "memory model: b(2d(l+t)+r) = {:.1} KiB per switch \
+         (100 Gbps, d={d}, l=300ns, t={timeout_us}us, r=1us)",
+        bytes / 1024.0
+    );
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let rt = Runtime::load(Runtime::default_dir())?;
+    println!("artifacts in {}:", rt.dir.display());
+    for (name, sig) in &rt.manifest.artifacts {
+        println!(
+            "  {name:<28} {} -> {} tensors",
+            sig.file,
+            sig.outputs.len()
+        );
+    }
+    for (name, m) in &rt.manifest.models {
+        println!(
+            "  model {name}: P={} vocab={} d={} layers={} T={} B={}",
+            m.param_count, m.vocab, m.d_model, m.n_layers, m.seq_len, m.batch
+        );
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(
+        argv,
+        &[
+            "algo", "hosts", "size", "congestion", "seed", "timeout-us",
+            "lb", "topo", "values", "preset", "workers", "steps", "lr",
+            "comm-every", "diameter", "window", "debug-links",
+        ],
+    )
+    .map_err(anyhow::Error::msg)?;
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("run") => cmd_run(&args),
+        Some("train") => cmd_train(&args),
+        Some("mem") => cmd_mem(&args),
+        Some("info") => cmd_info(),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Global simulation counters and post-run analysis helpers
+//! (link-utilization distributions, average network utilization,
+//! descriptor-memory accounting for the Section 3.2.2 model).
+
+use crate::sim::{Network, Time};
+use crate::util::stats::Histogram;
+
+/// Counters accumulated during a run.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub pkts_delivered: u64,
+    /// Deliveries by packet kind (indexed by `PacketKind as usize`).
+    pub pkts_by_kind: [u64; 11],
+    /// Droppable (background) packets lost to queue overflow.
+    pub drops_overflow: u64,
+    /// Packets lost because a link/switch was down.
+    pub drops_link_down: u64,
+    /// Random loss injected by the fault plan.
+    pub drops_injected: u64,
+    /// Canary: packets that arrived after their descriptor's timeout and
+    /// were forwarded immediately (Section 3.1.1).
+    pub stragglers: u64,
+    /// Canary: descriptor-table collisions (Section 3.2.1).
+    pub collisions: u64,
+    /// Canary: restoration packets sent by leaders.
+    pub restorations: u64,
+    /// Canary: retransmission requests received by leaders.
+    pub retrans_requests: u64,
+    /// Canary: failure notices broadcast (block retried from scratch).
+    pub failures: u64,
+    /// Blocks that fell back to the host-based path.
+    pub fallbacks: u64,
+    /// Switch failures injected.
+    pub switch_failures: u64,
+    /// Descriptor allocations / deallocations (leak check: must balance
+    /// at the end of a clean run).
+    pub descriptors_allocated: u64,
+    pub descriptors_freed: u64,
+    /// High-water mark of live descriptors over all switches.
+    pub descriptor_high_water: u64,
+    /// Currently live descriptors (maintained by the dataplane).
+    pub descriptors_live: u64,
+    /// Sum over descriptors of (dealloc - alloc) time, for mean residency.
+    pub descriptor_residency_ps: u64,
+}
+
+impl Metrics {
+    pub fn on_descriptor_alloc(&mut self) {
+        self.descriptors_allocated += 1;
+        self.descriptors_live += 1;
+        self.descriptor_high_water =
+            self.descriptor_high_water.max(self.descriptors_live);
+    }
+
+    pub fn on_descriptor_free(&mut self, residency: Time) {
+        self.descriptors_freed += 1;
+        self.descriptors_live = self.descriptors_live.saturating_sub(1);
+        self.descriptor_residency_ps += residency;
+    }
+}
+
+/// Per-link utilization samples over a window, as in Fig. 7b / Fig. 10b
+/// (each sample is one link; utilization = busy time / wall time).
+pub fn link_utilizations(net: &Network, end: Time) -> Vec<f64> {
+    (0..net.links.len())
+        .map(|l| net.link_utilization(l, end))
+        .collect()
+}
+
+/// Average network utilization (mean over all links), the scalar the
+/// paper quotes alongside Fig. 7b (40.2 % / 29.5 % / 20.9 %).
+pub fn average_network_utilization(net: &Network, end: Time) -> f64 {
+    let u = link_utilizations(net, end);
+    crate::util::stats::mean(&u)
+}
+
+/// Utilization histogram in the paper's Fig. 7b bucketing (10 % buckets).
+pub fn utilization_histogram(net: &Network, end: Time) -> Histogram {
+    let mut h = Histogram::new(0.0, 1.0, 10);
+    for u in link_utilizations(net, end) {
+        h.add(u);
+    }
+    h
+}
+
+/// Section 3.2.2 analytical bound on per-switch descriptor memory:
+/// `b * (2d(l+t) + r)` bytes.
+pub fn memory_model_bytes(
+    bandwidth_bytes_per_s: f64,
+    diameter: u32,
+    hop_latency_s: f64,
+    timeout_s: f64,
+    leader_time_s: f64,
+) -> f64 {
+    bandwidth_bytes_per_s
+        * (2.0 * diameter as f64 * (hop_latency_s + timeout_s)
+            + leader_time_s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn descriptor_accounting() {
+        let mut m = Metrics::default();
+        m.on_descriptor_alloc();
+        m.on_descriptor_alloc();
+        assert_eq!(m.descriptor_high_water, 2);
+        m.on_descriptor_free(100);
+        assert_eq!(m.descriptors_live, 1);
+        m.on_descriptor_free(50);
+        assert_eq!(m.descriptors_live, 0);
+        assert_eq!(m.descriptors_allocated, m.descriptors_freed);
+        assert_eq!(m.descriptor_residency_ps, 150);
+    }
+
+    #[test]
+    fn paper_memory_example() {
+        // Paper: 100 Gbps, d=5, l=300ns, t=1us, r=1us => ~175 KiB
+        let bytes = memory_model_bytes(12.5e9, 5, 300e-9, 1e-6, 1e-6);
+        let kib = bytes / 1024.0;
+        assert!(
+            (kib - 175.0).abs() < 15.0,
+            "expected ~175 KiB, got {kib:.1}"
+        );
+    }
+}

@@ -1,0 +1,120 @@
+//! Result emission: CSV files under `results/` plus paper-style
+//! markdown/ASCII rows on stdout, one series per figure.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::Path;
+
+/// A tabular result series (one figure or table).
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub name: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Series {
+    pub fn new(name: &str, columns: &[&str]) -> Series {
+        Series {
+            name: name.to_string(),
+            columns: columns.iter().map(|c| c.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, row: Vec<String>) {
+        assert_eq!(row.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(row);
+    }
+
+    /// `fmt_row!`-style convenience for mixed numeric rows.
+    pub fn push_display(&mut self, row: &[&dyn std::fmt::Display]) {
+        self.push(row.iter().map(|v| format!("{v}")).collect());
+    }
+
+    /// Write `results/<name>.csv`.
+    pub fn write_csv(&self, dir: &str) -> std::io::Result<String> {
+        fs::create_dir_all(dir)?;
+        let path = Path::new(dir).join(format!("{}.csv", self.name));
+        let mut f = fs::File::create(&path)?;
+        writeln!(f, "{}", self.columns.join(","))?;
+        for row in &self.rows {
+            writeln!(f, "{}", row.join(","))?;
+        }
+        Ok(path.to_string_lossy().to_string())
+    }
+
+    /// Print as an aligned table.
+    pub fn print(&self) {
+        let mut widths: Vec<usize> =
+            self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let header: Vec<String> = self
+            .columns
+            .iter()
+            .zip(&widths)
+            .map(|(c, w)| format!("{c:>w$}"))
+            .collect();
+        println!("== {} ==", self.name);
+        println!("{}", header.join("  "));
+        for row in &self.rows {
+            let cells: Vec<String> = row
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect();
+            println!("{}", cells.join("  "));
+        }
+        println!();
+    }
+}
+
+/// Format helper: Gbps with 1 decimal.
+pub fn gbps(x: Option<f64>) -> String {
+    match x {
+        Some(v) => format!("{v:.1}"),
+        None => "timeout".to_string(),
+    }
+}
+
+/// Format helper: microseconds with 1 decimal.
+pub fn us(x: Option<u64>) -> String {
+    match x {
+        Some(v) => format!("{:.1}", v as f64 / 1e6),
+        None => "timeout".to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        let mut s = Series::new("unit_test_series", &["a", "b"]);
+        s.push(vec!["1".into(), "2.5".into()]);
+        s.push(vec!["3".into(), "x".into()]);
+        let dir = std::env::temp_dir().join("canary_report_test");
+        let path = s.write_csv(dir.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        assert_eq!(text, "a,b\n1,2.5\n3,x\n");
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(gbps(Some(12.34)), "12.3");
+        assert_eq!(gbps(None), "timeout");
+        assert_eq!(us(Some(1_500_000)), "1.5");
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut s = Series::new("x", &["a", "b"]);
+        s.push(vec!["1".into()]);
+    }
+}

@@ -1,0 +1,264 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt`) produced
+//! by `python/compile/aot.py` and execute them from Rust.
+//!
+//! HLO **text** is the interchange format — the `xla` crate's
+//! xla_extension 0.5.1 rejects jax>=0.5 serialized protos (64-bit ids),
+//! while the text parser reassigns ids (see /opt/xla-example/README.md).
+//! Python never runs at request time: after `make artifacts` the Rust
+//! binary is self-contained.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Value};
+
+/// Parsed `manifest.json`: artifact signatures + model configs + golden
+/// parity vectors.
+#[derive(Debug)]
+pub struct Manifest {
+    pub packet_lanes: usize,
+    pub artifacts: BTreeMap<String, ArtifactSig>,
+    pub models: BTreeMap<String, ModelInfo>,
+}
+
+/// One artifact's file and I/O signature.
+#[derive(Clone, Debug)]
+pub struct ArtifactSig {
+    pub file: String,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSig {
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSig {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Model hyper-parameters from the manifest.
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub frac_bits: u32,
+    pub param_count: usize,
+}
+
+fn tensor_sig(v: &Value) -> Result<TensorSig> {
+    Ok(TensorSig {
+        dtype: v
+            .expect("dtype")
+            .as_str()
+            .ok_or_else(|| anyhow!("dtype not a string"))?
+            .to_string(),
+        shape: v
+            .expect("shape")
+            .int_vec()
+            .ok_or_else(|| anyhow!("shape not ints"))?
+            .into_iter()
+            .map(|i| i as usize)
+            .collect(),
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| {
+                format!(
+                    "reading {}/manifest.json — run `make artifacts` first",
+                    dir.display()
+                )
+            })?;
+        let v = json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let mut artifacts = BTreeMap::new();
+        for (name, art) in v
+            .expect("artifacts")
+            .as_object()
+            .ok_or_else(|| anyhow!("artifacts not an object"))?
+        {
+            let inputs = art
+                .expect("inputs")
+                .as_array()
+                .unwrap()
+                .iter()
+                .map(tensor_sig)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = art
+                .expect("outputs")
+                .as_array()
+                .unwrap()
+                .iter()
+                .map(tensor_sig)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactSig {
+                    file: art.expect("file").as_str().unwrap().to_string(),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+        let mut models = BTreeMap::new();
+        for (name, m) in v
+            .expect("models")
+            .as_object()
+            .ok_or_else(|| anyhow!("models not an object"))?
+        {
+            let get = |k: &str| -> Result<usize> {
+                Ok(m.expect(k)
+                    .as_i64()
+                    .ok_or_else(|| anyhow!("{k} not an int"))?
+                    as usize)
+            };
+            models.insert(
+                name.clone(),
+                ModelInfo {
+                    vocab: get("vocab")?,
+                    d_model: get("d_model")?,
+                    n_layers: get("n_layers")?,
+                    seq_len: get("seq_len")?,
+                    batch: get("batch")?,
+                    frac_bits: get("frac_bits")? as u32,
+                    param_count: get("param_count")?,
+                },
+            );
+        }
+        Ok(Manifest {
+            packet_lanes: v.expect("packet_lanes").as_i64().unwrap() as usize,
+            artifacts,
+            models,
+        })
+    }
+}
+
+/// A compiled artifact, ready to execute.
+pub struct Executable {
+    pub name: String,
+    pub sig: ArtifactSig,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the un-tupled outputs.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.sig.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.sig.inputs.len(),
+                inputs.len()
+            );
+        }
+        let result = self.exe.execute::<xla::Literal>(inputs)?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True
+        Ok(result.to_tuple()?)
+    }
+}
+
+/// The PJRT runtime: a CPU client plus the artifact directory.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and read the manifest.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            dir,
+            manifest,
+        })
+    }
+
+    /// Default artifact dir: `$CANARY_ARTIFACTS` or `<crate>/artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("CANARY_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| {
+                Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+            })
+    }
+
+    /// Load + compile one artifact by manifest name.
+    pub fn compile(&self, name: &str) -> Result<Executable> {
+        let sig = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("no artifact named '{name}'"))?
+            .clone();
+        let path = self.dir.join(&sig.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Executable {
+            name: name.to_string(),
+            sig,
+            exe,
+        })
+    }
+}
+
+// ---- literal marshalling helpers ------------------------------------------
+
+/// f32 slice -> rank-1 literal.
+pub fn lit_f32(xs: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(xs)
+}
+
+/// i32 slice -> rank-1 literal.
+pub fn lit_i32(xs: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(xs)
+}
+
+/// i32 slice -> rank-2 literal of `[rows, cols]`.
+pub fn lit_i32_2d(xs: &[i32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    assert_eq!(xs.len(), rows * cols);
+    Ok(xla::Literal::vec1(xs).reshape(&[rows as i64, cols as i64])?)
+}
+
+/// f32 scalar literal.
+pub fn lit_f32_scalar(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// u32 scalar literal.
+pub fn lit_u32_scalar(x: u32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// Literal -> Vec<f32>.
+pub fn to_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(l.to_vec::<f32>()?)
+}
+
+/// Literal -> Vec<i32>.
+pub fn to_i32(l: &xla::Literal) -> Result<Vec<i32>> {
+    Ok(l.to_vec::<i32>()?)
+}
+
+/// Scalar literal -> f32.
+pub fn to_f32_scalar(l: &xla::Literal) -> Result<f32> {
+    Ok(l.get_first_element::<f32>()?)
+}

@@ -1,0 +1,129 @@
+//! Event heap for the discrete-event engine.
+//!
+//! Events are ordered by (time, sequence). The sequence number makes the
+//! order of simultaneous events deterministic (insertion order), which
+//! keeps whole runs bit-reproducible from the seed.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::packet::Packet;
+use super::Time;
+
+/// All event kinds the engine dispatches.
+#[derive(Debug)]
+pub enum Event {
+    /// Packet finishes propagation and arrives at `links[link].to`.
+    /// Boxed: keeps heap entries small — heap sift cost dominates the
+    /// event loop otherwise (EXPERIMENTS.md §Perf).
+    Arrive { link: usize, packet: Box<Packet> },
+    /// Sender port of `links[link]` finished serializing; pop next.
+    TxDone { link: usize },
+    /// Canary descriptor timeout (switch, table slot, generation).
+    SwitchTimeout { node: u32, slot: u32, generation: u64 },
+    /// Host protocol timer (retransmission, noise-delayed send, ...).
+    HostTimer { node: u32, timer: u64 },
+    /// Scheduled switch/link failure (fault injection).
+    Fail { node: u32 },
+    /// Generic job kick-off (start a host's injection loop).
+    JobWake { node: u32, job: u32 },
+}
+
+struct HeapEntry {
+    /// `(time << 64) | seq` — one u128 comparison per sift step instead
+    /// of two u64 compares (the heap dominates the event loop; see
+    /// EXPERIMENTS.md §Perf).
+    key: u128,
+    event: Event,
+}
+
+impl PartialEq for HeapEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.key == other.key
+    }
+}
+impl Eq for HeapEntry {}
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed: BinaryHeap is a max-heap, we want earliest first
+        other.key.cmp(&self.key)
+    }
+}
+
+/// Deterministic min-heap of timestamped events.
+#[derive(Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<HeapEntry>,
+    next_seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, time: Time, event: Event) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let key = ((time as u128) << 64) | seq as u128;
+        self.heap.push(HeapEntry { key, event });
+    }
+
+    pub fn pop(&mut self) -> Option<(Time, Event)> {
+        self.heap
+            .pop()
+            .map(|e| (((e.key >> 64) as Time), e.event))
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(30, Event::TxDone { link: 3 });
+        q.push(10, Event::TxDone { link: 1 });
+        q.push(20, Event::TxDone { link: 2 });
+        let order: Vec<Time> = std::iter::from_fn(|| q.pop().map(|(t, _)| t))
+            .collect();
+        assert_eq!(order, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn ties_break_by_insertion_order() {
+        let mut q = EventQueue::new();
+        for i in 0..5 {
+            q.push(7, Event::TxDone { link: i });
+        }
+        let mut links = Vec::new();
+        while let Some((_, Event::TxDone { link })) = q.pop() {
+            links.push(link);
+        }
+        assert_eq!(links, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn len_tracks() {
+        let mut q = EventQueue::new();
+        assert!(q.is_empty());
+        q.push(1, Event::TxDone { link: 0 });
+        assert_eq!(q.len(), 1);
+        q.pop();
+        assert!(q.is_empty());
+    }
+}

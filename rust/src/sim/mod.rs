@@ -1,0 +1,60 @@
+//! Packet-level discrete-event network simulator.
+//!
+//! This is the substrate standing in for the paper's modified SST setup
+//! (Section 5.2): output-queued switches, links with serialization +
+//! propagation delay, 100 Gbps ports, and hosts that inject at line rate.
+//! Time is in integer **picoseconds** (1 byte at 100 Gbps = 80 ps), so all
+//! scheduling is exact and runs are bit-reproducible.
+
+pub mod event;
+pub mod network;
+pub mod packet;
+
+pub use event::{Event, EventQueue};
+pub use network::{Ctx, Link, LinkId, Network, Node, NodeBody, NodeId};
+pub use packet::{Packet, PacketKind, Payload};
+
+/// Simulation time in picoseconds.
+pub type Time = u64;
+
+/// Picoseconds per nanosecond/microsecond/millisecond.
+pub const NS: Time = 1_000;
+pub const US: Time = 1_000_000;
+pub const MS: Time = 1_000_000_000;
+
+/// 100 Gbps = 12.5 bytes/ns -> 80 ps per byte.
+pub const PS_PER_BYTE_100G: u64 = 80;
+
+/// Convert picoseconds to fractional microseconds (for reporting).
+pub fn ps_to_us(ps: Time) -> f64 {
+    ps as f64 / US as f64
+}
+
+/// Goodput in Gbit/s for `bytes` of application data moved in `ps`.
+pub fn goodput_gbps(bytes: u64, ps: Time) -> f64 {
+    if ps == 0 {
+        return 0.0;
+    }
+    (bytes as f64 * 8.0) / (ps as f64 / 1000.0) // bits / ns = Gbps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_conversions() {
+        assert_eq!(NS * 1000, US);
+        assert_eq!(US * 1000, MS);
+        // 1250 bytes at 100G = 100 ns
+        assert_eq!(1250 * PS_PER_BYTE_100G, 100 * NS);
+    }
+
+    #[test]
+    fn goodput_math() {
+        // 12.5 GB in 1 s = 100 Gbps
+        let gbps = goodput_gbps(12_500_000_000, 1_000_000 * US);
+        assert!((gbps - 100.0).abs() < 1e-9);
+        assert_eq!(goodput_gbps(10, 0), 0.0);
+    }
+}

@@ -1,0 +1,172 @@
+//! Packet model: the Canary wire format (paper Section 4.1) plus the
+//! baseline/background packet kinds, all carried by one struct so the
+//! simulator core stays protocol-agnostic.
+
+use super::network::NodeId;
+
+/// Canary header: destination 4 + id 4 + counter 2 + hosts 2 + children 4 +
+/// switch address 2 + flags/padding 1 = 19 bytes (paper Section 5.1).
+pub const CANARY_HEADER_BYTES: u32 = 19;
+/// Ethernet header + framing overhead (paper Section 5.1: 14 + 24).
+pub const ETH_OVERHEAD_BYTES: u32 = 38;
+/// Total per-packet header overhead (19 + 38 = 57 bytes, Section 5.1).
+pub const HEADER_OVERHEAD_BYTES: u32 =
+    CANARY_HEADER_BYTES + ETH_OVERHEAD_BYTES;
+/// Default payload in the scale simulations: 256 4-byte elements
+/// (Section 5.1). Configurable via `SimConfig::payload_bytes`.
+pub const PACKET_LANES: usize = 256;
+pub const PAYLOAD_BYTES: u32 = (PACKET_LANES * 4) as u32;
+/// Full wire size of a default max-payload Canary packet.
+pub const WIRE_BYTES: u32 = PAYLOAD_BYTES + HEADER_OVERHEAD_BYTES;
+
+/// Protocol role of a packet.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PacketKind {
+    /// Canary reduce-phase data, flowing toward the leader host.
+    CanaryReduce,
+    /// Canary broadcast-phase data, flowing down the recorded tree.
+    CanaryBroadcast,
+    /// Leader -> collided switch: bootstrap a local broadcast
+    /// (tree restoration, Section 3.2.1). Children bitmap in `restore`.
+    CanaryRestore,
+    /// Unicast retransmission of a finished block's result to one host.
+    CanaryRetransData,
+    /// Host -> leader retransmission request (loss suspected).
+    CanaryRetransReq,
+    /// Leader -> hosts: reduce this block again with a fresh id
+    /// (Section 3.3; carries the retry round in `meta`).
+    CanaryFailure,
+    /// Host -> leader direct contribution (host-based fallback / bypass).
+    CanaryDirect,
+    /// Static-tree reduce-phase data (SHARP/SwitchML/ATP-style).
+    StaticReduce,
+    /// Static-tree broadcast-phase data.
+    StaticBroadcast,
+    /// Ring allreduce data; `meta` carries the step index.
+    Ring,
+    /// Background random-uniform injection traffic (congestion generator).
+    Background,
+}
+
+impl PacketKind {
+    /// Background traffic is droppable on queue overflow; reduction
+    /// control/data is treated as lossless unless fault injection is on
+    /// (DESIGN.md: hosts window their injection, so reduction queues stay
+    /// bounded; drops of reduction packets come from `faults`).
+    pub fn droppable(self) -> bool {
+        matches!(self, PacketKind::Background)
+    }
+}
+
+/// Optional value-carrying payload. Perf-figure runs use `None` (sizes
+/// only); correctness tests and the trainer carry real lanes that the
+/// switches aggregate with the saturating ALU.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    None,
+    Lanes(Box<[i32]>),
+}
+
+impl Payload {
+    pub fn lanes(&self) -> Option<&[i32]> {
+        match self {
+            Payload::None => None,
+            Payload::Lanes(v) => Some(v),
+        }
+    }
+}
+
+/// A simulated packet. Fields beyond the Canary header exist only inside
+/// the simulator (kind tags, flow labels); the modelled *wire size* is
+/// explicit in `wire_bytes` and is all the links ever see.
+#[derive(Clone, Debug)]
+pub struct Packet {
+    pub kind: PacketKind,
+    /// Originating host (or switch for partial-aggregate packets).
+    pub src: NodeId,
+    /// Destination node: the leader host (Canary), the root switch
+    /// (static trees), the peer (ring/background).
+    pub dst: NodeId,
+    /// Tenant / application id (multitenancy, Section 3.4).
+    pub tenant: u16,
+    /// Reduction block id within the tenant (unique per retry round).
+    pub block: u32,
+    /// Static-tree index the block was assigned to (round-robin).
+    pub tree: u8,
+    /// Number of host contributions already aggregated (Fig. 3).
+    pub counter: u32,
+    /// Total hosts participating in the reduction (Fig. 3).
+    pub hosts: u32,
+    /// If set, switches forward without processing (Section 4.1).
+    pub bypass: bool,
+    /// Collision report: (switch address, ingress port) appended when a
+    /// descriptor could not be stored (Section 3.2.1).
+    pub collision: Option<(NodeId, u16)>,
+    /// Children port bitmap carried by a restoration packet.
+    pub restore: u64,
+    /// Protocol scratch (ring step, retry round, bg message id, ...).
+    pub meta: u64,
+    /// Flow label for ECMP/flowlet hashing.
+    pub flow: u64,
+    /// Modelled size on the wire, including headers.
+    pub wire_bytes: u32,
+    pub payload: Payload,
+}
+
+impl Packet {
+    /// A max-payload reduction data packet skeleton.
+    pub fn data(kind: PacketKind, src: NodeId, dst: NodeId) -> Packet {
+        Packet {
+            kind,
+            src,
+            dst,
+            tenant: 0,
+            block: 0,
+            tree: 0,
+            counter: 0,
+            hosts: 0,
+            bypass: false,
+            collision: None,
+            restore: 0,
+            meta: 0,
+            flow: 0,
+            wire_bytes: WIRE_BYTES,
+            payload: Payload::None,
+        }
+    }
+
+    /// Canary descriptor key (Section 3.1.3: table indexed by id).
+    pub fn block_key(&self) -> u64 {
+        ((self.tenant as u64) << 32) | self.block as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_sizes_match_paper() {
+        // 1024 B payload + 19 B canary + 38 B eth/framing = 1081 B
+        assert_eq!(WIRE_BYTES, 1081);
+        assert_eq!(CANARY_HEADER_BYTES, 19);
+    }
+
+    #[test]
+    fn block_key_disambiguates_tenants() {
+        let mut a = Packet::data(PacketKind::CanaryReduce, 0, 1);
+        let mut b = a.clone();
+        a.tenant = 1;
+        a.block = 7;
+        b.tenant = 2;
+        b.block = 7;
+        assert_ne!(a.block_key(), b.block_key());
+    }
+
+    #[test]
+    fn droppable_only_background() {
+        assert!(PacketKind::Background.droppable());
+        assert!(!PacketKind::CanaryReduce.droppable());
+        assert!(!PacketKind::StaticBroadcast.droppable());
+    }
+}

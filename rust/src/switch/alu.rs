@@ -1,0 +1,158 @@
+//! The switch ALU: saturating fixed-point arithmetic, mirroring the L1
+//! Pallas kernel (`python/compile/kernels/aggregate.py`) **bit for bit**.
+//!
+//! The Rust dataplane uses these native functions on the simulator hot
+//! path; `rust/tests/pjrt_parity.rs` proves they agree with the
+//! Pallas-lowered HLO executed through PJRT, and unit tests here check
+//! them against the golden vectors baked into `artifacts/manifest.json`.
+
+/// Largest f32 that converts to i32 without saturation surprises on
+/// either side of the bridge (see `kernels/quantize.py`).
+pub const Q_CLIP_F32: f32 = 2_147_483_520.0;
+
+/// Element-wise saturating i32 accumulate: `acc[i] += x[i]` (saturating).
+#[inline]
+pub fn sat_accumulate(acc: &mut [i32], x: &[i32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    for (a, &b) in acc.iter_mut().zip(x.iter()) {
+        *a = a.saturating_add(b);
+    }
+}
+
+/// Saturating fold of packet payload rows (the oracle shape used by the
+/// Python `ref.aggregate_ref`).
+pub fn aggregate_rows(rows: &[&[i32]], lanes: usize) -> Vec<i32> {
+    let mut acc = vec![0i32; lanes];
+    for row in rows {
+        sat_accumulate(&mut acc, row);
+    }
+    acc
+}
+
+/// Host-side fixed-point quantization: `round(x * 2^frac_bits)` clamped,
+/// bit-identical to the Pallas quantize kernel.
+#[inline]
+pub fn quantize(x: f32, frac_bits: u32) -> i32 {
+    let scaled = x * (2.0f32).powi(frac_bits as i32);
+    let clipped = scaled.clamp(-Q_CLIP_F32, Q_CLIP_F32);
+    // f32::round is round-half-away-from-zero, matching the kernel
+    clipped.round() as i32
+}
+
+/// Inverse of [`quantize`].
+#[inline]
+pub fn dequantize(q: i32, frac_bits: u32) -> f32 {
+    q as f32 * (2.0f32).powi(-(frac_bits as i32))
+}
+
+/// Vector helpers used by the trainer.
+pub fn quantize_vec(xs: &[f32], frac_bits: u32) -> Vec<i32> {
+    xs.iter().map(|&x| quantize(x, frac_bits)).collect()
+}
+
+pub fn dequantize_vec(qs: &[i32], frac_bits: u32) -> Vec<f32> {
+    qs.iter().map(|&q| dequantize(q, frac_bits)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn saturation_edges() {
+        let mut acc = vec![i32::MAX - 1, i32::MIN + 1, 0];
+        sat_accumulate(&mut acc, &[5, -5, 7]);
+        assert_eq!(acc, vec![i32::MAX, i32::MIN, 7]);
+    }
+
+    #[test]
+    fn aggregate_rows_matches_sequential() {
+        let r1 = [1, 2, 3];
+        let r2 = [10, 20, 30];
+        let out = aggregate_rows(&[&r1, &r2], 3);
+        assert_eq!(out, vec![11, 22, 33]);
+    }
+
+    #[test]
+    fn quantize_roundtrip_bound() {
+        for i in -1000..1000 {
+            let x = i as f32 * 0.001;
+            let dq = dequantize(quantize(x, 20), 20);
+            assert!((dq - x).abs() <= 0.5 * 2.0f32.powi(-20) + 1e-9);
+        }
+    }
+
+    #[test]
+    fn quantize_clips() {
+        assert_eq!(quantize(1e30, 0), 2_147_483_520);
+        assert_eq!(quantize(-1e30, 0), -2_147_483_520);
+    }
+
+    /// Golden-vector parity with the Python oracle (and hence the Pallas
+    /// kernel), read from artifacts/manifest.json when it exists.
+    #[test]
+    fn golden_parity_with_python() {
+        let path = concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/artifacts/manifest.json"
+        );
+        let Ok(text) = std::fs::read_to_string(path) else {
+            eprintln!("skipping golden parity: run `make artifacts` first");
+            return;
+        };
+        let man = crate::util::json::parse(&text).unwrap();
+        let g = man.expect("golden");
+        let frac = g.expect("frac_bits").as_i64().unwrap() as u32;
+
+        let agg = g.expect("aggregate");
+        let n = agg.expect("n").as_i64().unwrap() as usize;
+        let lanes = agg.expect("lanes").as_i64().unwrap() as usize;
+        let flat: Vec<i32> = agg
+            .expect("payloads")
+            .int_vec()
+            .unwrap()
+            .into_iter()
+            .map(|v| v as i32)
+            .collect();
+        let rows: Vec<&[i32]> =
+            (0..n).map(|i| &flat[i * lanes..(i + 1) * lanes]).collect();
+        let expected: Vec<i32> = agg
+            .expect("expected")
+            .int_vec()
+            .unwrap()
+            .into_iter()
+            .map(|v| v as i32)
+            .collect();
+        assert_eq!(aggregate_rows(&rows, lanes), expected);
+
+        let q = g.expect("quantize");
+        let xs: Vec<f32> = q
+            .expect("x_bits")
+            .int_vec()
+            .unwrap()
+            .into_iter()
+            .map(|b| f32::from_bits(b as u32))
+            .collect();
+        let expected_q: Vec<i32> = q
+            .expect("expected_q")
+            .int_vec()
+            .unwrap()
+            .into_iter()
+            .map(|v| v as i32)
+            .collect();
+        assert_eq!(quantize_vec(&xs, frac), expected_q);
+
+        let expected_dq: Vec<f32> = q
+            .expect("expected_dq_bits")
+            .int_vec()
+            .unwrap()
+            .into_iter()
+            .map(|b| f32::from_bits(b as u32))
+            .collect();
+        let dq = dequantize_vec(&expected_q, frac);
+        assert_eq!(dq.len(), expected_dq.len());
+        for (a, b) in dq.iter().zip(expected_dq.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "dequantize bit parity");
+        }
+    }
+}

@@ -1,0 +1,253 @@
+//! The Canary switch dataplane (paper Sections 3.1-3.2, 4).
+//!
+//! Soft state only: a hash-indexed descriptor array. Descriptors are
+//! allocated on the first reduce packet of a block, hold the saturating
+//! accumulator, the children port bitmap, the contribution counter and a
+//! timeout; they are freed when the broadcast passes (or when the switch
+//! dies — recovery is the leader's job, Section 3.3).
+
+use crate::sim::packet::{Packet, PacketKind, Payload};
+use crate::sim::{Ctx, NodeId, Time};
+use crate::util::rng::splitmix64;
+
+use super::alu;
+use super::SwitchState;
+
+/// One reduction-block descriptor (paper Fig. 3 / Section 3.1.3).
+#[derive(Clone, Debug)]
+pub struct Descriptor {
+    /// (tenant << 32) | block — the wire id.
+    pub key: u64,
+    pub tenant: u16,
+    pub block: u32,
+    /// Saturating fixed-point accumulator (None in size-only mode).
+    pub acc: Option<Vec<i32>>,
+    /// Contributions aggregated so far (sum of packet counters).
+    pub counter: u32,
+    /// Total participating hosts (from the packets).
+    pub hosts: u32,
+    /// Ports the block's packets arrived from — the dynamic children.
+    pub children: u64,
+    /// Leader host address (packets' destination).
+    pub leader: NodeId,
+    /// Partial already forwarded (timeout fired or counter complete):
+    /// later arrivals are stragglers.
+    pub sent: bool,
+    /// Invalidates stale timeout events after slot reuse.
+    pub generation: u64,
+    pub alloc_time: Time,
+}
+
+/// The per-switch Canary state: a fixed-size descriptor array, exactly
+/// like the register array of the Tofino prototype (Section 4).
+#[derive(Debug)]
+pub struct Dataplane {
+    pub table: Vec<Option<Descriptor>>,
+    /// Static tenant partitioning (Section 5.2.4): with `partitions > 1`
+    /// each tenant hashes only within its own disjoint table region, so
+    /// concurrent tenants can never collide with each other.
+    pub partitions: u32,
+    /// Per-switch hash salt. Crucial: with one global hash function two
+    /// colliding ids would collide at *every* switch simultaneously,
+    /// denying the victim block all in-network aggregation (all its
+    /// packets bypass straight to the leader). Per-device hashing
+    /// de-correlates collisions, as per-device CRC configs do on real
+    /// switches.
+    salt: u64,
+    next_generation: u64,
+}
+
+impl Dataplane {
+    pub fn new(slots: u32, salt: u64) -> Dataplane {
+        Dataplane {
+            table: (0..slots).map(|_| None).collect(),
+            partitions: 1,
+            salt,
+            next_generation: 1,
+        }
+    }
+
+    /// Hash a block id to a table slot (the prototype uses a hardware
+    /// hash unit; we use a strong integer mixer). The tenant selects the
+    /// table partition; the block id selects the slot within it.
+    #[inline]
+    pub fn slot_of(&self, key: u64) -> u32 {
+        let tenant = (key >> 32) as u32;
+        let region_size =
+            (self.table.len() as u64 / self.partitions as u64).max(1);
+        let region = (tenant % self.partitions) as u64 * region_size;
+        let mut s = key
+            ^ 0xD6E8_FEB8_6659_FD93
+            ^ self.salt.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        (region + splitmix64(&mut s) % region_size) as u32
+    }
+
+    pub fn live_descriptors(&self) -> usize {
+        self.table.iter().filter(|d| d.is_some()).count()
+    }
+
+    /// Drop all soft state (switch failure).
+    pub fn clear(&mut self) {
+        for slot in self.table.iter_mut() {
+            *slot = None;
+        }
+    }
+}
+
+/// Handle a reduce-phase packet arriving at `in_port`.
+pub fn on_reduce(
+    sw: &mut SwitchState,
+    ctx: &mut Ctx,
+    in_port: u16,
+    mut pkt: Packet,
+) {
+    let key = pkt.block_key();
+    let slot = sw.canary.slot_of(key) as usize;
+    match &mut sw.canary.table[slot] {
+        None => {
+            // first packet of the block: allocate the descriptor,
+            // start the timer, swallow the packet (Section 3.1.1)
+            let generation = sw.canary.next_generation;
+            sw.canary.next_generation += 1;
+            let acc = match &pkt.payload {
+                Payload::Lanes(v) => Some(v.to_vec()),
+                Payload::None => None,
+            };
+            let complete = pkt.counter >= pkt.hosts;
+            sw.canary.table[slot] = Some(Descriptor {
+                key,
+                tenant: pkt.tenant,
+                block: pkt.block,
+                acc,
+                counter: pkt.counter,
+                hosts: pkt.hosts,
+                children: 1u64 << in_port,
+                leader: pkt.dst,
+                sent: false,
+                generation,
+                alloc_time: ctx.now,
+            });
+            ctx.metrics.on_descriptor_alloc();
+            if complete {
+                // everything already aggregated upstream: forward now
+                forward_partial(sw, ctx, slot);
+            } else {
+                ctx.switch_timeout(
+                    ctx.cfg.canary_timeout_ps,
+                    slot as u32,
+                    generation,
+                );
+            }
+        }
+        Some(d) if d.key == key => {
+            if !d.sent {
+                // aggregate into the descriptor and swallow the packet
+                if let (Some(acc), Payload::Lanes(v)) =
+                    (&mut d.acc, &pkt.payload)
+                {
+                    alu::sat_accumulate(acc, v);
+                }
+                d.counter += pkt.counter;
+                d.children |= 1u64 << in_port;
+                if d.counter >= d.hosts {
+                    // all contributions seen: no need to wait the timer
+                    forward_partial(sw, ctx, slot);
+                }
+            } else {
+                // straggler: record the child so the broadcast reaches
+                // it, then pass the packet through unchanged
+                d.children |= 1u64 << in_port;
+                ctx.metrics.stragglers += 1;
+                let port = super::route(sw, ctx, &pkt);
+                ctx.send(port, pkt);
+            }
+        }
+        Some(_) => {
+            // collision: annotate with our address + ingress port and
+            // bypass-forward straight to the leader (Section 3.2.1)
+            ctx.metrics.collisions += 1;
+            pkt.collision = Some((sw.id, in_port));
+            pkt.bypass = true;
+            let port = super::route(sw, ctx, &pkt);
+            ctx.send(port, pkt);
+        }
+    }
+}
+
+/// Descriptor timeout fired (or counter completed): send the partial
+/// aggregate one hop further toward the leader.
+pub fn on_timeout(
+    sw: &mut SwitchState,
+    ctx: &mut Ctx,
+    slot: u32,
+    generation: u64,
+) {
+    let Some(d) = &sw.canary.table[slot as usize] else {
+        return; // already broadcast + freed
+    };
+    if d.generation != generation || d.sent {
+        return; // stale timer or already forwarded
+    }
+    forward_partial(sw, ctx, slot as usize);
+}
+
+fn forward_partial(sw: &mut SwitchState, ctx: &mut Ctx, slot: usize) {
+    let d = sw.canary.table[slot].as_mut().expect("descriptor");
+    d.sent = true;
+    let mut pkt = Packet::data(PacketKind::CanaryReduce, sw.id, d.leader);
+    pkt.tenant = d.tenant;
+    pkt.block = d.block;
+    pkt.counter = d.counter;
+    pkt.hosts = d.hosts;
+    pkt.flow = d.key;
+    if let Some(acc) = &d.acc {
+        pkt.payload = Payload::Lanes(acc.clone().into_boxed_slice());
+        // the accumulator has served its purpose; children stay
+        d.acc = None;
+    }
+    let port = super::route(sw, ctx, &pkt);
+    ctx.send(port, pkt);
+}
+
+/// Broadcast-phase packet arriving from our parent: fan out to the
+/// recorded children and free the descriptor (Section 3.1.2).
+pub fn on_broadcast(sw: &mut SwitchState, ctx: &mut Ctx, pkt: Packet) {
+    let key = pkt.block_key();
+    let slot = sw.canary.slot_of(key) as usize;
+    match &sw.canary.table[slot] {
+        Some(d) if d.key == key => {
+            let children = d.children;
+            let residency = ctx.now - d.alloc_time;
+            sw.canary.table[slot] = None;
+            ctx.metrics.on_descriptor_free(residency);
+            fan_out(ctx, children, &pkt);
+        }
+        _ => {
+            // no descriptor (collision happened here): drop — the
+            // leader restores this subtree explicitly
+        }
+    }
+}
+
+/// Restoration packet addressed to this switch: bootstrap the local
+/// broadcast on the ports the leader tells us (Section 3.2.1).
+pub fn on_restore(sw: &mut SwitchState, ctx: &mut Ctx, pkt: Packet) {
+    ctx.metrics.restorations += 1;
+    // also free any descriptor this id may have (partial children were
+    // already served by the regular broadcast path)
+    fan_out(ctx, pkt.restore, &pkt);
+    let _ = sw;
+}
+
+fn fan_out(ctx: &mut Ctx, children: u64, template: &Packet) {
+    for port in 0..64u16 {
+        if children & (1u64 << port) != 0 {
+            let mut out = template.clone();
+            out.kind = PacketKind::CanaryBroadcast;
+            out.bypass = false;
+            out.collision = None;
+            out.restore = 0;
+            ctx.send(port, out);
+        }
+    }
+}

@@ -1,0 +1,203 @@
+//! Switch model: forwarding pipeline, routing, and the protocol
+//! dataplanes (Canary dynamic trees + static-tree baselines).
+//!
+//! Node-id layout (fixed by the fat-tree builder): hosts `[0, H)`, leaf
+//! switches `[H, H+L)`, spine switches `[H+L, H+L+S)`. Leaf port map:
+//! ports `[0, hosts_per_leaf)` go down to hosts, `[hosts_per_leaf, ..)`
+//! go up, one per spine. Spine port `l` goes down to leaf `l`.
+
+pub mod alu;
+pub mod canary;
+pub mod shards;
+pub mod static_tree;
+
+use crate::loadbalance::{select_up, LbState, LoadBalancer};
+use crate::sim::packet::{Packet, PacketKind};
+use crate::sim::{Ctx, NodeId};
+
+/// Position of the switch in the fat tree.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SwitchRole {
+    Leaf { index: u32, first_host: NodeId },
+    Spine { index: u32 },
+}
+
+/// Complete switch state.
+pub struct SwitchState {
+    pub id: NodeId,
+    pub role: SwitchRole,
+    pub lb: LoadBalancer,
+    pub lb_state: LbState,
+    /// Topology facts needed for local routing decisions.
+    pub n_hosts: u32,
+    pub n_leaf: u32,
+    pub hosts_per_leaf: u32,
+    pub n_spine: u32,
+    pub failed: bool,
+    pub canary: canary::Dataplane,
+    pub static_tree: static_tree::StaticState,
+}
+
+impl SwitchState {
+    /// First up-port index on a leaf.
+    #[inline]
+    pub fn up_base(&self) -> u16 {
+        self.hosts_per_leaf as u16
+    }
+
+    /// Classify a node id.
+    #[inline]
+    pub fn is_host(&self, node: NodeId) -> bool {
+        node < self.n_hosts
+    }
+
+    #[inline]
+    pub fn leaf_index_of_host(&self, host: NodeId) -> u32 {
+        host / self.hosts_per_leaf
+    }
+
+    #[inline]
+    pub fn is_leaf_switch(&self, node: NodeId) -> bool {
+        node >= self.n_hosts && node < self.n_hosts + self.n_leaf
+    }
+
+    #[inline]
+    pub fn is_spine_switch(&self, node: NodeId) -> bool {
+        node >= self.n_hosts + self.n_leaf
+            && node < self.n_hosts + self.n_leaf + self.n_spine
+    }
+
+    #[inline]
+    pub fn spine_index(&self, node: NodeId) -> u32 {
+        node - self.n_hosts - self.n_leaf
+    }
+
+    #[inline]
+    pub fn leaf_index(&self, node: NodeId) -> u32 {
+        node - self.n_hosts
+    }
+}
+
+/// Pick the egress port for `pkt` at this switch (destination-based
+/// up/down routing with configurable up-port load balancing).
+pub fn route(sw: &mut SwitchState, ctx: &Ctx, pkt: &Packet) -> u16 {
+    let dst = pkt.dst;
+    match sw.role {
+        SwitchRole::Leaf { index, first_host } => {
+            let up_base = sw.up_base();
+            let n_spine = sw.n_spine as u16;
+            if sw.is_host(dst) {
+                let leaf = sw.leaf_index_of_host(dst);
+                if leaf == index {
+                    // down to the local host
+                    return (dst - first_host) as u16;
+                }
+                // up: adaptive choice among all spines
+                let dflt = (dst % sw.n_spine) as u16;
+                let off = select_up(
+                    &sw.lb,
+                    &mut sw.lb_state,
+                    ctx,
+                    up_base,
+                    n_spine,
+                    dflt,
+                    pkt.flow ^ dst as u64,
+                    if pkt.kind.droppable() { 1 } else { 0 },
+                );
+                up_base + off
+            } else if sw.is_spine_switch(dst) {
+                // direct link to that spine
+                up_base + sw.spine_index(dst) as u16
+            } else {
+                // another leaf switch: via any spine
+                let dflt = (dst % sw.n_spine) as u16;
+                let off = select_up(
+                    &sw.lb,
+                    &mut sw.lb_state,
+                    ctx,
+                    up_base,
+                    n_spine,
+                    dflt,
+                    pkt.flow ^ dst as u64,
+                    if pkt.kind.droppable() { 1 } else { 0 },
+                );
+                up_base + off
+            }
+        }
+        SwitchRole::Spine { .. } => {
+            if sw.is_host(dst) {
+                sw.leaf_index_of_host(dst) as u16
+            } else if sw.is_leaf_switch(dst) {
+                sw.leaf_index(dst) as u16
+            } else {
+                unreachable!("spine routing to spine {dst}")
+            }
+        }
+    }
+}
+
+/// Main packet entry point for a switch.
+pub fn handle_packet(
+    sw: &mut SwitchState,
+    ctx: &mut Ctx,
+    in_port: u16,
+    pkt: Packet,
+) {
+    if sw.failed {
+        ctx.metrics.drops_link_down += 1;
+        return;
+    }
+    // Bypass-marked packets skip all processing (Section 4.1).
+    if pkt.bypass {
+        let port = route(sw, ctx, &pkt);
+        ctx.send(port, pkt);
+        return;
+    }
+    match pkt.kind {
+        PacketKind::CanaryReduce => canary::on_reduce(sw, ctx, in_port, pkt),
+        PacketKind::CanaryBroadcast => canary::on_broadcast(sw, ctx, pkt),
+        PacketKind::CanaryRestore => {
+            if pkt.dst == sw.id {
+                canary::on_restore(sw, ctx, pkt);
+            } else {
+                let port = route(sw, ctx, &pkt);
+                ctx.send(port, pkt);
+            }
+        }
+        PacketKind::StaticReduce => static_tree::on_reduce(sw, ctx, pkt),
+        PacketKind::StaticBroadcast => {
+            static_tree::on_broadcast(sw, ctx, pkt)
+        }
+        // host-to-host traffic: plain forwarding
+        PacketKind::CanaryRetransReq
+        | PacketKind::CanaryRetransData
+        | PacketKind::CanaryFailure
+        | PacketKind::CanaryDirect
+        | PacketKind::Ring
+        | PacketKind::Background => {
+            let port = route(sw, ctx, &pkt);
+            ctx.send(port, pkt);
+        }
+    }
+}
+
+/// Canary descriptor timeout dispatch (from the event loop).
+pub fn handle_timeout(
+    sw: &mut SwitchState,
+    ctx: &mut Ctx,
+    slot: u32,
+    generation: u64,
+) {
+    if sw.failed {
+        return;
+    }
+    canary::on_timeout(sw, ctx, slot, generation);
+}
+
+/// Fault injection: lose all soft state (Section 3.3 — recovery happens
+/// end-to-end, the switch itself does nothing).
+pub fn clear_soft_state(sw: &mut SwitchState) {
+    sw.failed = true;
+    sw.canary.clear();
+    sw.static_tree.clear();
+}

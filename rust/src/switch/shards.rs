@@ -1,0 +1,88 @@
+//! Multicast-group shard encoding (paper Section 4.2).
+//!
+//! Programmable switches need multicast groups pre-configured, but Canary
+//! multicasts to dynamic port sets. Storing a group per possible bitmap is
+//! 2^p entries; the paper instead splits the children bitmap into `s`
+//! shards of `p/s` bits, prepends the shard index, and pre-configures
+//! `s * 2^(p/s)` groups. A p-port multicast then issues `s` shard lookups.
+//!
+//! The simulator's fan-out uses the bitmap directly (a switch can do
+//! that); this module exists to model and test the resource math and is
+//! used by the memory-occupancy bench (`figures mem`).
+
+/// Split a `ports`-bit children bitmap into `shards` shard keys.
+/// Each key is `(shard_index << shard_width) | shard_bits`.
+pub fn encode(bitmap: u64, ports: u32, shards: u32) -> Vec<u64> {
+    assert!(ports <= 64 && shards > 0 && ports % shards == 0);
+    let width = ports / shards;
+    let mask = if width == 64 { u64::MAX } else { (1u64 << width) - 1 };
+    (0..shards)
+        .map(|i| {
+            let bits = (bitmap >> (i * width)) & mask;
+            ((i as u64) << width) | bits
+        })
+        .collect()
+}
+
+/// Rebuild the port list from the shard keys (what the pre-configured
+/// multicast tables resolve to).
+pub fn decode(keys: &[u64], ports: u32, shards: u32) -> Vec<u16> {
+    assert!(ports % shards == 0);
+    let width = ports / shards;
+    let mask = if width == 64 { u64::MAX } else { (1u64 << width) - 1 };
+    let mut out = Vec::new();
+    for &key in keys {
+        let idx = (key >> width) as u32;
+        let bits = key & mask;
+        for b in 0..width {
+            if bits & (1u64 << b) != 0 {
+                out.push((idx * width + b) as u16);
+            }
+        }
+    }
+    out.sort_unstable();
+    out
+}
+
+/// Number of multicast-group table entries required (paper: `2^(p/s)*s`
+/// vs `2^p` unsharded; 64 ports / 4 shards -> 256 Ki entries).
+pub fn table_entries(ports: u32, shards: u32) -> u64 {
+    assert!(ports % shards == 0);
+    (1u64 << (ports / shards)) * shards as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn paper_example() {
+        // 8 ports, 2 shards, bitmap 0b00101101 -> shards 1_0010 and 0_1101
+        let keys = encode(0b0010_1101, 8, 2);
+        assert_eq!(keys, vec![(0 << 4) | 0b1101, (1 << 4) | 0b0010]);
+        assert_eq!(decode(&keys, 8, 2), vec![0, 2, 3, 5]);
+    }
+
+    #[test]
+    fn paper_table_sizing() {
+        // 64-port switch with 4 shards: 2^16 * 4 = 256 Ki entries
+        assert_eq!(table_entries(64, 4), 262_144);
+        // unsharded 64 ports would need 2^64 entries — the point
+        assert_eq!(table_entries(8, 1), 256);
+    }
+
+    #[test]
+    fn roundtrip_random_bitmaps() {
+        let mut rng = Rng::new(99);
+        for _ in 0..200 {
+            let bitmap = rng.next_u64();
+            let keys = encode(bitmap, 64, 4);
+            let ports = decode(&keys, 64, 4);
+            let rebuilt = ports
+                .iter()
+                .fold(0u64, |acc, &p| acc | (1u64 << p));
+            assert_eq!(rebuilt, bitmap);
+        }
+    }
+}

@@ -1,0 +1,163 @@
+//! Static-tree in-network allreduce (the SHARP / SwitchML / ATP /
+//! PANAMA-style baselines of Section 5.2).
+//!
+//! Trees are configured by a control plane before the job starts (we do
+//! it instantaneously at job installation): each on-tree switch knows its
+//! parent port, how many children contribute, and the ports to broadcast
+//! down. Packets always follow the configured tree — that is exactly the
+//! congestion weakness Canary removes.
+
+use std::collections::HashMap;
+
+use crate::sim::packet::{Packet, PacketKind, Payload};
+use crate::sim::Ctx;
+
+use super::alu;
+use super::SwitchState;
+
+/// Where this switch sits in one configured tree.
+#[derive(Clone, Debug)]
+pub enum TreeRole {
+    /// Leaf aggregator: combine `expected` host contributions, then send
+    /// the partial up `parent_port`; broadcast down `child_ports`.
+    Leaf {
+        parent_port: u16,
+        expected: u32,
+        child_ports: Vec<u16>,
+    },
+    /// Root: combine `expected` leaf partials, then start the broadcast
+    /// down `child_ports`.
+    Root {
+        expected: u32,
+        child_ports: Vec<u16>,
+    },
+}
+
+/// Per-tenant static configuration: one role per tree index.
+#[derive(Clone, Debug, Default)]
+pub struct StaticJobInfo {
+    pub trees: Vec<Option<TreeRole>>,
+}
+
+/// Per-switch static-tree state: configuration + in-flight aggregations.
+#[derive(Debug, Default)]
+pub struct StaticState {
+    pub jobs: HashMap<u16, StaticJobInfo>,
+    /// key = (tenant << 32) | block
+    pub inflight: HashMap<u64, Agg>,
+}
+
+#[derive(Debug)]
+pub struct Agg {
+    pub count: u32,
+    pub counter: u32,
+    pub acc: Option<Vec<i32>>,
+}
+
+impl StaticState {
+    pub fn clear(&mut self) {
+        self.inflight.clear();
+    }
+}
+
+/// Reduce-phase packet at an on-tree switch.
+pub fn on_reduce(sw: &mut SwitchState, ctx: &mut Ctx, pkt: Packet) {
+    let Some(role) = role_of(sw, &pkt) else {
+        // not on this tree (e.g. transit spine for a bypassing packet):
+        // plain-forward toward the root
+        let port = super::route(sw, ctx, &pkt);
+        ctx.send(port, pkt);
+        return;
+    };
+    let (expected, parent_port, child_ports) = match role {
+        TreeRole::Leaf {
+            parent_port,
+            expected,
+            ..
+        } => (expected, Some(parent_port), None),
+        TreeRole::Root {
+            expected,
+            child_ports,
+        } => (expected, None, Some(child_ports)),
+    };
+
+    let key = pkt.block_key();
+    let agg = sw.static_tree.inflight.entry(key).or_insert_with(|| {
+        ctx.metrics.on_descriptor_alloc();
+        Agg {
+            count: 0,
+            counter: 0,
+            acc: None,
+        }
+    });
+    agg.count += 1;
+    agg.counter += pkt.counter;
+    if let Payload::Lanes(v) = &pkt.payload {
+        match &mut agg.acc {
+            Some(acc) => alu::sat_accumulate(acc, v),
+            None => agg.acc = Some(v.to_vec()),
+        }
+    }
+    if agg.count < expected {
+        return; // swallow, keep waiting (static trees know their fan-in)
+    }
+
+    // complete at this level
+    let agg = sw.static_tree.inflight.remove(&key).unwrap();
+    ctx.metrics.on_descriptor_free(0);
+    match (parent_port, child_ports) {
+        (Some(parent), _) => {
+            // leaf: one partial up the fixed tree edge
+            let mut up = pkt.clone();
+            up.kind = PacketKind::StaticReduce;
+            up.src = sw.id;
+            up.counter = agg.counter;
+            up.payload = match agg.acc {
+                Some(acc) => Payload::Lanes(acc.into_boxed_slice()),
+                None => Payload::None,
+            };
+            ctx.send(parent, up);
+        }
+        (None, Some(children)) => {
+            // root: start the broadcast
+            for port in children {
+                let mut down = pkt.clone();
+                down.kind = PacketKind::StaticBroadcast;
+                down.src = sw.id;
+                down.counter = agg.counter;
+                down.payload = match &agg.acc {
+                    Some(acc) => {
+                        Payload::Lanes(acc.clone().into_boxed_slice())
+                    }
+                    None => Payload::None,
+                };
+                ctx.send(port, down);
+            }
+        }
+        (None, None) => unreachable!(),
+    }
+}
+
+/// Broadcast-phase packet at an on-tree switch (leaf: fan out to hosts).
+pub fn on_broadcast(sw: &mut SwitchState, ctx: &mut Ctx, pkt: Packet) {
+    let Some(TreeRole::Leaf { child_ports, .. }) = role_of(sw, &pkt) else {
+        // not a configured leaf for this tree: forward toward dst
+        let port = super::route(sw, ctx, &pkt);
+        ctx.send(port, pkt);
+        return;
+    };
+    for port in child_ports {
+        let mut down = pkt.clone();
+        down.src = sw.id;
+        ctx.send(port, down);
+    }
+}
+
+fn role_of(sw: &SwitchState, pkt: &Packet) -> Option<TreeRole> {
+    sw.static_tree
+        .jobs
+        .get(&pkt.tenant)?
+        .trees
+        .get(pkt.tree as usize)?
+        .clone()
+}

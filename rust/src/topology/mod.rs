@@ -1,0 +1,231 @@
+//! Fat-tree topology builder (Leiserson fat tree, 2 levels — the paper's
+//! Section 5.2 network: 32 leaves x 32 hosts + 32 spines, all 100 Gbps).
+//!
+//! Node-id layout: hosts `[0, H)`, leaves `[H, H+L)`, spines
+//! `[H+L, H+L+S)`. Leaf ports: `[0, hosts_per_leaf)` down to hosts, then
+//! one up-port per spine. Spine port `l` goes down to leaf `l`.
+
+use crate::config::{FatTreeConfig, SimConfig};
+use crate::host::HostState;
+use crate::loadbalance::LoadBalancer;
+use crate::sim::{Network, NodeBody, NodeId};
+use crate::switch::{canary::Dataplane, SwitchRole, SwitchState};
+
+/// Topology handle with id arithmetic helpers.
+#[derive(Clone, Copy, Debug)]
+pub struct FatTree {
+    pub cfg: FatTreeConfig,
+}
+
+impl FatTree {
+    pub fn n_hosts(&self) -> u32 {
+        self.cfg.n_hosts()
+    }
+
+    pub fn host_id(&self, i: u32) -> NodeId {
+        debug_assert!(i < self.n_hosts());
+        i
+    }
+
+    pub fn leaf_id(&self, l: u32) -> NodeId {
+        debug_assert!(l < self.cfg.n_leaf);
+        self.n_hosts() + l
+    }
+
+    pub fn spine_id(&self, s: u32) -> NodeId {
+        debug_assert!(s < self.cfg.n_spine);
+        self.n_hosts() + self.cfg.n_leaf + s
+    }
+
+    pub fn leaf_of_host(&self, h: NodeId) -> u32 {
+        h / self.cfg.hosts_per_leaf
+    }
+
+    /// Leaf-local port of a host.
+    pub fn leaf_host_port(&self, h: NodeId) -> u16 {
+        (h % self.cfg.hosts_per_leaf) as u16
+    }
+
+    /// Leaf port going up to spine `s`.
+    pub fn leaf_up_port(&self, s: u32) -> u16 {
+        (self.cfg.hosts_per_leaf + s) as u16
+    }
+
+    /// Spine port going down to leaf `l`.
+    pub fn spine_down_port(&self, l: u32) -> u16 {
+        l as u16
+    }
+
+    pub fn all_hosts(&self) -> Vec<NodeId> {
+        (0..self.n_hosts()).collect()
+    }
+
+    pub fn all_spines(&self) -> Vec<NodeId> {
+        (0..self.cfg.n_spine).map(|s| self.spine_id(s)).collect()
+    }
+}
+
+/// Build the network: nodes, links, and per-switch routing facts.
+pub fn build(
+    topo_cfg: FatTreeConfig,
+    sim_cfg: SimConfig,
+    lb: LoadBalancer,
+) -> (Network, FatTree) {
+    let ft = FatTree { cfg: topo_cfg };
+    let mut net = Network::new(sim_cfg);
+    let h = ft.n_hosts();
+    let hpl = topo_cfg.hosts_per_leaf;
+
+    // hosts first (ids 0..H)
+    for i in 0..h {
+        let rng = net.rng.fork(i as u64);
+        net.add_node(NodeBody::Host(Box::new(HostState::new(i, rng))));
+    }
+    // leaf switches
+    for l in 0..topo_cfg.n_leaf {
+        let id = h + l;
+        net.add_node(NodeBody::Switch(Box::new(SwitchState {
+            id,
+            role: SwitchRole::Leaf {
+                index: l,
+                first_host: l * hpl,
+            },
+            lb: lb.clone(),
+            lb_state: Default::default(),
+            n_hosts: h,
+            n_leaf: topo_cfg.n_leaf,
+            hosts_per_leaf: hpl,
+            n_spine: topo_cfg.n_spine,
+            failed: false,
+            canary: Dataplane::new(net.cfg.descriptor_slots, id as u64),
+            static_tree: Default::default(),
+        })));
+    }
+    // spine switches
+    for s in 0..topo_cfg.n_spine {
+        let id = h + topo_cfg.n_leaf + s;
+        net.add_node(NodeBody::Switch(Box::new(SwitchState {
+            id,
+            role: SwitchRole::Spine { index: s },
+            lb: lb.clone(),
+            lb_state: Default::default(),
+            n_hosts: h,
+            n_leaf: topo_cfg.n_leaf,
+            hosts_per_leaf: hpl,
+            n_spine: topo_cfg.n_spine,
+            failed: false,
+            canary: Dataplane::new(net.cfg.descriptor_slots, id as u64),
+            static_tree: Default::default(),
+        })));
+    }
+
+    // host <-> leaf links. Port orderings must match the routing
+    // assumptions: a host's port 0 is its uplink; a leaf's ports
+    // [0, hpl) are its hosts in order; then one up-port per spine.
+    //
+    // Leaf ports are created in this order because `add_link` assigns
+    // the next free out-port of `from`.
+    for l in 0..topo_cfg.n_leaf {
+        let leaf = ft.leaf_id(l);
+        for j in 0..hpl {
+            let host = l * hpl + j;
+            // leaf out-port j -> host in-port 0
+            net.add_link(leaf, host, 0);
+        }
+    }
+    for i in 0..h {
+        let leaf = ft.leaf_id(ft.leaf_of_host(i));
+        // host out-port 0 -> leaf in-port (host-local index)
+        net.add_link(i, leaf, ft.leaf_host_port(i));
+    }
+    // leaf <-> spine links
+    for l in 0..topo_cfg.n_leaf {
+        let leaf = ft.leaf_id(l);
+        for s in 0..topo_cfg.n_spine {
+            let spine = ft.spine_id(s);
+            // leaf up-port (hpl + s) -> spine in-port l
+            net.add_link(leaf, spine, ft.spine_down_port(l));
+        }
+    }
+    for s in 0..topo_cfg.n_spine {
+        let spine = ft.spine_id(s);
+        for l in 0..topo_cfg.n_leaf {
+            let leaf = ft.leaf_id(l);
+            // spine out-port l -> leaf in-port (hpl + s)
+            net.add_link(spine, leaf, ft.leaf_up_port(s));
+        }
+    }
+
+    (net, ft)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::NodeBody;
+
+    #[test]
+    fn paper_shape() {
+        let (net, ft) = build(
+            FatTreeConfig::paper(),
+            SimConfig::default(),
+            LoadBalancer::default(),
+        );
+        assert_eq!(net.nodes.len(), 1024 + 64);
+        // host-leaf: 2*1024 directed; leaf-spine: 2*32*32 directed
+        assert_eq!(net.links.len(), 2 * 1024 + 2 * 32 * 32);
+        assert_eq!(ft.leaf_of_host(0), 0);
+        assert_eq!(ft.leaf_of_host(1023), 31);
+    }
+
+    #[test]
+    fn port_wiring_is_consistent() {
+        let (net, ft) = build(
+            FatTreeConfig::tiny(),
+            SimConfig::default(),
+            LoadBalancer::default(),
+        );
+        // host 5 (leaf 1, local port 1): its uplink must terminate at
+        // leaf 1's in-port 1
+        let host = 5;
+        let uplink = net.nodes[host as usize].ports[0];
+        let l = &net.links[uplink];
+        assert_eq!(l.to, ft.leaf_id(1));
+        assert_eq!(l.to_port, 1);
+
+        // leaf 0's up-port to spine 1 must land on spine 1 in-port 0
+        let leaf0 = ft.leaf_id(0);
+        let up = net.nodes[leaf0 as usize].ports
+            [ft.leaf_up_port(1) as usize];
+        let l = &net.links[up];
+        assert_eq!(l.to, ft.spine_id(1));
+        assert_eq!(l.to_port, 0);
+
+        // spine 0's port to leaf 1 lands on leaf 1's up-port for spine 0
+        let spine0 = ft.spine_id(0);
+        let down = net.nodes[spine0 as usize].ports
+            [ft.spine_down_port(1) as usize];
+        let l = &net.links[down];
+        assert_eq!(l.to, ft.leaf_id(1));
+        assert_eq!(l.to_port, ft.leaf_up_port(0));
+    }
+
+    #[test]
+    fn all_nodes_have_expected_port_counts() {
+        let cfg = FatTreeConfig::small(); // 4 leaves x 16 hosts, 4 spines
+        let (net, _) = build(cfg, SimConfig::default(), LoadBalancer::default());
+        for n in &net.nodes {
+            match &n.body {
+                NodeBody::Host(_) => assert_eq!(n.ports.len(), 1),
+                NodeBody::Switch(sw) => match sw.role {
+                    crate::switch::SwitchRole::Leaf { .. } => {
+                        assert_eq!(n.ports.len(), 16 + 4)
+                    }
+                    crate::switch::SwitchRole::Spine { .. } => {
+                        assert_eq!(n.ports.len(), 4)
+                    }
+                },
+            }
+        }
+    }
+}

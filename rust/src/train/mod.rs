@@ -1,0 +1,229 @@
+//! Data-parallel trainer: the end-to-end validation driver.
+//!
+//! Each step:
+//! 1. every worker executes the AOT `train_step` HLO (L2 model + L1
+//!    quantize kernel) through PJRT on its own synthetic batch;
+//! 2. the per-worker fixed-point gradients are allreduced — the values
+//!    with the same saturating ALU the simulated switches use, the
+//!    *timing* through the simulated fat tree running Canary (or a
+//!    baseline) under congestion;
+//! 3. the summed gradient feeds the AOT `apply_update` HLO.
+//!
+//! The loss curve plus per-step simulated communication time go to
+//! stdout / EXPERIMENTS.md.
+
+use anyhow::{anyhow, Result};
+
+use crate::collectives::{runner, Algo};
+use crate::config::{FatTreeConfig, SimConfig};
+use crate::loadbalance::LoadBalancer;
+use crate::runtime::{
+    lit_f32, lit_f32_scalar, lit_i32, lit_i32_2d, lit_u32_scalar, to_f32,
+    to_f32_scalar, to_i32, Executable, Runtime,
+};
+use crate::sim::Time;
+use crate::switch::alu;
+use crate::util::rng::Rng;
+use crate::workload::{build_scenario, Scenario};
+
+/// Trainer configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Model preset name (must exist in the manifest: tiny/base/...).
+    pub preset: String,
+    pub workers: usize,
+    pub steps: usize,
+    pub lr: f32,
+    /// Allreduce algorithm whose *communication time* is simulated.
+    pub algo: Algo,
+    /// Simulate the gradient allreduce on the fat tree each
+    /// `comm_every` steps (0 = never; keeps long runs fast).
+    pub comm_every: usize,
+    /// Put congestion on the simulated network.
+    pub congestion: bool,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            preset: "base".into(),
+            workers: 4,
+            steps: 100,
+            lr: 0.5,
+            algo: Algo::Canary,
+            comm_every: 10,
+            congestion: true,
+            seed: 0xBEEF,
+        }
+    }
+}
+
+/// One step's record.
+#[derive(Clone, Debug)]
+pub struct StepLog {
+    pub step: usize,
+    pub mean_loss: f32,
+    /// Simulated allreduce time for this step's gradient, if simulated.
+    pub comm_ps: Option<Time>,
+    pub wall_ms: f64,
+}
+
+/// The trainer: compiled executables + parameter state.
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    pub frac_bits: u32,
+    pub param_count: usize,
+    pub vocab: usize,
+    pub batch: usize,
+    pub seq_len: usize,
+    init: Executable,
+    step_exe: Executable,
+    apply: Executable,
+    pub params: Vec<f32>,
+    rng: Rng,
+}
+
+impl Trainer {
+    /// Load artifacts and initialize parameters.
+    pub fn new(rt: &Runtime, cfg: TrainConfig) -> Result<Trainer> {
+        let model = rt
+            .manifest
+            .models
+            .get(&cfg.preset)
+            .ok_or_else(|| {
+                anyhow!(
+                    "preset '{}' not in manifest (have: {:?}); \
+                     re-run `make artifacts PRESETS=...`",
+                    cfg.preset,
+                    rt.manifest.models.keys().collect::<Vec<_>>()
+                )
+            })?
+            .clone();
+        let init = rt.compile(&format!("{}_init_params", cfg.preset))?;
+        let step_exe = rt.compile(&format!("{}_train_step", cfg.preset))?;
+        let apply = rt.compile(&format!("{}_apply_update", cfg.preset))?;
+        let out = init.run(&[lit_u32_scalar(cfg.seed as u32)])?;
+        let params = to_f32(&out[0])?;
+        assert_eq!(params.len(), model.param_count);
+        let rng = Rng::new(cfg.seed);
+        Ok(Trainer {
+            frac_bits: model.frac_bits,
+            param_count: model.param_count,
+            vocab: model.vocab,
+            batch: model.batch,
+            seq_len: model.seq_len,
+            cfg,
+            init,
+            step_exe,
+            apply,
+            params,
+            rng,
+        })
+    }
+
+    /// Synthetic learnable corpus: noisy affine Markov chains over the
+    /// vocabulary (the model can drive loss well below ln(V)).
+    pub fn make_batch(&mut self, worker: usize) -> Vec<i32> {
+        let v = self.vocab as u64;
+        let mut out = Vec::with_capacity(self.batch * self.seq_len);
+        for _ in 0..self.batch {
+            let mut tok = self.rng.gen_range(v);
+            out.push(tok as i32);
+            for _ in 1..self.seq_len {
+                tok = if self.rng.chance(0.05) {
+                    self.rng.gen_range(v) // 5 % noise
+                } else {
+                    (tok * 5 + 17 + worker as u64 % 2) % v
+                };
+                out.push(tok as i32);
+            }
+        }
+        out
+    }
+
+    /// Run one data-parallel step; returns (mean loss, summed qgrads).
+    pub fn step_compute(&mut self) -> Result<(f32, Vec<i32>)> {
+        let mut qsum = vec![0i32; self.param_count];
+        let mut loss_sum = 0.0f32;
+        for w in 0..self.cfg.workers {
+            let tokens = self.make_batch(w);
+            let tok_lit = lit_i32_2d(&tokens, self.batch, self.seq_len)?;
+            let out =
+                self.step_exe.run(&[lit_f32(&self.params), tok_lit])?;
+            loss_sum += to_f32_scalar(&out[0])?;
+            let qg = to_i32(&out[1])?;
+            // the allreduce: saturating fixed-point sum — bit-identical
+            // to what the simulated switches compute (switch::alu)
+            alu::sat_accumulate(&mut qsum, &qg);
+        }
+        Ok((loss_sum / self.cfg.workers as f32, qsum))
+    }
+
+    /// Apply the summed gradient (dequantize + average + SGD in HLO).
+    pub fn step_apply(&mut self, qsum: &[i32]) -> Result<()> {
+        let out = self.apply.run(&[
+            lit_f32(&self.params),
+            lit_i32(qsum),
+            lit_f32_scalar(self.cfg.lr),
+            lit_f32_scalar(self.cfg.workers as f32),
+        ])?;
+        self.params = to_f32(&out[0])?;
+        Ok(())
+    }
+
+    /// Simulate the timing of this step's gradient allreduce on the
+    /// fat tree (Canary or baseline, with congestion).
+    pub fn simulate_comm(&mut self, step: usize) -> Option<Time> {
+        let grad_bytes = (self.param_count * 4) as u64;
+        let topo = FatTreeConfig::small();
+        let sim = SimConfig::default().with_seed(
+            self.cfg.seed ^ (step as u64).wrapping_mul(0x9E3779B97F4A7C15),
+        );
+        let sc = Scenario {
+            topo,
+            sim,
+            lb: LoadBalancer::default(),
+            algo: self.cfg.algo,
+            n_allreduce_hosts: self.cfg.workers as u32,
+            congestion: self.cfg.congestion,
+            data_bytes: grad_bytes,
+            record_results: false,
+        };
+        let mut exp = build_scenario(&sc, self.cfg.seed + step as u64);
+        let results = runner::run_to_completion(&mut exp.net, u64::MAX);
+        results[0].runtime_ps
+    }
+
+    /// Re-initialize parameters (fresh training run).
+    pub fn reset(&mut self, seed: u32) -> Result<()> {
+        let out = self.init.run(&[lit_u32_scalar(seed)])?;
+        self.params = to_f32(&out[0])?;
+        Ok(())
+    }
+
+    /// Full training loop with logging.
+    pub fn train(&mut self) -> Result<Vec<StepLog>> {
+        let mut logs = Vec::with_capacity(self.cfg.steps);
+        for step in 0..self.cfg.steps {
+            let t0 = std::time::Instant::now();
+            let (loss, qsum) = self.step_compute()?;
+            let comm_ps = if self.cfg.comm_every > 0
+                && step % self.cfg.comm_every == 0
+            {
+                self.simulate_comm(step)
+            } else {
+                None
+            };
+            self.step_apply(&qsum)?;
+            let log = StepLog {
+                step,
+                mean_loss: loss,
+                comm_ps,
+                wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+            };
+            logs.push(log);
+        }
+        Ok(logs)
+    }
+}

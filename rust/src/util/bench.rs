@@ -1,0 +1,88 @@
+//! Micro-bench harness for the `harness = false` bench targets
+//! (criterion substitute, DESIGN.md §7).
+//!
+//! Warms up, then runs measured iterations until both a minimum iteration
+//! count and a minimum wall time are reached, and prints
+//! `name  mean ± stddev  (iters)` rows comparable to criterion output.
+//! Returns the per-iteration mean so callers can record before/after in
+//! EXPERIMENTS.md §Perf.
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub iters: usize,
+}
+
+impl Measurement {
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>12.3?} ± {:>10.3?}  ({} iters)",
+            self.name, self.mean, self.stddev, self.iters
+        );
+    }
+}
+
+/// Benchmark `f`, auto-scaling iterations to `min_time` of wall clock.
+pub fn bench<F: FnMut()>(name: &str, min_time: Duration, mut f: F) -> Measurement {
+    // warm-up: one untimed call
+    f();
+    let mut samples: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < min_time || samples.len() < 5 {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        if samples.len() >= 10_000 {
+            break;
+        }
+    }
+    let m = Measurement {
+        name: name.to_string(),
+        mean: Duration::from_secs_f64(stats::mean(&samples)),
+        stddev: Duration::from_secs_f64(stats::stddev(&samples)),
+        iters: samples.len(),
+    };
+    m.print();
+    m
+}
+
+/// Throughput helper: items/second given a per-iteration item count.
+pub fn throughput(m: &Measurement, items_per_iter: f64) -> f64 {
+    items_per_iter / m.mean.as_secs_f64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let m = bench("noop-loop", Duration::from_millis(20), || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert!(m.iters >= 5);
+        assert!(m.mean.as_nanos() > 0);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let m = Measurement {
+            name: "x".into(),
+            mean: Duration::from_millis(10),
+            stddev: Duration::ZERO,
+            iters: 1,
+        };
+        assert!((throughput(&m, 100.0) - 10_000.0).abs() < 1e-6);
+    }
+}

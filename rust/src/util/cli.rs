@@ -1,0 +1,123 @@
+//! Tiny flag-style CLI argument parser (clap substitute, DESIGN.md §7).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and leading
+//! positional arguments. Unknown flags are an error so typos don't pass
+//! silently.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    known: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`, accepting only the listed flag names.
+    pub fn parse(
+        argv: impl IntoIterator<Item = String>,
+        known_flags: &[&str],
+    ) -> Result<Args, String> {
+        let mut args = Args {
+            known: known_flags.iter().map(|s| s.to_string()).collect(),
+            ..Default::default()
+        };
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                if !args.known.iter().any(|k| *k == key) {
+                    return Err(format!(
+                        "unknown flag --{key} (known: {})",
+                        args.known.join(", ")
+                    ));
+                }
+                let val = match inline_val {
+                    Some(v) => v,
+                    None => {
+                        // value unless next token is another flag / absent
+                        match it.peek() {
+                            Some(next) if !next.starts_with("--") => {
+                                it.next().unwrap()
+                            }
+                            _ => "true".to_string(),
+                        }
+                    }
+                };
+                args.flags.insert(key, val);
+            } else {
+                args.positional.push(arg);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(
+        &self,
+        key: &str,
+        default: T,
+    ) -> Result<T, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<T>()
+                .map_err(|_| format!("bad value for --{key}: '{s}'")),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_and_positionals() {
+        let a = Args::parse(argv("run --hosts 64 --size=4096 --verbose"),
+                            &["hosts", "size", "verbose"]).unwrap();
+        assert_eq!(a.positional, vec!["run"]);
+        assert_eq!(a.get("hosts"), Some("64"));
+        assert_eq!(a.get_parse::<usize>("size", 0).unwrap(), 4096);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("missing"));
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(Args::parse(argv("--nope 1"), &["yes"]).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(argv(""), &["x"]).unwrap();
+        assert_eq!(a.get_or("x", "7"), "7");
+        assert_eq!(a.get_parse::<u64>("x", 9).unwrap(), 9);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = Args::parse(argv("--a --b 3"), &["a", "b"]).unwrap();
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("3"));
+    }
+}

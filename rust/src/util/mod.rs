@@ -1,0 +1,18 @@
+//! Small self-contained utilities substituting for crates that are not
+//! available in this offline build environment (DESIGN.md §7):
+//!
+//! - [`rng`] — xoshiro256**/SplitMix64 (substitute for `rand`)
+//! - [`json`] — minimal JSON parser/writer (substitute for `serde_json`)
+//! - [`cli`] — flag-style argument parser (substitute for `clap`)
+//! - [`stats`] — means, percentiles, histograms
+//! - [`bench`] — measured-iteration micro-bench harness (substitute for
+//!   `criterion`; used by the `harness = false` bench targets)
+//! - [`proptest_lite`] — seeded random property-test runner (substitute
+//!   for `proptest`)
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod proptest_lite;
+pub mod rng;
+pub mod stats;

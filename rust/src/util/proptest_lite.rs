@@ -1,0 +1,82 @@
+//! Seeded random property-test runner (proptest substitute, DESIGN.md §7).
+//!
+//! No shrinking — but every failure prints the exact case seed, so a
+//! failing property reproduces with `check_property_seeded(name, seed, f)`.
+//! Used by the coordinator invariants tests (routing, batching, descriptor
+//! state, end-to-end allreduce value correctness).
+
+use super::rng::Rng;
+
+/// Run `cases` random cases of property `f`. Each case gets an
+/// independent RNG derived from `base_seed` and the case index; the
+/// property returns `Err(reason)` to fail.
+pub fn check_property<F>(name: &str, base_seed: u64, cases: usize, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let case_seed = base_seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(case as u64);
+        let mut rng = Rng::new(case_seed);
+        if let Err(reason) = f(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case} \
+                 (reproduce with seed {case_seed:#x}): {reason}"
+            );
+        }
+    }
+}
+
+/// Re-run a single failing case by its printed seed.
+pub fn check_property_seeded<F>(name: &str, case_seed: u64, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(case_seed);
+    if let Err(reason) = f(&mut rng) {
+        panic!("property '{name}' failed (seed {case_seed:#x}): {reason}");
+    }
+}
+
+/// Assert-style helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check_property("trivial", 1, 50, |rng| {
+            count += 1;
+            let x = rng.gen_range(100);
+            if x < 100 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        check_property("fails", 2, 10, |rng| {
+            if rng.gen_range(4) == 3 {
+                Err("hit the bad value".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+}

@@ -1,0 +1,185 @@
+//! Experiment workload construction: random host placement, congestion
+//! generators and the standard scenarios used by the figure harness.
+//!
+//! The paper's protocol (Section 5.2): pick the allreduce hosts uniformly
+//! at random, let the remaining hosts generate random-uniform traffic,
+//! pick static-tree roots at random, repeat 5 times with fresh seeds.
+
+use crate::collectives::runner::{
+    install_background_job, install_canary_job, install_ring_job,
+    install_static_job,
+};
+use crate::collectives::Algo;
+use crate::config::{FatTreeConfig, SimConfig};
+use crate::loadbalance::LoadBalancer;
+use crate::sim::{Network, NodeId};
+use crate::topology::{build, FatTree};
+use crate::util::rng::Rng;
+
+/// One standard experiment: a single allreduce (+ optional congestion).
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub topo: FatTreeConfig,
+    pub sim: SimConfig,
+    pub lb: LoadBalancer,
+    pub algo: Algo,
+    /// Number of hosts running the allreduce.
+    pub n_allreduce_hosts: u32,
+    /// Remaining hosts generate random-uniform congestion.
+    pub congestion: bool,
+    /// Application bytes per host.
+    pub data_bytes: u64,
+    pub record_results: bool,
+}
+
+impl Scenario {
+    pub fn paper_default(algo: Algo) -> Scenario {
+        Scenario {
+            topo: FatTreeConfig::paper(),
+            sim: SimConfig::default(),
+            lb: LoadBalancer::default(),
+            algo,
+            n_allreduce_hosts: 512,
+            congestion: true,
+            data_bytes: 4 * 1024 * 1024,
+            record_results: false,
+        }
+    }
+}
+
+/// Built experiment, ready to run.
+pub struct Experiment {
+    pub net: Network,
+    pub ft: FatTree,
+    /// Index of the (single) allreduce job.
+    pub job: u32,
+}
+
+/// Build a [`Scenario`] with randomized placement derived from
+/// `placement_seed` (independent from the sim seed so the same placement
+/// can be replayed under different protocols).
+pub fn build_scenario(sc: &Scenario, placement_seed: u64) -> Experiment {
+    let mut sim = sc.sim.clone();
+    // placement and sim randomness both derive from the placement seed so
+    // one scenario+seed is one fully-determined world
+    sim.seed = sim.seed ^ placement_seed.wrapping_mul(0x9E3779B97F4A7C15);
+    let (mut net, ft) = build(sc.topo, sim, sc.lb.clone());
+    let mut rng = Rng::new(placement_seed);
+
+    let all: Vec<NodeId> = ft.all_hosts();
+    let chosen_idx =
+        rng.sample_indices(all.len(), sc.n_allreduce_hosts as usize);
+    let mut participants: Vec<NodeId> =
+        chosen_idx.iter().map(|&i| all[i]).collect();
+    participants.sort_unstable();
+
+    let job = match sc.algo {
+        Algo::Canary => install_canary_job(
+            &mut net,
+            1,
+            participants.clone(),
+            sc.data_bytes,
+            sc.record_results,
+        ),
+        Algo::StaticTree { n_trees } => {
+            let roots = random_roots(&ft, &mut rng, n_trees as usize);
+            install_static_job(
+                &mut net,
+                &ft,
+                1,
+                participants.clone(),
+                sc.data_bytes,
+                roots,
+                sc.record_results,
+            )
+        }
+        Algo::Ring => {
+            install_ring_job(&mut net, 1, participants.clone(), sc.data_bytes)
+        }
+        Algo::Background => panic!("background is not an allreduce"),
+    };
+
+    if sc.congestion {
+        let bg: Vec<NodeId> = all
+            .iter()
+            .copied()
+            .filter(|h| !participants.contains(h))
+            .collect();
+        if bg.len() >= 2 {
+            install_background_job(&mut net, bg);
+        }
+    }
+    Experiment { net, ft, job }
+}
+
+/// Distinct random spine roots (paper: roots picked at random per run).
+pub fn random_roots(ft: &FatTree, rng: &mut Rng, n: usize) -> Vec<NodeId> {
+    let spines = ft.all_spines();
+    let idx = rng.sample_indices(spines.len(), n.min(spines.len()));
+    idx.into_iter().map(|i| spines[i]).collect()
+}
+
+/// Multi-tenant scenario (Fig. 10): partition `n_jobs * hosts_per_job`
+/// hosts into equal concurrent allreduces, all of the same `algo`.
+pub fn build_multi_tenant(
+    topo: FatTreeConfig,
+    sim: SimConfig,
+    lb: LoadBalancer,
+    algo: Algo,
+    n_jobs: u32,
+    data_bytes: u64,
+    placement_seed: u64,
+) -> (Network, FatTree, Vec<u32>) {
+    let mut sim = sim;
+    sim.seed = sim.seed ^ placement_seed.wrapping_mul(0x9E3779B97F4A7C15);
+    let (mut net, ft) = build(topo, sim, lb);
+    // statically partition the descriptor table across tenants, as most
+    // in-network algorithms do and the paper adopts for fairness (5.2.4):
+    // each tenant hashes into a disjoint region of every switch's table
+    for node in net.nodes.iter_mut() {
+        if let crate::sim::NodeBody::Switch(sw) = &mut node.body {
+            sw.canary.partitions = n_jobs.max(1);
+        }
+    }
+    let mut rng = Rng::new(placement_seed);
+
+    let mut all: Vec<NodeId> = ft.all_hosts();
+    rng.shuffle(&mut all);
+    let per_job = (all.len() as u32 / n_jobs).max(1);
+
+    let mut jobs = Vec::new();
+    for j in 0..n_jobs {
+        let lo = (j * per_job) as usize;
+        let hi = ((j + 1) * per_job) as usize;
+        let mut participants: Vec<NodeId> = all[lo..hi].to_vec();
+        participants.sort_unstable();
+        let tenant = (j + 1) as u16;
+        let job = match algo {
+            Algo::Canary => install_canary_job(
+                &mut net,
+                tenant,
+                participants,
+                data_bytes,
+                false,
+            ),
+            Algo::StaticTree { n_trees } => {
+                let roots = random_roots(&ft, &mut rng, n_trees as usize);
+                install_static_job(
+                    &mut net,
+                    &ft,
+                    tenant,
+                    participants,
+                    data_bytes,
+                    roots,
+                    false,
+                )
+            }
+            Algo::Ring => {
+                install_ring_job(&mut net, tenant, participants, data_bytes)
+            }
+            Algo::Background => unreachable!(),
+        };
+        jobs.push(job);
+    }
+    (net, ft, jobs)
+}

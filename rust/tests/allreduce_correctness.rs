@@ -1,0 +1,303 @@
+//! End-to-end value correctness: every participating host must receive,
+//! for every block, exactly the saturating fixed-point sum of all
+//! participants' payloads — under dynamic trees, collisions, stragglers,
+//! congestion, and adaptive routing.
+//!
+//! These are the coordinator invariants the paper's protocol must
+//! guarantee (Sections 3.1-3.2); they are checked with the
+//! `proptest_lite` randomized-property harness.
+
+use canary::collectives::{expected_block_sum, runner, Algo};
+use canary::config::{FatTreeConfig, SimConfig};
+use canary::loadbalance::LoadBalancer;
+use canary::sim::US;
+use canary::util::proptest_lite::check_property;
+use canary::util::rng::Rng;
+use canary::workload::{build_scenario, Scenario};
+
+/// Verify all recorded results of job 0 against the expected sums.
+fn verify_all_results(
+    exp: &canary::workload::Experiment,
+) -> Result<(), String> {
+    let job = &exp.net.jobs[exp.job as usize];
+    let spec = &job.spec;
+    let total_blocks = spec.total_blocks();
+    let n = spec.participants.len() as u32;
+    if job.finish.is_none() {
+        return Err(format!(
+            "job did not finish (hosts done: {}/{n})",
+            job.hosts_finished
+        ));
+    }
+    let lanes = spec.lanes();
+    let mut checked = 0usize;
+    for block in 0..total_blocks {
+        let expected = expected_block_sum(
+            spec.tenant,
+            &spec.participants,
+            block,
+            lanes,
+        );
+        for rank in 0..n {
+            let Some(got) = job.results.get(&(rank, block)) else {
+                // the leader of a block keeps its result locally; it is
+                // recorded too, so every (rank, block) must exist
+                return Err(format!(
+                    "missing result rank {rank} block {block}"
+                ));
+            };
+            if got != &expected {
+                return Err(format!(
+                    "wrong value rank {rank} block {block}"
+                ));
+            }
+            checked += 1;
+        }
+    }
+    assert_eq!(checked, (total_blocks * n) as usize);
+    Ok(())
+}
+
+fn values_scenario(
+    topo: FatTreeConfig,
+    sim: SimConfig,
+    algo: Algo,
+    hosts: u32,
+    congestion: bool,
+    data_bytes: u64,
+) -> Scenario {
+    Scenario {
+        topo,
+        sim: sim.with_values(true),
+        lb: LoadBalancer::default(),
+        algo,
+        n_allreduce_hosts: hosts,
+        congestion,
+        data_bytes,
+        record_results: true,
+    }
+}
+
+fn run_and_verify(sc: &Scenario, seed: u64) -> Result<(), String> {
+    let mut exp = build_scenario(sc, seed);
+    runner::run_to_completion(&mut exp.net, 200_000 * US);
+    verify_all_results(&exp)?;
+    // descriptor soft-state must fully drain on a clean run
+    let m = &exp.net.metrics;
+    if m.descriptors_live != 0 {
+        return Err(format!("{} descriptors leaked", m.descriptors_live));
+    }
+    Ok(())
+}
+
+#[test]
+fn canary_correct_tiny_no_congestion() {
+    let sc = values_scenario(
+        FatTreeConfig::tiny(),
+        SimConfig::default(),
+        Algo::Canary,
+        6,
+        false,
+        16 * 1024,
+    );
+    run_and_verify(&sc, 7).unwrap();
+}
+
+#[test]
+fn canary_correct_with_congestion_and_random_sizes() {
+    check_property("canary-values-congested", 0xC0, 8, |rng: &mut Rng| {
+        let hosts = 3 + rng.gen_range(10) as u32;
+        let kib = 1 + rng.gen_range(24);
+        let sc = values_scenario(
+            FatTreeConfig::small(),
+            SimConfig::default(),
+            Algo::Canary,
+            hosts,
+            true,
+            kib * 1024,
+        );
+        run_and_verify(&sc, rng.next_u64())
+    });
+}
+
+#[test]
+fn canary_correct_under_forced_collisions() {
+    // 4 descriptor slots per switch: nearly every concurrent block
+    // collides, so the tree-restoration path carries most subtrees
+    check_property("canary-collisions", 0xC1, 6, |rng: &mut Rng| {
+        let sc = values_scenario(
+            FatTreeConfig::tiny(),
+            SimConfig::default().with_slots(4),
+            Algo::Canary,
+            4 + rng.gen_range(4) as u32,
+            false,
+            16 * 1024,
+        );
+        let mut exp = build_scenario(&sc, rng.next_u64());
+        runner::run_to_completion(&mut exp.net, 200_000 * US);
+        if exp.net.metrics.collisions == 0 {
+            return Err("expected collisions with 4 slots".into());
+        }
+        verify_all_results(&exp)
+    });
+}
+
+#[test]
+fn canary_correct_with_tiny_timeout_all_stragglers() {
+    // 50 ns timeout: descriptors fire before most packets arrive, so the
+    // protocol must stay correct when almost everything is a straggler
+    let sc = values_scenario(
+        FatTreeConfig::tiny(),
+        SimConfig::default().with_timeout(50_000),
+        Algo::Canary,
+        8,
+        false,
+        8 * 1024,
+    );
+    let mut exp = build_scenario(&sc, 3);
+    runner::run_to_completion(&mut exp.net, 200_000 * US);
+    assert!(exp.net.metrics.stragglers > 0, "expected stragglers");
+    verify_all_results(&exp).unwrap();
+}
+
+#[test]
+fn canary_correct_with_huge_timeout() {
+    // 50 us timeout: full aggregation at every hop, minimal packets
+    let sc = values_scenario(
+        FatTreeConfig::tiny(),
+        SimConfig::default().with_timeout(50 * US),
+        Algo::Canary,
+        8,
+        false,
+        8 * 1024,
+    );
+    run_and_verify(&sc, 4).unwrap();
+}
+
+#[test]
+fn static_tree_correct_one_and_four_trees() {
+    for n_trees in [1u8, 4] {
+        check_property("static-values", 0xC2, 4, |rng: &mut Rng| {
+            let sc = values_scenario(
+                FatTreeConfig::small(),
+                SimConfig::default(),
+                Algo::StaticTree { n_trees },
+                3 + rng.gen_range(12) as u32,
+                rng.chance(0.5),
+                (1 + rng.gen_range(16)) * 1024,
+            );
+            run_and_verify(&sc, rng.next_u64())
+        });
+    }
+}
+
+#[test]
+fn single_block_and_barrier_sizes() {
+    // data smaller than one packet (barrier-like) still works
+    for &bytes in &[1u64, 4, 1024] {
+        let sc = values_scenario(
+            FatTreeConfig::tiny(),
+            SimConfig::default(),
+            Algo::Canary,
+            5,
+            false,
+            bytes,
+        );
+        run_and_verify(&sc, 9).unwrap();
+    }
+}
+
+#[test]
+fn two_hosts_minimum() {
+    let sc = values_scenario(
+        FatTreeConfig::tiny(),
+        SimConfig::default(),
+        Algo::Canary,
+        2,
+        false,
+        4 * 1024,
+    );
+    run_and_verify(&sc, 11).unwrap();
+}
+
+#[test]
+fn ring_completes_at_expected_bandwidth() {
+    // not value-carrying, but timing must match the analytic model
+    let sc = Scenario {
+        topo: FatTreeConfig::small(),
+        sim: SimConfig::default(),
+        lb: LoadBalancer::default(),
+        algo: Algo::Ring,
+        n_allreduce_hosts: 16,
+        congestion: false,
+        data_bytes: 1 << 20,
+        record_results: false,
+    };
+    let mut exp = build_scenario(&sc, 5);
+    let res = runner::run_to_completion(&mut exp.net, 200_000 * US);
+    let g = res[0].goodput_gbps.expect("ring finished");
+    // bandwidth-optimal ring: B/2 * N/(N-1) * payload efficiency ~ 45;
+    // accept a generous band
+    assert!(g > 30.0 && g < 60.0, "ring goodput {g}");
+}
+
+#[test]
+fn multi_tenant_concurrent_jobs_all_correct() {
+    use canary::workload::build_multi_tenant;
+    let (mut net, _ft, jobs) = build_multi_tenant(
+        FatTreeConfig::small(),
+        SimConfig::default().with_values(true),
+        LoadBalancer::default(),
+        Algo::Canary,
+        4,
+        8 * 1024,
+        77,
+    );
+    // enable result recording on every job
+    for j in net.jobs.iter_mut() {
+        j.spec.record_results = true;
+    }
+    runner::run_to_completion(&mut net, 200_000 * US);
+    for &job in &jobs {
+        let j = &net.jobs[job as usize];
+        assert!(j.finish.is_some(), "tenant {} unfinished", j.spec.tenant);
+        let lanes = j.spec.lanes();
+        for block in 0..j.spec.total_blocks() {
+            let expected = expected_block_sum(
+                j.spec.tenant,
+                &j.spec.participants,
+                block,
+                lanes,
+            );
+            for rank in 0..j.spec.participants.len() as u32 {
+                assert_eq!(
+                    j.results.get(&(rank, block)).expect("result"),
+                    &expected,
+                    "tenant {} rank {rank} block {block}",
+                    j.spec.tenant
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn all_load_balancers_preserve_correctness() {
+    for lb in [
+        LoadBalancer::DefaultAdaptive { threshold: 0.5 },
+        LoadBalancer::Ecmp,
+        LoadBalancer::MinQueue,
+        LoadBalancer::Flowlet { gap_ps: 5 * US },
+    ] {
+        let mut sc = values_scenario(
+            FatTreeConfig::small(),
+            SimConfig::default(),
+            Algo::Canary,
+            10,
+            true,
+            8 * 1024,
+        );
+        sc.lb = lb;
+        run_and_verify(&sc, 13).unwrap();
+    }
+}

@@ -1,0 +1,125 @@
+//! Fault tolerance (paper Section 3.3): random packet loss and switch
+//! failures are handled end-to-end by the leader protocol — blocks are
+//! retransmitted or re-reduced under fresh ids, and values stay exact.
+
+use canary::collectives::{expected_block_sum, runner, Algo};
+use canary::config::{FatTreeConfig, SimConfig};
+use canary::faults::FaultPlan;
+use canary::loadbalance::LoadBalancer;
+use canary::sim::US;
+use canary::util::proptest_lite::check_property;
+use canary::util::rng::Rng;
+use canary::workload::{build_scenario, Scenario};
+
+fn lossy_scenario(hosts: u32, kib: u64) -> Scenario {
+    Scenario {
+        topo: FatTreeConfig::tiny(),
+        sim: SimConfig::default()
+            .with_values(true)
+            // short loss-recovery timer so tests converge quickly
+            .with_retrans(200 * US, true),
+        lb: LoadBalancer::default(),
+        algo: Algo::Canary,
+        n_allreduce_hosts: hosts,
+        congestion: false,
+        data_bytes: kib * 1024,
+        record_results: true,
+    }
+}
+
+fn verify(exp: &canary::workload::Experiment) -> Result<(), String> {
+    let job = &exp.net.jobs[exp.job as usize];
+    if job.finish.is_none() {
+        return Err(format!(
+            "unfinished: {}/{} hosts",
+            job.hosts_finished,
+            job.spec.participants.len()
+        ));
+    }
+    let lanes = job.spec.lanes();
+    for block in 0..job.spec.total_blocks() {
+        let expected = expected_block_sum(
+            job.spec.tenant,
+            &job.spec.participants,
+            block,
+            lanes,
+        );
+        for rank in 0..job.spec.participants.len() as u32 {
+            let got = job
+                .results
+                .get(&(rank, block))
+                .ok_or_else(|| format!("missing r{rank} b{block}"))?;
+            if got != &expected {
+                return Err(format!("wrong value r{rank} b{block}"));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn survives_random_packet_loss() {
+    check_property("loss-recovery", 0xF0, 5, |rng: &mut Rng| {
+        let sc = lossy_scenario(4 + rng.gen_range(4) as u32, 4);
+        let mut exp = build_scenario(&sc, rng.next_u64());
+        exp.net.faults = FaultPlan::default().with_loss(0.02);
+        runner::run_to_completion(&mut exp.net, 2_000_000 * US);
+        if exp.net.metrics.drops_injected == 0 {
+            return Err("no loss was injected".into());
+        }
+        verify(&exp)
+    });
+}
+
+#[test]
+fn survives_heavy_packet_loss() {
+    let sc = lossy_scenario(4, 2);
+    let mut exp = build_scenario(&sc, 42);
+    exp.net.faults = FaultPlan::default().with_loss(0.10);
+    runner::run_to_completion(&mut exp.net, 5_000_000 * US);
+    verify(&exp).unwrap();
+    // heavy loss must have exercised the failure/retry machinery
+    let m = &exp.net.metrics;
+    assert!(
+        m.retrans_requests > 0,
+        "expected retransmission requests, metrics: {m:?}"
+    );
+}
+
+#[test]
+fn survives_spine_switch_failure() {
+    // kill one spine mid-transfer: its soft state is lost; the leaders
+    // recover every affected block (loss-equivalent, Section 3.3)
+    let sc = lossy_scenario(8, 64);
+    let mut exp = build_scenario(&sc, 21);
+    let spine = exp.ft.spine_id(0);
+    // fail mid-transfer (a 64 KiB allreduce runs for tens of us)
+    exp.net.faults =
+        FaultPlan::default().with_switch_failure(5 * US, spine);
+    runner::run_to_completion(&mut exp.net, 5_000_000 * US);
+    assert_eq!(exp.net.metrics.switch_failures, 1);
+    verify(&exp).unwrap();
+}
+
+#[test]
+fn fallback_to_host_based_reduction() {
+    // max_retries 0 forces direct (host-based) contributions on the
+    // first failure round, which must still produce exact results
+    let mut sc = lossy_scenario(5, 2);
+    sc.sim.max_retries = 0;
+    let mut exp = build_scenario(&sc, 33);
+    exp.net.faults = FaultPlan::default().with_loss(0.05);
+    runner::run_to_completion(&mut exp.net, 5_000_000 * US);
+    verify(&exp).unwrap();
+}
+
+#[test]
+fn clean_run_has_no_recovery_activity() {
+    let sc = lossy_scenario(6, 4);
+    let mut exp = build_scenario(&sc, 55);
+    runner::run_to_completion(&mut exp.net, 2_000_000 * US);
+    verify(&exp).unwrap();
+    let m = &exp.net.metrics;
+    assert_eq!(m.failures, 0);
+    assert_eq!(m.drops_injected, 0);
+}

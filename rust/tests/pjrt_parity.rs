@@ -1,0 +1,164 @@
+//! Rust-native ALU vs Pallas-kernel-via-PJRT bit parity, and runtime
+//! round trips for the model artifacts. Requires `make artifacts`
+//! (skips gracefully when artifacts/ is absent so `cargo test` works in
+//! a fresh checkout).
+
+use canary::runtime::{
+    lit_f32, lit_i32, lit_i32_2d, lit_u32_scalar, to_f32, to_f32_scalar,
+    to_i32, Runtime,
+};
+use canary::switch::alu;
+use canary::util::rng::Rng;
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::load(Runtime::default_dir()) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping PJRT tests: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn aggregate_kernel_matches_native_alu() {
+    let Some(rt) = runtime() else { return };
+    let lanes = rt.manifest.packet_lanes;
+    for w in [2usize, 4, 8, 16] {
+        let exe = rt.compile(&format!("aggregate_w{w}")).unwrap();
+        let mut rng = Rng::new(w as u64);
+        // include saturation-edge values
+        let mut payloads: Vec<i32> =
+            (0..w * lanes).map(|_| rng.i32()).collect();
+        payloads[0] = i32::MAX;
+        payloads[lanes] = i32::MAX; // second row, lane 0 -> saturates
+        let lit = lit_i32_2d(&payloads, w, lanes).unwrap();
+        let out = exe.run(&[lit]).unwrap();
+        let got = to_i32(&out[0]).unwrap();
+
+        let rows: Vec<&[i32]> =
+            (0..w).map(|i| &payloads[i * lanes..(i + 1) * lanes]).collect();
+        let expected = alu::aggregate_rows(&rows, lanes);
+        assert_eq!(got, expected, "aggregate_w{w} parity");
+    }
+}
+
+#[test]
+fn quantize_kernels_match_native() {
+    let Some(rt) = runtime() else { return };
+    let lanes = rt.manifest.packet_lanes;
+    let q = rt.compile("quantize_block").unwrap();
+    let dq = rt.compile("dequantize_block").unwrap();
+    let mut rng = Rng::new(99);
+    let xs: Vec<f32> = (0..lanes)
+        .map(|i| match i % 5 {
+            0 => (rng.f64() as f32 - 0.5) * 4.0,
+            1 => (rng.f64() as f32) * 1e-6,
+            2 => (rng.f64() as f32) * 5000.0,
+            3 => -(rng.f64() as f32) * 5000.0,
+            _ => 0.0,
+        })
+        .collect();
+    let out = q.run(&[lit_f32(&xs)]).unwrap();
+    let got_q = to_i32(&out[0]).unwrap();
+    let expect_q = alu::quantize_vec(&xs, 20);
+    assert_eq!(got_q, expect_q, "quantize parity");
+
+    let out = dq.run(&[lit_i32(&got_q)]).unwrap();
+    let got_dq = to_f32(&out[0]).unwrap();
+    let expect_dq = alu::dequantize_vec(&got_q, 20);
+    for (a, b) in got_dq.iter().zip(expect_dq.iter()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "dequantize bit parity");
+    }
+}
+
+#[test]
+fn model_artifacts_roundtrip() {
+    let Some(rt) = runtime() else { return };
+    if !rt.manifest.models.contains_key("tiny") {
+        eprintln!("skipping: tiny preset not lowered");
+        return;
+    }
+    let model = rt.manifest.models["tiny"].clone();
+    let init = rt.compile("tiny_init_params").unwrap();
+    let step = rt.compile("tiny_train_step").unwrap();
+    let apply = rt.compile("tiny_apply_update").unwrap();
+    let eval = rt.compile("tiny_eval_loss").unwrap();
+
+    let params = to_f32(&init.run(&[lit_u32_scalar(1)]).unwrap()[0]).unwrap();
+    assert_eq!(params.len(), model.param_count);
+    // deterministic init
+    let params2 =
+        to_f32(&init.run(&[lit_u32_scalar(1)]).unwrap()[0]).unwrap();
+    assert_eq!(params, params2);
+
+    let mut rng = Rng::new(3);
+    let tokens: Vec<i32> = (0..model.batch * model.seq_len)
+        .map(|_| rng.gen_range(model.vocab as u64) as i32)
+        .collect();
+    let tok = lit_i32_2d(&tokens, model.batch, model.seq_len).unwrap();
+    let out = step.run(&[lit_f32(&params), tok]).unwrap();
+    let loss = to_f32_scalar(&out[0]).unwrap();
+    let qgrads = to_i32(&out[1]).unwrap();
+    assert!(loss.is_finite());
+    // initial loss near ln(vocab) for random tokens
+    let ln_v = (model.vocab as f32).ln();
+    assert!((loss - ln_v).abs() < 2.0, "loss {loss} vs ln(V) {ln_v}");
+    assert!(qgrads.iter().any(|&g| g != 0), "gradient all-zero");
+
+    // one SGD step must change the params and keep them finite
+    let out = apply
+        .run(&[
+            lit_f32(&params),
+            lit_i32(&qgrads),
+            canary::runtime::lit_f32_scalar(0.1),
+            canary::runtime::lit_f32_scalar(1.0),
+        ])
+        .unwrap();
+    let new_params = to_f32(&out[0]).unwrap();
+    assert_ne!(params, new_params);
+    assert!(new_params.iter().all(|p| p.is_finite()));
+
+    // eval_loss agrees with train_step's loss on the same batch
+    let tok = lit_i32_2d(&tokens, model.batch, model.seq_len).unwrap();
+    let out = eval.run(&[lit_f32(&params), tok]).unwrap();
+    let eval_loss = to_f32_scalar(&out[0]).unwrap();
+    assert!((eval_loss - loss).abs() < 1e-4);
+}
+
+#[test]
+fn trainer_loss_decreases_tiny() {
+    let Some(rt) = runtime() else { return };
+    if !rt.manifest.models.contains_key("tiny") {
+        return;
+    }
+    let cfg = canary::train::TrainConfig {
+        preset: "tiny".into(),
+        workers: 2,
+        steps: 25,
+        lr: 0.5,
+        algo: canary::collectives::Algo::Canary,
+        comm_every: 10,
+        congestion: true,
+        seed: 7,
+    };
+    let mut trainer = canary::train::Trainer::new(&rt, cfg).unwrap();
+    let logs = trainer.train().unwrap();
+    let first: f32 =
+        logs[..5].iter().map(|l| l.mean_loss).sum::<f32>() / 5.0;
+    let last: f32 = logs[logs.len() - 5..]
+        .iter()
+        .map(|l| l.mean_loss)
+        .sum::<f32>()
+        / 5.0;
+    assert!(
+        last < first - 0.1,
+        "loss did not decrease: first {first:.3} last {last:.3}"
+    );
+    // the simulated allreduce produced real communication times
+    assert!(logs.iter().any(|l| l.comm_ps.is_some()));
+    assert!(logs
+        .iter()
+        .filter_map(|l| l.comm_ps)
+        .all(|c| c > 0));
+}

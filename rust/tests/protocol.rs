@@ -1,0 +1,221 @@
+//! Protocol-level behaviour: routing reachability, congestion response,
+//! straggler/collision machinery, background traffic, fair queueing, and
+//! the goodput relations the paper's evaluation depends on.
+
+use canary::collectives::{runner, Algo};
+use canary::config::{FatTreeConfig, SimConfig};
+use canary::loadbalance::LoadBalancer;
+use canary::sim::US;
+use canary::util::proptest_lite::check_property;
+use canary::util::rng::Rng;
+use canary::workload::{build_scenario, Scenario};
+
+fn scenario(
+    algo: Algo,
+    hosts: u32,
+    congestion: bool,
+    data_kib: u64,
+) -> Scenario {
+    Scenario {
+        topo: FatTreeConfig::small(),
+        sim: SimConfig::default(),
+        lb: LoadBalancer::default(),
+        algo,
+        n_allreduce_hosts: hosts,
+        congestion,
+        data_bytes: data_kib * 1024,
+        record_results: false,
+    }
+}
+
+#[test]
+fn all_algorithms_complete_on_random_placements() {
+    check_property("completion", 0xA0, 10, |rng: &mut Rng| {
+        let algos = [
+            Algo::Canary,
+            Algo::Ring,
+            Algo::StaticTree { n_trees: 1 },
+            Algo::StaticTree { n_trees: 4 },
+        ];
+        let algo = *rng.choose(&algos);
+        let hosts = 2 + rng.gen_range(20) as u32;
+        let sc = scenario(algo, hosts, rng.chance(0.5), 1 + rng.gen_range(64));
+        let mut exp = build_scenario(&sc, rng.next_u64());
+        let res = runner::run_to_completion(&mut exp.net, 500_000 * US);
+        if res[0].runtime_ps.is_none() {
+            return Err(format!("{algo:?} with {hosts} hosts timed out"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn in_network_beats_ring_without_congestion() {
+    // the paper's headline 2x claim (Fig. 2, no congestion)
+    let mut goodputs = std::collections::HashMap::new();
+    for algo in [Algo::Ring, Algo::Canary, Algo::StaticTree { n_trees: 1 }] {
+        let sc = scenario(algo, 32, false, 1024);
+        let mut exp = build_scenario(&sc, 5);
+        let res = runner::run_to_completion(&mut exp.net, 500_000 * US);
+        goodputs.insert(algo.name(), res[0].goodput_gbps.unwrap());
+    }
+    let ring = goodputs["ring"];
+    let canary = goodputs["canary"];
+    let st1 = goodputs["static1"];
+    assert!(
+        canary > 1.5 * ring,
+        "canary {canary:.1} vs ring {ring:.1}: expected ~2x"
+    );
+    assert!(
+        st1 > 1.5 * ring,
+        "static1 {st1:.1} vs ring {ring:.1}: expected ~2x"
+    );
+}
+
+#[test]
+fn canary_beats_static_tree_under_congestion() {
+    // the paper's core result (Fig. 7a / Fig. 8)
+    let seeds = [1u64, 2, 3];
+    let mut canary_sum = 0.0;
+    let mut st1_sum = 0.0;
+    for &seed in &seeds {
+        let sc = scenario(Algo::Canary, 32, true, 1024);
+        let mut exp = build_scenario(&sc, seed);
+        canary_sum += runner::run_to_completion(&mut exp.net, 500_000 * US)
+            [0]
+        .goodput_gbps
+        .unwrap();
+        let sc = scenario(Algo::StaticTree { n_trees: 1 }, 32, true, 1024);
+        let mut exp = build_scenario(&sc, seed);
+        st1_sum += runner::run_to_completion(&mut exp.net, 500_000 * US)[0]
+            .goodput_gbps
+            .unwrap();
+    }
+    assert!(
+        canary_sum > st1_sum,
+        "canary {canary_sum:.1} should beat static1 {st1_sum:.1} \
+         under congestion"
+    );
+}
+
+#[test]
+fn congestion_hurts_static_tree_more_than_canary() {
+    let run = |algo: Algo, cong: bool| -> f64 {
+        let mut acc = 0.0;
+        for seed in [1u64, 2] {
+            let sc = scenario(algo, 32, cong, 1024);
+            let mut exp = build_scenario(&sc, seed);
+            acc += runner::run_to_completion(&mut exp.net, 500_000 * US)
+                [0]
+            .goodput_gbps
+            .unwrap();
+        }
+        acc / 2.0
+    };
+    let canary_drop =
+        run(Algo::Canary, false) / run(Algo::Canary, true).max(1e-9);
+    let st_drop = run(Algo::StaticTree { n_trees: 1 }, false)
+        / run(Algo::StaticTree { n_trees: 1 }, true).max(1e-9);
+    assert!(
+        st_drop > canary_drop,
+        "static tree should degrade more (st {st_drop:.2}x vs \
+         canary {canary_drop:.2}x)"
+    );
+}
+
+#[test]
+fn straggler_count_scales_inversely_with_timeout() {
+    // Cascaded equal timeouts always make later aggregation levels'
+    // partials stragglers at the root (they arrive one timeout late),
+    // so even long timeouts show a few; but shorter timeouts must show
+    // *many* more (Section 3.1.1 / Fig. 11).
+    let run = |timeout_ps: u64| -> u64 {
+        let mut sc = scenario(Algo::Canary, 16, false, 256);
+        sc.sim = sc.sim.with_timeout(timeout_ps);
+        let mut exp = build_scenario(&sc, 9);
+        runner::run_to_completion(&mut exp.net, 500_000 * US);
+        exp.net.metrics.stragglers
+    };
+    let short = run(50_000); // 50 ns: everything straggles
+    let normal = run(US); // paper default
+    assert!(short > 0, "short timeout must produce stragglers");
+    assert!(
+        short > 4 * normal.max(1),
+        "short {short} vs normal {normal}: expected far more stragglers"
+    );
+}
+
+#[test]
+fn background_traffic_saturates_and_drops() {
+    // congestion generator alone: run for a fixed window and verify the
+    // links carry traffic and overflow policing kicks in
+    let sc = scenario(Algo::Canary, 2, true, 1);
+    let mut exp = build_scenario(&sc, 31);
+    exp.net.kick_jobs();
+    exp.net.run_all(2000 * US);
+    let m = &exp.net.metrics;
+    assert!(m.pkts_delivered > 10_000, "bg delivered {}", m.pkts_delivered);
+    assert!(m.drops_overflow > 0, "expected overflow drops");
+}
+
+#[test]
+fn fair_queueing_splits_a_shared_link() {
+    // one allreduce host pair + heavy background through the same leaf:
+    // neither class may starve
+    let sc = Scenario {
+        topo: FatTreeConfig::tiny(),
+        sim: SimConfig::default(),
+        lb: LoadBalancer::default(),
+        algo: Algo::Canary,
+        n_allreduce_hosts: 4,
+        congestion: true,
+        data_bytes: 512 * 1024,
+        record_results: false,
+    };
+    let mut exp = build_scenario(&sc, 17);
+    let res = runner::run_to_completion(&mut exp.net, 500_000 * US);
+    let g = res[0].goodput_gbps.unwrap();
+    // must make progress but cannot hold the full line rate
+    assert!(g > 10.0, "starved: {g:.1} Gbps");
+}
+
+#[test]
+fn ecmp_is_worse_than_adaptive_under_congestion() {
+    let run = |lb: LoadBalancer| -> f64 {
+        let mut acc = 0.0;
+        for seed in [11u64, 12, 13] {
+            let mut sc = scenario(Algo::Canary, 32, true, 1024);
+            sc.lb = lb.clone();
+            let mut exp = build_scenario(&sc, seed);
+            acc += runner::run_to_completion(&mut exp.net, 500_000 * US)
+                [0]
+            .goodput_gbps
+            .unwrap();
+        }
+        acc
+    };
+    let adaptive = run(LoadBalancer::DefaultAdaptive { threshold: 0.5 });
+    let ecmp = run(LoadBalancer::Ecmp);
+    // ECMP is congestion-oblivious; it should not win
+    assert!(
+        adaptive >= ecmp * 0.95,
+        "adaptive {adaptive:.1} vs ecmp {ecmp:.1}"
+    );
+}
+
+#[test]
+fn derived_collectives_shapes() {
+    use canary::collectives::derived;
+    assert_eq!(derived::barrier_blocks(), 1);
+    // a "reduce": leader pinned at the destination — every block same
+    for b in 0..10 {
+        assert_eq!(derived::reduce_leader_of(3, b), 3);
+    }
+}
+
+#[test]
+fn multicast_shard_tables_fit_paper_budget() {
+    use canary::switch::shards;
+    // 64-port switch, 4 shards: 256 Ki entries (Section 4.2)
+    assert!(shards::table_entries(64, 4) <= 1 << 18);
+}
