@@ -14,13 +14,13 @@ use canary::sim::US;
 use canary::util::cli::Args;
 use canary::workload::{build_scenario, Scenario};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> canary::util::error::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(argv, &["loss", "hosts", "kill-spine", "seed"])
-        .map_err(anyhow::Error::msg)?;
-    let loss: f64 = args.get_parse("loss", 0.02).map_err(anyhow::Error::msg)?;
-    let hosts: u32 = args.get_parse("hosts", 8).map_err(anyhow::Error::msg)?;
-    let seed: u64 = args.get_parse("seed", 7).map_err(anyhow::Error::msg)?;
+    let args =
+        Args::parse(argv, &["loss", "hosts", "kill-spine", "seed"])?;
+    let loss: f64 = args.get_parse("loss", 0.02)?;
+    let hosts: u32 = args.get_parse("hosts", 8)?;
+    let seed: u64 = args.get_parse("seed", 7)?;
 
     let sc = Scenario {
         topo: FatTreeConfig::tiny(),

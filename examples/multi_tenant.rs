@@ -13,26 +13,24 @@ use canary::util::cli::Args;
 use canary::util::stats::mean;
 use canary::workload::build_multi_tenant;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> canary::util::error::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(argv, &["jobs", "algo", "size", "topo", "seed"])
-        .map_err(anyhow::Error::msg)?;
-    let n_jobs: u32 = args.get_parse("jobs", 8).map_err(anyhow::Error::msg)?;
-    let size: u64 =
-        args.get_parse("size", 4 << 20).map_err(anyhow::Error::msg)?;
-    let seed: u64 = args.get_parse("seed", 1).map_err(anyhow::Error::msg)?;
+    let args = Args::parse(argv, &["jobs", "algo", "size", "topo", "seed"])?;
+    let n_jobs: u32 = args.get_parse("jobs", 8)?;
+    let size: u64 = args.get_parse("size", 4 << 20)?;
+    let seed: u64 = args.get_parse("seed", 1)?;
     let topo = match args.get_or("topo", "small") {
         "paper" => FatTreeConfig::paper(),
         "small" => FatTreeConfig::small(),
         "tiny" => FatTreeConfig::tiny(),
-        t => anyhow::bail!("unknown topo {t}"),
+        t => return Err(format!("unknown topo {t}").into()),
     };
     let algo = match args.get_or("algo", "canary") {
         "canary" => Algo::Canary,
         "ring" => Algo::Ring,
         "static1" => Algo::StaticTree { n_trees: 1 },
         "static4" => Algo::StaticTree { n_trees: 4 },
-        other => anyhow::bail!("unknown algo {other}"),
+        other => return Err(format!("unknown algo {other}").into()),
     };
 
     let (mut net, _ft, jobs) = build_multi_tenant(

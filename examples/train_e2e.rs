@@ -19,32 +19,29 @@ use canary::sim::ps_to_us;
 use canary::train::{TrainConfig, Trainer};
 use canary::util::cli::Args;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> canary::util::error::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(
         argv,
         &["preset", "workers", "steps", "lr", "algo", "comm-every", "seed"],
-    )
-    .map_err(anyhow::Error::msg)?;
+    )?;
 
     let algo = match args.get_or("algo", "canary") {
         "canary" => Algo::Canary,
         "ring" => Algo::Ring,
         "static1" => Algo::StaticTree { n_trees: 1 },
         "static4" => Algo::StaticTree { n_trees: 4 },
-        other => anyhow::bail!("unknown algo {other}"),
+        other => return Err(format!("unknown algo {other}").into()),
     };
     let cfg = TrainConfig {
         preset: args.get_or("preset", "base").to_string(),
-        workers: args.get_parse("workers", 4).map_err(anyhow::Error::msg)?,
-        steps: args.get_parse("steps", 200).map_err(anyhow::Error::msg)?,
-        lr: args.get_parse("lr", 0.5).map_err(anyhow::Error::msg)?,
+        workers: args.get_parse("workers", 4)?,
+        steps: args.get_parse("steps", 200)?,
+        lr: args.get_parse("lr", 0.5)?,
         algo,
-        comm_every: args
-            .get_parse("comm-every", 10)
-            .map_err(anyhow::Error::msg)?,
+        comm_every: args.get_parse("comm-every", 10)?,
         congestion: true,
-        seed: args.get_parse("seed", 0xBEEF).map_err(anyhow::Error::msg)?,
+        seed: args.get_parse("seed", 0xBEEF)?,
     };
 
     let rt = Runtime::load(Runtime::default_dir())?;

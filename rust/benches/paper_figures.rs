@@ -40,5 +40,6 @@ fn main() {
     run("fig10b_link_util_20jobs", figures::fig10b);
     run("fig11_noise_timeout", figures::fig11);
     run("mem_model", figures::mem);
+    run("clos3_multitier", figures::clos3);
     run("ablation_lb", figures::ablation_lb);
 }

@@ -68,6 +68,11 @@ pub fn install_canary_job(
 
 /// Install a static-tree in-network allreduce with `n_trees` trees rooted
 /// at `roots` (SHARP-like for 1 tree, PANAMA-like for several).
+///
+/// On a multi-tier Clos, each tree is the label-aligned spanning tree of
+/// its root: every participating leaf aggregates its local hosts, every
+/// intermediate tier aggregates the partials of the aligned switches one
+/// tier down, and the root combines one partial per top-level subtree.
 pub fn install_static_job(
     net: &mut Network,
     ft: &FatTree,
@@ -102,37 +107,64 @@ pub fn install_static_job(
     }
 
     // ---- control plane: configure the trees on the switches ----
-    // participating leaves and their member hosts
-    let mut leaf_members: std::collections::BTreeMap<u32, Vec<NodeId>> =
+    // participating leaves/ToRs and their member hosts' down-ports
+    let tiers = ft.tiers();
+    let mut leaf_members: std::collections::BTreeMap<u32, Vec<u16>> =
         Default::default();
     for &h in &participants {
-        leaf_members.entry(ft.leaf_of_host(h)).or_default().push(h);
+        leaf_members
+            .entry(ft.leaf_of_host(h))
+            .or_default()
+            .push(ft.leaf_host_port(h));
     }
     for (t, &root) in roots.iter().enumerate() {
-        let root_spine_idx = root - ft.n_hosts() - ft.cfg.n_leaf;
-        // each participating leaf aggregates its local hosts, then sends
-        // up the fixed edge to the root spine
-        for (&leaf_idx, members) in &leaf_members {
-            let leaf_id = ft.leaf_id(leaf_idx);
-            let child_ports: Vec<u16> = members
-                .iter()
-                .map(|&h| ft.leaf_host_port(h))
-                .collect();
-            let role = TreeRole::Leaf {
-                parent_port: ft.leaf_up_port(root_spine_idx),
-                expected: members.len() as u32,
-                child_ports,
-            };
-            install_tree_role(net, leaf_id, tenant, t, roots.len(), role);
+        let (root_tier, root_idx) = ft.switch_at(root);
+        assert_eq!(root_tier, tiers, "tree roots must be top-tier switches");
+        // climb tier by tier along the root's bottom label: at each
+        // tier the on-tree switches aggregate their subtree and send
+        // the partial up the one aligned edge toward the root
+        let mut members = leaf_members.clone();
+        for tier in 1..tiers {
+            let m_up = ft.cfg.down[tier as usize];
+            let w_t = ft.w(tier);
+            let c_next = ft.climb_digit(tier, root_idx);
+            let mut parents: std::collections::BTreeMap<u32, Vec<u16>> =
+                Default::default();
+            for (&idx, ports) in &members {
+                let top = idx / w_t;
+                debug_assert_eq!(
+                    idx % w_t,
+                    root_idx % w_t,
+                    "off the root's line"
+                );
+                let role = TreeRole {
+                    parent_port: Some(ft.up_port(tier, c_next)),
+                    expected: ports.len() as u32,
+                    child_ports: ports.clone(),
+                };
+                install_tree_role(
+                    net,
+                    ft.switch_id(tier, idx),
+                    tenant,
+                    t,
+                    roots.len(),
+                    role,
+                );
+                parents
+                    .entry(ft.parent_index(tier, idx, c_next))
+                    .or_default()
+                    .push((top % m_up) as u16);
+            }
+            members = parents;
         }
-        // root spine aggregates one partial per participating leaf
-        let child_ports: Vec<u16> = leaf_members
-            .keys()
-            .map(|&l| ft.spine_down_port(l))
-            .collect();
-        let role = TreeRole::Root {
-            expected: leaf_members.len() as u32,
-            child_ports,
+        // the climb converges on the root, which starts the broadcast
+        assert_eq!(members.len(), 1);
+        let (&idx, ports) = members.iter().next().unwrap();
+        assert_eq!(ft.switch_id(tiers, idx), root);
+        let role = TreeRole {
+            parent_port: None,
+            expected: ports.len() as u32,
+            child_ports: ports.clone(),
         };
         install_tree_role(net, root, tenant, t, roots.len(), role);
     }

@@ -141,49 +141,264 @@ impl SimConfig {
     }
 }
 
-/// Topology shape. The paper's scale setup is `FatTreeConfig::paper()`:
-/// 1024 hosts, 32 leaves x 32 hosts, 32 spines.
-#[derive(Clone, Copy, Debug)]
-pub struct FatTreeConfig {
-    pub n_leaf: u32,
-    pub hosts_per_leaf: u32,
-    pub n_spine: u32,
+/// Maximum number of switch tiers a [`ClosConfig`] can describe.
+pub const MAX_TIERS: usize = 4;
+
+/// Multi-tier folded-Clos topology shape (an XGFT in the Öhring et al.
+/// parametrization, specialized to one uplink per host).
+///
+/// Tier `t` (1-based, `1..=tiers`) is described by two radixes:
+///
+/// - `down[t-1]` — children per tier-`t` switch (`down[0]` = hosts per
+///   leaf/ToR).
+/// - `up[t-1]` — tier-`t` parents of each tier-`t-1` node (`up[0]` = 1,
+///   one NIC uplink per host).
+///
+/// The oversubscription ratio at tier `t < tiers` is
+/// `down[t-1] : up[t]` (downlinks vs uplinks of a tier-`t` switch).
+///
+/// The paper's Section 5.2 network is the 2-tier
+/// [`ClosConfig::paper()`]: 1024 hosts, 32 leaves x 32 hosts, 32
+/// spines, non-blocking. [`ClosConfig::paper3()`] scales the same host
+/// count onto a 3-tier pod fabric with a 2:1 oversubscription at both
+/// lower tiers — the regime where congestion awareness matters most.
+///
+/// `FatTreeConfig` remains as an alias for the 2-tier call sites.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ClosConfig {
+    /// Number of switch tiers (2 = leaf/spine, 3 = ToR/agg/core).
+    pub tiers: u8,
+    /// `down[t-1]`: children per tier-`t` switch.
+    pub down: [u32; MAX_TIERS],
+    /// `up[t-1]`: tier-`t` parents per tier-`t-1` node; `up[0] == 1`.
+    pub up: [u32; MAX_TIERS],
 }
 
-impl FatTreeConfig {
+/// Backwards-compatible name for the 2-tier call sites.
+pub type FatTreeConfig = ClosConfig;
+
+impl ClosConfig {
+    /// Arbitrary-tier constructor. `down` and `up` must both have
+    /// `tiers` entries; see the field docs for their meaning.
+    pub fn custom(down: &[u32], up: &[u32]) -> Self {
+        assert_eq!(down.len(), up.len(), "down/up arity mismatch");
+        assert!(
+            (2..=MAX_TIERS).contains(&down.len()),
+            "tiers must be in 2..={MAX_TIERS}"
+        );
+        let mut cfg = ClosConfig {
+            tiers: down.len() as u8,
+            down: [0; MAX_TIERS],
+            up: [0; MAX_TIERS],
+        };
+        cfg.down[..down.len()].copy_from_slice(down);
+        cfg.up[..up.len()].copy_from_slice(up);
+        cfg
+    }
+
+    /// Classic 2-tier leaf/spine fabric.
+    pub fn two_tier(n_leaf: u32, hosts_per_leaf: u32, n_spine: u32) -> Self {
+        ClosConfig::custom(&[hosts_per_leaf, n_leaf], &[1, n_spine])
+    }
+
+    /// 3-tier pod fabric: `n_pods` pods of `tors_per_pod` ToRs (each
+    /// with `hosts_per_tor` hosts and `aggs_per_pod` uplinks); each
+    /// aggregation switch has `cores_per_group` core uplinks, so the
+    /// core layer has `aggs_per_pod * cores_per_group` switches.
+    pub fn three_tier(
+        hosts_per_tor: u32,
+        tors_per_pod: u32,
+        n_pods: u32,
+        aggs_per_pod: u32,
+        cores_per_group: u32,
+    ) -> Self {
+        ClosConfig::custom(
+            &[hosts_per_tor, tors_per_pod, n_pods],
+            &[1, aggs_per_pod, cores_per_group],
+        )
+    }
+
+    /// The paper's Section 5.2 network: 1024 hosts, 32x32 leaves,
+    /// 32 spines (non-blocking).
     pub fn paper() -> Self {
-        FatTreeConfig {
-            n_leaf: 32,
-            hosts_per_leaf: 32,
-            n_spine: 32,
-        }
+        ClosConfig::two_tier(32, 32, 32)
     }
 
-    /// Small instance for unit tests (64 hosts).
+    /// Small 2-tier instance for unit tests (64 hosts).
     pub fn small() -> Self {
-        FatTreeConfig {
-            n_leaf: 4,
-            hosts_per_leaf: 16,
-            n_spine: 4,
-        }
+        ClosConfig::two_tier(4, 16, 4)
     }
 
-    /// Tiny instance for exhaustive tests (8 hosts).
+    /// Tiny 2-tier instance for exhaustive tests (8 hosts).
     pub fn tiny() -> Self {
-        FatTreeConfig {
-            n_leaf: 2,
-            hosts_per_leaf: 4,
-            n_spine: 2,
+        ClosConfig::two_tier(2, 4, 2)
+    }
+
+    /// 1024 hosts on a 3-tier pod fabric, 2:1 oversubscribed at the ToR
+    /// and aggregation tiers (the beyond-paper scale-up experiment).
+    pub fn paper3() -> Self {
+        // 8 pods x 8 ToRs x 16 hosts; 8 aggs/pod, 32 cores.
+        ClosConfig::three_tier(16, 8, 8, 8, 4)
+    }
+
+    /// 64-host 3-tier instance for CI-scale runs (2:1 oversubscribed).
+    pub fn small3() -> Self {
+        // 4 pods x 4 ToRs x 4 hosts; 2 aggs/pod, 4 cores.
+        ClosConfig::three_tier(4, 4, 4, 2, 2)
+    }
+
+    /// 8-host 3-tier instance for exhaustive tests.
+    pub fn tiny3() -> Self {
+        ClosConfig::three_tier(2, 2, 2, 2, 2)
+    }
+
+    /// Rescale the uplink radixes so every switch tier below the top is
+    /// `num:den` oversubscribed (downlinks : uplinks). `1:1` is
+    /// non-blocking; `4:1` is a heavily tapered fabric. When the ratio
+    /// does not divide a tier's down radix exactly, the uplink count is
+    /// floored (nearest achievable taper); the CLI rejects inexact
+    /// ratios so reported and built shapes never silently diverge.
+    pub fn with_oversub(mut self, num: u32, den: u32) -> Self {
+        assert!(num > 0 && den > 0, "oversub ratio terms must be > 0");
+        for t in 1..self.tiers as usize {
+            self.up[t] = (self.down[t - 1] * den / num).max(1);
         }
+        self
     }
 
     pub fn n_hosts(&self) -> u32 {
-        self.n_leaf * self.hosts_per_leaf
+        self.down[..self.tiers as usize].iter().product()
+    }
+
+    /// Switches at tier `t` (1-based): one per (top, bottom) label pair,
+    /// `prod(down[t..]) * prod(up[..t])` in the XGFT counting.
+    pub fn tier_size(&self, t: u8) -> u32 {
+        debug_assert!((1..=self.tiers).contains(&t));
+        let tops: u64 = self.down[t as usize..self.tiers as usize]
+            .iter()
+            .map(|&m| m as u64)
+            .product();
+        let bots: u64 = self.up[..t as usize]
+            .iter()
+            .map(|&w| w as u64)
+            .product();
+        (tops * bots) as u32
     }
 
     pub fn n_switches(&self) -> u32 {
-        self.n_leaf + self.n_spine
+        (1..=self.tiers).map(|t| self.tier_size(t)).sum()
     }
+
+    // -- 2-tier-era accessors (still meaningful on deeper fabrics:
+    //    "leaf" = tier 1, "spine" = the top tier) --------------------
+
+    /// Hosts attached to one leaf/ToR switch.
+    pub fn hosts_per_leaf(&self) -> u32 {
+        self.down[0]
+    }
+
+    /// Number of tier-1 (leaf/ToR) switches.
+    pub fn n_leaf(&self) -> u32 {
+        self.tier_size(1)
+    }
+
+    /// Number of top-tier (spine/core) switches.
+    pub fn n_spine(&self) -> u32 {
+        self.tier_size(self.tiers)
+    }
+
+    /// Sanity-check the shape: tier count, radix bounds (the switch
+    /// children bitmaps are `u64`, so total port radix must stay <= 64),
+    /// and the host-uplink convention.
+    pub fn validate(&self) -> Result<(), String> {
+        if !(2..=MAX_TIERS as u8).contains(&self.tiers) {
+            return Err(format!(
+                "tiers must be in 2..={MAX_TIERS}, got {}",
+                self.tiers
+            ));
+        }
+        if self.up[0] != 1 {
+            return Err(format!(
+                "up[0] (host uplinks) must be 1, got {}",
+                self.up[0]
+            ));
+        }
+        for t in 1..=self.tiers as usize {
+            let m = self.down[t - 1];
+            let w = if t < self.tiers as usize { self.up[t] } else { 0 };
+            if m == 0 {
+                return Err(format!("down[{}] must be >= 1", t - 1));
+            }
+            if t < self.tiers as usize && w == 0 {
+                return Err(format!("up[{t}] must be >= 1"));
+            }
+            if m + w > 64 {
+                return Err(format!(
+                    "tier-{t} switch radix {} exceeds 64 ports \
+                     (children bitmaps are u64)",
+                    m + w
+                ));
+            }
+        }
+        let hosts: u64 = self.down[..self.tiers as usize]
+            .iter()
+            .map(|&m| m as u64)
+            .product();
+        let switches: u64 =
+            (1..=self.tiers).map(|t| self.tier_size(t) as u64).sum();
+        if hosts == 0 || hosts + switches > (1 << 26) {
+            return Err(format!(
+                "degenerate node count: {hosts} hosts + {switches} switches"
+            ));
+        }
+        Ok(())
+    }
+
+    /// Parse a topology from its JSON description, e.g.
+    /// `{"tiers": 3, "down": [16, 8, 8], "up": [1, 8, 4]}`.
+    pub fn from_json(text: &str) -> Result<ClosConfig, String> {
+        let v = crate::util::json::parse(text)?;
+        let tiers = v
+            .get("tiers")
+            .and_then(|t| t.as_i64())
+            .ok_or("missing integer key 'tiers'")? as usize;
+        if !(2..=MAX_TIERS).contains(&tiers) {
+            return Err(format!("tiers must be in 2..={MAX_TIERS}"));
+        }
+        let arr = |key: &str| -> Result<Vec<u32>, String> {
+            let xs = v
+                .get(key)
+                .and_then(|a| a.int_vec())
+                .ok_or_else(|| format!("missing int array '{key}'"))?;
+            if xs.len() != tiers {
+                return Err(format!("{key} must have {tiers} entries"));
+            }
+            xs.into_iter()
+                .map(|i| {
+                    u32::try_from(i).map_err(|_| {
+                        format!("{key} entry {i} out of range")
+                    })
+                })
+                .collect()
+        };
+        let cfg = ClosConfig::custom(&arr("down")?, &arr("up")?);
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// Parse an `A:B` oversubscription ratio (e.g. `2:1`).
+pub fn parse_oversub(s: &str) -> Result<(u32, u32), String> {
+    let (a, b) = s
+        .split_once(':')
+        .ok_or_else(|| format!("bad oversub '{s}' (expected A:B)"))?;
+    let parse = |x: &str| {
+        x.parse::<u32>()
+            .ok()
+            .filter(|&v| v > 0)
+            .ok_or_else(|| format!("bad oversub term '{x}'"))
+    };
+    Ok((parse(a)?, parse(b)?))
 }
 
 #[cfg(test)]
@@ -220,5 +435,66 @@ mod tests {
         let c = SimConfig::default();
         // ~8 hops of ~386 ns each => a few microseconds
         assert!(c.rtt_estimate() > 2 * US && c.rtt_estimate() < 10 * US);
+    }
+
+    #[test]
+    fn three_tier_counts() {
+        let t = ClosConfig::paper3();
+        assert_eq!(t.tiers, 3);
+        assert_eq!(t.n_hosts(), 1024);
+        assert_eq!(t.n_leaf(), 64); // 8 pods x 8 ToRs
+        assert_eq!(t.tier_size(2), 64); // 8 pods x 8 aggs
+        assert_eq!(t.n_spine(), 32); // 8 x 4 cores
+        assert_eq!(t.n_switches(), 160);
+        assert!(t.validate().is_ok());
+        // 2:1 oversubscription at both lower tiers
+        assert_eq!(t.down[0], 2 * t.up[1]);
+        assert_eq!(t.down[1], 2 * t.up[2]);
+    }
+
+    #[test]
+    fn oversub_rescaling() {
+        let t = ClosConfig::paper3().with_oversub(1, 1);
+        assert_eq!(t.up[1], 16);
+        assert_eq!(t.up[2], 8);
+        assert!(t.validate().is_ok());
+        let t = ClosConfig::paper3().with_oversub(4, 1);
+        assert_eq!(t.up[1], 4);
+        assert_eq!(t.up[2], 2);
+        // the 2-tier paper network is non-blocking already
+        assert_eq!(ClosConfig::paper().with_oversub(1, 1), ClosConfig::paper());
+    }
+
+    #[test]
+    fn validation_rejects_fat_radix() {
+        // 60 hosts + 16 uplinks on one ToR > 64 ports
+        let bad = ClosConfig::custom(&[60, 4, 4], &[1, 16, 2]);
+        assert!(bad.validate().is_err());
+        assert!(ClosConfig::small3().validate().is_ok());
+        assert!(ClosConfig::tiny3().validate().is_ok());
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let t = ClosConfig::from_json(
+            r#"{"tiers": 3, "down": [16, 8, 8], "up": [1, 8, 4]}"#,
+        )
+        .unwrap();
+        assert_eq!(t, ClosConfig::paper3());
+        assert!(ClosConfig::from_json(r#"{"tiers": 9}"#).is_err());
+        assert!(ClosConfig::from_json(r#"{"down": [2, 2]}"#).is_err());
+        // out-of-range radixes must error, not truncate
+        assert!(ClosConfig::from_json(
+            r#"{"tiers": 3, "down": [4294967297, 8, 8], "up": [1, 8, 4]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn oversub_parsing() {
+        assert_eq!(parse_oversub("2:1").unwrap(), (2, 1));
+        assert_eq!(parse_oversub("1:1").unwrap(), (1, 1));
+        assert!(parse_oversub("2").is_err());
+        assert!(parse_oversub("0:1").is_err());
     }
 }

@@ -5,7 +5,7 @@
 //!
 //! ```text
 //! figures all            [--scale full|half|ci] [--seeds N] [--out DIR]
-//! figures fig2|fig6|fig7a|fig7b|fig8|fig9|fig10a|fig10b|fig11|mem ...
+//! figures fig2|fig6|fig7a|fig7b|fig8|fig9|fig10a|fig10b|fig11|mem|clos3 ...
 //! ```
 //!
 //! `full` reproduces the paper's parameters (1024 hosts, 4 MiB, 5 seeds —
@@ -14,7 +14,7 @@
 //! to `results/<name>.csv`.
 
 use crate::collectives::{runner, Algo};
-use crate::config::{FatTreeConfig, SimConfig};
+use crate::config::{ClosConfig, FatTreeConfig, SimConfig};
 use crate::loadbalance::LoadBalancer;
 use crate::metrics::{
     average_network_utilization, memory_model_bytes, utilization_histogram,
@@ -50,6 +50,14 @@ impl Scale {
         match self {
             Scale::Full | Scale::Half => FatTreeConfig::paper(),
             Scale::Ci => FatTreeConfig::small(),
+        }
+    }
+
+    /// 3-tier counterpart of [`Scale::topo`] (same host counts).
+    pub fn topo3(self) -> ClosConfig {
+        match self {
+            Scale::Full | Scale::Half => ClosConfig::paper3(),
+            Scale::Ci => ClosConfig::small3(),
         }
     }
 
@@ -473,8 +481,54 @@ pub fn mem(o: &Opts) -> Series {
     finish(s, o)
 }
 
+/// Beyond-paper scale-up (DESIGN.md §4/§5): the congestion-aware vs
+/// static-tree comparison on a 3-tier pod Clos, sweeping the fabric's
+/// oversubscription ratio. On a tapered fabric the fixed trees funnel
+/// through scarcer core links, so congestion awareness matters more —
+/// this is the regime Flare/SOAR identify as the scaling frontier.
+pub fn clos3(o: &Opts) -> Series {
+    let mut s = Series::new(
+        "clos3_multitier_goodput",
+        &["oversub", "algo", "congestion", "goodput_gbps", "stddev"],
+    );
+    for &(num, den) in &[(1u32, 1u32), (2, 1), (4, 1)] {
+        let topo = o.scale.topo3().with_oversub(num, den);
+        let hosts = (topo.n_hosts() / 2).max(2);
+        // only tree counts the fabric can root on distinct switches —
+        // a heavily tapered CI-scale core may have a single spine, and
+        // a "static4" label on a one-tree run would be a lie
+        let trees: Vec<u8> = [1u8, 4]
+            .into_iter()
+            .filter(|&n| n as u32 <= topo.n_spine())
+            .collect();
+        for algo in algo_list(true, &trees) {
+            for &cong in &[false, true] {
+                let sc = Scenario {
+                    topo,
+                    sim: SimConfig::default(),
+                    lb: LoadBalancer::default(),
+                    algo,
+                    n_allreduce_hosts: hosts,
+                    congestion: cong,
+                    data_bytes: o.scale.data_bytes(),
+                    record_results: false,
+                };
+                let g = goodputs(&sc, o.seeds);
+                s.push(vec![
+                    format!("{num}:{den}"),
+                    algo.name(),
+                    cong.to_string(),
+                    format!("{:.1}", mean(&g)),
+                    format!("{:.1}", stddev(&g)),
+                ]);
+            }
+        }
+    }
+    finish(s, o)
+}
+
 /// Ablation: Canary goodput under different load balancers (design-choice
-/// bench called out in DESIGN.md).
+/// bench called out in DESIGN.md §5).
 pub fn ablation_lb(o: &Opts) -> Series {
     let mut s = Series::new(
         "ablation_load_balancers",
@@ -544,6 +598,7 @@ pub fn main_entry() {
         "fig10b" => drop(fig10b(&o)),
         "fig11" => drop(fig11(&o)),
         "mem" => drop(mem(&o)),
+        "clos3" => drop(clos3(&o)),
         "ablation" => drop(ablation_lb(&o)),
         "all" => {
             drop(fig2(&o));
@@ -556,12 +611,13 @@ pub fn main_entry() {
             drop(fig10b(&o));
             drop(fig11(&o));
             drop(mem(&o));
+            drop(clos3(&o));
             drop(ablation_lb(&o));
         }
         other => {
             eprintln!(
                 "unknown figure '{other}' \
-                 (fig2|fig6|fig7a|fig7b|fig8|fig9|fig10a|fig10b|fig11|mem|ablation|all)"
+                 (fig2|fig6|fig7a|fig7b|fig8|fig9|fig10a|fig10b|fig11|mem|clos3|ablation|all)"
             );
             std::process::exit(2);
         }

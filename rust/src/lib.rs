@@ -3,13 +3,14 @@
 //! Full-system reproduction of *"Canary: Congestion-Aware In-Network
 //! Allreduce Using Dynamic Trees"* (De Sensi et al., 2023).
 //!
-//! Three layers (see DESIGN.md):
+//! Three layers (see DESIGN.md §1):
 //!
 //! - **L3 (this crate)**: the coordinator — a packet-level discrete-event
-//!   simulator of the paper's fat-tree testbed, the Canary switch
-//!   dataplane and host/leader protocol, the static-tree and ring
-//!   baselines, the figure/bench harness, and a data-parallel trainer
-//!   that drives real gradients through the simulated network.
+//!   simulator of multi-tier Clos fabrics (the paper's 2-tier fat tree
+//!   and oversubscribed 3-tier pod networks, [`topology`]), the Canary
+//!   switch dataplane and host/leader protocol, the static-tree and
+//!   ring baselines, the figure/bench harness, and a data-parallel
+//!   trainer that drives real gradients through the simulated network.
 //! - **L2 (python/compile/model.py)**: a JAX transformer LM whose
 //!   train-step is AOT-lowered to HLO text and executed from Rust via
 //!   PJRT ([`runtime`]).

@@ -8,10 +8,9 @@
 //!
 //! Figure regeneration lives in the `figures` binary.
 
-use anyhow::Result;
-
 use canary::collectives::{runner, Algo};
-use canary::config::{FatTreeConfig, SimConfig};
+use canary::config::{parse_oversub, ClosConfig, SimConfig};
+use canary::util::error::Result;
 use canary::loadbalance::parse_policy;
 use canary::metrics::{average_network_utilization, memory_model_bytes};
 use canary::report::gbps;
@@ -28,7 +27,8 @@ USAGE:
   canary run   [--algo canary|static1|static4|ring] [--hosts N]
                [--size BYTES] [--congestion true|false] [--seed S]
                [--timeout-us T] [--lb adaptive|ecmp|minqueue|flowlet]
-               [--topo paper|small|tiny] [--values]
+               [--topo paper|small|tiny[3]] [--tiers 2|3] [--oversub A:B]
+               [--topo-json FILE] [--values]
   canary train [--preset tiny|base] [--workers N] [--steps N] [--lr F]
                [--algo ...] [--comm-every N] [--seed S]
   canary mem   [--timeout-us T] [--diameter D]
@@ -50,35 +50,70 @@ fn parse_algo(s: &str) -> Result<Algo, String> {
     }
 }
 
-fn parse_topo(s: &str) -> Result<FatTreeConfig, String> {
-    match s {
-        "paper" => Ok(FatTreeConfig::paper()),
-        "small" => Ok(FatTreeConfig::small()),
-        "tiny" => Ok(FatTreeConfig::tiny()),
-        _ => Err(format!("unknown topo '{s}' (paper|small|tiny)")),
+/// Resolve a topology preset name at the requested tier count.
+fn parse_topo(s: &str, tiers: u8) -> Result<ClosConfig, String> {
+    match (s, tiers) {
+        ("paper", 2) => Ok(ClosConfig::paper()),
+        ("small", 2) => Ok(ClosConfig::small()),
+        ("tiny", 2) => Ok(ClosConfig::tiny()),
+        ("paper", 3) | ("paper3", _) => Ok(ClosConfig::paper3()),
+        ("small", 3) | ("small3", _) => Ok(ClosConfig::small3()),
+        ("tiny", 3) | ("tiny3", _) => Ok(ClosConfig::tiny3()),
+        _ => Err(format!(
+            "unknown topo '{s}' at {tiers} tiers \
+             (paper|small|tiny|paper3|small3|tiny3; --tiers 2|3)"
+        )),
     }
 }
 
-fn cmd_run(args: &Args) -> Result<()> {
-    let algo = parse_algo(args.get_or("algo", "canary"))
-        .map_err(anyhow::Error::msg)?;
-    let topo = parse_topo(args.get_or("topo", "paper"))
-        .map_err(anyhow::Error::msg)?;
-    let hosts: u32 = args
-        .get_parse("hosts", topo.n_hosts() / 2)
-        .map_err(anyhow::Error::msg)?;
-    let size: u64 = args
-        .get_parse("size", 4 * 1024 * 1024)
-        .map_err(anyhow::Error::msg)?;
-    let congestion = args.get_or("congestion", "true") == "true";
-    let seed: u64 = args.get_parse("seed", 1).map_err(anyhow::Error::msg)?;
-    let timeout_us: u64 =
-        args.get_parse("timeout-us", 1).map_err(anyhow::Error::msg)?;
-    let lb = parse_policy(args.get_or("lb", "adaptive"))
-        .map_err(anyhow::Error::msg)?;
+/// Combine --topo/--tiers/--oversub/--topo-json into one shape.
+fn resolve_topo(args: &Args) -> Result<ClosConfig> {
+    let tiers: u8 = args.get_parse("tiers", 2)?;
+    let mut topo = match args.get("topo-json") {
+        Some(path) => {
+            if args.get("topo").is_some() || args.get("tiers").is_some() {
+                return Err("--topo-json conflicts with --topo/--tiers \
+                            (the JSON file fully defines the shape)"
+                    .into());
+            }
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| format!("reading {path}: {e}"))?;
+            ClosConfig::from_json(&text)?
+        }
+        None => parse_topo(args.get_or("topo", "paper"), tiers)?,
+    };
+    if let Some(o) = args.get("oversub") {
+        let (num, den) = parse_oversub(o)?;
+        topo = topo.with_oversub(num, den);
+        // refuse ratios the radixes cannot realize exactly — otherwise
+        // the run would silently use a different taper than reported
+        for t in 1..topo.tiers as usize {
+            if topo.down[t - 1] * den % num != 0 {
+                return Err(format!(
+                    "oversub {num}:{den} is not exactly achievable at \
+                     tier {t} (down radix {}): nearest uplink count is {}",
+                    topo.down[t - 1],
+                    topo.up[t]
+                )
+                .into());
+            }
+        }
+    }
+    topo.validate()?;
+    Ok(topo)
+}
 
-    let window: u32 =
-        args.get_parse("window", 0).map_err(anyhow::Error::msg)?;
+fn cmd_run(args: &Args) -> Result<()> {
+    let algo = parse_algo(args.get_or("algo", "canary"))?;
+    let topo = resolve_topo(args)?;
+    let hosts: u32 = args.get_parse("hosts", topo.n_hosts() / 2)?;
+    let size: u64 = args.get_parse("size", 4 * 1024 * 1024)?;
+    let congestion = args.get_or("congestion", "true") == "true";
+    let seed: u64 = args.get_parse("seed", 1)?;
+    let timeout_us: u64 = args.get_parse("timeout-us", 1)?;
+    let lb = parse_policy(args.get_or("lb", "adaptive"))?;
+
+    let window: u32 = args.get_parse("window", 0)?;
     let sim = SimConfig::default()
         .with_timeout(timeout_us * US)
         .with_window(window)
@@ -97,11 +132,12 @@ fn cmd_run(args: &Args) -> Result<()> {
     let results = runner::run_to_completion(&mut exp.net, u64::MAX);
     let r = &results[0];
     println!(
-        "algo={} hosts={} size={}B congestion={}",
+        "algo={} hosts={} size={}B congestion={} tiers={}",
         r.algo.name(),
         r.n_hosts,
         r.data_bytes,
-        congestion
+        congestion,
+        topo.tiers
     );
     println!(
         "runtime: {:.1} us   goodput: {} Gbps",
@@ -163,16 +199,13 @@ fn cmd_run(args: &Args) -> Result<()> {
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = TrainConfig {
         preset: args.get_or("preset", "base").to_string(),
-        workers: args.get_parse("workers", 4).map_err(anyhow::Error::msg)?,
-        steps: args.get_parse("steps", 50).map_err(anyhow::Error::msg)?,
-        lr: args.get_parse("lr", 0.5).map_err(anyhow::Error::msg)?,
-        algo: parse_algo(args.get_or("algo", "canary"))
-            .map_err(anyhow::Error::msg)?,
-        comm_every: args
-            .get_parse("comm-every", 10)
-            .map_err(anyhow::Error::msg)?,
+        workers: args.get_parse("workers", 4)?,
+        steps: args.get_parse("steps", 50)?,
+        lr: args.get_parse("lr", 0.5)?,
+        algo: parse_algo(args.get_or("algo", "canary"))?,
+        comm_every: args.get_parse("comm-every", 10)?,
         congestion: true,
-        seed: args.get_parse("seed", 0xBEEF).map_err(anyhow::Error::msg)?,
+        seed: args.get_parse("seed", 0xBEEF)?,
     };
     let rt = Runtime::load(Runtime::default_dir())?;
     let mut trainer = Trainer::new(&rt, cfg)?;
@@ -195,9 +228,8 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 fn cmd_mem(args: &Args) -> Result<()> {
-    let timeout_us: f64 =
-        args.get_parse("timeout-us", 1.0).map_err(anyhow::Error::msg)?;
-    let d: u32 = args.get_parse("diameter", 5).map_err(anyhow::Error::msg)?;
+    let timeout_us: f64 = args.get_parse("timeout-us", 1.0)?;
+    let d: u32 = args.get_parse("diameter", 5)?;
     let bytes =
         memory_model_bytes(12.5e9, d, 300e-9, timeout_us * 1e-6, 1e-6);
     println!(
@@ -233,11 +265,11 @@ fn main() -> Result<()> {
         argv,
         &[
             "algo", "hosts", "size", "congestion", "seed", "timeout-us",
-            "lb", "topo", "values", "preset", "workers", "steps", "lr",
-            "comm-every", "diameter", "window", "debug-links",
+            "lb", "topo", "tiers", "oversub", "topo-json", "values",
+            "preset", "workers", "steps", "lr", "comm-every", "diameter",
+            "window", "debug-links",
         ],
-    )
-    .map_err(anyhow::Error::msg)?;
+    )?;
     match args.positional.first().map(|s| s.as_str()) {
         Some("run") => cmd_run(&args),
         Some("train") => cmd_train(&args),

@@ -3,15 +3,20 @@
 //!
 //! HLO **text** is the interchange format — the `xla` crate's
 //! xla_extension 0.5.1 rejects jax>=0.5 serialized protos (64-bit ids),
-//! while the text parser reassigns ids (see /opt/xla-example/README.md).
-//! Python never runs at request time: after `make artifacts` the Rust
-//! binary is self-contained.
+//! while the text parser reassigns ids. Python never runs at request
+//! time: after `make artifacts` the Rust binary is self-contained.
+//!
+//! In this offline build the PJRT bindings are a vendored stub
+//! ([`xla`], DESIGN.md §7): manifests still parse, but compiling or
+//! executing artifacts reports PJRT as unavailable and every caller
+//! (trainer, parity tests, `canary info`) degrades gracefully.
+
+pub mod xla;
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
-
+use crate::util::error::{Context, Error, Result};
 use crate::util::json::{self, Value};
 
 /// Parsed `manifest.json`: artifact signatures + model configs + golden
@@ -60,12 +65,12 @@ fn tensor_sig(v: &Value) -> Result<TensorSig> {
         dtype: v
             .expect("dtype")
             .as_str()
-            .ok_or_else(|| anyhow!("dtype not a string"))?
+            .ok_or_else(|| Error::msg("dtype not a string"))?
             .to_string(),
         shape: v
             .expect("shape")
             .int_vec()
-            .ok_or_else(|| anyhow!("shape not ints"))?
+            .ok_or_else(|| Error::msg("shape not ints"))?
             .into_iter()
             .map(|i| i as usize)
             .collect(),
@@ -81,12 +86,12 @@ impl Manifest {
                     dir.display()
                 )
             })?;
-        let v = json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let v = json::parse(&text).map_err(|e| Error::msg(format!("manifest: {e}")))?;
         let mut artifacts = BTreeMap::new();
         for (name, art) in v
             .expect("artifacts")
             .as_object()
-            .ok_or_else(|| anyhow!("artifacts not an object"))?
+            .ok_or_else(|| Error::msg("artifacts not an object"))?
         {
             let inputs = art
                 .expect("inputs")
@@ -115,12 +120,12 @@ impl Manifest {
         for (name, m) in v
             .expect("models")
             .as_object()
-            .ok_or_else(|| anyhow!("models not an object"))?
+            .ok_or_else(|| Error::msg("models not an object"))?
         {
             let get = |k: &str| -> Result<usize> {
                 Ok(m.expect(k)
                     .as_i64()
-                    .ok_or_else(|| anyhow!("{k} not an int"))?
+                    .ok_or_else(|| Error::msg(format!("{k} not an int")))?
                     as usize)
             };
             models.insert(
@@ -155,12 +160,12 @@ impl Executable {
     /// Execute with literal inputs; returns the un-tupled outputs.
     pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
         if inputs.len() != self.sig.inputs.len() {
-            bail!(
+            return Err(Error::msg(format!(
                 "{}: expected {} inputs, got {}",
                 self.name,
                 self.sig.inputs.len(),
                 inputs.len()
-            );
+            )));
         }
         let result = self.exe.execute::<xla::Literal>(inputs)?[0][0]
             .to_literal_sync()?;
@@ -204,11 +209,11 @@ impl Runtime {
             .manifest
             .artifacts
             .get(name)
-            .ok_or_else(|| anyhow!("no artifact named '{name}'"))?
+            .ok_or_else(|| Error::msg(format!("no artifact named '{name}'")))?
             .clone();
         let path = self.dir.join(&sig.file);
         let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            path.to_str().ok_or_else(|| Error::msg("bad path"))?,
         )?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self.client.compile(&comp)?;

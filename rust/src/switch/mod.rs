@@ -1,10 +1,19 @@
 //! Switch model: forwarding pipeline, routing, and the protocol
 //! dataplanes (Canary dynamic trees + static-tree baselines).
 //!
-//! Node-id layout (fixed by the fat-tree builder): hosts `[0, H)`, leaf
-//! switches `[H, H+L)`, spine switches `[H+L, H+L+S)`. Leaf port map:
-//! ports `[0, hosts_per_leaf)` go down to hosts, `[hosts_per_leaf, ..)`
-//! go up, one per spine. Spine port `l` goes down to leaf `l`.
+//! Node ids and port maps come from the multi-tier Clos builder
+//! ([`crate::topology`], DESIGN.md §4): hosts `[0, H)`, then switches
+//! tier by tier (leaves/ToRs first, spines/cores last). A tier-`t`
+//! switch's ports `[0, down)` go to its children in child order and
+//! `[down, down + up)` to its parents in parent order; on the 2-tier
+//! paper network this is the familiar leaf map — host ports first, one
+//! up-port per spine — and spine port `l` goes down to leaf `l`.
+//!
+//! All id/port arithmetic lives behind the topology handle: a switch
+//! asks [`Clos::hop`] where a destination lies and either forwards on
+//! the single valid port (down, or a label-aligned climb toward a
+//! switch destination) or lets the configured load balancer pick among
+//! the equivalent up-ports.
 
 pub mod alu;
 pub mod canary;
@@ -14,124 +23,92 @@ pub mod static_tree;
 use crate::loadbalance::{select_up, LbState, LoadBalancer};
 use crate::sim::packet::{Packet, PacketKind};
 use crate::sim::{Ctx, NodeId};
+use crate::topology::{Clos, Hop};
 
-/// Position of the switch in the fat tree.
+/// Position of the switch in the Clos fabric.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SwitchRole {
-    Leaf { index: u32, first_host: NodeId },
-    Spine { index: u32 },
+    /// Tier 1 — hosts attached below.
+    Leaf,
+    /// An intermediate tier of a >=3-tier fabric (the pod layer of a
+    /// 3-tier Clos). `tier` is its 1-based tier number.
+    Aggregation { tier: u8 },
+    /// The top tier — the turnaround switches (the paper's "spines";
+    /// the core layer of a 3-tier fabric).
+    Spine,
 }
 
 /// Complete switch state.
 pub struct SwitchState {
     pub id: NodeId,
-    pub role: SwitchRole,
+    /// 1-based tier in the Clos fabric.
+    pub tier: u8,
+    /// Within-tier switch index.
+    pub index: u32,
+    /// Topology handle (id/port arithmetic for routing decisions).
+    pub topo: Clos,
     pub lb: LoadBalancer,
     pub lb_state: LbState,
-    /// Topology facts needed for local routing decisions.
-    pub n_hosts: u32,
-    pub n_leaf: u32,
-    pub hosts_per_leaf: u32,
-    pub n_spine: u32,
     pub failed: bool,
     pub canary: canary::Dataplane,
     pub static_tree: static_tree::StaticState,
 }
 
 impl SwitchState {
-    /// First up-port index on a leaf.
-    #[inline]
-    pub fn up_base(&self) -> u16 {
-        self.hosts_per_leaf as u16
+    pub fn new(
+        topo: Clos,
+        tier: u8,
+        index: u32,
+        lb: LoadBalancer,
+        descriptor_slots: u32,
+    ) -> SwitchState {
+        let id = topo.switch_id(tier, index);
+        SwitchState {
+            id,
+            tier,
+            index,
+            topo,
+            lb,
+            lb_state: LbState::default(),
+            failed: false,
+            canary: canary::Dataplane::new(descriptor_slots, id as u64),
+            static_tree: static_tree::StaticState::default(),
+        }
     }
 
-    /// Classify a node id.
-    #[inline]
-    pub fn is_host(&self, node: NodeId) -> bool {
-        node < self.n_hosts
-    }
-
-    #[inline]
-    pub fn leaf_index_of_host(&self, host: NodeId) -> u32 {
-        host / self.hosts_per_leaf
-    }
-
-    #[inline]
-    pub fn is_leaf_switch(&self, node: NodeId) -> bool {
-        node >= self.n_hosts && node < self.n_hosts + self.n_leaf
-    }
-
-    #[inline]
-    pub fn is_spine_switch(&self, node: NodeId) -> bool {
-        node >= self.n_hosts + self.n_leaf
-            && node < self.n_hosts + self.n_leaf + self.n_spine
-    }
-
-    #[inline]
-    pub fn spine_index(&self, node: NodeId) -> u32 {
-        node - self.n_hosts - self.n_leaf
-    }
-
-    #[inline]
-    pub fn leaf_index(&self, node: NodeId) -> u32 {
-        node - self.n_hosts
+    /// Position of this switch in the fabric, derived from its tier.
+    pub fn role(&self) -> SwitchRole {
+        if self.tier == 1 {
+            SwitchRole::Leaf
+        } else if self.tier == self.topo.tiers() {
+            SwitchRole::Spine
+        } else {
+            SwitchRole::Aggregation { tier: self.tier }
+        }
     }
 }
 
 /// Pick the egress port for `pkt` at this switch (destination-based
-/// up/down routing with configurable up-port load balancing).
+/// up/down routing with configurable up-port load balancing on the
+/// equivalent-path hops).
 pub fn route(sw: &mut SwitchState, ctx: &Ctx, pkt: &Packet) -> u16 {
-    let dst = pkt.dst;
-    match sw.role {
-        SwitchRole::Leaf { index, first_host } => {
-            let up_base = sw.up_base();
-            let n_spine = sw.n_spine as u16;
-            if sw.is_host(dst) {
-                let leaf = sw.leaf_index_of_host(dst);
-                if leaf == index {
-                    // down to the local host
-                    return (dst - first_host) as u16;
-                }
-                // up: adaptive choice among all spines
-                let dflt = (dst % sw.n_spine) as u16;
-                let off = select_up(
-                    &sw.lb,
-                    &mut sw.lb_state,
-                    ctx,
-                    up_base,
-                    n_spine,
-                    dflt,
-                    pkt.flow ^ dst as u64,
-                    if pkt.kind.droppable() { 1 } else { 0 },
-                );
-                up_base + off
-            } else if sw.is_spine_switch(dst) {
-                // direct link to that spine
-                up_base + sw.spine_index(dst) as u16
-            } else {
-                // another leaf switch: via any spine
-                let dflt = (dst % sw.n_spine) as u16;
-                let off = select_up(
-                    &sw.lb,
-                    &mut sw.lb_state,
-                    ctx,
-                    up_base,
-                    n_spine,
-                    dflt,
-                    pkt.flow ^ dst as u64,
-                    if pkt.kind.droppable() { 1 } else { 0 },
-                );
-                up_base + off
-            }
+    match sw.topo.hop_at(sw.tier, sw.index, pkt.dst) {
+        Hop::Port(p) => p,
+        Hop::Up { base, n, dflt } => {
+            let off = select_up(
+                &sw.lb,
+                &mut sw.lb_state,
+                ctx,
+                base,
+                n,
+                dflt,
+                pkt.flow ^ pkt.dst as u64,
+                if pkt.kind.droppable() { 1 } else { 0 },
+            );
+            base + off
         }
-        SwitchRole::Spine { .. } => {
-            if sw.is_host(dst) {
-                sw.leaf_index_of_host(dst) as u16
-            } else if sw.is_leaf_switch(dst) {
-                sw.leaf_index(dst) as u16
-            } else {
-                unreachable!("spine routing to spine {dst}")
-            }
+        Hop::Local => {
+            unreachable!("routing a packet addressed to this switch")
         }
     }
 }

@@ -15,22 +15,20 @@ use crate::sim::Ctx;
 use super::alu;
 use super::SwitchState;
 
-/// Where this switch sits in one configured tree.
+/// Where this switch sits in one configured tree. The same shape
+/// covers every level of a multi-tier tree: leaf aggregators combine
+/// host contributions, interior switches combine subtree partials, and
+/// the root (`parent_port == None`) starts the broadcast.
 #[derive(Clone, Debug)]
-pub enum TreeRole {
-    /// Leaf aggregator: combine `expected` host contributions, then send
-    /// the partial up `parent_port`; broadcast down `child_ports`.
-    Leaf {
-        parent_port: u16,
-        expected: u32,
-        child_ports: Vec<u16>,
-    },
-    /// Root: combine `expected` leaf partials, then start the broadcast
-    /// down `child_ports`.
-    Root {
-        expected: u32,
-        child_ports: Vec<u16>,
-    },
+pub struct TreeRole {
+    /// Fixed up-port toward the tree root; `None` at the root itself.
+    pub parent_port: Option<u16>,
+    /// Contributions to combine at this level before the partial moves
+    /// up (or, at the root, before the broadcast starts).
+    pub expected: u32,
+    /// Down-ports of the reverse tree edges (hosts below a leaf,
+    /// subtree heads elsewhere); the broadcast fans out on these.
+    pub child_ports: Vec<u16>,
 }
 
 /// Per-tenant static configuration: one role per tree index.
@@ -69,17 +67,11 @@ pub fn on_reduce(sw: &mut SwitchState, ctx: &mut Ctx, pkt: Packet) {
         ctx.send(port, pkt);
         return;
     };
-    let (expected, parent_port, child_ports) = match role {
-        TreeRole::Leaf {
-            parent_port,
-            expected,
-            ..
-        } => (expected, Some(parent_port), None),
-        TreeRole::Root {
-            expected,
-            child_ports,
-        } => (expected, None, Some(child_ports)),
-    };
+    let TreeRole {
+        parent_port,
+        expected,
+        child_ports,
+    } = role;
 
     let key = pkt.block_key();
     let agg = sw.static_tree.inflight.entry(key).or_insert_with(|| {
@@ -105,9 +97,9 @@ pub fn on_reduce(sw: &mut SwitchState, ctx: &mut Ctx, pkt: Packet) {
     // complete at this level
     let agg = sw.static_tree.inflight.remove(&key).unwrap();
     ctx.metrics.on_descriptor_free(0);
-    match (parent_port, child_ports) {
-        (Some(parent), _) => {
-            // leaf: one partial up the fixed tree edge
+    match parent_port {
+        Some(parent) => {
+            // one partial up the fixed tree edge toward the root
             let mut up = pkt.clone();
             up.kind = PacketKind::StaticReduce;
             up.src = sw.id;
@@ -118,9 +110,9 @@ pub fn on_reduce(sw: &mut SwitchState, ctx: &mut Ctx, pkt: Packet) {
             };
             ctx.send(parent, up);
         }
-        (None, Some(children)) => {
+        None => {
             // root: start the broadcast
-            for port in children {
+            for port in child_ports {
                 let mut down = pkt.clone();
                 down.kind = PacketKind::StaticBroadcast;
                 down.src = sw.id;
@@ -134,19 +126,20 @@ pub fn on_reduce(sw: &mut SwitchState, ctx: &mut Ctx, pkt: Packet) {
                 ctx.send(port, down);
             }
         }
-        (None, None) => unreachable!(),
     }
 }
 
-/// Broadcast-phase packet at an on-tree switch (leaf: fan out to hosts).
+/// Broadcast-phase packet at an on-tree switch: fan out down the
+/// configured reverse edges (interior switches reach their subtree
+/// heads, leaves reach their hosts).
 pub fn on_broadcast(sw: &mut SwitchState, ctx: &mut Ctx, pkt: Packet) {
-    let Some(TreeRole::Leaf { child_ports, .. }) = role_of(sw, &pkt) else {
-        // not a configured leaf for this tree: forward toward dst
+    let Some(role) = role_of(sw, &pkt) else {
+        // not configured for this tree: forward toward dst
         let port = super::route(sw, ctx, &pkt);
         ctx.send(port, pkt);
         return;
     };
-    for port in child_ports {
+    for port in role.child_ports {
         let mut down = pkt.clone();
         down.src = sw.id;
         ctx.send(port, down);

@@ -1,26 +1,222 @@
-//! Fat-tree topology builder (Leiserson fat tree, 2 levels — the paper's
-//! Section 5.2 network: 32 leaves x 32 hosts + 32 spines, all 100 Gbps).
+//! Multi-tier folded-Clos topology builder and id/port arithmetic
+//! (DESIGN.md §4).
 //!
-//! Node-id layout: hosts `[0, H)`, leaves `[H, H+L)`, spines
-//! `[H+L, H+L+S)`. Leaf ports: `[0, hosts_per_leaf)` down to hosts, then
-//! one up-port per spine. Spine port `l` goes down to leaf `l`.
+//! The fabric is an XGFT-style fat tree with one uplink per host,
+//! described by a [`ClosConfig`]: per tier `t`, `down[t-1]` children per
+//! switch and `up[t-1]` parents per tier-`t-1` node. The paper's
+//! Section 5.2 network is the 2-tier special case (32 leaves x 32 hosts
+//! + 32 spines); 3-tier pod fabrics with configurable oversubscription
+//! are first-class.
+//!
+//! Node-id layout: hosts `[0, H)`, then switches tier by tier — tier 1
+//! (leaves/ToRs) first, the top tier (spines/cores) last. Within a
+//! tier, a switch index combines its *top* label (which subtree of the
+//! tiers above it sits in) and its *bottom* label (which redundant copy
+//! it is): `index = top * W_t + bot`, where `W_t = prod(up[..t])`.
+//! For the 2-tier paper network this reduces to the legacy fixed
+//! layout: hosts `[0, H)`, leaves `[H, H+L)`, spines `[H+L, H+L+S)`,
+//! leaf ports `[0, hosts_per_leaf)` down then one up-port per spine,
+//! and spine port `l` down to leaf `l` — bit-for-bit the same ids,
+//! ports and link order as the original 2-level builder.
+//!
+//! Port layout on a tier-`t` switch: ports `[0, down[t-1])` go down,
+//! one per child in child order; ports `[down[t-1], ..)` go up, one per
+//! parent in parent order. Routing is valley-free up/down: a packet
+//! climbs (with adaptive up-port choice, [`Hop::Up`]) until the
+//! destination is in its down-subtree, then descends deterministically.
 
-use crate::config::{FatTreeConfig, SimConfig};
+use crate::config::{ClosConfig, SimConfig};
 use crate::host::HostState;
 use crate::loadbalance::LoadBalancer;
 use crate::sim::{Network, NodeBody, NodeId};
-use crate::switch::{canary::Dataplane, SwitchRole, SwitchState};
+use crate::switch::SwitchState;
 
-/// Topology handle with id arithmetic helpers.
+/// Topology handle with the id/port arithmetic. `Copy`, so experiments
+/// and switches can carry it by value.
 #[derive(Clone, Copy, Debug)]
-pub struct FatTree {
-    pub cfg: FatTreeConfig,
+pub struct Clos {
+    pub cfg: ClosConfig,
 }
 
-impl FatTree {
+/// Backwards-compatible name (the 2-tier call sites and tests).
+pub type FatTree = Clos;
+
+/// One routing step, as computed by [`Clos::hop`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Hop {
+    /// The packet is addressed to this very node.
+    Local,
+    /// Exactly one valid egress port: a down-hop, or an up-hop that
+    /// must stay aligned with a switch destination's bottom label.
+    Port(u16),
+    /// Any of the `n` up-ports starting at `base` reaches the
+    /// destination; `dflt` is the destination-derived default offset
+    /// the adaptive load balancer starts from.
+    Up { base: u16, n: u16, dflt: u16 },
+}
+
+impl Clos {
+    /// Number of switch tiers.
+    #[inline]
+    pub fn tiers(&self) -> u8 {
+        self.cfg.tiers
+    }
+
+    #[inline]
     pub fn n_hosts(&self) -> u32 {
         self.cfg.n_hosts()
     }
+
+    /// `prod(down[..t])`: hosts under one tier-`t` switch.
+    #[inline]
+    fn hosts_below(&self, t: u8) -> u32 {
+        self.cfg.down[..t as usize].iter().product()
+    }
+
+    /// `W_t = prod(up[..t])`: bottom-label arity at tier `t`.
+    #[inline]
+    pub(crate) fn w(&self, t: u8) -> u32 {
+        self.cfg.up[..t as usize].iter().product()
+    }
+
+    /// Parent digit of the aligned climb from tier `tier` toward a
+    /// switch with bottom label `bot` — the other half of the shared
+    /// label arithmetic ([`Clos::parent_index`]), used by both the
+    /// router and the static-tree control plane.
+    pub fn climb_digit(&self, tier: u8, bot: u32) -> u32 {
+        (bot / self.w(tier)) % self.cfg.up[tier as usize]
+    }
+
+    /// First node id of tier `t`'s switches.
+    pub fn tier_base(&self, t: u8) -> NodeId {
+        debug_assert!((1..=self.tiers()).contains(&t));
+        self.n_hosts()
+            + (1..t).map(|j| self.cfg.tier_size(j)).sum::<u32>()
+    }
+
+    /// Node id of the tier-`t` switch with the given within-tier index.
+    pub fn switch_id(&self, t: u8, index: u32) -> NodeId {
+        debug_assert!(index < self.cfg.tier_size(t));
+        self.tier_base(t) + index
+    }
+
+    /// Tier of a node: 0 for hosts, `1..=tiers` for switches.
+    pub fn node_tier(&self, node: NodeId) -> u8 {
+        if node < self.n_hosts() {
+            return 0;
+        }
+        let mut t = 1;
+        while t < self.tiers()
+            && node >= self.tier_base(t) + self.cfg.tier_size(t)
+        {
+            t += 1;
+        }
+        t
+    }
+
+    /// `(tier, within-tier index)` of a switch node id.
+    pub fn switch_at(&self, node: NodeId) -> (u8, u32) {
+        let t = self.node_tier(node);
+        debug_assert!(t > 0, "node {node} is a host");
+        (t, node - self.tier_base(t))
+    }
+
+    /// Index (at `tier + 1`) of the parent of the tier-`tier` switch
+    /// `idx` reached via parent digit `c`. The single source of the
+    /// label arithmetic shared by the link builder ([`build`]), the
+    /// router ([`Clos::hop`]) and the static-tree control plane
+    /// ([`crate::collectives::runner::install_static_job`]).
+    pub fn parent_index(&self, tier: u8, idx: u32, c: u32) -> u32 {
+        debug_assert!(tier < self.tiers() && c < self.cfg.up[tier as usize]);
+        let w_t = self.w(tier);
+        let m_up = self.cfg.down[tier as usize];
+        let (top, bot) = (idx / w_t, idx % w_t);
+        (top / m_up) * (w_t * self.cfg.up[tier as usize]) + c * w_t + bot
+    }
+
+    /// Up-port of a tier-`tier` switch toward its parent digit `c`.
+    pub fn up_port(&self, tier: u8, c: u32) -> u16 {
+        (self.cfg.down[tier as usize - 1] + c) as u16
+    }
+
+    /// Pick the next hop for a packet at `at` destined to `dst`.
+    ///
+    /// Hosts have a single uplink (port 0). A switch routes down when
+    /// the destination is in its subtree, up otherwise; up-hops toward
+    /// a *switch* destination above this tier are port-forced (they
+    /// must follow the destination's bottom label), all other up-hops
+    /// are free for the load balancer ([`Hop::Up`]).
+    pub fn hop(&self, at: NodeId, dst: NodeId) -> Hop {
+        if at < self.n_hosts() {
+            return if at == dst { Hop::Local } else { Hop::Port(0) };
+        }
+        let (t, idx) = self.switch_at(at);
+        self.hop_at(t, idx, dst)
+    }
+
+    /// [`Clos::hop`] for a switch whose `(tier, index)` the caller
+    /// already knows (`SwitchState` caches both) — keeps the per-packet
+    /// path free of the id-to-tier scan.
+    pub fn hop_at(&self, t: u8, idx: u32, dst: NodeId) -> Hop {
+        let m = self.cfg.down[t as usize - 1];
+        let n_up = if t == self.tiers() {
+            0
+        } else {
+            self.cfg.up[t as usize]
+        };
+        let wt = self.w(t);
+        let (top_a, bot_a) = (idx / wt, idx % wt);
+
+        if dst < self.n_hosts() {
+            // host destination: down iff it is in our subtree
+            if dst / self.hosts_below(t) == top_a {
+                let port = (dst / self.hosts_below(t - 1)) % m;
+                return Hop::Port(port as u16);
+            }
+            debug_assert!(n_up > 0, "top tier covers every host");
+            return Hop::Up {
+                base: m as u16,
+                n: n_up as u16,
+                dflt: (dst % n_up) as u16,
+            };
+        }
+
+        // switch destination
+        let (dt, didx) = self.switch_at(dst);
+        if (dt, didx) == (t, idx) {
+            return Hop::Local;
+        }
+        let wd = self.w(dt);
+        let (top_d, bot_d) = (didx / wd, didx % wd);
+        if dt > t {
+            // above us: climb along the destination's bottom label
+            debug_assert!(
+                bot_d % wt == bot_a,
+                "unroutable: switch {dst} is not in tier-{t}/{idx}'s up-cone"
+            );
+            return Hop::Port(self.up_port(t, self.climb_digit(t, bot_d)));
+        }
+        // at or below our tier: down iff it is our descendant
+        let shift = self.hosts_below(t) / self.hosts_below(dt);
+        if top_d / shift == top_a && bot_d == bot_a % wd {
+            let port =
+                (top_d / (self.hosts_below(t - 1) / self.hosts_below(dt))) % m;
+            return Hop::Port(port as u16);
+        }
+        assert!(
+            n_up > 0,
+            "unroutable: tier-{t}/{idx} (top tier) to non-descendant \
+             switch {dst}"
+        );
+        Hop::Up {
+            base: m as u16,
+            n: n_up as u16,
+            dflt: (dst % n_up) as u16,
+        }
+    }
+
+    // ---- legacy-named helpers (tier 1 = "leaf", top tier = "spine");
+    //      still the vocabulary of the host/leader protocols ----------
 
     pub fn host_id(&self, i: u32) -> NodeId {
         debug_assert!(i < self.n_hosts());
@@ -28,131 +224,120 @@ impl FatTree {
     }
 
     pub fn leaf_id(&self, l: u32) -> NodeId {
-        debug_assert!(l < self.cfg.n_leaf);
-        self.n_hosts() + l
+        self.switch_id(1, l)
     }
 
     pub fn spine_id(&self, s: u32) -> NodeId {
-        debug_assert!(s < self.cfg.n_spine);
-        self.n_hosts() + self.cfg.n_leaf + s
+        self.switch_id(self.tiers(), s)
     }
 
+    /// Tier-1 (leaf/ToR) index of a host.
     pub fn leaf_of_host(&self, h: NodeId) -> u32 {
-        h / self.cfg.hosts_per_leaf
+        h / self.cfg.down[0]
     }
 
-    /// Leaf-local port of a host.
+    /// Leaf-local down-port of a host.
     pub fn leaf_host_port(&self, h: NodeId) -> u16 {
-        (h % self.cfg.hosts_per_leaf) as u16
+        (h % self.cfg.down[0]) as u16
     }
 
-    /// Leaf port going up to spine `s`.
-    pub fn leaf_up_port(&self, s: u32) -> u16 {
-        (self.cfg.hosts_per_leaf + s) as u16
+    /// Leaf up-port toward its parent with bottom digit `c`.
+    pub fn leaf_up_port(&self, c: u32) -> u16 {
+        (self.cfg.down[0] + c) as u16
     }
 
-    /// Spine port going down to leaf `l`.
-    pub fn spine_down_port(&self, l: u32) -> u16 {
-        l as u16
+    /// Top-tier down-port toward the child with top digit `x`.
+    pub fn spine_down_port(&self, x: u32) -> u16 {
+        x as u16
     }
 
     pub fn all_hosts(&self) -> Vec<NodeId> {
         (0..self.n_hosts()).collect()
     }
 
+    /// All top-tier switches (the candidate static-tree roots).
     pub fn all_spines(&self) -> Vec<NodeId> {
-        (0..self.cfg.n_spine).map(|s| self.spine_id(s)).collect()
+        let t = self.tiers();
+        (0..self.cfg.tier_size(t)).map(|s| self.switch_id(t, s)).collect()
     }
 }
 
 /// Build the network: nodes, links, and per-switch routing facts.
 pub fn build(
-    topo_cfg: FatTreeConfig,
+    topo_cfg: ClosConfig,
     sim_cfg: SimConfig,
     lb: LoadBalancer,
-) -> (Network, FatTree) {
-    let ft = FatTree { cfg: topo_cfg };
+) -> (Network, Clos) {
+    topo_cfg
+        .validate()
+        .unwrap_or_else(|e| panic!("invalid topology: {e}"));
+    let ft = Clos { cfg: topo_cfg };
     let mut net = Network::new(sim_cfg);
     let h = ft.n_hosts();
-    let hpl = topo_cfg.hosts_per_leaf;
+    let tiers = ft.tiers();
+    let slots = net.cfg.descriptor_slots;
 
     // hosts first (ids 0..H)
     for i in 0..h {
         let rng = net.rng.fork(i as u64);
         net.add_node(NodeBody::Host(Box::new(HostState::new(i, rng))));
     }
-    // leaf switches
-    for l in 0..topo_cfg.n_leaf {
-        let id = h + l;
-        net.add_node(NodeBody::Switch(Box::new(SwitchState {
-            id,
-            role: SwitchRole::Leaf {
-                index: l,
-                first_host: l * hpl,
-            },
-            lb: lb.clone(),
-            lb_state: Default::default(),
-            n_hosts: h,
-            n_leaf: topo_cfg.n_leaf,
-            hosts_per_leaf: hpl,
-            n_spine: topo_cfg.n_spine,
-            failed: false,
-            canary: Dataplane::new(net.cfg.descriptor_slots, id as u64),
-            static_tree: Default::default(),
-        })));
-    }
-    // spine switches
-    for s in 0..topo_cfg.n_spine {
-        let id = h + topo_cfg.n_leaf + s;
-        net.add_node(NodeBody::Switch(Box::new(SwitchState {
-            id,
-            role: SwitchRole::Spine { index: s },
-            lb: lb.clone(),
-            lb_state: Default::default(),
-            n_hosts: h,
-            n_leaf: topo_cfg.n_leaf,
-            hosts_per_leaf: hpl,
-            n_spine: topo_cfg.n_spine,
-            failed: false,
-            canary: Dataplane::new(net.cfg.descriptor_slots, id as u64),
-            static_tree: Default::default(),
-        })));
+    // switches, tier by tier
+    for t in 1..=tiers {
+        for idx in 0..topo_cfg.tier_size(t) {
+            net.add_node(NodeBody::Switch(Box::new(SwitchState::new(
+                ft,
+                t,
+                idx,
+                lb.clone(),
+                slots,
+            ))));
+        }
     }
 
-    // host <-> leaf links. Port orderings must match the routing
-    // assumptions: a host's port 0 is its uplink; a leaf's ports
-    // [0, hpl) are its hosts in order; then one up-port per spine.
+    // Links. Port orderings must match the routing assumptions: a
+    // host's port 0 is its uplink; a switch's ports [0, down) are its
+    // children in child order, then one up-port per parent in parent
+    // order. `add_link` assigns the next free out-port of `from`, so
+    // every switch's down links are created before its up links.
     //
-    // Leaf ports are created in this order because `add_link` assigns
-    // the next free out-port of `from`.
-    for l in 0..topo_cfg.n_leaf {
+    // tier-1 down links to hosts, then host uplinks
+    let m1 = topo_cfg.down[0];
+    for l in 0..topo_cfg.tier_size(1) {
         let leaf = ft.leaf_id(l);
-        for j in 0..hpl {
-            let host = l * hpl + j;
+        for j in 0..m1 {
             // leaf out-port j -> host in-port 0
-            net.add_link(leaf, host, 0);
+            net.add_link(leaf, l * m1 + j, 0);
         }
     }
     for i in 0..h {
-        let leaf = ft.leaf_id(ft.leaf_of_host(i));
         // host out-port 0 -> leaf in-port (host-local index)
-        net.add_link(i, leaf, ft.leaf_host_port(i));
+        net.add_link(i, ft.leaf_id(ft.leaf_of_host(i)), ft.leaf_host_port(i));
     }
-    // leaf <-> spine links
-    for l in 0..topo_cfg.n_leaf {
-        let leaf = ft.leaf_id(l);
-        for s in 0..topo_cfg.n_spine {
-            let spine = ft.spine_id(s);
-            // leaf up-port (hpl + s) -> spine in-port l
-            net.add_link(leaf, spine, ft.spine_down_port(l));
+    // tier t <-> tier t+1 links
+    for t in 1..tiers {
+        let m_up = topo_cfg.down[t as usize]; // children per tier-(t+1) switch
+        let w_t = ft.w(t);
+        let w_next = topo_cfg.up[t as usize];
+        // up links of tier t, in parent order
+        for idx in 0..topo_cfg.tier_size(t) {
+            let id = ft.switch_id(t, idx);
+            let my_digit = ((idx / w_t) % m_up) as u16; // parent's down-port
+            for c in 0..w_next {
+                let pidx = ft.parent_index(t, idx, c);
+                net.add_link(id, ft.switch_id(t + 1, pidx), my_digit);
+            }
         }
-    }
-    for s in 0..topo_cfg.n_spine {
-        let spine = ft.spine_id(s);
-        for l in 0..topo_cfg.n_leaf {
-            let leaf = ft.leaf_id(l);
-            // spine out-port l -> leaf in-port (hpl + s)
-            net.add_link(spine, leaf, ft.leaf_up_port(s));
+        // down links of tier t+1, in child order
+        for pidx in 0..topo_cfg.tier_size(t + 1) {
+            let pid = ft.switch_id(t + 1, pidx);
+            let (ptop, pbot) = (pidx / (w_t * w_next), pidx % (w_t * w_next));
+            let c_digit = pbot / w_t; // our digit in the child's parent order
+            for x in 0..m_up {
+                let cidx = (ptop * m_up + x) * w_t + pbot % w_t;
+                // child's in-port: its up-port toward us
+                net.add_link(pid, ft.switch_id(t, cidx), ft.up_port(t, c_digit));
+            }
         }
     }
 
@@ -162,7 +347,9 @@ pub fn build(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::FatTreeConfig;
     use crate::sim::NodeBody;
+    use crate::switch::SwitchRole;
 
     #[test]
     fn paper_shape() {
@@ -217,15 +404,89 @@ mod tests {
         for n in &net.nodes {
             match &n.body {
                 NodeBody::Host(_) => assert_eq!(n.ports.len(), 1),
-                NodeBody::Switch(sw) => match sw.role {
-                    crate::switch::SwitchRole::Leaf { .. } => {
-                        assert_eq!(n.ports.len(), 16 + 4)
-                    }
-                    crate::switch::SwitchRole::Spine { .. } => {
-                        assert_eq!(n.ports.len(), 4)
+                NodeBody::Switch(sw) => match sw.role() {
+                    SwitchRole::Leaf => assert_eq!(n.ports.len(), 16 + 4),
+                    SwitchRole::Spine => assert_eq!(n.ports.len(), 4),
+                    SwitchRole::Aggregation { .. } => {
+                        panic!("no aggregation tier in a 2-tier build")
                     }
                 },
             }
         }
+    }
+
+    #[test]
+    fn three_tier_shape_and_roles() {
+        let cfg = ClosConfig::small3(); // 4 pods x 4 ToRs x 4 hosts
+        let (net, ft) = build(cfg, SimConfig::default(), LoadBalancer::default());
+        assert_eq!(net.nodes.len(), (64 + 16 + 8 + 4) as usize);
+        // directed links: 2 * (64 host uplinks + 16 ToRs x 2 + 8 aggs x 2)
+        assert_eq!(net.links.len(), 2 * (64 + 32 + 16));
+        let mut counts = [0u32; 3];
+        for n in &net.nodes {
+            if let NodeBody::Switch(sw) = &n.body {
+                match sw.role() {
+                    SwitchRole::Leaf => {
+                        counts[0] += 1;
+                        assert_eq!(n.ports.len(), 4 + 2);
+                    }
+                    SwitchRole::Aggregation { tier } => {
+                        counts[1] += 1;
+                        assert_eq!(tier, 2);
+                        assert_eq!(n.ports.len(), 4 + 2);
+                    }
+                    SwitchRole::Spine => {
+                        counts[2] += 1;
+                        assert_eq!(n.ports.len(), 4);
+                    }
+                }
+            }
+        }
+        assert_eq!(counts, [16, 8, 4]);
+        assert_eq!(ft.all_spines().len(), 4);
+    }
+
+    #[test]
+    fn three_tier_up_down_hops() {
+        let cfg = ClosConfig::small3();
+        let (net, ft) = build(cfg, SimConfig::default(), LoadBalancer::default());
+        // host 0 (pod 0, ToR 0) -> host 63 (pod 3): ToR goes up free,
+        // agg goes up free, core goes down deterministically
+        let tor0 = ft.leaf_id(0);
+        match ft.hop(tor0, 63) {
+            Hop::Up { base, n, .. } => {
+                assert_eq!(base, 4);
+                assert_eq!(n, 2);
+            }
+            other => panic!("expected free up-hop, got {other:?}"),
+        }
+        // a core reaches every host going down
+        let core = ft.spine_id(0);
+        for hst in [0u32, 17, 42, 63] {
+            match ft.hop(core, hst) {
+                Hop::Port(p) => assert!(p < 4),
+                other => panic!("core must route down, got {other:?}"),
+            }
+        }
+        // ToR -> core climb is bottom-aligned (forced ports)
+        let path_ok = {
+            let mut at = tor0;
+            let dst = ft.spine_id(3);
+            let mut hops = 0;
+            while at != dst && hops < 4 {
+                let port = match ft.hop(at, dst) {
+                    Hop::Port(p) => p,
+                    Hop::Up { .. } => {
+                        panic!("climb to a switch must be port-forced")
+                    }
+                    Hop::Local => break,
+                };
+                let link = net.nodes[at as usize].ports[port as usize];
+                at = net.links[link].to;
+                hops += 1;
+            }
+            at == dst
+        };
+        assert!(path_ok, "ToR must reach any core in aligned up-hops");
     }
 }

@@ -12,7 +12,7 @@
 //! The loss curve plus per-step simulated communication time go to
 //! stdout / EXPERIMENTS.md.
 
-use anyhow::{anyhow, Result};
+use crate::util::error::{Error, Result};
 
 use crate::collectives::{runner, Algo};
 use crate::config::{FatTreeConfig, SimConfig};
@@ -92,12 +92,12 @@ impl Trainer {
             .models
             .get(&cfg.preset)
             .ok_or_else(|| {
-                anyhow!(
+                Error::msg(format!(
                     "preset '{}' not in manifest (have: {:?}); \
                      re-run `make artifacts PRESETS=...`",
                     cfg.preset,
                     rt.manifest.models.keys().collect::<Vec<_>>()
-                )
+                ))
             })?
             .clone();
         let init = rt.compile(&format!("{}_init_params", cfg.preset))?;

@@ -4,6 +4,7 @@
 //! - [`rng`] — xoshiro256**/SplitMix64 (substitute for `rand`)
 //! - [`json`] — minimal JSON parser/writer (substitute for `serde_json`)
 //! - [`cli`] — flag-style argument parser (substitute for `clap`)
+//! - [`error`] — string-backed error + context (substitute for `anyhow`)
 //! - [`stats`] — means, percentiles, histograms
 //! - [`bench`] — measured-iteration micro-bench harness (substitute for
 //!   `criterion`; used by the `harness = false` bench targets)
@@ -12,6 +13,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod proptest_lite;
 pub mod rng;

@@ -1,0 +1,267 @@
+//! Topology invariants (DESIGN.md §4), checked with the
+//! `proptest_lite` randomized-property harness over both 2-tier and
+//! 3-tier Clos builds at several oversubscription ratios:
+//!
+//! - id arithmetic round-trips (tier/index <-> node id, contiguous
+//!   tier bases, node counts);
+//! - link symmetry (every directed link has its exact reverse, landing
+//!   on the matching port);
+//! - per-node port counts match the configured radixes;
+//! - up/down reachability: any host reaches any host (valley-free:
+//!   tiers rise then fall) and any switch (the restoration path) under
+//!   arbitrary adaptive up-port choices.
+
+use canary::config::{ClosConfig, SimConfig};
+use canary::loadbalance::LoadBalancer;
+use canary::sim::{Network, NodeBody, NodeId};
+use canary::topology::{build, Clos, Hop};
+use canary::util::proptest_lite::check_property;
+use canary::util::rng::Rng;
+
+/// Random small 2- or 3-tier shape at a random oversubscription.
+fn random_cfg(rng: &mut Rng) -> ClosConfig {
+    let oversubs = [(1u32, 1u32), (2, 1), (4, 1)];
+    let &(num, den) = rng.choose(&oversubs);
+    let cfg = if rng.chance(0.5) {
+        ClosConfig::two_tier(
+            2 + rng.gen_range(3) as u32, // leaves
+            2 + rng.gen_range(7) as u32, // hosts per leaf
+            2 + rng.gen_range(3) as u32, // spines
+        )
+    } else {
+        ClosConfig::three_tier(
+            2 + rng.gen_range(5) as u32, // hosts per ToR
+            2 + rng.gen_range(3) as u32, // ToRs per pod
+            2 + rng.gen_range(3) as u32, // pods
+            2 + rng.gen_range(3) as u32, // aggs per pod
+            1 + rng.gen_range(3) as u32, // cores per group
+        )
+    };
+    let cfg = cfg.with_oversub(num, den);
+    cfg.validate().expect("generated shape must be valid");
+    cfg
+}
+
+fn build_cfg(cfg: ClosConfig) -> (Network, Clos) {
+    build(cfg, SimConfig::default(), LoadBalancer::default())
+}
+
+/// Follow `hop()` from `src` to `dst`, resolving free up-hops with
+/// `rng`. Returns the node path or an error if `dst` is not reached.
+fn walk(
+    net: &Network,
+    ft: &Clos,
+    rng: &mut Rng,
+    src: NodeId,
+    dst: NodeId,
+) -> Result<Vec<NodeId>, String> {
+    let mut at = src;
+    let mut path = vec![src];
+    let max_hops = 2 * ft.tiers() as usize + 2;
+    for _ in 0..max_hops {
+        if at == dst {
+            return Ok(path);
+        }
+        let port = match ft.hop(at, dst) {
+            Hop::Local => return Ok(path),
+            Hop::Port(p) => p,
+            Hop::Up { base, n, dflt } => {
+                if dflt >= n {
+                    return Err(format!(
+                        "dflt {dflt} out of range {n} at node {at}"
+                    ));
+                }
+                // adversarial LB: any of the n equivalent ports
+                base + rng.gen_range(n as u64) as u16
+            }
+        };
+        let node = &net.nodes[at as usize];
+        let Some(&link) = node.ports.get(port as usize) else {
+            return Err(format!("node {at} has no port {port}"));
+        };
+        at = net.links[link].to;
+        path.push(at);
+    }
+    Err(format!("no route {src}->{dst} within {max_hops} hops: {path:?}"))
+}
+
+#[test]
+fn ids_partition_and_round_trip() {
+    check_property("topology-ids", 0x10, 25, |rng: &mut Rng| {
+        let cfg = random_cfg(rng);
+        let (net, ft) = build_cfg(cfg);
+        let mut expect_id = cfg.n_hosts();
+        for t in 1..=cfg.tiers {
+            if ft.tier_base(t) != expect_id {
+                return Err(format!("tier {t} base mismatch"));
+            }
+            for idx in 0..cfg.tier_size(t) {
+                let id = ft.switch_id(t, idx);
+                if id != expect_id {
+                    return Err(format!("non-contiguous id at tier {t}"));
+                }
+                if ft.node_tier(id) != t || ft.switch_at(id) != (t, idx) {
+                    return Err(format!("round-trip failed for node {id}"));
+                }
+                expect_id += 1;
+            }
+        }
+        for h in 0..cfg.n_hosts() {
+            if ft.node_tier(h) != 0 {
+                return Err(format!("host {h} misclassified"));
+            }
+        }
+        if net.nodes.len() as u32 != cfg.n_hosts() + cfg.n_switches() {
+            return Err("node count mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn links_are_symmetric() {
+    check_property("link-symmetry", 0x11, 25, |rng: &mut Rng| {
+        let cfg = random_cfg(rng);
+        let (net, _) = build_cfg(cfg);
+        for l in &net.links {
+            let reverse_id = net.nodes[l.to as usize]
+                .ports
+                .get(l.to_port as usize)
+                .copied()
+                .ok_or_else(|| {
+                    format!("{}->{}: no reverse port", l.from, l.to)
+                })?;
+            let r = &net.links[reverse_id];
+            if r.to != l.from || r.to_port != l.from_port {
+                return Err(format!(
+                    "asymmetric link {}:{} -> {}:{} (reverse {}:{})",
+                    l.from, l.from_port, l.to, l.to_port, r.to, r.to_port
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn port_counts_match_radixes() {
+    check_property("port-counts", 0x12, 25, |rng: &mut Rng| {
+        let cfg = random_cfg(rng);
+        let (net, ft) = build_cfg(cfg);
+        for n in &net.nodes {
+            let want = match &n.body {
+                NodeBody::Host(_) => 1,
+                NodeBody::Switch(_) => {
+                    let (t, _) = ft.switch_at(n.id);
+                    let down = cfg.down[t as usize - 1];
+                    let up = if t == cfg.tiers {
+                        0
+                    } else {
+                        cfg.up[t as usize]
+                    };
+                    (down + up) as usize
+                }
+            };
+            if n.ports.len() != want {
+                return Err(format!(
+                    "node {} has {} ports, want {want}",
+                    n.id,
+                    n.ports.len()
+                ));
+            }
+        }
+        // directed links: one per port plus one uplink per host
+        let total: usize =
+            net.nodes.iter().map(|n| n.ports.len()).sum();
+        if net.links.len() != total {
+            return Err("dangling links".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn any_host_reaches_any_host_valley_free() {
+    check_property("host-reachability", 0x13, 25, |rng: &mut Rng| {
+        let cfg = random_cfg(rng);
+        let (net, ft) = build_cfg(cfg);
+        let h = cfg.n_hosts() as u64;
+        for _ in 0..30 {
+            let src = rng.gen_range(h) as NodeId;
+            let dst = rng.gen_range(h) as NodeId;
+            let path = walk(&net, &ft, rng, src, dst)?;
+            if src == dst {
+                continue;
+            }
+            // valley-free: tier sequence strictly rises, then falls
+            let tiers: Vec<u8> =
+                path.iter().map(|&n| ft.node_tier(n)).collect();
+            let peak = tiers.iter().position(|&t| {
+                t == *tiers.iter().max().unwrap()
+            });
+            let peak = peak.unwrap();
+            let up_ok = tiers[..=peak].windows(2).all(|w| w[1] == w[0] + 1);
+            let down_ok =
+                tiers[peak..].windows(2).all(|w| w[1] + 1 == w[0]);
+            if !up_ok || !down_ok {
+                return Err(format!(
+                    "path {src}->{dst} is not valley-free: {tiers:?}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn any_host_reaches_any_switch() {
+    // the Canary restoration path: leaders address packets to arbitrary
+    // collided switches anywhere in the fabric
+    check_property("switch-reachability", 0x14, 25, |rng: &mut Rng| {
+        let cfg = random_cfg(rng);
+        let (net, ft) = build_cfg(cfg);
+        for _ in 0..30 {
+            let src = rng.gen_range(cfg.n_hosts() as u64) as NodeId;
+            let dst = cfg.n_hosts()
+                + rng.gen_range(cfg.n_switches() as u64) as NodeId;
+            walk(&net, &ft, rng, src, dst)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn two_tier_layout_is_frozen() {
+    // the legacy fixed layout of the paper network is a wire contract:
+    // hosts [0,H), leaves [H,H+L), spines [H+L,H+L+S), leaf ports hosts
+    // first then one up-port per spine, spine port l down to leaf l
+    let cfg = ClosConfig::paper();
+    let (net, ft) = build_cfg(cfg);
+    assert_eq!(ft.leaf_id(0), 1024);
+    assert_eq!(ft.spine_id(0), 1024 + 32);
+    assert_eq!(ft.leaf_of_host(1023), 31);
+    assert_eq!(ft.leaf_host_port(33), 1);
+    assert_eq!(ft.leaf_up_port(5), 37);
+    assert_eq!(ft.spine_down_port(7), 7);
+    // leaf 3's up-port to spine 2 lands on spine 2's in-port 3
+    let link = net.nodes[ft.leaf_id(3) as usize].ports
+        [ft.leaf_up_port(2) as usize];
+    let l = &net.links[link];
+    assert_eq!(l.to, ft.spine_id(2));
+    assert_eq!(l.to_port, ft.spine_down_port(3));
+}
+
+#[test]
+fn oversubscription_shapes_the_uplinks() {
+    for &(num, den, up1, up2) in
+        &[(1u32, 1u32, 16u32, 8u32), (2, 1, 8, 4), (4, 1, 4, 2)]
+    {
+        let cfg = ClosConfig::paper3().with_oversub(num, den);
+        assert_eq!(cfg.up[1], up1, "{num}:{den} ToR uplinks");
+        assert_eq!(cfg.up[2], up2, "{num}:{den} agg uplinks");
+        let (net, ft) = build_cfg(cfg);
+        // every ToR really has down * den / num up-ports
+        let tor = &net.nodes[ft.leaf_id(0) as usize];
+        assert_eq!(tor.ports.len() as u32, cfg.down[0] + up1);
+    }
+}
