@@ -30,7 +30,7 @@ fn main() -> canary::util::error::Result<()> {
         lb: LoadBalancer::default(),
         algo: Algo::Canary,
         n_allreduce_hosts: hosts,
-        congestion: false,
+        traffic: None,
         data_bytes: 64 * 1024,
         record_results: true,
     };

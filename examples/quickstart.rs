@@ -8,6 +8,7 @@ use canary::collectives::{runner, Algo};
 use canary::config::{FatTreeConfig, SimConfig};
 use canary::loadbalance::LoadBalancer;
 use canary::report::{gbps, Series};
+use canary::traffic::TrafficSpec;
 use canary::workload::{build_scenario, Scenario};
 
 fn main() {
@@ -23,14 +24,14 @@ fn main() {
     );
     for algo in algos {
         let mut row = vec![algo.name()];
-        for congestion in [false, true] {
+        for traffic in [None, Some(TrafficSpec::uniform())] {
             let sc = Scenario {
                 topo: FatTreeConfig::small(),
                 sim: SimConfig::default(),
                 lb: LoadBalancer::default(),
                 algo,
                 n_allreduce_hosts: 32,
-                congestion,
+                traffic,
                 data_bytes: 4 << 20,
                 record_results: false,
             };

@@ -3,33 +3,46 @@
 //! One bench per table/figure of the evaluation section — the full-scale
 //! series are produced by the `figures` binary (`figures all --scale
 //! full`); these keep the whole harness exercised on every `cargo bench`.
+//!
+//! The `traffic_patterns` sweep additionally records its timing to
+//! `results/BENCH_traffic.json` so per-commit tooling can track the
+//! traffic engine's end-to-end cost.
 
 use std::time::Duration;
 
 use canary::figures::{self, Opts, Scale};
+use canary::util::json::{obj, Value};
 
-fn run(name: &str, f: impl Fn(&Opts) -> canary::report::Series) {
-    let o = Opts {
+fn opts() -> Opts {
+    Opts {
         scale: Scale::Ci,
         seeds: 1,
         out: std::env::temp_dir()
             .join("canary_bench_results")
             .to_string_lossy()
             .to_string(),
-    };
+    }
+}
+
+fn run(
+    name: &str,
+    f: impl Fn(&Opts) -> canary::report::Series,
+) -> (Duration, usize) {
+    let o = opts();
     let t0 = std::time::Instant::now();
     let series = f(&o);
+    let elapsed = t0.elapsed();
     println!(
         "{:<28} {:>8.2?}   ({} rows)",
         name,
-        t0.elapsed(),
+        elapsed,
         series.rows.len()
     );
+    (elapsed, series.rows.len())
 }
 
 fn main() {
     println!("== paper figure benches (CI scale) ==");
-    let _ = Duration::from_millis(1);
     run("fig2_goodput", figures::fig2);
     run("fig6_single_switch", figures::fig6);
     run("fig7a_goodput_vs_trees", figures::fig7a);
@@ -41,5 +54,20 @@ fn main() {
     run("fig11_noise_timeout", figures::fig11);
     run("mem_model", figures::mem);
     run("clos3_multitier", figures::clos3);
+    let (traffic_time, traffic_rows) =
+        run("traffic_patterns", figures::traffic);
     run("ablation_lb", figures::ablation_lb);
+
+    // machine-readable entry for the traffic sweep (per-commit tracking)
+    let entry = obj(vec![
+        ("bench", Value::Str("traffic_patterns".into())),
+        ("scale", Value::Str("ci".into())),
+        ("seconds", Value::Float(traffic_time.as_secs_f64())),
+        ("rows", Value::Int(traffic_rows as i64)),
+    ]);
+    let _ = std::fs::create_dir_all("results");
+    match std::fs::write("results/BENCH_traffic.json", entry.to_json()) {
+        Ok(()) => println!("wrote results/BENCH_traffic.json"),
+        Err(e) => eprintln!("BENCH_traffic.json write failed: {e}"),
+    }
 }

@@ -7,6 +7,7 @@ use std::time::Duration;
 use canary::collectives::{runner, Algo};
 use canary::config::{FatTreeConfig, SimConfig};
 use canary::loadbalance::LoadBalancer;
+use canary::traffic::TrafficSpec;
 use canary::util::bench::{bench, throughput};
 use canary::util::rng::Rng;
 use canary::workload::{build_scenario, Scenario};
@@ -22,7 +23,7 @@ fn main() {
         lb: LoadBalancer::default(),
         algo: Algo::Canary,
         n_allreduce_hosts: 32,
-        congestion: true,
+        traffic: Some(TrafficSpec::uniform()),
         data_bytes: 256 << 10,
         record_results: false,
     };

@@ -4,12 +4,13 @@
 
 use crate::collectives::{Algo, JobRuntime, JobSpec};
 use crate::host::{
-    background::BgHost, canary_host::CanaryHost, ring::RingHost,
-    static_host::StaticHost, Proto,
+    canary_host::CanaryHost, ring::RingHost, static_host::StaticHost, Proto,
 };
 use crate::sim::{Network, NodeBody, NodeId, Time};
 use crate::switch::static_tree::{StaticJobInfo, TreeRole};
 use crate::topology::FatTree;
+use crate::traffic::{engine, TrafficHost, TrafficSpec};
+use crate::util::rng::Rng;
 
 /// Result summary of one finished (or timed-out) allreduce job.
 #[derive(Clone, Debug)]
@@ -232,9 +233,18 @@ pub fn install_ring_job(
     job
 }
 
-/// Install the background random-uniform traffic job on `hosts`.
-pub fn install_background_job(net: &mut Network, hosts: Vec<NodeId>) -> u32 {
-    let spec = JobSpec {
+/// Install a cross-traffic job on `hosts` (sorted ascending) following
+/// `spec`. `rng` resolves pattern structure (permutation cycle, incast
+/// groups, hot set); the `uniform` pattern draws nothing from it, which
+/// keeps legacy runs bit-identical.
+pub fn install_background_job(
+    net: &mut Network,
+    hosts: Vec<NodeId>,
+    spec: TrafficSpec,
+    rng: &mut Rng,
+) -> u32 {
+    let plans = engine::build_plans(&spec, &hosts, rng);
+    let job_spec = JobSpec {
         tenant: u16::MAX,
         algo: Algo::Background,
         participants: hosts.clone(),
@@ -245,9 +255,9 @@ pub fn install_background_job(net: &mut Network, hosts: Vec<NodeId>) -> u32 {
         record_results: false,
     };
     let job = net.jobs.len() as u32;
-    net.jobs.push(JobRuntime::new(spec));
-    for &h in &hosts {
-        set_proto(net, h, Proto::Background(BgHost::new(job)));
+    net.jobs.push(JobRuntime::new(job_spec));
+    for (&h, plan) in hosts.iter().zip(plans) {
+        set_proto(net, h, Proto::Background(TrafficHost::new(job, spec, plan)));
     }
     job
 }

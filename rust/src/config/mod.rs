@@ -44,8 +44,10 @@ pub struct SimConfig {
     /// (Section 5.2.5 noise experiment).
     pub noise_prob: f64,
     pub noise_delay_ps: Time,
-    /// Background-traffic message size (one random destination per
-    /// message).
+    /// Background-traffic message/flow size for the fixed-size traffic
+    /// patterns (one destination draw per message; the `empirical`
+    /// pattern samples sizes from its bundled CDF instead —
+    /// `crate::traffic`).
     pub bg_message_bytes: u64,
     /// Master seed; every stochastic choice derives from it.
     pub seed: u64,
@@ -127,6 +129,12 @@ impl SimConfig {
 
     pub fn with_payload(mut self, bytes: u32) -> Self {
         self.payload_bytes = bytes;
+        self
+    }
+
+    /// Message/flow size for the fixed-size background-traffic patterns.
+    pub fn with_bg_bytes(mut self, bytes: u64) -> Self {
+        self.bg_message_bytes = bytes;
         self
     }
 

@@ -5,13 +5,16 @@
 //!
 //! ```text
 //! figures all            [--scale full|half|ci] [--seeds N] [--out DIR]
-//! figures fig2|fig6|fig7a|fig7b|fig8|fig9|fig10a|fig10b|fig11|mem|clos3 ...
+//! figures fig2|fig6|fig7a|fig7b|fig8|fig9|fig10a|fig10b|fig11|mem|clos3
+//!         |traffic|ablation ...
 //! ```
 //!
 //! `full` reproduces the paper's parameters (1024 hosts, 4 MiB, 5 seeds —
 //! minutes of wall time); `half` shrinks data size and seeds; `ci` runs a
 //! 64-host network for smoke testing. Every series is printed and written
-//! to `results/<name>.csv`.
+//! to `results/<name>.csv`. Independent runs (seeds, traffic cells) fan
+//! out over OS threads ([`crate::util::par`]) with deterministic result
+//! ordering.
 
 use crate::collectives::{runner, Algo};
 use crate::config::{ClosConfig, FatTreeConfig, SimConfig};
@@ -21,8 +24,10 @@ use crate::metrics::{
 };
 use crate::report::Series;
 use crate::sim::{ps_to_us, US};
+use crate::traffic::TrafficSpec;
 use crate::util::cli::Args;
-use crate::util::stats::{mean, stddev};
+use crate::util::par::par_map;
+use crate::util::stats::{mean, percentile_sorted, stddev};
 use crate::workload::{build_multi_tenant, build_scenario, Scenario};
 
 /// Experiment scale knob.
@@ -103,25 +108,22 @@ fn algo_list(with_ring: bool, trees: &[u8]) -> Vec<Algo> {
     v
 }
 
-/// Run one scenario over `seeds` placements; returns per-seed goodputs.
+/// Run one scenario over `seeds` placements (fanned out across OS
+/// threads, per-seed order preserved); returns per-seed goodputs.
 fn goodputs(sc: &Scenario, seeds: u64) -> Vec<f64> {
-    (0..seeds)
-        .map(|s| {
-            let mut exp = build_scenario(sc, 1000 + s);
-            let r = runner::run_to_completion(&mut exp.net, u64::MAX);
-            r[0].goodput_gbps.unwrap_or(0.0)
-        })
-        .collect()
+    par_map(seeds as usize, |s| {
+        let mut exp = build_scenario(sc, 1000 + s as u64);
+        let r = runner::run_to_completion(&mut exp.net, u64::MAX);
+        r[0].goodput_gbps.unwrap_or(0.0)
+    })
 }
 
 fn runtimes_us(sc: &Scenario, seeds: u64) -> Vec<f64> {
-    (0..seeds)
-        .map(|s| {
-            let mut exp = build_scenario(sc, 1000 + s);
-            let r = runner::run_to_completion(&mut exp.net, u64::MAX);
-            r[0].runtime_ps.map(ps_to_us).unwrap_or(f64::NAN)
-        })
-        .collect()
+    par_map(seeds as usize, |s| {
+        let mut exp = build_scenario(sc, 1000 + s as u64);
+        let r = runner::run_to_completion(&mut exp.net, u64::MAX);
+        r[0].runtime_ps.map(ps_to_us).unwrap_or(f64::NAN)
+    })
 }
 
 fn base_scenario(o: &Opts, algo: Algo, hosts: u32, congestion: bool) -> Scenario {
@@ -131,7 +133,7 @@ fn base_scenario(o: &Opts, algo: Algo, hosts: u32, congestion: bool) -> Scenario
         lb: LoadBalancer::default(),
         algo,
         n_allreduce_hosts: hosts,
-        congestion,
+        traffic: congestion.then(TrafficSpec::uniform),
         data_bytes: o.scale.data_bytes(),
         record_results: false,
     }
@@ -189,7 +191,7 @@ pub fn fig6(o: &Opts) -> Series {
             lb: LoadBalancer::default(),
             algo: Algo::Canary,
             n_allreduce_hosts: 2,
-            congestion: false,
+            traffic: None,
             data_bytes: 4 << 20,
             record_results: false,
         };
@@ -509,7 +511,7 @@ pub fn clos3(o: &Opts) -> Series {
                     lb: LoadBalancer::default(),
                     algo,
                     n_allreduce_hosts: hosts,
-                    congestion: cong,
+                    traffic: cong.then(TrafficSpec::uniform),
                     data_bytes: o.scale.data_bytes(),
                     record_results: false,
                 };
@@ -523,6 +525,125 @@ pub fn clos3(o: &Opts) -> Series {
                 ]);
             }
         }
+    }
+    finish(s, o)
+}
+
+/// Traffic-pattern sweep (DESIGN.md §5, beyond-paper): Canary vs static
+/// trees vs ring under every traffic-engine pattern at three load
+/// points, on both the 2-tier paper fabric and the oversubscribed
+/// 3-tier pod Clos. Each cell reports allreduce goodput plus the
+/// background flows' completion-time percentiles — congestion awareness
+/// should win more as the pattern skews (incast/hotspot) and the FCT
+/// tail shows what that victory costs the cross traffic.
+pub fn traffic(o: &Opts) -> Series {
+    let mut s = Series::new(
+        "traffic_patterns",
+        &[
+            "topo",
+            "pattern",
+            "load",
+            "algo",
+            "goodput_gbps",
+            "goodput_stddev",
+            "fct_p50_us",
+            "fct_p99_us",
+            "flows_completed_pct",
+        ],
+    );
+    let (fan_in, hot_k) = match o.scale {
+        Scale::Ci => (8, 4),
+        _ => (32, 16),
+    };
+    let patterns = [
+        TrafficSpec::uniform(),
+        TrafficSpec::permutation(),
+        TrafficSpec::incast(fan_in),
+        TrafficSpec::hotspot(hot_k, 0.9),
+        TrafficSpec::empirical(),
+    ];
+    let loads = [0.3f64, 0.6, 1.0];
+
+    struct Cell {
+        topo_name: &'static str,
+        topo: ClosConfig,
+        spec: TrafficSpec,
+        algo: Algo,
+    }
+    let mut cells = Vec::new();
+    for (topo_name, topo) in
+        [("clos2", o.scale.topo()), ("clos3", o.scale.topo3())]
+    {
+        // as in clos3: only tree counts the fabric can root on
+        // distinct switches
+        let trees: Vec<u8> = [1u8, 4]
+            .into_iter()
+            .filter(|&n| n as u32 <= topo.n_spine())
+            .collect();
+        for pattern in &patterns {
+            for &load in &loads {
+                for algo in algo_list(true, &trees) {
+                    cells.push(Cell {
+                        topo_name,
+                        topo,
+                        spec: pattern.with_load(load),
+                        algo,
+                    });
+                }
+            }
+        }
+    }
+
+    let seeds = o.seeds.max(1);
+    let results = par_map(cells.len(), |i| {
+        let c = &cells[i];
+        let hosts = (c.topo.n_hosts() / 2).max(2);
+        let mut gs = Vec::new();
+        let mut fct_us: Vec<f64> = Vec::new();
+        let (mut started, mut completed) = (0u64, 0u64);
+        for seed in 0..seeds {
+            let sc = Scenario {
+                topo: c.topo,
+                sim: SimConfig::default(),
+                lb: LoadBalancer::default(),
+                algo: c.algo,
+                n_allreduce_hosts: hosts,
+                traffic: Some(c.spec),
+                data_bytes: o.scale.data_bytes(),
+                record_results: false,
+            };
+            let mut exp = build_scenario(&sc, 4000 + seed);
+            let r = runner::run_to_completion(&mut exp.net, u64::MAX);
+            gs.push(r[0].goodput_gbps.unwrap_or(0.0));
+            let f = &exp.net.metrics.flows;
+            started += f.started;
+            completed += f.completed;
+            fct_us.extend(f.fct_ps.iter().map(|&p| ps_to_us(p)));
+        }
+        // sort in the worker: both quantiles read the sorted buffer
+        fct_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        (gs, fct_us, started, completed)
+    });
+
+    for (c, (gs, fct_us, started, completed)) in
+        cells.iter().zip(results)
+    {
+        let completed_pct = if started == 0 {
+            0.0
+        } else {
+            100.0 * completed as f64 / started as f64
+        };
+        s.push(vec![
+            c.topo_name.to_string(),
+            c.spec.name(),
+            format!("{:.2}", c.spec.load),
+            c.algo.name(),
+            format!("{:.1}", mean(&gs)),
+            format!("{:.1}", stddev(&gs)),
+            format!("{:.1}", percentile_sorted(&fct_us, 50.0)),
+            format!("{:.1}", percentile_sorted(&fct_us, 99.0)),
+            format!("{completed_pct:.1}"),
+        ]);
     }
     finish(s, o)
 }
@@ -599,6 +720,7 @@ pub fn main_entry() {
         "fig11" => drop(fig11(&o)),
         "mem" => drop(mem(&o)),
         "clos3" => drop(clos3(&o)),
+        "traffic" => drop(traffic(&o)),
         "ablation" => drop(ablation_lb(&o)),
         "all" => {
             drop(fig2(&o));
@@ -612,12 +734,13 @@ pub fn main_entry() {
             drop(fig11(&o));
             drop(mem(&o));
             drop(clos3(&o));
+            drop(traffic(&o));
             drop(ablation_lb(&o));
         }
         other => {
             eprintln!(
                 "unknown figure '{other}' \
-                 (fig2|fig6|fig7a|fig7b|fig8|fig9|fig10a|fig10b|fig11|mem|clos3|ablation|all)"
+                 (fig2|fig6|fig7a|fig7b|fig8|fig9|fig10a|fig10b|fig11|mem|clos3|traffic|ablation|all)"
             );
             std::process::exit(2);
         }

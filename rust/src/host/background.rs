@@ -1,67 +1,16 @@
-//! Background congestion generator: the paper's random uniform injection
-//! pattern (Section 5.2). Each host streams at line rate; every
-//! `bg_message_bytes` it re-draws a uniformly random destination, so the
-//! congestion pattern keeps shifting and exercises Canary's adaptivity.
+//! Legacy home of the background congestion generator.
+//!
+//! The paper's random uniform injection pattern (Section 5.2) used to be
+//! implemented here as a standalone state machine; it is now the
+//! `uniform` pattern of the flow-level traffic engine
+//! ([`crate::traffic`]), which adds permutation/incast/hotspot/empirical
+//! patterns, closed- vs open-loop injection and per-flow FCT tracking.
+//! The engine's closed-loop uniform path is bit-compatible with the old
+//! generator (same RNG draws, packets and wake cadence —
+//! `tests/traffic_engine.rs`); this module keeps the legacy names alive
+//! for existing call sites.
 
-use crate::sim::packet::{Packet, PacketKind};
-use crate::sim::{Ctx, NodeId};
-use crate::util::rng::Rng;
+pub use crate::traffic::engine::{on_packet, on_wake};
 
-/// Background-traffic state for one host.
-pub struct BgHost {
-    pub job: u32,
-    /// Packets left in the current message.
-    pub remaining: u32,
-    pub dst: NodeId,
-    pub msg_count: u64,
-}
-
-impl BgHost {
-    pub fn new(job: u32) -> BgHost {
-        BgHost {
-            job,
-            remaining: 0,
-            dst: 0,
-            msg_count: 0,
-        }
-    }
-}
-
-/// Self-clocked injection: one packet per wire-serialization interval,
-/// i.e. exactly line rate at the NIC.
-pub fn on_wake(
-    me: NodeId,
-    bg: &mut BgHost,
-    rng: &mut Rng,
-    ctx: &mut Ctx,
-    job: u32,
-) {
-    if bg.remaining == 0 {
-        // new message: pick a random peer (not ourselves)
-        let participants = &ctx.jobs[bg.job as usize].spec.participants;
-        if participants.len() < 2 {
-            return;
-        }
-        loop {
-            let cand = *rng.choose(participants);
-            if cand != me {
-                bg.dst = cand;
-                break;
-            }
-        }
-        let payload = ctx.cfg.payload_bytes as u64;
-        bg.remaining = (ctx.cfg.bg_message_bytes.div_ceil(payload)).max(1)
-            as u32;
-        bg.msg_count += 1;
-    }
-
-    let mut pkt = Packet::data(PacketKind::Background, me, bg.dst);
-    pkt.wire_bytes = ctx.cfg.wire_bytes();
-    pkt.flow = ((me as u64) << 32) | bg.msg_count;
-    let wire = pkt.wire_bytes as u64;
-    ctx.send(0, pkt);
-    bg.remaining -= 1;
-
-    let next = wire * ctx.cfg.link_ps_per_byte;
-    ctx.wake(next, job);
-}
+/// Legacy name for the per-host traffic-generator state.
+pub type BgHost = crate::traffic::TrafficHost;

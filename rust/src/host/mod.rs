@@ -1,5 +1,6 @@
 //! Host protocol engines: the Canary host/leader logic, the static-tree
-//! and ring baselines, and the background-traffic generator.
+//! and ring baselines, and the background-traffic generator (now the
+//! flow-level engine in [`crate::traffic`]).
 //!
 //! Hosts are event-driven: `handle_wake` starts a job's injection,
 //! `handle_packet` advances the protocol, `handle_timer` drives
@@ -81,7 +82,10 @@ pub fn handle_packet(
             static_host::on_broadcast(h.id, sh, ctx, pkt)
         }
         (Proto::Ring(rh), K::Ring) => ring::on_packet(h.id, rh, ctx, pkt),
-        (Proto::Background(_), _) => {} // sink
+        (Proto::Background(bg), K::Background) => {
+            // sink: account the delivery toward its flow's completion
+            background::on_packet(h.id, bg, ctx, pkt)
+        }
         _ => {} // stray packet for an idle / mismatched host: drop
     }
 }

@@ -9,8 +9,10 @@
 //!   simulator of multi-tier Clos fabrics (the paper's 2-tier fat tree
 //!   and oversubscribed 3-tier pod networks, [`topology`]), the Canary
 //!   switch dataplane and host/leader protocol, the static-tree and
-//!   ring baselines, the figure/bench harness, and a data-parallel
-//!   trainer that drives real gradients through the simulated network.
+//!   ring baselines, a flow-level traffic engine with adversarial
+//!   congestion patterns ([`traffic`]), the figure/bench harness, and a
+//!   data-parallel trainer that drives real gradients through the
+//!   simulated network.
 //! - **L2 (python/compile/model.py)**: a JAX transformer LM whose
 //!   train-step is AOT-lowered to HLO text and executed from Rust via
 //!   PJRT ([`runtime`]).
@@ -42,6 +44,7 @@ pub mod runtime;
 pub mod sim;
 pub mod switch;
 pub mod topology;
+pub mod traffic;
 pub mod train;
 pub mod util;
 pub mod workload;

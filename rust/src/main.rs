@@ -16,6 +16,7 @@ use canary::metrics::{average_network_utilization, memory_model_bytes};
 use canary::report::gbps;
 use canary::runtime::Runtime;
 use canary::sim::{ps_to_us, US};
+use canary::traffic::TrafficSpec;
 use canary::train::{TrainConfig, Trainer};
 use canary::util::cli::Args;
 use canary::workload::{build_scenario, Scenario};
@@ -26,6 +27,9 @@ canary — congestion-aware in-network allreduce (paper reproduction)
 USAGE:
   canary run   [--algo canary|static1|static4|ring] [--hosts N]
                [--size BYTES] [--congestion true|false] [--seed S]
+               [--traffic none|uniform|permutation|incast:F|hotspot:K[:S]
+                          |empirical[@open|@closed]]
+               [--bg-load L] [--traffic-json FILE]
                [--timeout-us T] [--lb adaptive|ecmp|minqueue|flowlet]
                [--topo paper|small|tiny[3]] [--tiers 2|3] [--oversub A:B]
                [--topo-json FILE] [--values]
@@ -103,12 +107,58 @@ fn resolve_topo(args: &Args) -> Result<ClosConfig> {
     Ok(topo)
 }
 
+/// Combine --traffic/--traffic-json/--bg-load (and the legacy
+/// --congestion switch) into the scenario's cross-traffic spec.
+fn resolve_traffic(args: &Args) -> Result<Option<TrafficSpec>> {
+    if args.get("congestion").is_some()
+        && (args.get("traffic").is_some()
+            || args.get("traffic-json").is_some())
+    {
+        return Err("--congestion conflicts with --traffic/--traffic-json \
+                    (the pattern string already says on/off: use \
+                    --traffic none)"
+            .into());
+    }
+    let mut spec = match (args.get("traffic-json"), args.get("traffic")) {
+        (Some(_), Some(_)) => {
+            return Err("--traffic-json conflicts with --traffic \
+                        (the JSON file fully defines the pattern)"
+                .into())
+        }
+        (Some(path), None) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| format!("reading {path}: {e}"))?;
+            TrafficSpec::from_json(&text)?
+        }
+        (None, Some(s)) => TrafficSpec::parse(s)?,
+        // legacy switch: --congestion true/false = uniform on/off
+        (None, None) => (args.get_or("congestion", "true") == "true")
+            .then(TrafficSpec::uniform),
+    };
+    if let Some(l) = args.get("bg-load") {
+        let load: f64 =
+            l.parse().map_err(|_| format!("bad --bg-load '{l}'"))?;
+        match spec.as_mut() {
+            Some(s) => {
+                s.load = load;
+                s.validate()?;
+            }
+            None => {
+                return Err(
+                    "--bg-load is meaningless with traffic off".into()
+                )
+            }
+        }
+    }
+    Ok(spec)
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     let algo = parse_algo(args.get_or("algo", "canary"))?;
     let topo = resolve_topo(args)?;
     let hosts: u32 = args.get_parse("hosts", topo.n_hosts() / 2)?;
     let size: u64 = args.get_parse("size", 4 * 1024 * 1024)?;
-    let congestion = args.get_or("congestion", "true") == "true";
+    let traffic = resolve_traffic(args)?;
     let seed: u64 = args.get_parse("seed", 1)?;
     let timeout_us: u64 = args.get_parse("timeout-us", 1)?;
     let lb = parse_policy(args.get_or("lb", "adaptive"))?;
@@ -124,7 +174,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         lb,
         algo,
         n_allreduce_hosts: hosts,
-        congestion,
+        traffic,
         data_bytes: size,
         record_results: false,
     };
@@ -132,11 +182,13 @@ fn cmd_run(args: &Args) -> Result<()> {
     let results = runner::run_to_completion(&mut exp.net, u64::MAX);
     let r = &results[0];
     println!(
-        "algo={} hosts={} size={}B congestion={} tiers={}",
+        "algo={} hosts={} size={}B traffic={} tiers={}",
         r.algo.name(),
         r.n_hosts,
         r.data_bytes,
-        congestion,
+        traffic
+            .map(|t| format!("{}(load={:.2})", t.name(), t.load))
+            .unwrap_or_else(|| "none".into()),
         topo.tiers
     );
     println!(
@@ -173,6 +225,9 @@ fn cmd_run(args: &Args) -> Result<()> {
         exp.net.metrics.descriptors_live,
         exp.net.metrics.descriptor_high_water
     );
+    if traffic.is_some() {
+        println!("{}", canary::report::flow_summary(&exp.net.metrics.flows));
+    }
     if args.flag("debug-links") {
         let end = exp.net.now;
         let mut busiest: Vec<(f64, usize)> = (0..exp.net.links.len())
@@ -264,10 +319,10 @@ fn main() -> Result<()> {
     let args = Args::parse(
         argv,
         &[
-            "algo", "hosts", "size", "congestion", "seed", "timeout-us",
-            "lb", "topo", "tiers", "oversub", "topo-json", "values",
-            "preset", "workers", "steps", "lr", "comm-every", "diameter",
-            "window", "debug-links",
+            "algo", "hosts", "size", "congestion", "traffic", "bg-load",
+            "traffic-json", "seed", "timeout-us", "lb", "topo", "tiers",
+            "oversub", "topo-json", "values", "preset", "workers", "steps",
+            "lr", "comm-every", "diameter", "window", "debug-links",
         ],
     )?;
     match args.positional.first().map(|s| s.as_str()) {

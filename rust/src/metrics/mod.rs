@@ -1,9 +1,111 @@
 //! Global simulation counters and post-run analysis helpers
 //! (link-utilization distributions, average network utilization,
+//! per-flow lifecycle / FCT tracking for the traffic engine, and
 //! descriptor-memory accounting for the Section 3.2.2 model).
+
+use std::collections::HashMap;
 
 use crate::sim::{Network, Time};
 use crate::util::stats::Histogram;
+
+/// A background flow in flight: born at `born`, complete when all
+/// `expected` packets have been delivered to the destination host.
+#[derive(Clone, Debug)]
+struct LiveFlow {
+    born: Time,
+    expected: u32,
+    seen: u32,
+}
+
+/// Per-flow lifecycle tracking for the traffic engine
+/// (`crate::traffic`): flow starts are registered by the generating
+/// host, deliveries by the sink, and the flow-completion time (FCT) is
+/// recorded when the last packet lands. Flows whose packets are dropped
+/// by the overflow policer simply never complete — the completion
+/// fraction is part of the signal.
+#[derive(Clone, Debug, Default)]
+pub struct FlowStats {
+    pub started: u64,
+    pub completed: u64,
+    /// Application bytes offered by started flows.
+    pub offered_bytes: u64,
+    /// Application bytes delivered to sinks.
+    pub delivered_bytes: u64,
+    /// Completion time of every finished flow, in event order.
+    pub fct_ps: Vec<Time>,
+    live: HashMap<u64, LiveFlow>,
+}
+
+impl FlowStats {
+    /// A host started (closed loop) or received the arrival of (open
+    /// loop) a new flow of `expected_pkts` packets.
+    pub fn on_start(
+        &mut self,
+        flow: u64,
+        born: Time,
+        expected_pkts: u32,
+        bytes: u64,
+    ) {
+        self.started += 1;
+        self.offered_bytes += bytes;
+        self.live.insert(
+            flow,
+            LiveFlow {
+                born,
+                expected: expected_pkts,
+                seen: 0,
+            },
+        );
+    }
+
+    /// One packet of `flow` reached its destination host.
+    pub fn on_delivery(&mut self, flow: u64, now: Time, bytes: u64) {
+        self.delivered_bytes += bytes;
+        if let Some(f) = self.live.get_mut(&flow) {
+            f.seen += 1;
+            if f.seen >= f.expected {
+                let born = f.born;
+                self.live.remove(&flow);
+                self.completed += 1;
+                self.fct_ps.push(now.saturating_sub(born));
+            }
+        }
+    }
+
+    /// Flows started but not yet (or never) completed.
+    pub fn live_count(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Completed / started (0 when no flow ever started).
+    pub fn completion_fraction(&self) -> f64 {
+        if self.started == 0 {
+            0.0
+        } else {
+            self.completed as f64 / self.started as f64
+        }
+    }
+
+    /// FCT percentile in microseconds over completed flows
+    /// (`q` in `[0, 100]`; 0 when nothing completed).
+    pub fn fct_percentile_us(&self, q: f64) -> f64 {
+        self.fct_percentiles_us(&[q])[0]
+    }
+
+    /// Several FCT percentiles at once — converts and sorts the sample
+    /// vector a single time.
+    pub fn fct_percentiles_us(&self, qs: &[f64]) -> Vec<f64> {
+        let mut us: Vec<f64> = self
+            .fct_ps
+            .iter()
+            .map(|&p| crate::sim::ps_to_us(p))
+            .collect();
+        us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        qs.iter()
+            .map(|&q| crate::util::stats::percentile_sorted(&us, q))
+            .collect()
+    }
+}
 
 /// Counters accumulated during a run.
 #[derive(Clone, Debug, Default)]
@@ -42,6 +144,8 @@ pub struct Metrics {
     pub descriptors_live: u64,
     /// Sum over descriptors of (dealloc - alloc) time, for mean residency.
     pub descriptor_residency_ps: u64,
+    /// Background-flow lifecycle tracking (traffic engine).
+    pub flows: FlowStats,
 }
 
 impl Metrics {
@@ -113,6 +217,47 @@ mod tests {
         assert_eq!(m.descriptors_live, 0);
         assert_eq!(m.descriptors_allocated, m.descriptors_freed);
         assert_eq!(m.descriptor_residency_ps, 150);
+    }
+
+    #[test]
+    fn flow_lifecycle_and_fct() {
+        let mut f = FlowStats::default();
+        f.on_start(1, 100, 2, 2048);
+        f.on_start(2, 200, 1, 1024);
+        assert_eq!(f.started, 2);
+        assert_eq!(f.live_count(), 2);
+        // out-of-order deliveries across flows
+        f.on_delivery(2, 700, 1024);
+        assert_eq!(f.completed, 1);
+        assert_eq!(f.fct_ps, vec![500]);
+        f.on_delivery(1, 400, 1024);
+        assert_eq!(f.completed, 1, "flow 1 needs both packets");
+        f.on_delivery(1, 900, 1024);
+        assert_eq!(f.completed, 2);
+        assert_eq!(f.fct_ps, vec![500, 800]);
+        assert_eq!(f.live_count(), 0);
+        assert_eq!(f.completion_fraction(), 1.0);
+        assert_eq!(f.delivered_bytes, 3072);
+        // unknown flow ids (e.g. pre-run stragglers) are byte-counted
+        // but otherwise ignored
+        f.on_delivery(99, 1000, 10);
+        assert_eq!(f.completed, 2);
+    }
+
+    #[test]
+    fn fct_percentiles_in_us() {
+        let mut f = FlowStats::default();
+        for (i, fct) in [1_000_000u64, 2_000_000, 3_000_000]
+            .into_iter()
+            .enumerate()
+        {
+            let flow = i as u64;
+            f.on_start(flow, 0, 1, 1);
+            f.on_delivery(flow, fct, 1);
+        }
+        assert!((f.fct_percentile_us(50.0) - 2.0).abs() < 1e-9);
+        assert!((f.fct_percentile_us(100.0) - 3.0).abs() < 1e-9);
+        assert_eq!(FlowStats::default().fct_percentile_us(50.0), 0.0);
     }
 
     #[test]

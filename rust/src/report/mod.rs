@@ -89,6 +89,21 @@ pub fn us(x: Option<u64>) -> String {
     }
 }
 
+/// One-line human summary of a run's background-flow statistics
+/// (started/completed counts, completion fraction, FCT p50/p99).
+pub fn flow_summary(f: &crate::metrics::FlowStats) -> String {
+    let p = f.fct_percentiles_us(&[50.0, 99.0]);
+    format!(
+        "flows: {} started, {} completed ({:.1}%)  \
+         fct p50 {:.1} us  p99 {:.1} us",
+        f.started,
+        f.completed,
+        100.0 * f.completion_fraction(),
+        p[0],
+        p[1],
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -109,6 +124,17 @@ mod tests {
         assert_eq!(gbps(Some(12.34)), "12.3");
         assert_eq!(gbps(None), "timeout");
         assert_eq!(us(Some(1_500_000)), "1.5");
+    }
+
+    #[test]
+    fn flow_summary_reads_sanely() {
+        let mut f = crate::metrics::FlowStats::default();
+        f.on_start(1, 0, 1, 100);
+        f.on_delivery(1, 2_000_000, 100);
+        let line = flow_summary(&f);
+        assert!(line.contains("1 started"), "{line}");
+        assert!(line.contains("(100.0%)"), "{line}");
+        assert!(line.contains("p50 2.0 us"), "{line}");
     }
 
     #[test]

@@ -1,0 +1,126 @@
+//! Bundled empirical flow-size distribution and arrival sampling.
+//!
+//! The `empirical` traffic pattern draws flow sizes from a web-search /
+//! hadoop-style heavy-tailed CDF (the shape popularized by the DCTCP
+//! measurement study and reused by most datacenter-transport papers):
+//! ~60 % of flows are short queries under 35 KB, but the top 5 % of
+//! flows carry most of the bytes. Arrivals are open-loop Poisson, so
+//! offered load is independent of how congested the fabric already is.
+
+use crate::sim::Time;
+use crate::util::rng::Rng;
+
+/// Piecewise-linear CDF as `(flow_bytes, cumulative_probability)`
+/// points; sampling interpolates linearly between consecutive points
+/// (and between [`CDF_MIN_BYTES`] and the first point).
+pub const WEB_SEARCH_CDF: &[(u64, f64)] = &[
+    (6_000, 0.15),
+    (13_000, 0.30),
+    (19_000, 0.45),
+    (33_000, 0.60),
+    (53_000, 0.70),
+    (133_000, 0.80),
+    (667_000, 0.90),
+    (1_467_000, 0.95),
+    (2_107_000, 0.98),
+    (6_667_000, 1.00),
+];
+
+/// Smallest flow the distribution produces (one short RPC).
+pub const CDF_MIN_BYTES: u64 = 1_000;
+
+/// Inverse-transform sample of the bundled flow-size CDF.
+pub fn sample_bytes(rng: &mut Rng) -> u64 {
+    let u = rng.f64();
+    let mut prev_b = CDF_MIN_BYTES as f64;
+    let mut prev_p = 0.0f64;
+    for &(bytes, p) in WEB_SEARCH_CDF {
+        if u <= p {
+            let w = if p > prev_p { (u - prev_p) / (p - prev_p) } else { 0.0 };
+            let b = prev_b + w * (bytes as f64 - prev_b);
+            return b as u64;
+        }
+        prev_b = bytes as f64;
+        prev_p = p;
+    }
+    // u in [0,1) and the last point has p = 1.0, so this is unreachable;
+    // keep the tail value as a safe fallback.
+    WEB_SEARCH_CDF[WEB_SEARCH_CDF.len() - 1].0
+}
+
+/// Analytic mean of the piecewise-linear distribution, used to convert
+/// an offered load into a Poisson arrival rate.
+pub fn mean_bytes() -> f64 {
+    let mut mean = 0.0;
+    let mut prev_b = CDF_MIN_BYTES as f64;
+    let mut prev_p = 0.0f64;
+    for &(bytes, p) in WEB_SEARCH_CDF {
+        // each linear segment contributes (mass) * (midpoint)
+        mean += (p - prev_p) * (prev_b + bytes as f64) / 2.0;
+        prev_b = bytes as f64;
+        prev_p = p;
+    }
+    mean
+}
+
+/// Exponential inter-arrival sample with the given mean (picoseconds),
+/// clamped to at least 1 ps so time always advances.
+pub fn sample_exp(rng: &mut Rng, mean_ps: f64) -> Time {
+    let u = rng.f64();
+    (-(1.0 - u).ln() * mean_ps).max(1.0) as Time
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cdf_is_monotone_and_complete() {
+        let mut prev_b = CDF_MIN_BYTES;
+        let mut prev_p = 0.0;
+        for &(b, p) in WEB_SEARCH_CDF {
+            assert!(b > prev_b, "sizes must increase");
+            assert!(p > prev_p, "probabilities must increase");
+            prev_b = b;
+            prev_p = p;
+        }
+        assert_eq!(prev_p, 1.0, "CDF must end at probability 1");
+    }
+
+    #[test]
+    fn samples_stay_in_range() {
+        let mut rng = Rng::new(42);
+        let max = WEB_SEARCH_CDF[WEB_SEARCH_CDF.len() - 1].0;
+        for _ in 0..10_000 {
+            let b = sample_bytes(&mut rng);
+            assert!((CDF_MIN_BYTES..=max).contains(&b), "sample {b}");
+        }
+    }
+
+    #[test]
+    fn sample_mean_matches_analytic() {
+        let mut rng = Rng::new(7);
+        let n = 200_000;
+        let sum: f64 = (0..n).map(|_| sample_bytes(&mut rng) as f64).sum();
+        let empirical = sum / n as f64;
+        let analytic = mean_bytes();
+        // heavy tail => slow convergence; 5 % is plenty to catch a
+        // broken interpolation
+        assert!(
+            (empirical - analytic).abs() / analytic < 0.05,
+            "empirical {empirical:.0} vs analytic {analytic:.0}"
+        );
+    }
+
+    #[test]
+    fn exponential_mean_and_positivity() {
+        let mut rng = Rng::new(9);
+        let mean = 1_000_000.0; // 1 us
+        let n = 100_000;
+        let sum: f64 =
+            (0..n).map(|_| sample_exp(&mut rng, mean) as f64).sum();
+        let emp = sum / n as f64;
+        assert!((emp - mean).abs() / mean < 0.03, "mean {emp:.0}");
+        assert!(sample_exp(&mut rng, 0.0) >= 1);
+    }
+}

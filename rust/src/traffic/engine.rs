@@ -1,0 +1,493 @@
+//! Per-host traffic state machine: destination plans, closed/open-loop
+//! injection and flow lifecycle bookkeeping.
+//!
+//! The closed-loop `uniform` path is **bit-compatible** with the legacy
+//! `host/background.rs` generator: it performs the same RNG draws in the
+//! same order, emits identical packets (src/dst/flow/wire size) and
+//! schedules the same wake cadence at `load = 1.0`, so every recorded
+//! figure series is unchanged under the default pattern
+//! (`tests/traffic_engine.rs` pins this against an inlined replica of
+//! the legacy state machine).
+
+use std::collections::VecDeque;
+
+use crate::sim::packet::{Packet, PacketKind};
+use crate::sim::{Ctx, NodeId, Time};
+use crate::util::rng::Rng;
+
+use super::cdf;
+use super::{Injection, TrafficPattern, TrafficSpec};
+
+/// Resolved per-host destination law (computed once at install time by
+/// [`build_plans`], so the wake path never re-derives group structure).
+#[derive(Clone, Debug)]
+pub enum DstPlan {
+    /// Fresh uniform-random peer per message (legacy behavior).
+    Uniform,
+    /// Fixed partner: permutation cycles and incast senders.
+    Fixed(NodeId),
+    /// With probability `skew` pick one of the `hot` hosts, else a
+    /// uniform-random peer.
+    Hotspot { hot: Vec<NodeId>, skew: f64 },
+    /// Generates nothing (incast sinks; they only absorb).
+    Sink,
+}
+
+/// A flow that has arrived (open loop) but not started transmitting.
+#[derive(Clone, Debug)]
+pub struct PendingFlow {
+    pub dst: NodeId,
+    pub pkts: u32,
+    pub flow: u64,
+}
+
+/// Traffic-generator state for one host.
+pub struct TrafficHost {
+    pub job: u32,
+    pub spec: TrafficSpec,
+    pub plan: DstPlan,
+    /// Packets left in the flow currently on the wire.
+    pub remaining: u32,
+    pub dst: NodeId,
+    /// Messages/flows generated so far (also the flow-id low bits).
+    pub msg_count: u64,
+    /// Flow id of the active flow.
+    pub flow: u64,
+    /// Open loop: next Poisson arrival instant (valid once `primed`).
+    pub next_arrival: Time,
+    /// Open loop: arrived flows waiting for the NIC.
+    pub backlog: VecDeque<PendingFlow>,
+    primed: bool,
+}
+
+impl TrafficHost {
+    pub fn new(job: u32, spec: TrafficSpec, plan: DstPlan) -> TrafficHost {
+        TrafficHost {
+            job,
+            spec,
+            plan,
+            remaining: 0,
+            dst: 0,
+            msg_count: 0,
+            flow: 0,
+            next_arrival: 0,
+            backlog: VecDeque::new(),
+            primed: false,
+        }
+    }
+}
+
+/// Flow label carried by every packet of a message: unique per
+/// (host, message) — the same encoding the legacy generator used.
+#[inline]
+pub fn flow_id(me: NodeId, msg_count: u64) -> u64 {
+    ((me as u64) << 32) | msg_count
+}
+
+/// Stretch the line-rate serialization gap to the offered load.
+/// `load = 1.0` returns `base_ps` exactly (legacy cadence).
+#[inline]
+pub fn pace(base_ps: u64, load: f64) -> u64 {
+    if load >= 1.0 {
+        base_ps
+    } else {
+        ((base_ps as f64) / load.max(1e-9)).ceil() as u64
+    }
+}
+
+/// Draw the next destination under `plan`, or `None` if this host
+/// cannot generate (sink, or fewer than two peers).
+fn draw_dst(
+    plan: &DstPlan,
+    rng: &mut Rng,
+    me: NodeId,
+    peers: &[NodeId],
+) -> Option<NodeId> {
+    let uniform = |rng: &mut Rng| -> Option<NodeId> {
+        if peers.len() < 2 {
+            return None;
+        }
+        loop {
+            let cand = *rng.choose(peers);
+            if cand != me {
+                return Some(cand);
+            }
+        }
+    };
+    match plan {
+        DstPlan::Sink => None,
+        DstPlan::Fixed(d) => Some(*d),
+        DstPlan::Uniform => uniform(rng),
+        DstPlan::Hotspot { hot, skew } => {
+            if peers.len() < 2 {
+                return None;
+            }
+            // a host that is itself the only hot target falls back to
+            // the uniform tail instead of spinning
+            let hot_usable = !hot.is_empty() && !(hot.len() == 1 && hot[0] == me);
+            if rng.chance(*skew) && hot_usable {
+                loop {
+                    let cand = hot[rng.index(hot.len())];
+                    if cand != me {
+                        return Some(cand);
+                    }
+                }
+            } else {
+                uniform(rng)
+            }
+        }
+    }
+}
+
+/// Draw the next message (destination, packet count) — shared by both
+/// injection modes. Pure in everything but the RNG, so the
+/// bit-compatibility test can drive it against the legacy state machine
+/// directly.
+pub fn next_message(
+    plan: &DstPlan,
+    pattern: TrafficPattern,
+    rng: &mut Rng,
+    me: NodeId,
+    peers: &[NodeId],
+    bg_message_bytes: u64,
+    payload_bytes: u64,
+) -> Option<(NodeId, u32)> {
+    let dst = draw_dst(plan, rng, me, peers)?;
+    let bytes = match pattern {
+        TrafficPattern::Empirical => cdf::sample_bytes(rng),
+        _ => bg_message_bytes,
+    };
+    Some((dst, (bytes.div_ceil(payload_bytes)).max(1) as u32))
+}
+
+/// Wake entry point (scheduled by `kick_jobs` at t=0 and self-clocked
+/// afterwards).
+pub fn on_wake(
+    me: NodeId,
+    th: &mut TrafficHost,
+    rng: &mut Rng,
+    ctx: &mut Ctx,
+    job: u32,
+) {
+    if matches!(th.plan, DstPlan::Sink) {
+        return;
+    }
+    match th.spec.injection {
+        Injection::Closed => closed_wake(me, th, rng, ctx, job),
+        Injection::Open => open_wake(me, th, rng, ctx, job),
+    }
+}
+
+/// Self-clocked stream: one packet per (load-stretched) serialization
+/// interval; a new message is drawn whenever the previous one ends.
+fn closed_wake(
+    me: NodeId,
+    th: &mut TrafficHost,
+    rng: &mut Rng,
+    ctx: &mut Ctx,
+    job: u32,
+) {
+    let payload = ctx.cfg.payload_bytes as u64;
+    if th.remaining == 0 {
+        let msg = {
+            let peers = &ctx.jobs[th.job as usize].spec.participants;
+            next_message(
+                &th.plan,
+                th.spec.pattern,
+                rng,
+                me,
+                peers,
+                ctx.cfg.bg_message_bytes,
+                payload,
+            )
+        };
+        let Some((dst, pkts)) = msg else { return };
+        th.dst = dst;
+        th.remaining = pkts;
+        th.msg_count += 1;
+        th.flow = flow_id(me, th.msg_count);
+        let now = ctx.now;
+        ctx.metrics.flows.on_start(
+            th.flow,
+            now,
+            pkts,
+            pkts as u64 * payload,
+        );
+    }
+
+    let mut pkt = Packet::data(PacketKind::Background, me, th.dst);
+    pkt.wire_bytes = ctx.cfg.wire_bytes();
+    pkt.flow = th.flow;
+    let wire = pkt.wire_bytes as u64;
+    ctx.send(0, pkt);
+    th.remaining -= 1;
+
+    let next = pace(wire * ctx.cfg.link_ps_per_byte, th.spec.load);
+    ctx.wake(next, job);
+}
+
+/// Poisson open loop: flows arrive at `load` of the line rate whatever
+/// the fabric does; the NIC drains the backlog at full line rate.
+fn open_wake(
+    me: NodeId,
+    th: &mut TrafficHost,
+    rng: &mut Rng,
+    ctx: &mut Ctx,
+    job: u32,
+) {
+    let payload = ctx.cfg.payload_bytes as u64;
+    // calibrate on *wire* occupancy so `load` means the same thing in
+    // both injection modes: one flow of mean_pkts full wire packets
+    // every mean_gap puts the NIC link at `load` (ceil(B/payload) has
+    // mean ~ B/payload + 1/2 for the CDF's smooth sizes)
+    let mean_pkts = match th.spec.pattern {
+        TrafficPattern::Empirical => {
+            cdf::mean_bytes() / payload as f64 + 0.5
+        }
+        _ => (ctx.cfg.bg_message_bytes.div_ceil(payload)).max(1) as f64,
+    };
+    let mean_gap = mean_pkts
+        * ctx.cfg.wire_bytes() as f64
+        * ctx.cfg.link_ps_per_byte as f64
+        / th.spec.load.max(1e-9);
+
+    if !th.primed {
+        th.primed = true;
+        th.next_arrival = ctx.now + cdf::sample_exp(rng, mean_gap);
+    }
+
+    // absorb every arrival that is due by now
+    while th.next_arrival <= ctx.now {
+        let born = th.next_arrival;
+        th.next_arrival += cdf::sample_exp(rng, mean_gap);
+        let msg = {
+            let peers = &ctx.jobs[th.job as usize].spec.participants;
+            next_message(
+                &th.plan,
+                th.spec.pattern,
+                rng,
+                me,
+                peers,
+                ctx.cfg.bg_message_bytes,
+                payload,
+            )
+        };
+        let Some((dst, pkts)) = msg else { return };
+        th.msg_count += 1;
+        let flow = flow_id(me, th.msg_count);
+        // FCT clock starts at *arrival*, so host queueing counts
+        ctx.metrics.flows.on_start(flow, born, pkts, pkts as u64 * payload);
+        th.backlog.push_back(PendingFlow { dst, pkts, flow });
+    }
+
+    if th.remaining == 0 {
+        match th.backlog.pop_front() {
+            Some(p) => {
+                th.dst = p.dst;
+                th.remaining = p.pkts;
+                th.flow = p.flow;
+            }
+            None => {
+                // idle: sleep until the next arrival
+                ctx.wake(th.next_arrival - ctx.now, job);
+                return;
+            }
+        }
+    }
+
+    let mut pkt = Packet::data(PacketKind::Background, me, th.dst);
+    pkt.wire_bytes = ctx.cfg.wire_bytes();
+    pkt.flow = th.flow;
+    let wire = pkt.wire_bytes as u64;
+    ctx.send(0, pkt);
+    th.remaining -= 1;
+    ctx.wake(wire * ctx.cfg.link_ps_per_byte, job);
+}
+
+/// Delivery at a traffic sink: account the packet toward its flow's
+/// completion (FCT is recorded when the last packet lands).
+pub fn on_packet(
+    _me: NodeId,
+    _th: &mut TrafficHost,
+    ctx: &mut Ctx,
+    pkt: Packet,
+) {
+    let payload = pkt
+        .wire_bytes
+        .saturating_sub(crate::sim::packet::HEADER_OVERHEAD_BYTES)
+        as u64;
+    let now = ctx.now;
+    ctx.metrics.flows.on_delivery(pkt.flow, now, payload);
+}
+
+/// Resolve one [`DstPlan`] per host for `spec`. `hosts` must be sorted
+/// ascending (the workload builder's background set is). The `uniform`
+/// pattern draws nothing from `rng`, which keeps legacy runs
+/// bit-identical.
+pub fn build_plans(
+    spec: &TrafficSpec,
+    hosts: &[NodeId],
+    rng: &mut Rng,
+) -> Vec<DstPlan> {
+    debug_assert!(
+        hosts.windows(2).all(|w| w[0] < w[1]),
+        "background host set must be sorted"
+    );
+    let n = hosts.len();
+    let pos = |h: NodeId, plans: &mut [DstPlan], plan: DstPlan| {
+        let i = hosts.binary_search(&h).expect("host in background set");
+        plans[i] = plan;
+    };
+    match spec.pattern {
+        TrafficPattern::Uniform | TrafficPattern::Empirical => {
+            vec![DstPlan::Uniform; n]
+        }
+        TrafficPattern::Permutation => {
+            let mut order = hosts.to_vec();
+            rng.shuffle(&mut order);
+            let mut plans = vec![DstPlan::Uniform; n];
+            for i in 0..n {
+                pos(order[i], &mut plans, DstPlan::Fixed(order[(i + 1) % n]));
+            }
+            plans
+        }
+        TrafficPattern::Incast { fan_in } => {
+            let mut order = hosts.to_vec();
+            rng.shuffle(&mut order);
+            // groups of fan_in+1: first member sinks, the rest stream
+            // at it; a trailing singleton just sinks
+            let mut plans = vec![DstPlan::Sink; n];
+            for chunk in order.chunks(fan_in as usize + 1) {
+                let sink = chunk[0];
+                for &m in &chunk[1..] {
+                    pos(m, &mut plans, DstPlan::Fixed(sink));
+                }
+            }
+            plans
+        }
+        TrafficPattern::Hotspot { k, skew } => {
+            let k = (k as usize).min(n);
+            let hot: Vec<NodeId> = rng
+                .sample_indices(n, k)
+                .into_iter()
+                .map(|i| hosts[i])
+                .collect();
+            (0..n)
+                .map(|_| DstPlan::Hotspot {
+                    hot: hot.clone(),
+                    skew,
+                })
+                .collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::traffic::TrafficSpec;
+
+    #[test]
+    fn pace_is_identity_at_full_load() {
+        assert_eq!(pace(86_480, 1.0), 86_480);
+        assert_eq!(pace(100, 0.5), 200);
+        assert_eq!(pace(100, 0.3), 334); // ceil(100/0.3)
+    }
+
+    #[test]
+    fn flow_ids_match_legacy_encoding() {
+        assert_eq!(flow_id(3, 7), (3u64 << 32) | 7);
+    }
+
+    #[test]
+    fn permutation_plans_form_a_cycle() {
+        let hosts: Vec<NodeId> = (10..26).collect();
+        let mut rng = Rng::new(5);
+        let plans =
+            build_plans(&TrafficSpec::permutation(), &hosts, &mut rng);
+        let mut dsts: Vec<NodeId> = plans
+            .iter()
+            .zip(&hosts)
+            .map(|(p, &h)| match p {
+                DstPlan::Fixed(d) => {
+                    assert_ne!(*d, h, "no self-loops");
+                    *d
+                }
+                other => panic!("expected Fixed, got {other:?}"),
+            })
+            .collect();
+        dsts.sort_unstable();
+        assert_eq!(dsts, hosts, "every host receives exactly once");
+    }
+
+    #[test]
+    fn incast_plans_group_senders_on_sinks() {
+        let hosts: Vec<NodeId> = (0..20).collect();
+        let mut rng = Rng::new(6);
+        let plans = build_plans(&TrafficSpec::incast(4), &hosts, &mut rng);
+        let sinks: Vec<NodeId> = plans
+            .iter()
+            .zip(&hosts)
+            .filter(|(p, _)| matches!(p, DstPlan::Sink))
+            .map(|(_, &h)| h)
+            .collect();
+        assert_eq!(sinks.len(), 4, "20 hosts / groups of 5 = 4 sinks");
+        for (p, &h) in plans.iter().zip(&hosts) {
+            if let DstPlan::Fixed(d) = p {
+                assert!(sinks.contains(d), "sender {h} targets a sink");
+                assert_ne!(*d, h);
+            }
+        }
+    }
+
+    #[test]
+    fn hotspot_plans_share_one_hot_set() {
+        let hosts: Vec<NodeId> = (0..32).collect();
+        let mut rng = Rng::new(7);
+        let plans =
+            build_plans(&TrafficSpec::hotspot(3, 0.9), &hosts, &mut rng);
+        let DstPlan::Hotspot { hot, skew } = &plans[0] else {
+            panic!("expected hotspot plan");
+        };
+        assert_eq!(hot.len(), 3);
+        assert_eq!(*skew, 0.9);
+        for p in &plans {
+            let DstPlan::Hotspot { hot: h, .. } = p else {
+                panic!("expected hotspot plan");
+            };
+            assert_eq!(h, hot, "all hosts aim at the same hot set");
+        }
+    }
+
+    #[test]
+    fn uniform_plans_draw_nothing_from_the_rng() {
+        let hosts: Vec<NodeId> = (0..8).collect();
+        let mut a = Rng::new(3);
+        let mut b = Rng::new(3);
+        build_plans(&TrafficSpec::uniform(), &hosts, &mut a);
+        build_plans(&TrafficSpec::empirical(), &hosts, &mut b);
+        // both leave the RNG untouched => identical next draws
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn sink_never_draws_a_destination() {
+        let mut rng = Rng::new(1);
+        assert!(draw_dst(&DstPlan::Sink, &mut rng, 0, &[0, 1, 2]).is_none());
+    }
+
+    #[test]
+    fn hotspot_self_only_falls_back_to_uniform() {
+        // host 5 is the single hot target: it must still pick peers
+        let plan = DstPlan::Hotspot {
+            hot: vec![5],
+            skew: 1.0,
+        };
+        let peers = [4, 5, 6];
+        let mut rng = Rng::new(2);
+        for _ in 0..50 {
+            let d = draw_dst(&plan, &mut rng, 5, &peers).unwrap();
+            assert_ne!(d, 5);
+        }
+    }
+}

@@ -1,0 +1,418 @@
+//! Flow-level traffic engine: adversarial cross-traffic patterns for the
+//! congestion experiments.
+//!
+//! The paper evaluates Canary against exactly one congestion shape — a
+//! random-uniform line-rate stream from every non-participant host
+//! (Section 5.2). That shape is gentle: load spreads evenly, so any
+//! adaptive scheme looks good. The patterns congestion-aware in-network
+//! computing actually has to survive are skewed and bursty (incast fan-in,
+//! hot services, heavy-tailed flow sizes — Segal et al., De Sensi et al.
+//! *Flare*). This module makes the congestion generator a first-class,
+//! pluggable subsystem:
+//!
+//! - [`TrafficPattern`] — destination/size laws: `uniform` (the paper's
+//!   stream, bit-compatible with the legacy generator), `permutation`
+//!   (fixed random one-to-one pairing), `incast` (groups of `fan_in`
+//!   senders pounding one sink), `hotspot` (a skewed share of all traffic
+//!   aimed at `k` hot hosts), and `empirical` (flow sizes drawn from a
+//!   bundled web-search-style CDF, [`cdf`]).
+//! - [`Injection`] — closed-loop (self-clocked stream: the next message
+//!   starts when the previous one finished serializing, paced to `load`)
+//!   vs open-loop (flows arrive by a Poisson process at `load` of the
+//!   NIC rate regardless of drain progress, so queues can actually grow).
+//! - Per-flow lifecycle tracking with flow-completion-time percentiles,
+//!   surfaced through `metrics::FlowStats` and the `figures` harness
+//!   (`figures traffic`).
+//!
+//! The per-host state machine lives in [`engine`]; `host/background.rs`
+//! re-exports it under the legacy names.
+
+pub mod cdf;
+pub mod engine;
+
+pub use engine::{DstPlan, TrafficHost};
+
+/// Destination/size law of the generated cross traffic.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TrafficPattern {
+    /// Fresh uniform-random destination per message (paper Section 5.2).
+    Uniform,
+    /// Fixed random one-to-one pairing: every host streams to a single
+    /// partner (a permutation cycle), the classic worst case for
+    /// oblivious routing.
+    Permutation,
+    /// Groups of `fan_in` senders all stream to one sink host.
+    Incast { fan_in: u32 },
+    /// A `skew` fraction of all messages targets `k` hot hosts; the
+    /// rest is uniform.
+    Hotspot { k: u32, skew: f64 },
+    /// Flow sizes drawn from the bundled heavy-tailed web-search CDF
+    /// ([`cdf::WEB_SEARCH_CDF`]); destinations uniform.
+    Empirical,
+}
+
+/// How flows are injected relative to the NIC drain.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Injection {
+    /// Self-clocked stream: the next packet is scheduled when the
+    /// previous one finished serializing, with the gap stretched by
+    /// `1/load`. The legacy background generator is `Closed` at
+    /// `load = 1.0`.
+    Closed,
+    /// Poisson flow arrivals at `load` of the NIC line rate,
+    /// independent of drain progress; pending flows queue at the host
+    /// and FCT includes that queueing delay.
+    Open,
+}
+
+/// Full cross-traffic specification carried by a
+/// [`crate::workload::Scenario`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TrafficSpec {
+    pub pattern: TrafficPattern,
+    /// Offered load as a fraction of the NIC line rate, in `(0, 1]`.
+    pub load: f64,
+    pub injection: Injection,
+}
+
+impl Default for TrafficSpec {
+    /// The paper's congestion generator (random-uniform, line rate).
+    fn default() -> Self {
+        TrafficSpec::uniform()
+    }
+}
+
+impl TrafficSpec {
+    /// The paper's Section 5.2 stream: random-uniform destinations at
+    /// line rate, closed-loop. Bit-compatible with the legacy
+    /// `host/background.rs` generator (`tests/traffic_engine.rs`).
+    pub fn uniform() -> Self {
+        TrafficSpec {
+            pattern: TrafficPattern::Uniform,
+            load: 1.0,
+            injection: Injection::Closed,
+        }
+    }
+
+    pub fn permutation() -> Self {
+        TrafficSpec {
+            pattern: TrafficPattern::Permutation,
+            load: 1.0,
+            injection: Injection::Closed,
+        }
+    }
+
+    pub fn incast(fan_in: u32) -> Self {
+        TrafficSpec {
+            pattern: TrafficPattern::Incast { fan_in },
+            load: 1.0,
+            injection: Injection::Closed,
+        }
+    }
+
+    pub fn hotspot(k: u32, skew: f64) -> Self {
+        TrafficSpec {
+            pattern: TrafficPattern::Hotspot { k, skew },
+            load: 1.0,
+            injection: Injection::Closed,
+        }
+    }
+
+    /// Heavy-tailed flow sizes with Poisson open-loop arrivals at 60 %
+    /// load — the datacenter-trace-style workload.
+    pub fn empirical() -> Self {
+        TrafficSpec {
+            pattern: TrafficPattern::Empirical,
+            load: 0.6,
+            injection: Injection::Open,
+        }
+    }
+
+    pub fn with_load(mut self, load: f64) -> Self {
+        self.load = load;
+        self
+    }
+
+    pub fn open(mut self) -> Self {
+        self.injection = Injection::Open;
+        self
+    }
+
+    pub fn closed(mut self) -> Self {
+        self.injection = Injection::Closed;
+        self
+    }
+
+    /// Short pattern tag for CSV cells and log lines (`incast:8`,
+    /// `hotspot:4:0.90`, ...).
+    pub fn name(&self) -> String {
+        match self.pattern {
+            TrafficPattern::Uniform => "uniform".into(),
+            TrafficPattern::Permutation => "permutation".into(),
+            TrafficPattern::Incast { fan_in } => format!("incast:{fan_in}"),
+            TrafficPattern::Hotspot { k, skew } => {
+                format!("hotspot:{k}:{skew:.2}")
+            }
+            TrafficPattern::Empirical => "empirical".into(),
+        }
+    }
+
+    /// Reject physically meaningless parameters.
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.load > 0.0 && self.load <= 1.0) {
+            return Err(format!(
+                "traffic load must be in (0, 1], got {}",
+                self.load
+            ));
+        }
+        match self.pattern {
+            TrafficPattern::Incast { fan_in } if fan_in == 0 => {
+                Err("incast fan_in must be >= 1".into())
+            }
+            TrafficPattern::Hotspot { k, skew } => {
+                if k == 0 {
+                    return Err("hotspot k must be >= 1".into());
+                }
+                if !(0.0..=1.0).contains(&skew) {
+                    return Err(format!(
+                        "hotspot skew must be in [0, 1], got {skew}"
+                    ));
+                }
+                Ok(())
+            }
+            _ => Ok(()),
+        }
+    }
+
+    /// Parse a CLI pattern string. Grammar:
+    ///
+    /// ```text
+    /// none | off
+    /// uniform | permutation | empirical
+    /// incast:<fan_in>
+    /// hotspot:<k>[:<skew>]            (skew defaults to 0.9)
+    /// <pattern>@open | <pattern>@closed
+    /// ```
+    ///
+    /// `Ok(None)` means traffic is off. The offered load is a separate
+    /// knob (`--bg-load`, [`TrafficSpec::with_load`]).
+    pub fn parse(s: &str) -> Result<Option<TrafficSpec>, String> {
+        let (body, injection) = match s.split_once('@') {
+            None => (s, None),
+            Some((b, "open")) => (b, Some(Injection::Open)),
+            Some((b, "closed")) => (b, Some(Injection::Closed)),
+            Some((_, other)) => {
+                return Err(format!(
+                    "bad injection suffix '@{other}' (open|closed)"
+                ))
+            }
+        };
+        let mut parts = body.split(':');
+        let head = parts.next().unwrap_or("");
+        let args: Vec<&str> = parts.collect();
+        let want = |n: usize| -> Result<(), String> {
+            if args.len() == n {
+                Ok(())
+            } else {
+                Err(format!(
+                    "pattern '{head}' takes {n} argument(s), got {}",
+                    args.len()
+                ))
+            }
+        };
+        let num = |i: usize, what: &str| -> Result<u32, String> {
+            args[i]
+                .parse::<u32>()
+                .map_err(|_| format!("bad {what} '{}'", args[i]))
+        };
+        let mut spec = match head {
+            "none" | "off" => {
+                want(0)?;
+                if injection.is_some() {
+                    return Err("'none' takes no @injection".into());
+                }
+                return Ok(None);
+            }
+            "uniform" => {
+                want(0)?;
+                TrafficSpec::uniform()
+            }
+            "permutation" => {
+                want(0)?;
+                TrafficSpec::permutation()
+            }
+            "incast" => {
+                want(1)?;
+                TrafficSpec::incast(num(0, "incast fan_in")?)
+            }
+            "hotspot" => {
+                if args.is_empty() || args.len() > 2 {
+                    return Err(
+                        "hotspot takes <k>[:<skew>] argument(s)".into()
+                    );
+                }
+                let k = num(0, "hotspot k")?;
+                let skew = if args.len() == 2 {
+                    args[1]
+                        .parse::<f64>()
+                        .map_err(|_| format!("bad hotspot skew '{}'", args[1]))?
+                } else {
+                    0.9
+                };
+                TrafficSpec::hotspot(k, skew)
+            }
+            "empirical" => {
+                want(0)?;
+                TrafficSpec::empirical()
+            }
+            other => {
+                return Err(format!(
+                    "unknown traffic pattern '{other}' (none|uniform|\
+                     permutation|incast:F|hotspot:K[:SKEW]|empirical)"
+                ))
+            }
+        };
+        if let Some(i) = injection {
+            spec.injection = i;
+        }
+        spec.validate()?;
+        Ok(Some(spec))
+    }
+
+    /// Parse a JSON traffic description, e.g.
+    /// `{"pattern": "incast", "fan_in": 32, "load": 0.6,
+    /// "injection": "open"}`. `{"pattern": "none"}` turns traffic off.
+    pub fn from_json(text: &str) -> Result<Option<TrafficSpec>, String> {
+        let v = crate::util::json::parse(text)?;
+        let pat = v
+            .get("pattern")
+            .and_then(|p| p.as_str())
+            .ok_or("missing string key 'pattern'")?;
+        let int_key = |key: &str| -> Result<u32, String> {
+            let i = v
+                .get(key)
+                .and_then(|x| x.as_i64())
+                .ok_or_else(|| format!("'{pat}' needs integer key '{key}'"))?;
+            u32::try_from(i).map_err(|_| format!("'{key}' out of range: {i}"))
+        };
+        let mut spec = match pat {
+            "none" | "off" => return Ok(None),
+            "uniform" => TrafficSpec::uniform(),
+            "permutation" => TrafficSpec::permutation(),
+            "incast" => TrafficSpec::incast(int_key("fan_in")?),
+            "hotspot" => {
+                let skew = v
+                    .get("skew")
+                    .and_then(|x| x.as_f64())
+                    .unwrap_or(0.9);
+                TrafficSpec::hotspot(int_key("k")?, skew)
+            }
+            "empirical" => TrafficSpec::empirical(),
+            other => return Err(format!("unknown traffic pattern '{other}'")),
+        };
+        if let Some(load) = v.get("load").and_then(|x| x.as_f64()) {
+            spec.load = load;
+        }
+        match v.get("injection").and_then(|x| x.as_str()) {
+            None => {}
+            Some("open") => spec.injection = Injection::Open,
+            Some("closed") => spec.injection = Injection::Closed,
+            Some(other) => {
+                return Err(format!(
+                    "bad injection '{other}' (open|closed)"
+                ))
+            }
+        }
+        spec.validate()?;
+        Ok(Some(spec))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_all_patterns() {
+        assert_eq!(TrafficSpec::parse("none").unwrap(), None);
+        assert_eq!(TrafficSpec::parse("off").unwrap(), None);
+        assert_eq!(
+            TrafficSpec::parse("uniform").unwrap(),
+            Some(TrafficSpec::uniform())
+        );
+        assert_eq!(
+            TrafficSpec::parse("incast:32").unwrap(),
+            Some(TrafficSpec::incast(32))
+        );
+        let h = TrafficSpec::parse("hotspot:4:0.8").unwrap().unwrap();
+        assert_eq!(
+            h.pattern,
+            TrafficPattern::Hotspot { k: 4, skew: 0.8 }
+        );
+        let h = TrafficSpec::parse("hotspot:4").unwrap().unwrap();
+        assert_eq!(
+            h.pattern,
+            TrafficPattern::Hotspot { k: 4, skew: 0.9 }
+        );
+        let e = TrafficSpec::parse("empirical").unwrap().unwrap();
+        assert_eq!(e.injection, Injection::Open);
+    }
+
+    #[test]
+    fn parse_injection_suffix() {
+        let s = TrafficSpec::parse("permutation@open").unwrap().unwrap();
+        assert_eq!(s.injection, Injection::Open);
+        let s = TrafficSpec::parse("empirical@closed").unwrap().unwrap();
+        assert_eq!(s.injection, Injection::Closed);
+        assert!(TrafficSpec::parse("uniform@sideways").is_err());
+        assert!(TrafficSpec::parse("none@open").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(TrafficSpec::parse("blizzard").is_err());
+        assert!(TrafficSpec::parse("incast").is_err());
+        assert!(TrafficSpec::parse("incast:many").is_err());
+        assert!(TrafficSpec::parse("incast:0").is_err());
+        assert!(TrafficSpec::parse("hotspot:4:1.5").is_err());
+        assert!(TrafficSpec::parse("uniform:3").is_err());
+    }
+
+    #[test]
+    fn validate_load_bounds() {
+        assert!(TrafficSpec::uniform().with_load(0.0).validate().is_err());
+        assert!(TrafficSpec::uniform().with_load(1.5).validate().is_err());
+        assert!(TrafficSpec::uniform().with_load(0.3).validate().is_ok());
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let s = TrafficSpec::from_json(
+            r#"{"pattern": "incast", "fan_in": 8, "load": 0.5,
+                "injection": "open"}"#,
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(s.pattern, TrafficPattern::Incast { fan_in: 8 });
+        assert_eq!(s.load, 0.5);
+        assert_eq!(s.injection, Injection::Open);
+        assert_eq!(
+            TrafficSpec::from_json(r#"{"pattern": "none"}"#).unwrap(),
+            None
+        );
+        assert!(TrafficSpec::from_json(r#"{"pattern": "incast"}"#).is_err());
+        assert!(
+            TrafficSpec::from_json(r#"{"pattern": "uniform", "load": 2}"#)
+                .is_err()
+        );
+        assert!(TrafficSpec::from_json(r#"{"load": 0.5}"#).is_err());
+    }
+
+    #[test]
+    fn names_are_stable() {
+        assert_eq!(TrafficSpec::uniform().name(), "uniform");
+        assert_eq!(TrafficSpec::incast(8).name(), "incast:8");
+        assert_eq!(TrafficSpec::hotspot(4, 0.9).name(), "hotspot:4:0.90");
+        assert_eq!(TrafficSpec::empirical().name(), "empirical");
+    }
+}

@@ -23,6 +23,7 @@ use crate::runtime::{
 };
 use crate::sim::Time;
 use crate::switch::alu;
+use crate::traffic::TrafficSpec;
 use crate::util::rng::Rng;
 use crate::workload::{build_scenario, Scenario};
 
@@ -186,7 +187,7 @@ impl Trainer {
             lb: LoadBalancer::default(),
             algo: self.cfg.algo,
             n_allreduce_hosts: self.cfg.workers as u32,
-            congestion: self.cfg.congestion,
+            traffic: self.cfg.congestion.then(TrafficSpec::uniform),
             data_bytes: grad_bytes,
             record_results: false,
         };

@@ -8,6 +8,8 @@
 //! - [`stats`] — means, percentiles, histograms
 //! - [`bench`] — measured-iteration micro-bench harness (substitute for
 //!   `criterion`; used by the `harness = false` bench targets)
+//! - [`par`] — scoped-thread fork/join map (substitute for `rayon`;
+//!   used by the figure harness for per-seed fan-out)
 //! - [`proptest_lite`] — seeded random property-test runner (substitute
 //!   for `proptest`)
 
@@ -15,6 +17,7 @@ pub mod bench;
 pub mod cli;
 pub mod error;
 pub mod json;
+pub mod par;
 pub mod proptest_lite;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,82 @@
+//! Zero-crate fork/join helper (rayon substitute, DESIGN.md §7): fan a
+//! pure indexed job out over `std::thread` scoped workers.
+//!
+//! Results land in index order whatever the thread scheduling does, so
+//! figure series stay deterministic; the simulator itself is
+//! single-threaded per run and every run owns its state, which makes
+//! per-seed / per-cell fan-out embarrassingly parallel.
+
+/// Compute `f(0..n)` across OS threads and return the results in index
+/// order. `f` must be `Sync` (it is shared by reference); each result
+/// slot is written by exactly one worker.
+pub fn par_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .min(n.max(1));
+    let mut out: Vec<Option<T>> =
+        std::iter::repeat_with(|| None).take(n).collect();
+    if workers <= 1 {
+        for (i, slot) in out.iter_mut().enumerate() {
+            *slot = Some(f(i));
+        }
+    } else {
+        // static round-robin split: disjoint &mut slots per worker, no
+        // locks, deterministic result placement
+        let mut buckets: Vec<Vec<(usize, &mut Option<T>)>> =
+            (0..workers).map(|_| Vec::new()).collect();
+        for (i, slot) in out.iter_mut().enumerate() {
+            buckets[i % workers].push((i, slot));
+        }
+        let f = &f;
+        std::thread::scope(|s| {
+            for bucket in buckets {
+                s.spawn(move || {
+                    for (i, slot) in bucket {
+                        *slot = Some(f(i));
+                    }
+                });
+            }
+        });
+    }
+    out.into_iter()
+        .map(|v| v.expect("par_map worker filled every slot"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_index_order() {
+        let got = par_map(100, |i| i * i);
+        let want: Vec<usize> = (0..100).map(|i| i * i).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn handles_empty_and_single() {
+        assert_eq!(par_map(0, |i| i), Vec::<usize>::new());
+        assert_eq!(par_map(1, |i| i + 7), vec![7]);
+    }
+
+    #[test]
+    fn runs_real_work_on_many_items() {
+        // more items than any realistic worker count
+        let got = par_map(257, |i| {
+            let mut acc = 0u64;
+            for k in 0..100 {
+                acc = acc.wrapping_add((i as u64).wrapping_mul(k));
+            }
+            acc
+        });
+        assert_eq!(got.len(), 257);
+        assert_eq!(got[0], 0);
+        assert_eq!(got[2], (0..100u64).map(|k| 2 * k).sum::<u64>());
+    }
+}

@@ -22,12 +22,19 @@ pub fn stddev(xs: &[f64]) -> f64 {
 
 /// Linear-interpolated percentile, `q` in [0, 100].
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
-    assert!((0.0..=100.0).contains(&q));
-    if xs.is_empty() {
-        return 0.0;
-    }
     let mut sorted = xs.to_vec();
     sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&sorted, q)
+}
+
+/// [`percentile`] over an already-ascending slice — sort once, read
+/// many quantiles.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!((0.0..=100.0).contains(&q));
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    debug_assert!(sorted.windows(2).all(|w| w[0] <= w[1]));
     let rank = q / 100.0 * (sorted.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -107,6 +114,11 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 4.0);
         assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+        // unsorted input routes through a sort; the _sorted variant
+        // reads the buffer as-is
+        assert_eq!(percentile(&[4.0, 1.0, 3.0, 2.0], 100.0), 4.0);
+        assert!((percentile_sorted(&xs, 25.0) - 1.75).abs() < 1e-12);
+        assert_eq!(percentile_sorted(&[], 50.0), 0.0);
     }
 
     #[test]

@@ -11,6 +11,7 @@ use canary::collectives::{expected_block_sum, runner, Algo};
 use canary::config::{FatTreeConfig, SimConfig};
 use canary::loadbalance::LoadBalancer;
 use canary::sim::US;
+use canary::traffic::TrafficSpec;
 use canary::util::proptest_lite::check_property;
 use canary::util::rng::Rng;
 use canary::workload::{build_scenario, Scenario};
@@ -72,7 +73,7 @@ fn values_scenario(
         lb: LoadBalancer::default(),
         algo,
         n_allreduce_hosts: hosts,
-        congestion,
+        traffic: congestion.then(TrafficSpec::uniform),
         data_bytes,
         record_results: true,
     }
@@ -229,7 +230,7 @@ fn ring_completes_at_expected_bandwidth() {
         lb: LoadBalancer::default(),
         algo: Algo::Ring,
         n_allreduce_hosts: 16,
-        congestion: false,
+        traffic: None,
         data_bytes: 1 << 20,
         record_results: false,
     };

@@ -21,7 +21,7 @@ fn lossy_scenario(hosts: u32, kib: u64) -> Scenario {
         lb: LoadBalancer::default(),
         algo: Algo::Canary,
         n_allreduce_hosts: hosts,
-        congestion: false,
+        traffic: None,
         data_bytes: kib * 1024,
         record_results: true,
     }

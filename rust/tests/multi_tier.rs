@@ -8,6 +8,7 @@ use canary::collectives::{expected_block_sum, runner, Algo};
 use canary::config::{ClosConfig, SimConfig};
 use canary::loadbalance::LoadBalancer;
 use canary::sim::US;
+use canary::traffic::TrafficSpec;
 use canary::util::proptest_lite::check_property;
 use canary::util::rng::Rng;
 use canary::workload::{build_scenario, Scenario};
@@ -26,7 +27,7 @@ fn scenario3(
         lb: LoadBalancer::default(),
         algo,
         n_allreduce_hosts: hosts,
-        congestion,
+        traffic: congestion.then(TrafficSpec::uniform),
         data_bytes: data_kib * 1024,
         record_results: values,
     }

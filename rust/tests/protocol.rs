@@ -6,6 +6,7 @@ use canary::collectives::{runner, Algo};
 use canary::config::{FatTreeConfig, SimConfig};
 use canary::loadbalance::LoadBalancer;
 use canary::sim::US;
+use canary::traffic::TrafficSpec;
 use canary::util::proptest_lite::check_property;
 use canary::util::rng::Rng;
 use canary::workload::{build_scenario, Scenario};
@@ -22,7 +23,7 @@ fn scenario(
         lb: LoadBalancer::default(),
         algo,
         n_allreduce_hosts: hosts,
-        congestion,
+        traffic: congestion.then(TrafficSpec::uniform),
         data_bytes: data_kib * 1024,
         record_results: false,
     }
@@ -168,7 +169,7 @@ fn fair_queueing_splits_a_shared_link() {
         lb: LoadBalancer::default(),
         algo: Algo::Canary,
         n_allreduce_hosts: 4,
-        congestion: true,
+        traffic: Some(TrafficSpec::uniform()),
         data_bytes: 512 * 1024,
         record_results: false,
     };

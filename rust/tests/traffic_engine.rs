@@ -1,0 +1,249 @@
+//! Traffic-engine guarantees: the closed-loop `uniform` pattern is
+//! bit-compatible with the legacy background generator (so every
+//! recorded figure series is unchanged under the default pattern), every
+//! pattern is deterministic from its seed, pattern structure lands on
+//! the installed hosts as specified, and flow/FCT accounting is
+//! consistent end to end.
+
+use canary::collectives::Algo;
+use canary::config::{FatTreeConfig, SimConfig};
+use canary::loadbalance::LoadBalancer;
+use canary::sim::{NodeBody, NodeId, US};
+use canary::traffic::engine::{self, next_message, DstPlan};
+use canary::traffic::{TrafficPattern, TrafficSpec};
+use canary::util::rng::Rng;
+use canary::workload::{build_scenario, Scenario};
+
+fn scenario(traffic: Option<TrafficSpec>) -> Scenario {
+    Scenario {
+        topo: FatTreeConfig::small(),
+        sim: SimConfig::default(),
+        lb: LoadBalancer::default(),
+        algo: Algo::Canary,
+        n_allreduce_hosts: 8,
+        traffic,
+        data_bytes: 64 * 1024,
+        record_results: false,
+    }
+}
+
+/// The legacy `host/background.rs` message draw, reproduced verbatim:
+/// uniform peer re-drawn until it differs from `me`, fixed message size
+/// in MTU packets. The engine's closed-loop uniform path must make the
+/// exact same RNG calls in the same order.
+fn legacy_next_message(
+    rng: &mut Rng,
+    me: NodeId,
+    participants: &[NodeId],
+    bg_message_bytes: u64,
+    payload_bytes: u64,
+) -> Option<(NodeId, u32)> {
+    if participants.len() < 2 {
+        return None;
+    }
+    let dst = loop {
+        let cand = *rng.choose(participants);
+        if cand != me {
+            break cand;
+        }
+    };
+    Some((dst, (bg_message_bytes.div_ceil(payload_bytes)).max(1) as u32))
+}
+
+#[test]
+fn uniform_is_bit_compatible_with_legacy_generator() {
+    let cfg = SimConfig::default();
+    // irregular peer set incl. `me`, as a real background job sees it
+    let peers: Vec<NodeId> = vec![3, 7, 8, 12, 19, 23, 31, 40, 41, 57];
+    for me in [3u32, 19, 57] {
+        let mut legacy_rng = Rng::new(0xBEEF ^ me as u64);
+        let mut engine_rng = Rng::new(0xBEEF ^ me as u64);
+        for step in 0..1000 {
+            let legacy = legacy_next_message(
+                &mut legacy_rng,
+                me,
+                &peers,
+                cfg.bg_message_bytes,
+                cfg.payload_bytes as u64,
+            );
+            let engine = next_message(
+                &DstPlan::Uniform,
+                TrafficPattern::Uniform,
+                &mut engine_rng,
+                me,
+                &peers,
+                cfg.bg_message_bytes,
+                cfg.payload_bytes as u64,
+            );
+            assert_eq!(legacy, engine, "diverged at step {step} (me={me})");
+        }
+    }
+    // same wake cadence at full load: exactly one wire serialization
+    let wire = cfg.wire_bytes() as u64;
+    assert_eq!(
+        engine::pace(wire * cfg.link_ps_per_byte, 1.0),
+        wire * cfg.link_ps_per_byte
+    );
+    // and the same flow-label encoding
+    assert_eq!(engine::flow_id(5, 9), ((5u64) << 32) | 9);
+}
+
+#[test]
+fn every_pattern_is_deterministic_from_its_seed() {
+    let specs = [
+        TrafficSpec::uniform(),
+        TrafficSpec::permutation(),
+        TrafficSpec::incast(4),
+        TrafficSpec::hotspot(3, 0.9),
+        TrafficSpec::empirical(),
+        TrafficSpec::uniform().with_load(0.5),
+        TrafficSpec::permutation().open().with_load(0.6),
+    ];
+    for spec in specs {
+        let run = || {
+            // fixed window (no early allreduce exit) so every pattern
+            // generates a substantial, fully comparable event stream
+            let mut exp = build_scenario(&scenario(Some(spec)), 42);
+            exp.net.kick_jobs();
+            exp.net.run_all(500 * US);
+            let m = &exp.net.metrics;
+            (
+                exp.net.events_processed,
+                m.pkts_delivered,
+                m.flows.started,
+                m.flows.completed,
+                m.flows.fct_ps.clone(),
+            )
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "non-deterministic run for {}", spec.name());
+        assert!(
+            a.2 > 0,
+            "{}: background hosts generated no flows",
+            spec.name()
+        );
+    }
+}
+
+/// Pull the installed traffic plan off every background host.
+fn installed_plans(
+    exp: &canary::workload::Experiment,
+) -> Vec<(NodeId, DstPlan)> {
+    let mut plans = Vec::new();
+    for node in &exp.net.nodes {
+        if let NodeBody::Host(h) = &node.body {
+            if let canary::host::Proto::Background(th) = &h.proto {
+                plans.push((node.id, th.plan.clone()));
+            }
+        }
+    }
+    plans
+}
+
+#[test]
+fn permutation_installs_a_self_free_cycle() {
+    let exp = build_scenario(&scenario(Some(TrafficSpec::permutation())), 7);
+    let plans = installed_plans(&exp);
+    assert!(plans.len() >= 2);
+    let senders: Vec<NodeId> = plans.iter().map(|(h, _)| *h).collect();
+    let mut dsts = Vec::new();
+    for (h, p) in &plans {
+        match p {
+            DstPlan::Fixed(d) => {
+                assert_ne!(d, h, "no self-loops");
+                assert!(senders.contains(d), "partner is a bg host");
+                dsts.push(*d);
+            }
+            other => panic!("expected Fixed plan, got {other:?}"),
+        }
+    }
+    dsts.sort_unstable();
+    let mut expect = senders.clone();
+    expect.sort_unstable();
+    assert_eq!(dsts, expect, "every bg host receives exactly one stream");
+}
+
+#[test]
+fn incast_installs_sinks_and_aimed_senders() {
+    let fan_in = 4u32;
+    let exp =
+        build_scenario(&scenario(Some(TrafficSpec::incast(fan_in))), 7);
+    let plans = installed_plans(&exp);
+    let sinks: Vec<NodeId> = plans
+        .iter()
+        .filter(|(_, p)| matches!(p, DstPlan::Sink))
+        .map(|(h, _)| *h)
+        .collect();
+    assert!(!sinks.is_empty());
+    let mut fan_counts = std::collections::BTreeMap::new();
+    for (h, p) in &plans {
+        if let DstPlan::Fixed(d) = p {
+            assert!(sinks.contains(d), "sender {h} must target a sink");
+            *fan_counts.entry(*d).or_insert(0u32) += 1;
+        }
+    }
+    for (_, count) in fan_counts {
+        assert!(count <= fan_in, "group larger than fan_in");
+    }
+}
+
+#[test]
+fn flow_accounting_is_consistent_end_to_end() {
+    let mut exp = build_scenario(&scenario(Some(TrafficSpec::uniform())), 11);
+    exp.net.kick_jobs();
+    exp.net.run_all(500 * US);
+    let f = &exp.net.metrics.flows;
+    assert!(f.started > 0, "flows must start");
+    assert!(f.completed > 0, "some flows must complete");
+    assert!(f.completed <= f.started);
+    assert_eq!(f.fct_ps.len() as u64, f.completed);
+    assert_eq!(f.live_count() as u64 + f.completed, f.started);
+    assert!(f.delivered_bytes <= f.offered_bytes);
+    // each completed message is 64 KiB at line rate: its FCT is at
+    // least the pure serialization time of the message
+    let cfg = SimConfig::default();
+    let min_fct = (cfg.bg_message_bytes / cfg.payload_bytes as u64)
+        * cfg.wire_bytes() as u64
+        * cfg.link_ps_per_byte;
+    let p50 = f.fct_percentile_us(50.0);
+    assert!(
+        p50 >= canary::sim::ps_to_us(min_fct),
+        "p50 {p50} us below serialization floor"
+    );
+    assert!(f.fct_percentile_us(99.0) >= p50);
+}
+
+#[test]
+fn open_loop_empirical_draws_heavy_tailed_flows() {
+    let mut exp =
+        build_scenario(&scenario(Some(TrafficSpec::empirical())), 13);
+    exp.net.kick_jobs();
+    exp.net.run_all(2000 * US);
+    let f = &exp.net.metrics.flows;
+    assert!(f.started > 0, "Poisson arrivals must fire");
+    assert!(f.completed > 0, "short flows must complete");
+    // heavy tail: mean offered flow size far above the median flow size
+    let mean_flow = f.offered_bytes as f64 / f.started as f64;
+    assert!(
+        mean_flow > 10_000.0,
+        "mean offered flow {mean_flow:.0} B too small for the CDF"
+    );
+}
+
+#[test]
+fn lower_load_offers_fewer_bytes() {
+    let run = |load: f64| {
+        let spec = TrafficSpec::uniform().with_load(load);
+        let mut exp = build_scenario(&scenario(Some(spec)), 17);
+        exp.net.kick_jobs();
+        exp.net.run_all(2000 * US);
+        exp.net.metrics.flows.offered_bytes
+    };
+    let full = run(1.0);
+    let third = run(0.3);
+    assert!(
+        (third as f64) < 0.6 * full as f64,
+        "load 0.3 offered {third} B vs {full} B at line rate"
+    );
+}
