@@ -6,13 +6,12 @@
 //!     cargo run --release --example fault_tolerance -- \
 //!         [--loss 0.02] [--hosts 8] [--kill-spine]
 
-use canary::collectives::{expected_block_sum, runner, Algo};
+use canary::collectives::{runner, verify_job, Algo};
 use canary::config::{FatTreeConfig, SimConfig};
 use canary::faults::FaultPlan;
-use canary::loadbalance::LoadBalancer;
 use canary::sim::US;
 use canary::util::cli::Args;
-use canary::workload::{build_scenario, Scenario};
+use canary::workload::{JobBuilder, ScenarioBuilder};
 
 fn main() -> canary::util::error::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -22,19 +21,19 @@ fn main() -> canary::util::error::Result<()> {
     let hosts: u32 = args.get_parse("hosts", 8)?;
     let seed: u64 = args.get_parse("seed", 7)?;
 
-    let sc = Scenario {
-        topo: FatTreeConfig::tiny(),
-        sim: SimConfig::default()
-            .with_values(true)
-            .with_retrans(200 * US, true),
-        lb: LoadBalancer::default(),
-        algo: Algo::Canary,
-        n_allreduce_hosts: hosts,
-        traffic: None,
-        data_bytes: 64 * 1024,
-        record_results: true,
-    };
-    let mut exp = build_scenario(&sc, seed);
+    let sc = ScenarioBuilder::new(FatTreeConfig::tiny())
+        .sim(
+            SimConfig::default()
+                .with_values(true)
+                .with_retrans(200 * US, true),
+        )
+        .job(
+            JobBuilder::new(Algo::Canary)
+                .hosts(hosts)
+                .data_bytes(64 * 1024)
+                .record_results(true),
+        );
+    let mut exp = sc.build(seed);
     exp.net.faults = FaultPlan::default().with_loss(loss);
     if args.flag("kill-spine") {
         let spine = exp.ft.spine_id(0);
@@ -66,24 +65,9 @@ fn main() -> canary::util::error::Result<()> {
 
     // verify every host's every block
     let job = &exp.net.jobs[exp.job as usize];
-    let lanes = job.spec.lanes();
-    let mut verified = 0;
-    for block in 0..job.spec.total_blocks() {
-        let expected = expected_block_sum(
-            job.spec.tenant,
-            &job.spec.participants,
-            block,
-            lanes,
-        );
-        for rank in 0..job.spec.participants.len() as u32 {
-            let got = job
-                .results
-                .get(&(rank, block))
-                .expect("host missing a block result");
-            assert_eq!(got, &expected, "rank {rank} block {block}");
-            verified += 1;
-        }
-    }
+    verify_job(job).expect("value verification");
+    let verified =
+        job.spec.total_blocks() as usize * job.spec.participants.len();
     println!(
         "verified {verified} (host, block) results — all exact \
          saturating fixed-point sums. Recovery preserved correctness."

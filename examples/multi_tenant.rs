@@ -1,24 +1,36 @@
 //! Multi-tenant scenario (paper Section 5.2.4 / Fig. 10): partition the
 //! cluster into N concurrent allreduce jobs and report each tenant's
-//! goodput plus the fleet average.
+//! goodput plus the fleet average — now with cross traffic from the
+//! hosts no tenant claims (the unified builder supports it in multi-job
+//! scenarios exactly as in single-job ones) and a selectable placement
+//! policy per tenant.
 //!
 //!     cargo run --release --example multi_tenant -- \
-//!         [--jobs 8] [--algo canary] [--size 4194304] [--topo small]
+//!         [--jobs 8] [--algo canary] [--size 4194304] [--topo small] \
+//!         [--placement random|clustered|striped] [--cross-traffic]
 
 use canary::collectives::{runner, Algo};
-use canary::config::{FatTreeConfig, SimConfig};
-use canary::loadbalance::LoadBalancer;
+use canary::config::FatTreeConfig;
 use canary::report::{gbps, Series};
+use canary::traffic::TrafficSpec;
 use canary::util::cli::Args;
 use canary::util::stats::mean;
-use canary::workload::build_multi_tenant;
+use canary::workload::{JobBuilder, Placement, ScenarioBuilder};
 
 fn main() -> canary::util::error::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(argv, &["jobs", "algo", "size", "topo", "seed"])?;
+    let args = Args::parse(
+        argv,
+        &["jobs", "algo", "size", "topo", "seed", "placement", "cross-traffic"],
+    )?;
     let n_jobs: u32 = args.get_parse("jobs", 8)?;
+    if n_jobs == 0 {
+        return Err("--jobs must be >= 1".into());
+    }
     let size: u64 = args.get_parse("size", 4 << 20)?;
     let seed: u64 = args.get_parse("seed", 1)?;
+    let placement = Placement::parse(args.get_or("placement", "random"))?;
+    let cross = args.flag("cross-traffic");
     let topo = match args.get_or("topo", "small") {
         "paper" => FatTreeConfig::paper(),
         "small" => FatTreeConfig::small(),
@@ -33,26 +45,37 @@ fn main() -> canary::util::error::Result<()> {
         other => return Err(format!("unknown algo {other}").into()),
     };
 
-    let (mut net, _ft, jobs) = build_multi_tenant(
-        topo,
-        SimConfig::default(),
-        LoadBalancer::default(),
-        algo,
-        n_jobs,
-        size,
-        seed,
-    );
+    // with cross traffic on, leave a quarter of the fabric to the
+    // background hosts; otherwise partition every host across tenants
+    let claimable = if cross {
+        topo.n_hosts() * 3 / 4
+    } else {
+        topo.n_hosts()
+    };
+    let per_job = (claimable / n_jobs).max(1);
+    let sc = ScenarioBuilder::new(topo)
+        .traffic(cross.then(TrafficSpec::uniform))
+        .jobs(
+            n_jobs,
+            JobBuilder::new(algo)
+                .hosts(per_job)
+                .data_bytes(size)
+                .placement(placement.clone()),
+        );
+    let mut exp = sc.build(seed);
     println!(
-        "descriptor table statically partitioned: {} slots per tenant",
-        net.cfg.descriptor_slots
+        "descriptor table statically partitioned: {} slots per tenant \
+         ({} placement, cross traffic {})",
+        exp.net.cfg.descriptor_slots / n_jobs,
+        placement.name(),
+        if cross { "on" } else { "off" }
     );
-    let results = runner::run_to_completion(&mut net, u64::MAX);
+    let results = runner::run_to_completion(&mut exp.net, u64::MAX);
 
     let mut table =
         Series::new("multi_tenant", &["tenant", "hosts", "goodput_gbps"]);
     let mut all = Vec::new();
-    for (&job, r) in jobs.iter().zip(results.iter()) {
-        let _ = job;
+    for r in results.iter() {
         table.push(vec![
             r.tenant.to_string(),
             r.n_hosts.to_string(),
@@ -69,9 +92,12 @@ fn main() -> canary::util::error::Result<()> {
         results[0].n_hosts,
         mean(&all)
     );
+    if cross {
+        println!("{}", canary::report::flow_summary(&exp.net.metrics.flows));
+    }
     println!(
         "collisions: {}  (tenants share no descriptors — Section 3.4)",
-        net.metrics.collisions
+        exp.net.metrics.collisions
     );
     Ok(())
 }

@@ -5,11 +5,10 @@
 //!     cargo run --release --example quickstart
 
 use canary::collectives::{runner, Algo};
-use canary::config::{FatTreeConfig, SimConfig};
-use canary::loadbalance::LoadBalancer;
+use canary::config::FatTreeConfig;
 use canary::report::{gbps, Series};
 use canary::traffic::TrafficSpec;
-use canary::workload::{build_scenario, Scenario};
+use canary::workload::{JobBuilder, ScenarioBuilder};
 
 fn main() {
     let algos = [
@@ -25,17 +24,10 @@ fn main() {
     for algo in algos {
         let mut row = vec![algo.name()];
         for traffic in [None, Some(TrafficSpec::uniform())] {
-            let sc = Scenario {
-                topo: FatTreeConfig::small(),
-                sim: SimConfig::default(),
-                lb: LoadBalancer::default(),
-                algo,
-                n_allreduce_hosts: 32,
-                traffic,
-                data_bytes: 4 << 20,
-                record_results: false,
-            };
-            let mut exp = build_scenario(&sc, 42);
+            let sc = ScenarioBuilder::new(FatTreeConfig::small())
+                .traffic(traffic)
+                .job(JobBuilder::new(algo).hosts(32).data_bytes(4 << 20));
+            let mut exp = sc.build(42);
             let results = runner::run_to_completion(&mut exp.net, u64::MAX);
             row.push(gbps(results[0].goodput_gbps));
         }

@@ -4,9 +4,10 @@
 //! series are produced by the `figures` binary (`figures all --scale
 //! full`); these keep the whole harness exercised on every `cargo bench`.
 //!
-//! The `traffic_patterns` sweep additionally records its timing to
-//! `results/BENCH_traffic.json` so per-commit tooling can track the
-//! traffic engine's end-to-end cost.
+//! The `traffic_patterns` and `placement_locality` sweeps additionally
+//! record their timing to `results/BENCH_traffic.json` /
+//! `results/BENCH_placement.json` so per-commit tooling can track the
+//! end-to-end cost of the two beyond-paper harnesses.
 
 use std::time::Duration;
 
@@ -56,18 +57,35 @@ fn main() {
     run("clos3_multitier", figures::clos3);
     let (traffic_time, traffic_rows) =
         run("traffic_patterns", figures::traffic);
+    let (placement_time, placement_rows) =
+        run("placement_locality", figures::placement);
     run("ablation_lb", figures::ablation_lb);
 
-    // machine-readable entry for the traffic sweep (per-commit tracking)
-    let entry = obj(vec![
-        ("bench", Value::Str("traffic_patterns".into())),
-        ("scale", Value::Str("ci".into())),
-        ("seconds", Value::Float(traffic_time.as_secs_f64())),
-        ("rows", Value::Int(traffic_rows as i64)),
-    ]);
+    // machine-readable entries for the sweeps (per-commit tracking)
     let _ = std::fs::create_dir_all("results");
-    match std::fs::write("results/BENCH_traffic.json", entry.to_json()) {
-        Ok(()) => println!("wrote results/BENCH_traffic.json"),
-        Err(e) => eprintln!("BENCH_traffic.json write failed: {e}"),
+    for (file, name, time, rows) in [
+        (
+            "results/BENCH_traffic.json",
+            "traffic_patterns",
+            traffic_time,
+            traffic_rows,
+        ),
+        (
+            "results/BENCH_placement.json",
+            "placement_locality",
+            placement_time,
+            placement_rows,
+        ),
+    ] {
+        let entry = obj(vec![
+            ("bench", Value::Str(name.into())),
+            ("scale", Value::Str("ci".into())),
+            ("seconds", Value::Float(time.as_secs_f64())),
+            ("rows", Value::Int(rows as i64)),
+        ]);
+        match std::fs::write(file, entry.to_json()) {
+            Ok(()) => println!("wrote {file}"),
+            Err(e) => eprintln!("{file} write failed: {e}"),
+        }
     }
 }

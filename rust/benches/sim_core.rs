@@ -6,30 +6,22 @@ use std::time::Duration;
 
 use canary::collectives::{runner, Algo};
 use canary::config::{FatTreeConfig, SimConfig};
-use canary::loadbalance::LoadBalancer;
 use canary::traffic::TrafficSpec;
 use canary::util::bench::{bench, throughput};
 use canary::util::rng::Rng;
-use canary::workload::{build_scenario, Scenario};
+use canary::workload::{JobBuilder, ScenarioBuilder};
 
 fn main() {
     println!("== sim_core benches ==");
     let t = Duration::from_millis(400);
 
     // raw event throughput: a full small-topology canary allreduce
-    let sc = Scenario {
-        topo: FatTreeConfig::small(),
-        sim: SimConfig::default(),
-        lb: LoadBalancer::default(),
-        algo: Algo::Canary,
-        n_allreduce_hosts: 32,
-        traffic: Some(TrafficSpec::uniform()),
-        data_bytes: 256 << 10,
-        record_results: false,
-    };
+    let sc = ScenarioBuilder::new(FatTreeConfig::small())
+        .traffic(Some(TrafficSpec::uniform()))
+        .job(JobBuilder::new(Algo::Canary).hosts(32).data_bytes(256 << 10));
     let mut events = 0u64;
     let m = bench("canary_allreduce_256KiB_32hosts_cong", t, || {
-        let mut exp = build_scenario(&sc, 1);
+        let mut exp = sc.build(1);
         runner::run_to_completion(&mut exp.net, u64::MAX);
         events = exp.net.events_processed;
     });
@@ -40,10 +32,9 @@ fn main() {
     );
 
     // same run, value-carrying (payload aggregation on every hop)
-    let mut sc_v = sc.clone();
-    sc_v.sim = sc_v.sim.with_values(true);
+    let sc_v = sc.clone().sim(SimConfig::default().with_values(true));
     let m = bench("canary_allreduce_values_256KiB", t, || {
-        let mut exp = build_scenario(&sc_v, 1);
+        let mut exp = sc_v.build(1);
         runner::run_to_completion(&mut exp.net, u64::MAX);
     });
     println!(

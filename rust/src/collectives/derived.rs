@@ -1,19 +1,26 @@
 //! Derived collectives (paper Section 6, "Support for other
 //! collectives"): `reduce`, `broadcast`, and `barrier` expressed on the
-//! allreduce machinery.
+//! allreduce machinery. Since the Collective API redesign these run end
+//! to end — [`crate::collectives::Collective`] is carried by every
+//! [`crate::collectives::JobSpec`] and the host engines consult it:
 //!
-//! - **reduce(root)**: an allreduce whose leader is forced to the
-//!   destination host and whose broadcast phase is skipped — modelled as
-//!   a Canary job where only the root needs the result, so completion is
-//!   the leader completing all blocks.
-//! - **barrier**: a zero-byte allreduce (one empty block).
-//! - **broadcast(src)**: the source plays leader for every block and
-//!   starts the broadcast immediately (no aggregation): modelled as a
-//!   1-contributor Canary job whose broadcast fans out to all hosts.
+//! - **reduce(root)**: every block's leader is forced to the root
+//!   (Section 6: "selecting as leader node the destination"); on Canary
+//!   the value broadcast is replaced by a header-only descriptor
+//!   release, on static trees only the broadcast clones on the path
+//!   toward the root host carry values — every other participant gets
+//!   a header-only release that drains its injection window. The job
+//!   completes when the root holds all blocks
+//!   ([`crate::collectives::Collective::completion_rank`]).
+//! - **broadcast(src)**: the source leads every block and the other
+//!   participants contribute the neutral element (zeros), so the
+//!   aggregated "sum" *is* the source's data and the ordinary broadcast
+//!   phase delivers it to everyone.
+//! - **barrier**: a zero-byte allreduce — one empty block, complete when
+//!   every participant has seen it.
 //!
-//! These reuse the verbatim job machinery; what changes is the
-//! participant/leader arrangement and the completion rule, so they are
-//! thin wrappers producing `JobSpec`-compatible setups.
+//! This module keeps the small arrangement helpers that predate the
+//! typed API (they remain the paper-faithful definitions the tests pin).
 
 use crate::sim::packet::PAYLOAD_BYTES;
 use crate::sim::NodeId;

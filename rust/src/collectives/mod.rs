@@ -1,10 +1,14 @@
-//! Collective-operation jobs: specification, runtime progress tracking,
-//! and the deterministic per-host block payload generator used for
-//! value-correctness verification.
+//! Collective-operation jobs: the typed [`Collective`] carried by every
+//! [`JobSpec`], runtime progress tracking with per-collective completion
+//! rules, the deterministic per-host block payload generator, and the
+//! [`verify_job`] value checker used in `record_results` mode.
 //!
 //! Derived collectives (Section 6 of the paper) — `reduce`, `broadcast`
-//! and `barrier` — are expressed on top of the allreduce machinery in
-//! [`derived`].
+//! and `barrier` — run end to end on the allreduce machinery: the
+//! arrangement helpers live in [`derived`], the leader forcing in
+//! [`JobSpec::leader_of`], and the completion rules in
+//! [`JobRuntime::host_finished`]. Jobs are installed through
+//! [`crate::workload::ScenarioBuilder`].
 
 pub mod derived;
 pub mod runner;
@@ -31,6 +35,12 @@ impl Algo {
         !matches!(self, Algo::Background)
     }
 
+    /// Does this engine move real lane values through the fabric (and
+    /// can therefore be value-verified in `record_results` mode)?
+    pub fn carries_values(&self) -> bool {
+        matches!(self, Algo::Canary | Algo::StaticTree { .. })
+    }
+
     pub fn name(&self) -> String {
         match self {
             Algo::Canary => "canary".into(),
@@ -41,11 +51,100 @@ impl Algo {
     }
 }
 
+/// Which collective operation a job performs (paper Section 6: the
+/// derived collectives are expressed on the allreduce machinery).
+///
+/// `root` is always a **rank** (an index into `JobSpec::participants`),
+/// not a raw node id, so the same job description works under any
+/// [`crate::workload::Placement`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Collective {
+    /// Every participant contributes and receives the sum.
+    Allreduce,
+    /// Every participant contributes; only the root holds the sum.
+    /// Leaders are forced to the root (Section 6, "selecting as leader
+    /// node the destination") and the value broadcast is suppressed.
+    Reduce { root: u32 },
+    /// The root's data reaches every participant: the root leads every
+    /// block and the other participants contribute the neutral element
+    /// (zeros), so the aggregated "sum" *is* the root's payload.
+    Broadcast { root: u32 },
+    /// A zero-byte allreduce: one empty block, done when everyone has
+    /// seen its completion.
+    Barrier,
+}
+
+impl Collective {
+    /// Parse the CLI spelling: `allreduce`, `reduce:R`, `broadcast:R`,
+    /// `barrier` (`R` = root rank).
+    pub fn parse(s: &str) -> Result<Collective, String> {
+        if s == "allreduce" {
+            return Ok(Collective::Allreduce);
+        }
+        if s == "barrier" {
+            return Ok(Collective::Barrier);
+        }
+        let parse_root = |spec: &str, what: &str| -> Result<u32, String> {
+            spec.parse::<u32>()
+                .map_err(|_| format!("bad {what} root rank '{spec}'"))
+        };
+        if let Some(r) = s.strip_prefix("reduce:") {
+            return Ok(Collective::Reduce {
+                root: parse_root(r, "reduce")?,
+            });
+        }
+        if let Some(r) = s.strip_prefix("broadcast:") {
+            return Ok(Collective::Broadcast {
+                root: parse_root(r, "broadcast")?,
+            });
+        }
+        Err(format!(
+            "unknown collective '{s}' \
+             (allreduce|reduce:R|broadcast:R|barrier)"
+        ))
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Collective::Allreduce => "allreduce".into(),
+            Collective::Reduce { root } => format!("reduce:{root}"),
+            Collective::Broadcast { root } => format!("broadcast:{root}"),
+            Collective::Barrier => "barrier".into(),
+        }
+    }
+
+    /// The rank pinned as the leader of every block, if any.
+    pub fn root_rank(&self) -> Option<u32> {
+        match self {
+            Collective::Reduce { root }
+            | Collective::Broadcast { root } => Some(*root),
+            _ => None,
+        }
+    }
+
+    /// The single rank whose completion finishes the job (`None` = all
+    /// ranks must finish, the allreduce rule).
+    pub fn completion_rank(&self) -> Option<u32> {
+        match self {
+            Collective::Reduce { root } => Some(*root),
+            _ => None,
+        }
+    }
+
+    /// Is the result delivered only to the root (the value broadcast is
+    /// then a header-only descriptor release)?
+    pub fn result_stays_at_root(&self) -> bool {
+        matches!(self, Collective::Reduce { .. })
+    }
+}
+
 /// Immutable description of one job.
 #[derive(Clone, Debug)]
 pub struct JobSpec {
     pub tenant: u16,
     pub algo: Algo,
+    /// Which collective operation this job performs.
+    pub collective: Collective,
     /// Participating hosts; order defines ranks (and the ring order).
     pub participants: Vec<NodeId>,
     /// Application data per host, in bytes.
@@ -56,6 +155,8 @@ pub struct JobSpec {
     pub payload_bytes: u32,
     /// Static trees only: the chosen root spine per tree.
     pub tree_roots: Vec<NodeId>,
+    /// Start-time offset: the job's hosts wake at this simulated time.
+    pub start_ps: Time,
     /// Keep per-host result payloads for verification (tests only).
     pub record_results: bool,
 }
@@ -76,10 +177,15 @@ impl JobSpec {
         (self.payload_bytes / 4) as usize
     }
 
-    /// The leader host of a block (Canary round-robins leaders,
-    /// Section 3.1.4).
+    /// The leader host of a block. Allreduce and barrier round-robin
+    /// leaders (Section 3.1.4); reduce and broadcast force every block's
+    /// leader to the root (Section 6).
     pub fn leader_of(&self, block_index: u32) -> NodeId {
-        self.participants[block_index as usize % self.participants.len()]
+        match self.collective.root_rank() {
+            Some(root) => self.participants[root as usize],
+            None => self.participants
+                [block_index as usize % self.participants.len()],
+        }
     }
 
     /// Rank of a host in this job.
@@ -88,6 +194,42 @@ impl JobSpec {
             .iter()
             .position(|&h| h == host)
             .map(|r| r as u32)
+    }
+
+    /// The lane values `host` contributes to `block_index`: the
+    /// deterministic per-host payload, except that broadcast
+    /// non-roots contribute the neutral element (zeros) so the
+    /// aggregate equals the root's data.
+    pub fn payload_of(
+        &self,
+        host: NodeId,
+        block_index: u32,
+        lanes: usize,
+    ) -> Vec<i32> {
+        if let Collective::Broadcast { root } = self.collective {
+            if self.participants[root as usize] != host {
+                return vec![0i32; lanes];
+            }
+        }
+        block_payload(self.tenant, host, block_index, lanes)
+    }
+
+    /// The value every completed copy of `block_index` must hold.
+    pub fn expected_block(&self, block_index: u32, lanes: usize) -> Vec<i32> {
+        match self.collective {
+            Collective::Broadcast { root } => block_payload(
+                self.tenant,
+                self.participants[root as usize],
+                block_index,
+                lanes,
+            ),
+            _ => expected_block_sum(
+                self.tenant,
+                &self.participants,
+                block_index,
+                lanes,
+            ),
+        }
     }
 }
 
@@ -105,9 +247,10 @@ pub struct JobRuntime {
 impl JobRuntime {
     pub fn new(spec: JobSpec) -> JobRuntime {
         let n = spec.participants.len();
+        let start = spec.start_ps;
         JobRuntime {
             spec,
-            start: 0,
+            start,
             finish: None,
             hosts_finished: 0,
             per_host_finish: vec![None; n],
@@ -115,13 +258,26 @@ impl JobRuntime {
         }
     }
 
-    /// A host completed all its blocks.
+    /// A host completed all its blocks. The job's completion rule is
+    /// per-collective: an allreduce/broadcast/barrier finishes when all
+    /// ranks do, a reduce finishes the moment the root rank holds all
+    /// blocks (the other ranks only ever contribute).
     pub fn host_finished(&mut self, rank: u32, now: Time) {
         let slot = &mut self.per_host_finish[rank as usize];
-        if slot.is_none() {
-            *slot = Some(now);
-            self.hosts_finished += 1;
-            if self.hosts_finished == self.spec.participants.len() as u32 {
+        if slot.is_some() {
+            return;
+        }
+        *slot = Some(now);
+        self.hosts_finished += 1;
+        if self.finish.is_none() {
+            let complete = match self.spec.collective.completion_rank() {
+                Some(root) => rank == root,
+                None => {
+                    self.hosts_finished
+                        == self.spec.participants.len() as u32
+                }
+            };
+            if complete {
                 self.finish = Some(now);
             }
         }
@@ -178,6 +334,56 @@ pub fn expected_block_sum(
     acc
 }
 
+/// Value-verify one finished job against its collective's semantics
+/// (`record_results` mode): every rank that must hold the result —
+/// all of them for allreduce/broadcast/barrier, only the root for
+/// reduce — is checked block by block against [`JobSpec::expected_block`].
+///
+/// Engines that model sizes only (ring, background) are verified for
+/// completion alone.
+pub fn verify_job(job: &JobRuntime) -> Result<(), String> {
+    let spec = &job.spec;
+    if job.finish.is_none() {
+        return Err(format!(
+            "{} job (tenant {}) did not finish: {}/{} hosts done",
+            spec.collective.name(),
+            spec.tenant,
+            job.hosts_finished,
+            spec.participants.len()
+        ));
+    }
+    if !spec.algo.carries_values() {
+        return Ok(());
+    }
+    if !spec.record_results {
+        return Err("verify_job needs record_results".into());
+    }
+    let lanes = spec.lanes();
+    let ranks: Vec<u32> = match spec.collective.completion_rank() {
+        Some(root) => vec![root],
+        None => (0..spec.participants.len() as u32).collect(),
+    };
+    for block in 0..spec.total_blocks() {
+        let expected = spec.expected_block(block, lanes);
+        for &rank in &ranks {
+            match job.results.get(&(rank, block)) {
+                None => {
+                    return Err(format!(
+                        "missing result rank {rank} block {block}"
+                    ))
+                }
+                Some(got) if got != &expected => {
+                    return Err(format!(
+                        "wrong value rank {rank} block {block}"
+                    ))
+                }
+                _ => {}
+            }
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -186,11 +392,13 @@ mod tests {
         JobSpec {
             tenant: 1,
             algo: Algo::Canary,
+            collective: Collective::Allreduce,
             participants: (0..n as u32).collect(),
             data_bytes: 10_000,
             window: 4,
             payload_bytes: 1024,
             tree_roots: vec![],
+            start_ps: 0,
             record_results: false,
         }
     }
@@ -208,6 +416,92 @@ mod tests {
         assert_eq!(s.leader_of(0), 0);
         assert_eq!(s.leader_of(1), 1);
         assert_eq!(s.leader_of(5), 2);
+    }
+
+    #[test]
+    fn collective_parse_and_names() {
+        assert_eq!(
+            Collective::parse("allreduce").unwrap(),
+            Collective::Allreduce
+        );
+        assert_eq!(
+            Collective::parse("reduce:3").unwrap(),
+            Collective::Reduce { root: 3 }
+        );
+        assert_eq!(
+            Collective::parse("broadcast:0").unwrap(),
+            Collective::Broadcast { root: 0 }
+        );
+        assert_eq!(
+            Collective::parse("barrier").unwrap(),
+            Collective::Barrier
+        );
+        assert!(Collective::parse("reduce").is_err());
+        assert!(Collective::parse("reduce:x").is_err());
+        assert!(Collective::parse("gather:0").is_err());
+        for c in [
+            Collective::Allreduce,
+            Collective::Reduce { root: 2 },
+            Collective::Broadcast { root: 2 },
+            Collective::Barrier,
+        ] {
+            assert_eq!(Collective::parse(&c.name()).unwrap(), c);
+        }
+    }
+
+    #[test]
+    fn derived_leaders_are_forced_to_the_root() {
+        let mut s = spec(4);
+        s.collective = Collective::Reduce { root: 2 };
+        for b in 0..8 {
+            assert_eq!(s.leader_of(b), 2);
+        }
+        s.collective = Collective::Broadcast { root: 1 };
+        for b in 0..8 {
+            assert_eq!(s.leader_of(b), 1);
+        }
+    }
+
+    #[test]
+    fn broadcast_neutral_contributions_and_expectation() {
+        let mut s = spec(3);
+        s.collective = Collective::Broadcast { root: 1 };
+        // non-roots contribute zeros; the expected block is the root's
+        assert_eq!(s.payload_of(0, 2, 8), vec![0i32; 8]);
+        assert_eq!(s.payload_of(2, 2, 8), vec![0i32; 8]);
+        let root_data = block_payload(1, 1, 2, 8);
+        assert_eq!(s.payload_of(1, 2, 8), root_data);
+        assert_eq!(s.expected_block(2, 8), root_data);
+        // and the allreduce expectation is the plain sum
+        s.collective = Collective::Allreduce;
+        assert_eq!(
+            s.expected_block(2, 8),
+            expected_block_sum(1, &s.participants, 2, 8)
+        );
+    }
+
+    #[test]
+    fn reduce_completes_on_the_root_alone() {
+        let mut sp = spec(3);
+        sp.collective = Collective::Reduce { root: 1 };
+        let mut j = JobRuntime::new(sp);
+        j.host_finished(0, 100);
+        assert!(j.finish.is_none());
+        j.host_finished(1, 250);
+        assert_eq!(j.finish, Some(250));
+        // later ranks don't move the completion time
+        j.host_finished(2, 400);
+        assert_eq!(j.finish, Some(250));
+    }
+
+    #[test]
+    fn start_offset_shifts_runtime_accounting() {
+        let mut sp = spec(2);
+        sp.start_ps = 1_000;
+        let mut j = JobRuntime::new(sp);
+        j.host_finished(0, 5_000);
+        j.host_finished(1, 6_000);
+        assert_eq!(j.runtime_ps(), Some(5_000));
     }
 
     #[test]

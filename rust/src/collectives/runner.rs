@@ -1,22 +1,30 @@
 //! Job installation and experiment running: wires protocol engines onto
 //! hosts, configures static trees on switches, kicks everything off and
 //! collects the results.
+//!
+//! Installation is driven entirely by a [`JobSpec`] (which carries the
+//! algo, the [`Collective`], the participant set resolved by a
+//! [`crate::workload::Placement`] policy, and the start-time offset);
+//! experiments are assembled through
+//! [`crate::workload::ScenarioBuilder`] — there is no per-algorithm
+//! public install surface anymore.
 
-use crate::collectives::{Algo, JobRuntime, JobSpec};
+use crate::collectives::{Algo, Collective, JobRuntime, JobSpec};
 use crate::host::{
     canary_host::CanaryHost, ring::RingHost, static_host::StaticHost, Proto,
 };
 use crate::sim::{Network, NodeBody, NodeId, Time};
-use crate::switch::static_tree::{StaticJobInfo, TreeRole};
-use crate::topology::FatTree;
+use crate::switch::static_tree::TreeRole;
+use crate::topology::{FatTree, Hop};
 use crate::traffic::{engine, TrafficHost, TrafficSpec};
 use crate::util::rng::Rng;
 
-/// Result summary of one finished (or timed-out) allreduce job.
+/// Result summary of one finished (or timed-out) collective job.
 #[derive(Clone, Debug)]
 pub struct JobResult {
     pub tenant: u16,
     pub algo: Algo,
+    pub collective: Collective,
     pub n_hosts: usize,
     pub data_bytes: u64,
     pub runtime_ps: Option<Time>,
@@ -36,25 +44,41 @@ fn set_proto(net: &mut Network, host: NodeId, proto: Proto) {
     }
 }
 
-/// Install a Canary allreduce job. Returns the job index.
-pub fn install_canary_job(
+/// Install one collective job described by `spec`. Returns the job
+/// index. The caller (the scenario builder) has already resolved
+/// placement, tenant, tree roots and the start offset.
+pub(crate) fn install_job(
     net: &mut Network,
-    tenant: u16,
-    participants: Vec<NodeId>,
-    data_bytes: u64,
-    record_results: bool,
+    ft: &FatTree,
+    spec: JobSpec,
 ) -> u32 {
-    let spec = JobSpec {
-        tenant,
-        algo: Algo::Canary,
-        participants: participants.clone(),
-        data_bytes,
-        window: net.cfg.host_window,
-        payload_bytes: net.cfg.payload_bytes,
-        tree_roots: vec![],
-        record_results,
-    };
+    assert!(
+        !spec.participants.is_empty(),
+        "a collective job needs participants"
+    );
+    if let Some(root) = spec.collective.root_rank() {
+        assert!(
+            (root as usize) < spec.participants.len(),
+            "root rank {root} out of range for {} participants",
+            spec.participants.len()
+        );
+    }
+    match spec.algo {
+        Algo::Canary => install_canary_job(net, spec),
+        Algo::StaticTree { .. } => install_static_job(net, ft, spec),
+        Algo::Ring => install_ring_job(net, spec),
+        Algo::Background => {
+            panic!("background traffic is installed via its TrafficSpec")
+        }
+    }
+}
+
+/// Install a Canary job. Derived collectives ride the same machinery:
+/// the leader arrangement and completion rule come from
+/// `spec.collective` (see [`crate::collectives::derived`]).
+fn install_canary_job(net: &mut Network, spec: JobSpec) -> u32 {
     let total_blocks = spec.total_blocks();
+    let participants = spec.participants.clone();
     let job = net.jobs.len() as u32;
     net.jobs.push(JobRuntime::new(spec));
     for (rank, &h) in participants.iter().enumerate() {
@@ -67,35 +91,29 @@ pub fn install_canary_job(
     job
 }
 
-/// Install a static-tree in-network allreduce with `n_trees` trees rooted
-/// at `roots` (SHARP-like for 1 tree, PANAMA-like for several).
+/// Install a static-tree in-network job with `spec.tree_roots.len()`
+/// trees (SHARP-like for 1 tree, PANAMA-like for several).
 ///
 /// On a multi-tier Clos, each tree is the label-aligned spanning tree of
 /// its root: every participating leaf aggregates its local hosts, every
 /// intermediate tier aggregates the partials of the aligned switches one
 /// tier down, and the root combines one partial per top-level subtree.
-pub fn install_static_job(
-    net: &mut Network,
-    ft: &FatTree,
-    tenant: u16,
-    participants: Vec<NodeId>,
-    data_bytes: u64,
-    roots: Vec<NodeId>,
-    record_results: bool,
-) -> u32 {
-    assert!(!roots.is_empty());
-    let spec = JobSpec {
-        tenant,
-        algo: Algo::StaticTree {
-            n_trees: roots.len() as u8,
-        },
-        participants: participants.clone(),
-        data_bytes,
-        window: net.cfg.host_window,
-        payload_bytes: net.cfg.payload_bytes,
-        tree_roots: roots.clone(),
-        record_results,
-    };
+///
+/// For a `reduce` collective the *aggregation* tree is unchanged and the
+/// broadcast still reaches every participant — but only the clones on
+/// the path toward the root host carry the value payload ("static-tree
+/// root completion"); everyone else receives a header-only release that
+/// drains their injection window. Only the root holds the result.
+fn install_static_job(net: &mut Network, ft: &FatTree, spec: JobSpec) -> u32 {
+    let roots = spec.tree_roots.clone();
+    assert!(!roots.is_empty(), "static trees need at least one root");
+    let tenant = spec.tenant;
+    let participants = spec.participants.clone();
+    // reduce: the one host the broadcast must still reach
+    let reduce_root_host = spec
+        .collective
+        .result_stays_at_root()
+        .then(|| spec.leader_of(0));
     let total_blocks = spec.total_blocks();
     let job = net.jobs.len() as u32;
     net.jobs.push(JobRuntime::new(spec));
@@ -118,6 +136,16 @@ pub fn install_static_job(
             .or_default()
             .push(ft.leaf_host_port(h));
     }
+    // reduce: the one down-port (if any) whose broadcast clone keeps
+    // the value payload — the edge on the path toward the root host;
+    // `u16::MAX` marks a switch entirely off that path. `None` for the
+    // collectives whose broadcast delivers values everywhere.
+    let value_port = |tier: u8, idx: u32, ports: &[u16]| -> Option<u16> {
+        reduce_root_host.map(|rh| match ft.hop_at(tier, idx, rh) {
+            Hop::Port(p) if ports.contains(&p) => p,
+            _ => u16::MAX,
+        })
+    };
     for (t, &root) in roots.iter().enumerate() {
         let (root_tier, root_idx) = ft.switch_at(root);
         assert_eq!(root_tier, tiers, "tree roots must be top-tier switches");
@@ -142,6 +170,7 @@ pub fn install_static_job(
                     parent_port: Some(ft.up_port(tier, c_next)),
                     expected: ports.len() as u32,
                     child_ports: ports.clone(),
+                    value_port: value_port(tier, idx, ports),
                 };
                 install_tree_role(
                     net,
@@ -166,6 +195,7 @@ pub fn install_static_job(
             parent_port: None,
             expected: ports.len() as u32,
             child_ports: ports.clone(),
+            value_port: value_port(tiers, idx, ports),
         };
         install_tree_role(net, root, tenant, t, roots.len(), role);
     }
@@ -182,11 +212,8 @@ fn install_tree_role(
 ) {
     match &mut net.nodes[switch as usize].body {
         NodeBody::Switch(sw) => {
-            let info = sw
-                .static_tree
-                .jobs
-                .entry(tenant)
-                .or_insert_with(StaticJobInfo::default);
+            let info =
+                sw.static_tree.jobs.entry(tenant).or_default();
             if info.trees.len() < n_trees {
                 info.trees.resize(n_trees, None);
             }
@@ -196,25 +223,14 @@ fn install_tree_role(
     }
 }
 
-/// Install a host-based ring allreduce job.
-pub fn install_ring_job(
-    net: &mut Network,
-    tenant: u16,
-    participants: Vec<NodeId>,
-    data_bytes: u64,
-) -> u32 {
+/// Install a host-based ring job (bandwidth-optimal allreduce; derived
+/// collectives fall back to the same exchange, with the reduce
+/// completion rule applied by the job runtime).
+fn install_ring_job(net: &mut Network, spec: JobSpec) -> u32 {
+    let participants = spec.participants.clone();
     let n = participants.len() as u32;
-    let spec = JobSpec {
-        tenant,
-        algo: Algo::Ring,
-        participants: participants.clone(),
-        data_bytes,
-        window: net.cfg.host_window,
-        payload_bytes: net.cfg.payload_bytes,
-        tree_roots: vec![],
-        record_results: false,
-    };
-    let payload = net.cfg.payload_bytes;
+    let data_bytes = spec.data_bytes;
+    let payload = spec.payload_bytes;
     let job = net.jobs.len() as u32;
     net.jobs.push(JobRuntime::new(spec));
     for (rank, &h) in participants.iter().enumerate() {
@@ -237,7 +253,7 @@ pub fn install_ring_job(
 /// `spec`. `rng` resolves pattern structure (permutation cycle, incast
 /// groups, hot set); the `uniform` pattern draws nothing from it, which
 /// keeps legacy runs bit-identical.
-pub fn install_background_job(
+pub(crate) fn install_background_job(
     net: &mut Network,
     hosts: Vec<NodeId>,
     spec: TrafficSpec,
@@ -247,11 +263,13 @@ pub fn install_background_job(
     let job_spec = JobSpec {
         tenant: u16::MAX,
         algo: Algo::Background,
+        collective: Collective::Allreduce,
         participants: hosts.clone(),
         data_bytes: 0,
         window: 0,
         payload_bytes: net.cfg.payload_bytes,
         tree_roots: vec![],
+        start_ps: 0,
         record_results: false,
     };
     let job = net.jobs.len() as u32;
@@ -263,7 +281,7 @@ pub fn install_background_job(
 }
 
 /// Kick all jobs and run to completion (or `max_time`). Returns one
-/// [`JobResult`] per allreduce job, in installation order.
+/// [`JobResult`] per collective job, in installation order.
 pub fn run_to_completion(net: &mut Network, max_time: Time) -> Vec<JobResult> {
     net.kick_jobs();
     net.run(max_time);
@@ -273,6 +291,7 @@ pub fn run_to_completion(net: &mut Network, max_time: Time) -> Vec<JobResult> {
         .map(|j| JobResult {
             tenant: j.spec.tenant,
             algo: j.spec.algo,
+            collective: j.spec.collective,
             n_hosts: j.spec.participants.len(),
             data_bytes: j.spec.data_bytes,
             runtime_ps: j.runtime_ps(),

@@ -6,7 +6,7 @@
 //! ```text
 //! figures all            [--scale full|half|ci] [--seeds N] [--out DIR]
 //! figures fig2|fig6|fig7a|fig7b|fig8|fig9|fig10a|fig10b|fig11|mem|clos3
-//!         |traffic|ablation ...
+//!         |traffic|placement|ablation ...
 //! ```
 //!
 //! `full` reproduces the paper's parameters (1024 hosts, 4 MiB, 5 seeds —
@@ -14,7 +14,13 @@
 //! 64-host network for smoke testing. Every series is printed and written
 //! to `results/<name>.csv`. Independent runs (seeds, traffic cells) fan
 //! out over OS threads ([`crate::util::par`]) with deterministic result
-//! ordering.
+//! ordering. All experiments are assembled through the
+//! [`ScenarioBuilder`] path; the `RandomUniform` placement keeps every
+//! *single-job* series (fig2/6/7/8/9/11, mem, clos3, traffic,
+//! ablation) bit-identical to the pre-redesign harness. The fig10
+//! multi-tenant series use the builder's pool-based placement, which
+//! draws differently than the retired `build_multi_tenant` shuffle, so
+//! those two series differ from pre-redesign CSVs at the same seed.
 
 use crate::collectives::{runner, Algo};
 use crate::config::{ClosConfig, FatTreeConfig, SimConfig};
@@ -28,7 +34,7 @@ use crate::traffic::TrafficSpec;
 use crate::util::cli::Args;
 use crate::util::par::par_map;
 use crate::util::stats::{mean, percentile_sorted, stddev};
-use crate::workload::{build_multi_tenant, build_scenario, Scenario};
+use crate::workload::{JobBuilder, Placement, ScenarioBuilder};
 
 /// Experiment scale knob.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -109,34 +115,34 @@ fn algo_list(with_ring: bool, trees: &[u8]) -> Vec<Algo> {
 }
 
 /// Run one scenario over `seeds` placements (fanned out across OS
-/// threads, per-seed order preserved); returns per-seed goodputs.
-fn goodputs(sc: &Scenario, seeds: u64) -> Vec<f64> {
+/// threads, per-seed order preserved); returns per-seed goodputs of the
+/// first job.
+fn goodputs(sc: &ScenarioBuilder, seeds: u64) -> Vec<f64> {
     par_map(seeds as usize, |s| {
-        let mut exp = build_scenario(sc, 1000 + s as u64);
+        let mut exp = sc.build(1000 + s as u64);
         let r = runner::run_to_completion(&mut exp.net, u64::MAX);
         r[0].goodput_gbps.unwrap_or(0.0)
     })
 }
 
-fn runtimes_us(sc: &Scenario, seeds: u64) -> Vec<f64> {
+fn runtimes_us(sc: &ScenarioBuilder, seeds: u64) -> Vec<f64> {
     par_map(seeds as usize, |s| {
-        let mut exp = build_scenario(sc, 1000 + s as u64);
+        let mut exp = sc.build(1000 + s as u64);
         let r = runner::run_to_completion(&mut exp.net, u64::MAX);
         r[0].runtime_ps.map(ps_to_us).unwrap_or(f64::NAN)
     })
 }
 
-fn base_scenario(o: &Opts, algo: Algo, hosts: u32, congestion: bool) -> Scenario {
-    Scenario {
-        topo: o.scale.topo(),
-        sim: SimConfig::default(),
-        lb: LoadBalancer::default(),
-        algo,
-        n_allreduce_hosts: hosts,
-        traffic: congestion.then(TrafficSpec::uniform),
-        data_bytes: o.scale.data_bytes(),
-        record_results: false,
-    }
+/// The standard single-job scenario every 2-tier figure starts from.
+fn base_scenario(
+    o: &Opts,
+    algo: Algo,
+    hosts: u32,
+    congestion: bool,
+) -> ScenarioBuilder {
+    ScenarioBuilder::new(o.scale.topo())
+        .traffic(congestion.then(TrafficSpec::uniform))
+        .job(JobBuilder::new(algo).hosts(hosts).data_bytes(o.scale.data_bytes()))
 }
 
 fn finish(s: Series, o: &Opts) -> Series {
@@ -185,16 +191,11 @@ pub fn fig6(o: &Opts) -> Series {
         let wire =
             payload + crate::sim::packet::HEADER_OVERHEAD_BYTES;
         let bound = 100.0 * payload as f64 / wire as f64;
-        let sc = Scenario {
-            topo: FatTreeConfig::tiny(),
-            sim: SimConfig::default().with_payload(payload),
-            lb: LoadBalancer::default(),
-            algo: Algo::Canary,
-            n_allreduce_hosts: 2,
-            traffic: None,
-            data_bytes: 4 << 20,
-            record_results: false,
-        };
+        let sc = ScenarioBuilder::new(FatTreeConfig::tiny())
+            .sim(SimConfig::default().with_payload(payload))
+            .job(
+                JobBuilder::new(Algo::Canary).hosts(2).data_bytes(4 << 20),
+            );
         let g = goodputs(&sc, 1);
         s.push(vec![
             payload.to_string(),
@@ -237,7 +238,7 @@ pub fn fig7b(o: &Opts) -> Series {
     let hosts = o.scaled_hosts(50);
     for algo in algo_list(false, &[1, 4]) {
         let sc = base_scenario(o, algo, hosts, true);
-        let mut exp = build_scenario(&sc, 1000);
+        let mut exp = sc.build(1000);
         runner::run_to_completion(&mut exp.net, u64::MAX);
         let end = exp.net.now;
         let h = utilization_histogram(&exp.net, end);
@@ -290,8 +291,9 @@ pub fn fig9(o: &Opts) -> Series {
     for &size in sizes {
         for algo in algo_list(true, &[4]) {
             for &cong in &[false, true] {
-                let mut sc = base_scenario(o, algo, hosts, cong);
-                sc.data_bytes = size;
+                let sc = ScenarioBuilder::new(o.scale.topo())
+                    .traffic(cong.then(TrafficSpec::uniform))
+                    .job(JobBuilder::new(algo).hosts(hosts).data_bytes(size));
                 let r = runtimes_us(&sc, o.seeds);
                 s.push(vec![
                     size.to_string(),
@@ -306,6 +308,19 @@ pub fn fig9(o: &Opts) -> Series {
     finish(s, o)
 }
 
+/// The Fig. 10 multi-tenant scenario: `n_jobs` equal concurrent
+/// allreduces partitioning the cluster, all of the same `algo`.
+fn multi_tenant(o: &Opts, algo: Algo, n_jobs: u32) -> ScenarioBuilder {
+    let topo = o.scale.topo();
+    let per_job = (topo.n_hosts() / n_jobs).max(1);
+    ScenarioBuilder::new(topo).jobs(
+        n_jobs,
+        JobBuilder::new(algo)
+            .hosts(per_job)
+            .data_bytes(o.scale.data_bytes()),
+    )
+}
+
 /// Fig. 10a — average goodput of N concurrent allreduces.
 pub fn fig10a(o: &Opts) -> Series {
     let mut s = Series::new(
@@ -318,25 +333,17 @@ pub fn fig10a(o: &Opts) -> Series {
     };
     for &n_jobs in jobs_list {
         for algo in algo_list(true, &[1, 4]) {
-            let mut per_seed = Vec::new();
-            for seed in 0..o.seeds {
-                let (mut net, _ft, _jobs) = build_multi_tenant(
-                    o.scale.topo(),
-                    SimConfig::default(),
-                    LoadBalancer::default(),
-                    algo,
-                    n_jobs,
-                    o.scale.data_bytes(),
-                    2000 + seed,
-                );
+            let sc = multi_tenant(o, algo, n_jobs);
+            let per_seed = par_map(o.seeds as usize, |seed| {
+                let mut exp = sc.build(2000 + seed as u64);
                 let results =
-                    runner::run_to_completion(&mut net, u64::MAX);
+                    runner::run_to_completion(&mut exp.net, u64::MAX);
                 let gs: Vec<f64> = results
                     .iter()
                     .filter_map(|r| r.goodput_gbps)
                     .collect();
-                per_seed.push(mean(&gs));
-            }
+                mean(&gs)
+            });
             s.push(vec![
                 n_jobs.to_string(),
                 algo.name(),
@@ -359,19 +366,11 @@ pub fn fig10b(o: &Opts) -> Series {
         _ => 20,
     };
     for algo in algo_list(false, &[1, 4]) {
-        let (mut net, _ft, _jobs) = build_multi_tenant(
-            o.scale.topo(),
-            SimConfig::default(),
-            LoadBalancer::default(),
-            algo,
-            n_jobs,
-            o.scale.data_bytes(),
-            2000,
-        );
-        runner::run_to_completion(&mut net, u64::MAX);
-        let end = net.now;
-        let h = utilization_histogram(&net, end);
-        let avg = 100.0 * average_network_utilization(&net, end);
+        let mut exp = multi_tenant(o, algo, n_jobs).build(2000);
+        runner::run_to_completion(&mut exp.net, u64::MAX);
+        let end = exp.net.now;
+        let h = utilization_histogram(&exp.net, end);
+        let avg = 100.0 * average_network_utilization(&exp.net, end);
         for (i, f) in h.fractions().iter().enumerate() {
             s.push(vec![
                 algo.name(),
@@ -400,12 +399,11 @@ pub fn fig11(o: &Opts) -> Series {
     for &noise in &[0.0001f64, 0.001, 0.01, 0.1] {
         for &cong in &[false, true] {
             for &timeout_us in &[1u64, 2, 3] {
-                let mut sc =
-                    base_scenario(o, Algo::Canary, hosts, cong);
-                sc.sim = sc
-                    .sim
-                    .with_timeout(timeout_us * US)
-                    .with_noise(noise, US);
+                let sc = base_scenario(o, Algo::Canary, hosts, cong).sim(
+                    SimConfig::default()
+                        .with_timeout(timeout_us * US)
+                        .with_noise(noise, US),
+                );
                 let g = goodputs(&sc, o.seeds.min(2));
                 s.push(vec![
                     format!("{}", noise * 100.0),
@@ -416,13 +414,13 @@ pub fn fig11(o: &Opts) -> Series {
                 ]);
             }
             // static-4 comparison point (timeout not applicable)
-            let mut sc = base_scenario(
+            let sc = base_scenario(
                 o,
                 Algo::StaticTree { n_trees: 4 },
                 hosts,
                 cong,
-            );
-            sc.sim = sc.sim.with_noise(noise, US);
+            )
+            .sim(SimConfig::default().with_noise(noise, US));
             let g = goodputs(&sc, o.seeds.min(2));
             s.push(vec![
                 format!("{}", noise * 100.0),
@@ -456,14 +454,9 @@ pub fn mem(o: &Opts) -> Series {
             timeout_us as f64 * 1e-6,
             1e-6,
         ) / 1024.0;
-        let mut sc = base_scenario(
-            o,
-            Algo::Canary,
-            o.scaled_hosts(50),
-            false,
-        );
-        sc.sim = sc.sim.with_timeout(timeout_us * US);
-        let mut exp = build_scenario(&sc, 3000);
+        let sc = base_scenario(o, Algo::Canary, o.scaled_hosts(50), false)
+            .sim(SimConfig::default().with_timeout(timeout_us * US));
+        let mut exp = sc.build(3000);
         runner::run_to_completion(&mut exp.net, u64::MAX);
         let m = &exp.net.metrics;
         let peak = m.descriptor_high_water;
@@ -505,16 +498,13 @@ pub fn clos3(o: &Opts) -> Series {
             .collect();
         for algo in algo_list(true, &trees) {
             for &cong in &[false, true] {
-                let sc = Scenario {
-                    topo,
-                    sim: SimConfig::default(),
-                    lb: LoadBalancer::default(),
-                    algo,
-                    n_allreduce_hosts: hosts,
-                    traffic: cong.then(TrafficSpec::uniform),
-                    data_bytes: o.scale.data_bytes(),
-                    record_results: false,
-                };
+                let sc = ScenarioBuilder::new(topo)
+                    .traffic(cong.then(TrafficSpec::uniform))
+                    .job(
+                        JobBuilder::new(algo)
+                            .hosts(hosts)
+                            .data_bytes(o.scale.data_bytes()),
+                    );
                 let g = goodputs(&sc, o.seeds);
                 s.push(vec![
                     format!("{num}:{den}"),
@@ -602,17 +592,14 @@ pub fn traffic(o: &Opts) -> Series {
         let mut fct_us: Vec<f64> = Vec::new();
         let (mut started, mut completed) = (0u64, 0u64);
         for seed in 0..seeds {
-            let sc = Scenario {
-                topo: c.topo,
-                sim: SimConfig::default(),
-                lb: LoadBalancer::default(),
-                algo: c.algo,
-                n_allreduce_hosts: hosts,
-                traffic: Some(c.spec),
-                data_bytes: o.scale.data_bytes(),
-                record_results: false,
-            };
-            let mut exp = build_scenario(&sc, 4000 + seed);
+            let sc = ScenarioBuilder::new(c.topo)
+                .traffic(Some(c.spec))
+                .job(
+                    JobBuilder::new(c.algo)
+                        .hosts(hosts)
+                        .data_bytes(o.scale.data_bytes()),
+                );
+            let mut exp = sc.build(4000 + seed);
             let r = runner::run_to_completion(&mut exp.net, u64::MAX);
             gs.push(r[0].goodput_gbps.unwrap_or(0.0));
             let f = &exp.net.metrics.flows;
@@ -648,6 +635,76 @@ pub fn traffic(o: &Opts) -> Series {
     finish(s, o)
 }
 
+/// Placement-locality sweep (beyond-paper, new with the Collective API):
+/// random vs clustered-by-leaf vs striped placement for Canary, the
+/// static trees and the ring, with and without uniform cross traffic.
+/// Clustering keeps reduction traffic under few leaves (little for
+/// congestion awareness to dodge); striping forces every block across
+/// the spine where the static trees' fixed paths collide with the cross
+/// traffic — the congestion-awareness gap should widen from clustered
+/// to random to striped.
+pub fn placement(o: &Opts) -> Series {
+    let mut s = Series::new(
+        "placement_locality",
+        &["placement", "algo", "congestion", "goodput_gbps", "stddev"],
+    );
+    let hosts = o.scaled_hosts(50);
+    let policies = [
+        Placement::RandomUniform,
+        Placement::ClusteredByLeaf,
+        Placement::Striped,
+    ];
+
+    struct Cell {
+        policy: Placement,
+        algo: Algo,
+        cong: bool,
+    }
+    let mut cells = Vec::new();
+    for policy in &policies {
+        for algo in algo_list(true, &[1, 4]) {
+            for &cong in &[false, true] {
+                cells.push(Cell {
+                    policy: policy.clone(),
+                    algo,
+                    cong,
+                });
+            }
+        }
+    }
+    let seeds = o.seeds.max(1);
+    // one worker per cell; seeds run serially inside (as in `traffic`)
+    // so the fan-out is never nested
+    let results = par_map(cells.len(), |i| {
+        let c = &cells[i];
+        let sc = ScenarioBuilder::new(o.scale.topo())
+            .traffic(c.cong.then(TrafficSpec::uniform))
+            .job(
+                JobBuilder::new(c.algo)
+                    .hosts(hosts)
+                    .data_bytes(o.scale.data_bytes())
+                    .placement(c.policy.clone()),
+            );
+        (0..seeds)
+            .map(|s| {
+                let mut exp = sc.build(1000 + s);
+                let r = runner::run_to_completion(&mut exp.net, u64::MAX);
+                r[0].goodput_gbps.unwrap_or(0.0)
+            })
+            .collect::<Vec<f64>>()
+    });
+    for (c, g) in cells.iter().zip(results) {
+        s.push(vec![
+            c.policy.name(),
+            c.algo.name(),
+            c.cong.to_string(),
+            format!("{:.1}", mean(&g)),
+            format!("{:.1}", stddev(&g)),
+        ]);
+    }
+    finish(s, o)
+}
+
 /// Ablation: Canary goodput under different load balancers (design-choice
 /// bench called out in DESIGN.md §5).
 pub fn ablation_lb(o: &Opts) -> Series {
@@ -664,8 +721,7 @@ pub fn ablation_lb(o: &Opts) -> Series {
     ];
     for (name, lb) in policies {
         for &cong in &[false, true] {
-            let mut sc = base_scenario(o, Algo::Canary, hosts, cong);
-            sc.lb = lb.clone();
+            let sc = base_scenario(o, Algo::Canary, hosts, cong).lb(lb.clone());
             let g = goodputs(&sc, o.seeds);
             s.push(vec![
                 name.to_string(),
@@ -721,6 +777,7 @@ pub fn main_entry() {
         "mem" => drop(mem(&o)),
         "clos3" => drop(clos3(&o)),
         "traffic" => drop(traffic(&o)),
+        "placement" => drop(placement(&o)),
         "ablation" => drop(ablation_lb(&o)),
         "all" => {
             drop(fig2(&o));
@@ -735,12 +792,14 @@ pub fn main_entry() {
             drop(mem(&o));
             drop(clos3(&o));
             drop(traffic(&o));
+            drop(placement(&o));
             drop(ablation_lb(&o));
         }
         other => {
             eprintln!(
                 "unknown figure '{other}' \
-                 (fig2|fig6|fig7a|fig7b|fig8|fig9|fig10a|fig10b|fig11|mem|clos3|traffic|ablation|all)"
+                 (fig2|fig6|fig7a|fig7b|fig8|fig9|fig10a|fig10b|fig11|mem\
+                 |clos3|traffic|placement|ablation|all)"
             );
             std::process::exit(2);
         }

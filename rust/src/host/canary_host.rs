@@ -11,7 +11,6 @@
 
 use std::collections::HashMap;
 
-use crate::collectives::block_payload;
 use crate::sim::packet::{Packet, PacketKind, Payload};
 use crate::sim::{Ctx, NodeId, Time};
 use crate::util::rng::Rng;
@@ -153,6 +152,10 @@ fn send_data_now(
     let hosts = spec.participants.len() as u32;
     let lanes = spec.lanes();
     let wire = spec.wire_bytes();
+    let payload = ctx
+        .cfg
+        .carry_values
+        .then(|| spec.payload_of(me, idx, lanes));
     let kind = if direct {
         PacketKind::CanaryDirect
     } else {
@@ -166,10 +169,8 @@ fn send_data_now(
     pkt.bypass = direct;
     pkt.wire_bytes = wire;
     pkt.flow = ((me as u64) << 32) | pkt.block as u64;
-    if ctx.cfg.carry_values {
-        pkt.payload = Payload::Lanes(
-            block_payload(tenant, me, idx, lanes).into_boxed_slice(),
-        );
+    if let Some(p) = payload {
+        pkt.payload = Payload::Lanes(p.into_boxed_slice());
     }
     ctx.send(0, pkt);
 }
@@ -178,15 +179,16 @@ fn send_data_now(
 /// Section 3.1.4).
 fn leader_add_own(me: NodeId, ch: &mut CanaryHost, ctx: &mut Ctx, idx: u32) {
     let spec = &ctx.jobs[ch.job as usize].spec;
-    let tenant = spec.tenant;
     let lanes = spec.lanes();
-    let carry = ctx.cfg.carry_values;
+    let own = ctx
+        .cfg
+        .carry_values
+        .then(|| spec.payload_of(me, idx, lanes));
     let lb = ch.leader.entry(idx).or_default();
     debug_assert!(!lb.own_added);
     lb.own_added = true;
     lb.counter += 1;
-    if carry {
-        let own = block_payload(tenant, me, idx, lanes);
+    if let Some(own) = own {
         match &mut lb.acc {
             Some(acc) => crate::switch::alu::sat_accumulate(acc, &own),
             None => lb.acc = Some(own),
@@ -256,6 +258,13 @@ fn leader_check_complete(
     let hosts = ctx.jobs[ch.job as usize].spec.participants.len() as u32;
     let tenant = ctx.jobs[ch.job as usize].spec.tenant;
     let wire = ctx.jobs[ch.job as usize].spec.wire_bytes();
+    // reduce: the result stays here — the "broadcast" shrinks to a
+    // header-only release wave that still frees switch descriptors and
+    // unblocks the contributors' windows (Section 6)
+    let stays = ctx.jobs[ch.job as usize]
+        .spec
+        .collective
+        .result_stays_at_root();
     let Some(lb) = ch.leader.get_mut(&idx) else { return };
     if lb.complete || !lb.own_added || lb.counter < hosts {
         return;
@@ -266,6 +275,8 @@ fn leader_check_complete(
     let restore: Vec<(NodeId, u64)> =
         lb.restore.iter().map(|(&k, &v)| (k, v)).collect();
     let wire_id = ch.wire_id(idx);
+    let bcast_wire = if stays { 64 } else { wire };
+    let bcast_payload = if stays { None } else { result.as_ref() };
 
     // broadcast down the recorded dynamic tree (single packet up to our
     // leaf, which fans out along descriptor children)
@@ -275,8 +286,8 @@ fn leader_check_complete(
         pkt.block = wire_id;
         pkt.counter = hosts;
         pkt.hosts = hosts;
-        pkt.wire_bytes = wire;
-        if let Some(r) = &result {
+        pkt.wire_bytes = bcast_wire;
+        if let Some(r) = bcast_payload {
             pkt.payload = Payload::Lanes(r.clone().into_boxed_slice());
         }
         ctx.send(0, pkt);
@@ -288,8 +299,8 @@ fn leader_check_complete(
         pkt.block = wire_id;
         pkt.hosts = hosts;
         pkt.restore = bitmap;
-        pkt.wire_bytes = wire;
-        if let Some(r) = &result {
+        pkt.wire_bytes = bcast_wire;
+        if let Some(r) = bcast_payload {
             pkt.payload = Payload::Lanes(r.clone().into_boxed_slice());
         }
         ctx.send(0, pkt);
@@ -315,6 +326,8 @@ fn leader_on_retrans_req(
     let tenant = spec.tenant;
     let hosts = spec.participants.len() as u32;
     let participants = spec.participants.clone();
+    let wire = spec.wire_bytes();
+    let stays = spec.collective.result_stays_at_root();
     let retrans_timeout = ctx.cfg.retrans_timeout_ps;
     let now = ctx.now;
 
@@ -322,13 +335,17 @@ fn leader_on_retrans_req(
     let lb = ch.leader.entry(orig).or_default();
     if lb.complete {
         // loss was in the broadcast phase: re-send the reduced data
+        // at full wire size (header-only for a reduce, whose result
+        // stays at the root)
         let mut out = Packet::data(PacketKind::CanaryRetransData, me, pkt.src);
         out.tenant = tenant;
         out.block = wire_id;
         out.hosts = hosts;
-        out.wire_bytes = pkt.wire_bytes.max(64);
-        if let Some(r) = &lb.result {
-            out.payload = Payload::Lanes(r.clone().into_boxed_slice());
+        out.wire_bytes = if stays { 64 } else { wire };
+        if !stays {
+            if let Some(r) = &lb.result {
+                out.payload = Payload::Lanes(r.clone().into_boxed_slice());
+            }
         }
         ctx.send(0, out);
         return;

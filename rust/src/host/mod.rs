@@ -1,17 +1,18 @@
 //! Host protocol engines: the Canary host/leader logic, the static-tree
-//! and ring baselines, and the background-traffic generator (now the
-//! flow-level engine in [`crate::traffic`]).
+//! and ring baselines. Cross-traffic generation is the flow-level engine
+//! in [`crate::traffic`] (its per-host state machine plugs in as
+//! [`Proto::Background`]).
 //!
 //! Hosts are event-driven: `handle_wake` starts a job's injection,
 //! `handle_packet` advances the protocol, `handle_timer` drives
 //! retransmission and the Section 5.2.5 noise delays.
 
-pub mod background;
 pub mod canary_host;
 pub mod ring;
 pub mod static_host;
 
 use crate::sim::{Ctx, NodeId};
+use crate::traffic::{engine, TrafficHost};
 use crate::util::rng::Rng;
 
 /// Per-host protocol state.
@@ -20,7 +21,7 @@ pub enum Proto {
     Canary(canary_host::CanaryHost),
     Static(static_host::StaticHost),
     Ring(ring::RingHost),
-    Background(background::BgHost),
+    Background(TrafficHost),
 }
 
 /// A host node.
@@ -84,7 +85,7 @@ pub fn handle_packet(
         (Proto::Ring(rh), K::Ring) => ring::on_packet(h.id, rh, ctx, pkt),
         (Proto::Background(bg), K::Background) => {
             // sink: account the delivery toward its flow's completion
-            background::on_packet(h.id, bg, ctx, pkt)
+            engine::on_packet(h.id, bg, ctx, pkt)
         }
         _ => {} // stray packet for an idle / mismatched host: drop
     }
@@ -110,7 +111,7 @@ pub fn handle_wake(h: &mut HostState, ctx: &mut Ctx, job: u32) {
         Proto::Static(sh) => static_host::on_wake(h.id, sh, &mut h.rng, ctx),
         Proto::Ring(rh) => ring::on_wake(h.id, rh, ctx),
         Proto::Background(bg) => {
-            background::on_wake(h.id, bg, &mut h.rng, ctx, job)
+            engine::on_wake(h.id, bg, &mut h.rng, ctx, job)
         }
         Proto::Idle => {}
     }

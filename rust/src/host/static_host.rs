@@ -3,7 +3,6 @@
 //! broadcast. (The baselines assume a reliable network, as the paper's
 //! do.)
 
-use crate::collectives::block_payload;
 use crate::sim::packet::{Packet, PacketKind, Payload};
 use crate::sim::{Ctx, NodeId};
 use crate::util::rng::Rng;
@@ -89,8 +88,7 @@ fn send_block(me: NodeId, sh: &mut StaticHost, ctx: &mut Ctx, idx: u32) {
     pkt.flow = ((me as u64) << 32) | idx as u64;
     if ctx.cfg.carry_values {
         pkt.payload = Payload::Lanes(
-            block_payload(spec.tenant, me, idx, spec.lanes())
-                .into_boxed_slice(),
+            spec.payload_of(me, idx, spec.lanes()).into_boxed_slice(),
         );
     }
     ctx.send(0, pkt);

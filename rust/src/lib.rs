@@ -23,13 +23,26 @@
 //! Quick start:
 //!
 //! ```no_run
-//! use canary::collectives::{runner, Algo};
-//! use canary::workload::{build_scenario, Scenario};
+//! use canary::collectives::{runner, Algo, Collective};
+//! use canary::workload::{JobBuilder, Placement, ScenarioBuilder};
 //!
-//! let sc = Scenario::paper_default(Algo::Canary);
-//! let mut exp = build_scenario(&sc, 42);
+//! // the paper's single-allreduce protocol...
+//! let sc = ScenarioBuilder::paper_default(Algo::Canary);
+//! let mut exp = sc.build(42);
 //! let results = runner::run_to_completion(&mut exp.net, u64::MAX);
 //! println!("goodput: {:?} Gbps", results[0].goodput_gbps);
+//!
+//! // ...or any mix of collectives, placements and tenants
+//! let sc = ScenarioBuilder::new(canary::config::ClosConfig::small())
+//!     .job(
+//!         JobBuilder::new(Algo::Canary)
+//!             .collective(Collective::Reduce { root: 0 })
+//!             .hosts(16)
+//!             .placement(Placement::ClusteredByLeaf),
+//!     )
+//!     .job(JobBuilder::new(Algo::Ring).hosts(8).start_at(5_000_000));
+//! let mut exp = sc.build(7);
+//! runner::run_to_completion(&mut exp.net, u64::MAX);
 //! ```
 
 pub mod collectives;

@@ -8,7 +8,7 @@
 //!
 //! Figure regeneration lives in the `figures` binary.
 
-use canary::collectives::{runner, Algo};
+use canary::collectives::{runner, verify_job, Algo, Collective};
 use canary::config::{parse_oversub, ClosConfig, SimConfig};
 use canary::util::error::Result;
 use canary::loadbalance::parse_policy;
@@ -19,13 +19,15 @@ use canary::sim::{ps_to_us, US};
 use canary::traffic::TrafficSpec;
 use canary::train::{TrainConfig, Trainer};
 use canary::util::cli::Args;
-use canary::workload::{build_scenario, Scenario};
+use canary::workload::{JobBuilder, Placement, ScenarioBuilder};
 
 const USAGE: &str = "\
 canary — congestion-aware in-network allreduce (paper reproduction)
 
 USAGE:
   canary run   [--algo canary|static1|static4|ring] [--hosts N]
+               [--collective allreduce|reduce:R|broadcast:R|barrier]
+               [--placement random|clustered|striped] [--jobs N]
                [--size BYTES] [--congestion true|false] [--seed S]
                [--traffic none|uniform|permutation|incast:F|hotspot:K[:S]
                           |empirical[@open|@closed]]
@@ -155,35 +157,65 @@ fn resolve_traffic(args: &Args) -> Result<Option<TrafficSpec>> {
 
 fn cmd_run(args: &Args) -> Result<()> {
     let algo = parse_algo(args.get_or("algo", "canary"))?;
+    let collective = Collective::parse(args.get_or("collective", "allreduce"))?;
+    let placement = Placement::parse(args.get_or("placement", "random"))?;
     let topo = resolve_topo(args)?;
-    let hosts: u32 = args.get_parse("hosts", topo.n_hosts() / 2)?;
+    let n_jobs: u32 = args.get_parse("jobs", 1)?;
+    if n_jobs == 0 {
+        return Err("--jobs must be >= 1".into());
+    }
+    let hosts: u32 =
+        args.get_parse("hosts", (topo.n_hosts() / 2 / n_jobs).max(2))?;
+    if hosts < 1 {
+        return Err("--hosts must be >= 1".into());
+    }
+    if (hosts as u64) * (n_jobs as u64) > topo.n_hosts() as u64 {
+        return Err(format!(
+            "{n_jobs} job(s) x {hosts} hosts exceed the topology's {} hosts",
+            topo.n_hosts()
+        )
+        .into());
+    }
+    if let Some(root) = collective.root_rank() {
+        if root >= hosts {
+            return Err(format!(
+                "collective root rank {root} is out of range for \
+                 --hosts {hosts} (ranks are 0..{hosts})"
+            )
+            .into());
+        }
+    }
     let size: u64 = args.get_parse("size", 4 * 1024 * 1024)?;
     let traffic = resolve_traffic(args)?;
     let seed: u64 = args.get_parse("seed", 1)?;
     let timeout_us: u64 = args.get_parse("timeout-us", 1)?;
     let lb = parse_policy(args.get_or("lb", "adaptive"))?;
+    let values = args.flag("values");
 
     let window: u32 = args.get_parse("window", 0)?;
     let sim = SimConfig::default()
         .with_timeout(timeout_us * US)
         .with_window(window)
-        .with_values(args.flag("values"));
-    let sc = Scenario {
-        topo,
-        sim,
-        lb,
-        algo,
-        n_allreduce_hosts: hosts,
-        traffic,
-        data_bytes: size,
-        record_results: false,
-    };
-    let mut exp = build_scenario(&sc, seed);
+        .with_values(values);
+    let sc = ScenarioBuilder::new(topo).sim(sim).lb(lb).traffic(traffic).jobs(
+        n_jobs,
+        JobBuilder::new(algo)
+            .collective(collective)
+            .hosts(hosts)
+            .data_bytes(size)
+            .placement(placement.clone())
+            .record_results(values),
+    );
+    let mut exp = sc.build(seed);
     let results = runner::run_to_completion(&mut exp.net, u64::MAX);
     let r = &results[0];
     println!(
-        "algo={} hosts={} size={}B traffic={} tiers={}",
+        "algo={} collective={} placement={} jobs={} hosts={} size={}B \
+         traffic={} tiers={}",
         r.algo.name(),
+        r.collective.name(),
+        placement.name(),
+        n_jobs,
         r.n_hosts,
         r.data_bytes,
         traffic
@@ -191,11 +223,32 @@ fn cmd_run(args: &Args) -> Result<()> {
             .unwrap_or_else(|| "none".into()),
         topo.tiers
     );
-    println!(
-        "runtime: {:.1} us   goodput: {} Gbps",
-        r.runtime_ps.map(ps_to_us).unwrap_or(f64::NAN),
-        gbps(r.goodput_gbps)
-    );
+    for (i, r) in results.iter().enumerate() {
+        let prefix = if results.len() > 1 {
+            format!("job {i} (tenant {}): ", r.tenant)
+        } else {
+            String::new()
+        };
+        println!(
+            "{prefix}runtime: {:.1} us   goodput: {} Gbps",
+            r.runtime_ps.map(ps_to_us).unwrap_or(f64::NAN),
+            gbps(r.goodput_gbps)
+        );
+    }
+    if values && algo.carries_values() {
+        for &job in &exp.jobs {
+            verify_job(&exp.net.jobs[job as usize])
+                .map_err(|e| format!("value verification failed: {e}"))?;
+        }
+        println!(
+            "values verified: every required (rank, block) result is the \
+             exact expected {}",
+            match collective {
+                Collective::Broadcast { .. } => "root payload",
+                _ => "saturating fixed-point sum",
+            }
+        );
+    }
     println!(
         "events: {}   avg network utilization: {:.1}%",
         exp.net.events_processed,
@@ -319,10 +372,11 @@ fn main() -> Result<()> {
     let args = Args::parse(
         argv,
         &[
-            "algo", "hosts", "size", "congestion", "traffic", "bg-load",
-            "traffic-json", "seed", "timeout-us", "lb", "topo", "tiers",
-            "oversub", "topo-json", "values", "preset", "workers", "steps",
-            "lr", "comm-every", "diameter", "window", "debug-links",
+            "algo", "collective", "placement", "jobs", "hosts", "size",
+            "congestion", "traffic", "bg-load", "traffic-json", "seed",
+            "timeout-us", "lb", "topo", "tiers", "oversub", "topo-json",
+            "values", "preset", "workers", "steps", "lr", "comm-every",
+            "diameter", "window", "debug-links",
         ],
     )?;
     match args.positional.first().map(|s| s.as_str()) {

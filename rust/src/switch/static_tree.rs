@@ -29,6 +29,13 @@ pub struct TreeRole {
     /// Down-ports of the reverse tree edges (hosts below a leaf,
     /// subtree heads elsewhere); the broadcast fans out on these.
     pub child_ports: Vec<u16>,
+    /// `None` (allreduce/broadcast/barrier): every broadcast clone
+    /// carries the value payload. `Some(p)` (reduce): only the clone
+    /// on port `p` carries values — every other port gets a
+    /// header-only release, so contributor windows still drain while
+    /// the result reaches only the root host. `Some(u16::MAX)` marks
+    /// a switch entirely off the root's path.
+    pub value_port: Option<u16>,
 }
 
 /// Per-tenant static configuration: one role per tree index.
@@ -71,6 +78,7 @@ pub fn on_reduce(sw: &mut SwitchState, ctx: &mut Ctx, pkt: Packet) {
         parent_port,
         expected,
         child_ports,
+        value_port,
     } = role;
 
     let key = pkt.block_key();
@@ -111,7 +119,8 @@ pub fn on_reduce(sw: &mut SwitchState, ctx: &mut Ctx, pkt: Packet) {
             ctx.send(parent, up);
         }
         None => {
-            // root: start the broadcast
+            // root: start the broadcast (reduce: values only toward
+            // the root host, header-only releases elsewhere)
             for port in child_ports {
                 let mut down = pkt.clone();
                 down.kind = PacketKind::StaticBroadcast;
@@ -123,6 +132,10 @@ pub fn on_reduce(sw: &mut SwitchState, ctx: &mut Ctx, pkt: Packet) {
                     }
                     None => Payload::None,
                 };
+                if value_port.is_some_and(|vp| vp != port) {
+                    down.payload = Payload::None;
+                    down.wire_bytes = 64;
+                }
                 ctx.send(port, down);
             }
         }
@@ -131,7 +144,8 @@ pub fn on_reduce(sw: &mut SwitchState, ctx: &mut Ctx, pkt: Packet) {
 
 /// Broadcast-phase packet at an on-tree switch: fan out down the
 /// configured reverse edges (interior switches reach their subtree
-/// heads, leaves reach their hosts).
+/// heads, leaves reach their hosts). For a reduce, only the clone on
+/// `value_port` keeps the payload; the rest shrink to releases.
 pub fn on_broadcast(sw: &mut SwitchState, ctx: &mut Ctx, pkt: Packet) {
     let Some(role) = role_of(sw, &pkt) else {
         // not configured for this tree: forward toward dst
@@ -139,9 +153,14 @@ pub fn on_broadcast(sw: &mut SwitchState, ctx: &mut Ctx, pkt: Packet) {
         ctx.send(port, pkt);
         return;
     };
+    let value_port = role.value_port;
     for port in role.child_ports {
         let mut down = pkt.clone();
         down.src = sw.id;
+        if value_port.is_some_and(|vp| vp != port) {
+            down.payload = Payload::None;
+            down.wire_bytes = 64;
+        }
         ctx.send(port, down);
     }
 }

@@ -125,7 +125,7 @@ impl Clos {
     /// `idx` reached via parent digit `c`. The single source of the
     /// label arithmetic shared by the link builder ([`build`]), the
     /// router ([`Clos::hop`]) and the static-tree control plane
-    /// ([`crate::collectives::runner::install_static_job`]).
+    /// (`install_static_job` in [`crate::collectives::runner`]).
     pub fn parent_index(&self, tier: u8, idx: u32, c: u32) -> u32 {
         debug_assert!(tier < self.tiers() && c < self.cfg.up[tier as usize]);
         let w_t = self.w(tier);

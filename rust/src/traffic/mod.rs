@@ -24,8 +24,10 @@
 //!   surfaced through `metrics::FlowStats` and the `figures` harness
 //!   (`figures traffic`).
 //!
-//! The per-host state machine lives in [`engine`]; `host/background.rs`
-//! re-exports it under the legacy names.
+//! The per-host state machine lives in [`engine`] and plugs into the
+//! host layer as [`crate::host::Proto::Background`]; the bit-compat pin
+//! against the retired `host/background.rs` generator lives in
+//! `tests/traffic_engine.rs`.
 
 pub mod cdf;
 pub mod engine;
@@ -66,7 +68,7 @@ pub enum Injection {
 }
 
 /// Full cross-traffic specification carried by a
-/// [`crate::workload::Scenario`].
+/// [`crate::workload::ScenarioBuilder`].
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct TrafficSpec {
     pub pattern: TrafficPattern,

@@ -16,7 +16,6 @@ use crate::util::error::{Error, Result};
 
 use crate::collectives::{runner, Algo};
 use crate::config::{FatTreeConfig, SimConfig};
-use crate::loadbalance::LoadBalancer;
 use crate::runtime::{
     lit_f32, lit_f32_scalar, lit_i32, lit_i32_2d, lit_u32_scalar, to_f32,
     to_f32_scalar, to_i32, Executable, Runtime,
@@ -25,7 +24,7 @@ use crate::sim::Time;
 use crate::switch::alu;
 use crate::traffic::TrafficSpec;
 use crate::util::rng::Rng;
-use crate::workload::{build_scenario, Scenario};
+use crate::workload::{JobBuilder, ScenarioBuilder};
 
 /// Trainer configuration.
 #[derive(Clone, Debug)]
@@ -177,21 +176,18 @@ impl Trainer {
     /// fat tree (Canary or baseline, with congestion).
     pub fn simulate_comm(&mut self, step: usize) -> Option<Time> {
         let grad_bytes = (self.param_count * 4) as u64;
-        let topo = FatTreeConfig::small();
         let sim = SimConfig::default().with_seed(
             self.cfg.seed ^ (step as u64).wrapping_mul(0x9E3779B97F4A7C15),
         );
-        let sc = Scenario {
-            topo,
-            sim,
-            lb: LoadBalancer::default(),
-            algo: self.cfg.algo,
-            n_allreduce_hosts: self.cfg.workers as u32,
-            traffic: self.cfg.congestion.then(TrafficSpec::uniform),
-            data_bytes: grad_bytes,
-            record_results: false,
-        };
-        let mut exp = build_scenario(&sc, self.cfg.seed + step as u64);
+        let sc = ScenarioBuilder::new(FatTreeConfig::small())
+            .sim(sim)
+            .traffic(self.cfg.congestion.then(TrafficSpec::uniform))
+            .job(
+                JobBuilder::new(self.cfg.algo)
+                    .hosts(self.cfg.workers as u32)
+                    .data_bytes(grad_bytes),
+            );
+        let mut exp = sc.build(self.cfg.seed + step as u64);
         let results = runner::run_to_completion(&mut exp.net, u64::MAX);
         results[0].runtime_ps
     }

@@ -1,55 +1,251 @@
-//! Experiment workload construction: random host placement, cross-traffic
-//! generators and the standard scenarios used by the figure harness.
+//! Experiment construction: placement policies and the
+//! [`ScenarioBuilder`]/[`JobBuilder`] pair — the one path through which
+//! every experiment (single job, multi-tenant, any collective, any
+//! algo) is assembled.
 //!
-//! The paper's protocol (Section 5.2): pick the allreduce hosts uniformly
-//! at random, let the remaining hosts generate cross traffic (the paper's
-//! shape is [`TrafficSpec::uniform`]; the traffic engine adds adversarial
+//! The paper's protocol (Section 5.2) is the default: pick the
+//! collective's hosts uniformly at random ([`Placement::RandomUniform`]),
+//! let the remaining hosts generate cross traffic (the paper's shape is
+//! [`TrafficSpec::uniform`]; the traffic engine adds adversarial
 //! patterns, [`crate::traffic`]), pick static-tree roots at random,
-//! repeat 5 times with fresh seeds.
+//! repeat with fresh seeds. A scenario may carry any number of jobs,
+//! each with its own algo, [`Collective`], placement policy, tenant,
+//! data size and start-time offset; cross traffic always lands on the
+//! hosts no job claimed.
+//!
+//! Determinism contract: for a single RandomUniform allreduce job the
+//! builder makes exactly the RNG draws of the pre-redesign
+//! `build_scenario` free function, in the same order, so every recorded
+//! figure series is bit-identical for the same placement seed
+//! (`tests/placement.rs` pins this against an inlined replica of the
+//! legacy placement).
 
-use crate::collectives::runner::{
-    install_background_job, install_canary_job, install_ring_job,
-    install_static_job,
-};
-use crate::collectives::Algo;
-use crate::config::{FatTreeConfig, SimConfig};
+use crate::collectives::runner::{install_background_job, install_job};
+use crate::collectives::{Algo, Collective, JobSpec};
+use crate::config::{ClosConfig, SimConfig};
 use crate::loadbalance::LoadBalancer;
-use crate::sim::{Network, NodeId};
+use crate::sim::{Network, NodeBody, NodeId, Time};
 use crate::topology::{build, FatTree};
 use crate::traffic::TrafficSpec;
 use crate::util::rng::Rng;
 
-/// One standard experiment: a single allreduce (+ optional cross
-/// traffic).
-#[derive(Clone, Debug)]
-pub struct Scenario {
-    pub topo: FatTreeConfig,
-    pub sim: SimConfig,
-    pub lb: LoadBalancer,
-    pub algo: Algo,
-    /// Number of hosts running the allreduce.
-    pub n_allreduce_hosts: u32,
-    /// Cross traffic generated by the remaining hosts; `None` leaves
-    /// the fabric quiet, `Some(TrafficSpec::uniform())` is the paper's
-    /// random-uniform line-rate stream.
-    pub traffic: Option<TrafficSpec>,
-    /// Application bytes per host.
-    pub data_bytes: u64,
-    pub record_results: bool,
+/// How a job's participant set is carved out of the free host pool.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Placement {
+    /// Uniformly random hosts (the paper's Section 5.2 protocol;
+    /// bit-compatible with the pre-redesign placement for the same
+    /// seed).
+    RandomUniform,
+    /// Fill whole leaves/ToRs (in random leaf order): the job occupies
+    /// the minimum number of leaf domains, the locality-friendly
+    /// schedule real cluster managers aim for.
+    ClusteredByLeaf,
+    /// Round-robin one host per leaf (in leaf index order): maximal
+    /// spread, every block crosses the core.
+    Striped,
+    /// Exactly these hosts (must be free), in rank order after sorting.
+    Explicit(Vec<NodeId>),
 }
 
-impl Scenario {
-    pub fn paper_default(algo: Algo) -> Scenario {
-        Scenario {
-            topo: FatTreeConfig::paper(),
-            sim: SimConfig::default(),
-            lb: LoadBalancer::default(),
-            algo,
-            n_allreduce_hosts: 512,
-            traffic: Some(TrafficSpec::uniform()),
-            data_bytes: 4 * 1024 * 1024,
-            record_results: false,
+impl Placement {
+    /// Parse the CLI spelling (`random`, `clustered`, `striped`).
+    pub fn parse(s: &str) -> Result<Placement, String> {
+        match s {
+            "random" => Ok(Placement::RandomUniform),
+            "clustered" => Ok(Placement::ClusteredByLeaf),
+            "striped" => Ok(Placement::Striped),
+            _ => Err(format!(
+                "unknown placement '{s}' (random|clustered|striped)"
+            )),
         }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Placement::RandomUniform => "random".into(),
+            Placement::ClusteredByLeaf => "clustered".into(),
+            Placement::Striped => "striped".into(),
+            Placement::Explicit(_) => "explicit".into(),
+        }
+    }
+
+    /// Pick `n` participants out of `free` (sorted ascending), remove
+    /// them from the pool and return them sorted ascending (the order
+    /// defines ranks). `Explicit` ignores `n`.
+    pub fn pick(
+        &self,
+        ft: &FatTree,
+        free: &mut Vec<NodeId>,
+        n: u32,
+        rng: &mut Rng,
+    ) -> Vec<NodeId> {
+        let n = n as usize;
+        let chosen: Vec<NodeId> = match self {
+            Placement::RandomUniform => {
+                assert!(
+                    n <= free.len(),
+                    "placement wants {n} hosts, only {} free",
+                    free.len()
+                );
+                let idx = rng.sample_indices(free.len(), n);
+                let mut v: Vec<NodeId> =
+                    idx.iter().map(|&i| free[i]).collect();
+                v.sort_unstable();
+                v
+            }
+            Placement::ClusteredByLeaf => {
+                // leaves that still have free hosts, visited in random
+                // order, each drained before the next is touched
+                let by_leaf = group_by_leaf(ft, free);
+                let mut leaves: Vec<u32> = by_leaf.keys().copied().collect();
+                rng.shuffle(&mut leaves);
+                let mut v = Vec::with_capacity(n);
+                'leaves: for l in leaves {
+                    for &h in &by_leaf[&l] {
+                        v.push(h);
+                        if v.len() == n {
+                            break 'leaves;
+                        }
+                    }
+                }
+                assert!(
+                    v.len() == n,
+                    "placement wants {n} hosts, only {} free",
+                    free.len()
+                );
+                v.sort_unstable();
+                v
+            }
+            Placement::Striped => {
+                // one host per leaf per round, leaves in index order
+                let mut by_leaf = group_by_leaf(ft, free);
+                let mut v = Vec::with_capacity(n);
+                while v.len() < n {
+                    let before = v.len();
+                    for q in by_leaf.values_mut() {
+                        if v.len() == n {
+                            break;
+                        }
+                        if !q.is_empty() {
+                            v.push(q.remove(0));
+                        }
+                    }
+                    assert!(
+                        v.len() > before,
+                        "placement wants {n} hosts, only {before} free"
+                    );
+                }
+                v.sort_unstable();
+                v
+            }
+            Placement::Explicit(hosts) => {
+                let mut v = hosts.clone();
+                v.sort_unstable();
+                v.dedup();
+                assert_eq!(
+                    v.len(),
+                    hosts.len(),
+                    "explicit placement repeats hosts"
+                );
+                for &h in &v {
+                    assert!(
+                        free.binary_search(&h).is_ok(),
+                        "explicit host {h} is not free (taken or absent)"
+                    );
+                }
+                v
+            }
+        };
+        free.retain(|h| chosen.binary_search(h).is_err());
+        chosen
+    }
+}
+
+/// Free hosts bucketed per leaf, leaves in index order (hosts within a
+/// bucket stay in ascending id order because `free` is sorted).
+fn group_by_leaf(
+    ft: &FatTree,
+    free: &[NodeId],
+) -> std::collections::BTreeMap<u32, Vec<NodeId>> {
+    let mut by_leaf: std::collections::BTreeMap<u32, Vec<NodeId>> =
+        Default::default();
+    for &h in free {
+        by_leaf.entry(ft.leaf_of_host(h)).or_default().push(h);
+    }
+    by_leaf
+}
+
+/// One collective job to be placed into a scenario. Build with
+/// [`JobBuilder::new`] and the chained setters; defaults are the
+/// paper's single-allreduce protocol.
+#[derive(Clone, Debug)]
+pub struct JobBuilder {
+    algo: Algo,
+    collective: Collective,
+    hosts: u32,
+    data_bytes: u64,
+    placement: Placement,
+    start_ps: Time,
+    record_results: bool,
+    tenant: Option<u16>,
+}
+
+impl JobBuilder {
+    pub fn new(algo: Algo) -> JobBuilder {
+        JobBuilder {
+            algo,
+            collective: Collective::Allreduce,
+            hosts: 2,
+            data_bytes: 4 << 20,
+            placement: Placement::RandomUniform,
+            start_ps: 0,
+            record_results: false,
+            tenant: None,
+        }
+    }
+
+    /// Number of participating hosts (ignored by
+    /// [`Placement::Explicit`], which fixes the set itself).
+    pub fn hosts(mut self, n: u32) -> Self {
+        self.hosts = n;
+        self
+    }
+
+    /// Application bytes per host (forced to 0 by
+    /// [`Collective::Barrier`]).
+    pub fn data_bytes(mut self, bytes: u64) -> Self {
+        self.data_bytes = bytes;
+        self
+    }
+
+    pub fn collective(mut self, c: Collective) -> Self {
+        self.collective = c;
+        self
+    }
+
+    pub fn placement(mut self, p: Placement) -> Self {
+        self.placement = p;
+        self
+    }
+
+    /// Start-time offset: this job's hosts wake at `t` (ps) instead of 0.
+    pub fn start_at(mut self, t: Time) -> Self {
+        self.start_ps = t;
+        self
+    }
+
+    /// Keep per-host result payloads for value verification
+    /// ([`crate::collectives::verify_job`]); pair with
+    /// `SimConfig::with_values(true)`.
+    pub fn record_results(mut self, on: bool) -> Self {
+        self.record_results = on;
+        self
+    }
+
+    /// Override the tenant id (default: job position + 1).
+    pub fn tenant(mut self, t: u16) -> Self {
+        self.tenant = Some(t);
+        self
     }
 }
 
@@ -57,137 +253,162 @@ impl Scenario {
 pub struct Experiment {
     pub net: Network,
     pub ft: FatTree,
-    /// Index of the (single) allreduce job.
+    /// Index of the first collective job (the common single-job case).
     pub job: u32,
+    /// All collective job indices, in installation order.
+    pub jobs: Vec<u32>,
 }
 
-/// Build a [`Scenario`] with randomized placement derived from
-/// `placement_seed` (independent from the sim seed so the same placement
-/// can be replayed under different protocols).
-pub fn build_scenario(sc: &Scenario, placement_seed: u64) -> Experiment {
-    let mut sim = sc.sim.clone();
-    // placement and sim randomness both derive from the placement seed so
-    // one scenario+seed is one fully-determined world
-    sim.seed = sim.seed ^ placement_seed.wrapping_mul(0x9E3779B97F4A7C15);
-    let (mut net, ft) = build(sc.topo, sim, sc.lb.clone());
-    let mut rng = Rng::new(placement_seed);
+/// Declarative scenario: a fabric, shared sim/load-balancer settings,
+/// optional cross traffic, and any number of collective jobs.
+///
+/// `build(seed)` assembles the network: placement and sim randomness
+/// both derive from the placement seed, so one scenario + seed is one
+/// fully-determined world that can be replayed under different
+/// protocols.
+#[derive(Clone, Debug)]
+pub struct ScenarioBuilder {
+    pub topo: ClosConfig,
+    pub sim: SimConfig,
+    pub lb: LoadBalancer,
+    pub traffic: Option<TrafficSpec>,
+    jobs: Vec<JobBuilder>,
+}
 
-    let all: Vec<NodeId> = ft.all_hosts();
-    let chosen_idx =
-        rng.sample_indices(all.len(), sc.n_allreduce_hosts as usize);
-    let mut participants: Vec<NodeId> =
-        chosen_idx.iter().map(|&i| all[i]).collect();
-    participants.sort_unstable();
-
-    let job = match sc.algo {
-        Algo::Canary => install_canary_job(
-            &mut net,
-            1,
-            participants.clone(),
-            sc.data_bytes,
-            sc.record_results,
-        ),
-        Algo::StaticTree { n_trees } => {
-            let roots = random_roots(&ft, &mut rng, n_trees as usize);
-            install_static_job(
-                &mut net,
-                &ft,
-                1,
-                participants.clone(),
-                sc.data_bytes,
-                roots,
-                sc.record_results,
-            )
-        }
-        Algo::Ring => {
-            install_ring_job(&mut net, 1, participants.clone(), sc.data_bytes)
-        }
-        Algo::Background => panic!("background is not an allreduce"),
-    };
-
-    if let Some(spec) = sc.traffic {
-        // participants are sorted, so exclusion is one binary search
-        // per host instead of a linear scan (O(n log n) over the fabric)
-        let bg: Vec<NodeId> = all
-            .iter()
-            .copied()
-            .filter(|h| participants.binary_search(h).is_err())
-            .collect();
-        if bg.len() >= 2 {
-            install_background_job(&mut net, bg, spec, &mut rng);
+impl ScenarioBuilder {
+    pub fn new(topo: ClosConfig) -> ScenarioBuilder {
+        ScenarioBuilder {
+            topo,
+            sim: SimConfig::default(),
+            lb: LoadBalancer::default(),
+            traffic: None,
+            jobs: Vec::new(),
         }
     }
-    Experiment { net, ft, job }
+
+    /// The paper's standard single-job scenario: 512 random hosts on
+    /// the 1024-host fabric, 4 MiB, uniform line-rate cross traffic.
+    pub fn paper_default(algo: Algo) -> ScenarioBuilder {
+        ScenarioBuilder::new(ClosConfig::paper())
+            .traffic(Some(TrafficSpec::uniform()))
+            .job(JobBuilder::new(algo).hosts(512).data_bytes(4 << 20))
+    }
+
+    pub fn sim(mut self, sim: SimConfig) -> Self {
+        self.sim = sim;
+        self
+    }
+
+    pub fn lb(mut self, lb: LoadBalancer) -> Self {
+        self.lb = lb;
+        self
+    }
+
+    /// Cross traffic generated by the hosts no job claims; `None`
+    /// leaves the fabric quiet, `Some(TrafficSpec::uniform())` is the
+    /// paper's random-uniform line-rate stream. Applies to single- and
+    /// multi-job scenarios alike.
+    pub fn traffic(mut self, spec: Option<TrafficSpec>) -> Self {
+        self.traffic = spec;
+        self
+    }
+
+    /// Append a job. Placement draws happen in append order.
+    pub fn job(mut self, jb: JobBuilder) -> Self {
+        self.jobs.push(jb);
+        self
+    }
+
+    /// Append `n` identically-shaped jobs (the multi-tenant pattern).
+    pub fn jobs(mut self, n: u32, jb: JobBuilder) -> Self {
+        for _ in 0..n {
+            self.jobs.push(jb.clone());
+        }
+        self
+    }
+
+    /// Number of jobs added so far.
+    pub fn n_jobs(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// Assemble the network with randomized placement derived from
+    /// `placement_seed` (independent from the sim seed so the same
+    /// placement can be replayed under different protocols).
+    pub fn build(&self, placement_seed: u64) -> Experiment {
+        assert!(
+            !self.jobs.is_empty(),
+            "a scenario needs at least one job"
+        );
+        let mut sim = self.sim.clone();
+        // placement and sim randomness both derive from the placement
+        // seed so one scenario+seed is one fully-determined world
+        sim.seed = sim.seed ^ placement_seed.wrapping_mul(0x9E3779B97F4A7C15);
+        let (mut net, ft) = build(self.topo, sim, self.lb.clone());
+
+        // statically partition the descriptor table across tenants, as
+        // most in-network algorithms do and the paper adopts for
+        // fairness (5.2.4): each tenant hashes into a disjoint region
+        // of every switch's table
+        if self.jobs.len() > 1 {
+            let n = self.jobs.len() as u32;
+            for node in net.nodes.iter_mut() {
+                if let NodeBody::Switch(sw) = &mut node.body {
+                    sw.canary.partitions = n;
+                }
+            }
+        }
+
+        let mut rng = Rng::new(placement_seed);
+        let mut free: Vec<NodeId> = ft.all_hosts();
+        let mut jobs = Vec::with_capacity(self.jobs.len());
+        for (j, jb) in self.jobs.iter().enumerate() {
+            let participants =
+                jb.placement.pick(&ft, &mut free, jb.hosts, &mut rng);
+            let tree_roots = match jb.algo {
+                Algo::StaticTree { n_trees } => {
+                    random_roots(&ft, &mut rng, n_trees as usize)
+                }
+                _ => vec![],
+            };
+            // barrier: one genuinely empty block — no application data
+            // and a single-lane payload, so the wire carries a
+            // header-sized packet per host instead of a full MTU
+            let (data_bytes, payload_bytes) = match jb.collective {
+                Collective::Barrier => (0, 4.min(net.cfg.payload_bytes)),
+                _ => (jb.data_bytes, net.cfg.payload_bytes),
+            };
+            let spec = JobSpec {
+                tenant: jb.tenant.unwrap_or((j + 1) as u16),
+                algo: jb.algo,
+                collective: jb.collective,
+                participants,
+                data_bytes,
+                window: net.cfg.host_window,
+                payload_bytes,
+                tree_roots,
+                start_ps: jb.start_ps,
+                record_results: jb.record_results,
+            };
+            jobs.push(install_job(&mut net, &ft, spec));
+        }
+
+        // cross traffic on every host no job claimed — in multi-job
+        // scenarios exactly as in single-job ones
+        if let Some(spec) = self.traffic {
+            if free.len() >= 2 {
+                install_background_job(&mut net, free.clone(), spec, &mut rng);
+            }
+        }
+        let job = jobs[0];
+        Experiment { net, ft, job, jobs }
+    }
 }
 
-/// Distinct random spine roots (paper: roots picked at random per run).
+/// Distinct random top-tier roots (paper: static-tree roots picked at
+/// random per run).
 pub fn random_roots(ft: &FatTree, rng: &mut Rng, n: usize) -> Vec<NodeId> {
     let spines = ft.all_spines();
     let idx = rng.sample_indices(spines.len(), n.min(spines.len()));
     idx.into_iter().map(|i| spines[i]).collect()
-}
-
-/// Multi-tenant scenario (Fig. 10): partition `n_jobs * hosts_per_job`
-/// hosts into equal concurrent allreduces, all of the same `algo`.
-pub fn build_multi_tenant(
-    topo: FatTreeConfig,
-    sim: SimConfig,
-    lb: LoadBalancer,
-    algo: Algo,
-    n_jobs: u32,
-    data_bytes: u64,
-    placement_seed: u64,
-) -> (Network, FatTree, Vec<u32>) {
-    let mut sim = sim;
-    sim.seed = sim.seed ^ placement_seed.wrapping_mul(0x9E3779B97F4A7C15);
-    let (mut net, ft) = build(topo, sim, lb);
-    // statically partition the descriptor table across tenants, as most
-    // in-network algorithms do and the paper adopts for fairness (5.2.4):
-    // each tenant hashes into a disjoint region of every switch's table
-    for node in net.nodes.iter_mut() {
-        if let crate::sim::NodeBody::Switch(sw) = &mut node.body {
-            sw.canary.partitions = n_jobs.max(1);
-        }
-    }
-    let mut rng = Rng::new(placement_seed);
-
-    let mut all: Vec<NodeId> = ft.all_hosts();
-    rng.shuffle(&mut all);
-    let per_job = (all.len() as u32 / n_jobs).max(1);
-
-    let mut jobs = Vec::new();
-    for j in 0..n_jobs {
-        let lo = (j * per_job) as usize;
-        let hi = ((j + 1) * per_job) as usize;
-        let mut participants: Vec<NodeId> = all[lo..hi].to_vec();
-        participants.sort_unstable();
-        let tenant = (j + 1) as u16;
-        let job = match algo {
-            Algo::Canary => install_canary_job(
-                &mut net,
-                tenant,
-                participants,
-                data_bytes,
-                false,
-            ),
-            Algo::StaticTree { n_trees } => {
-                let roots = random_roots(&ft, &mut rng, n_trees as usize);
-                install_static_job(
-                    &mut net,
-                    &ft,
-                    tenant,
-                    participants,
-                    data_bytes,
-                    roots,
-                    false,
-                )
-            }
-            Algo::Ring => {
-                install_ring_job(&mut net, tenant, participants, data_bytes)
-            }
-            Algo::Background => unreachable!(),
-        };
-        jobs.push(job);
-    }
-    (net, ft, jobs)
 }

@@ -1,62 +1,32 @@
 //! End-to-end value correctness: every participating host must receive,
 //! for every block, exactly the saturating fixed-point sum of all
 //! participants' payloads — under dynamic trees, collisions, stragglers,
-//! congestion, and adaptive routing.
+//! congestion, and adaptive routing. The derived collectives (Section 6)
+//! are held to their own semantics: a reduce's root holds the sum, a
+//! broadcast delivers the root's payload everywhere, a barrier is a
+//! one-empty-block allreduce.
 //!
 //! These are the coordinator invariants the paper's protocol must
-//! guarantee (Sections 3.1-3.2); they are checked with the
+//! guarantee (Sections 3.1-3.2, 6); they are checked with the
 //! `proptest_lite` randomized-property harness.
 
-use canary::collectives::{expected_block_sum, runner, Algo};
+use canary::collectives::{
+    runner, verify_job, Algo, Collective,
+};
 use canary::config::{FatTreeConfig, SimConfig};
+use canary::faults::FaultPlan;
 use canary::loadbalance::LoadBalancer;
 use canary::sim::US;
 use canary::traffic::TrafficSpec;
 use canary::util::proptest_lite::check_property;
 use canary::util::rng::Rng;
-use canary::workload::{build_scenario, Scenario};
+use canary::workload::{JobBuilder, ScenarioBuilder};
 
-/// Verify all recorded results of job 0 against the expected sums.
+/// Verify all recorded results of the experiment's first job.
 fn verify_all_results(
     exp: &canary::workload::Experiment,
 ) -> Result<(), String> {
-    let job = &exp.net.jobs[exp.job as usize];
-    let spec = &job.spec;
-    let total_blocks = spec.total_blocks();
-    let n = spec.participants.len() as u32;
-    if job.finish.is_none() {
-        return Err(format!(
-            "job did not finish (hosts done: {}/{n})",
-            job.hosts_finished
-        ));
-    }
-    let lanes = spec.lanes();
-    let mut checked = 0usize;
-    for block in 0..total_blocks {
-        let expected = expected_block_sum(
-            spec.tenant,
-            &spec.participants,
-            block,
-            lanes,
-        );
-        for rank in 0..n {
-            let Some(got) = job.results.get(&(rank, block)) else {
-                // the leader of a block keeps its result locally; it is
-                // recorded too, so every (rank, block) must exist
-                return Err(format!(
-                    "missing result rank {rank} block {block}"
-                ));
-            };
-            if got != &expected {
-                return Err(format!(
-                    "wrong value rank {rank} block {block}"
-                ));
-            }
-            checked += 1;
-        }
-    }
-    assert_eq!(checked, (total_blocks * n) as usize);
-    Ok(())
+    verify_job(&exp.net.jobs[exp.job as usize])
 }
 
 fn values_scenario(
@@ -66,21 +36,20 @@ fn values_scenario(
     hosts: u32,
     congestion: bool,
     data_bytes: u64,
-) -> Scenario {
-    Scenario {
-        topo,
-        sim: sim.with_values(true),
-        lb: LoadBalancer::default(),
-        algo,
-        n_allreduce_hosts: hosts,
-        traffic: congestion.then(TrafficSpec::uniform),
-        data_bytes,
-        record_results: true,
-    }
+) -> ScenarioBuilder {
+    ScenarioBuilder::new(topo)
+        .sim(sim.with_values(true))
+        .traffic(congestion.then(TrafficSpec::uniform))
+        .job(
+            JobBuilder::new(algo)
+                .hosts(hosts)
+                .data_bytes(data_bytes)
+                .record_results(true),
+        )
 }
 
-fn run_and_verify(sc: &Scenario, seed: u64) -> Result<(), String> {
-    let mut exp = build_scenario(sc, seed);
+fn run_and_verify(sc: &ScenarioBuilder, seed: u64) -> Result<(), String> {
+    let mut exp = sc.build(seed);
     runner::run_to_completion(&mut exp.net, 200_000 * US);
     verify_all_results(&exp)?;
     // descriptor soft-state must fully drain on a clean run
@@ -134,7 +103,7 @@ fn canary_correct_under_forced_collisions() {
             false,
             16 * 1024,
         );
-        let mut exp = build_scenario(&sc, rng.next_u64());
+        let mut exp = sc.build(rng.next_u64());
         runner::run_to_completion(&mut exp.net, 200_000 * US);
         if exp.net.metrics.collisions == 0 {
             return Err("expected collisions with 4 slots".into());
@@ -155,7 +124,7 @@ fn canary_correct_with_tiny_timeout_all_stragglers() {
         false,
         8 * 1024,
     );
-    let mut exp = build_scenario(&sc, 3);
+    let mut exp = sc.build(3);
     runner::run_to_completion(&mut exp.net, 200_000 * US);
     assert!(exp.net.metrics.stragglers > 0, "expected stragglers");
     verify_all_results(&exp).unwrap();
@@ -224,17 +193,9 @@ fn two_hosts_minimum() {
 #[test]
 fn ring_completes_at_expected_bandwidth() {
     // not value-carrying, but timing must match the analytic model
-    let sc = Scenario {
-        topo: FatTreeConfig::small(),
-        sim: SimConfig::default(),
-        lb: LoadBalancer::default(),
-        algo: Algo::Ring,
-        n_allreduce_hosts: 16,
-        traffic: None,
-        data_bytes: 1 << 20,
-        record_results: false,
-    };
-    let mut exp = build_scenario(&sc, 5);
+    let sc = ScenarioBuilder::new(FatTreeConfig::small())
+        .job(JobBuilder::new(Algo::Ring).hosts(16).data_bytes(1 << 20));
+    let mut exp = sc.build(5);
     let res = runner::run_to_completion(&mut exp.net, 200_000 * US);
     let g = res[0].goodput_gbps.expect("ring finished");
     // bandwidth-optimal ring: B/2 * N/(N-1) * payload efficiency ~ 45;
@@ -244,42 +205,155 @@ fn ring_completes_at_expected_bandwidth() {
 
 #[test]
 fn multi_tenant_concurrent_jobs_all_correct() {
-    use canary::workload::build_multi_tenant;
-    let (mut net, _ft, jobs) = build_multi_tenant(
-        FatTreeConfig::small(),
-        SimConfig::default().with_values(true),
-        LoadBalancer::default(),
-        Algo::Canary,
-        4,
-        8 * 1024,
-        77,
-    );
-    // enable result recording on every job
-    for j in net.jobs.iter_mut() {
-        j.spec.record_results = true;
+    let sc = ScenarioBuilder::new(FatTreeConfig::small())
+        .sim(SimConfig::default().with_values(true))
+        .jobs(
+            4,
+            JobBuilder::new(Algo::Canary)
+                .hosts(16)
+                .data_bytes(8 * 1024)
+                .record_results(true),
+        );
+    let mut exp = sc.build(77);
+    runner::run_to_completion(&mut exp.net, 200_000 * US);
+    assert_eq!(exp.jobs.len(), 4);
+    for &job in &exp.jobs {
+        verify_job(&exp.net.jobs[job as usize]).unwrap_or_else(|e| {
+            panic!(
+                "tenant {}: {e}",
+                exp.net.jobs[job as usize].spec.tenant
+            )
+        });
     }
-    runner::run_to_completion(&mut net, 200_000 * US);
-    for &job in &jobs {
-        let j = &net.jobs[job as usize];
-        assert!(j.finish.is_some(), "tenant {} unfinished", j.spec.tenant);
-        let lanes = j.spec.lanes();
-        for block in 0..j.spec.total_blocks() {
-            let expected = expected_block_sum(
-                j.spec.tenant,
-                &j.spec.participants,
-                block,
-                lanes,
-            );
-            for rank in 0..j.spec.participants.len() as u32 {
-                assert_eq!(
-                    j.results.get(&(rank, block)).expect("result"),
-                    &expected,
-                    "tenant {} rank {rank} block {block}",
-                    j.spec.tenant
+}
+
+// ---- derived collectives (Section 6) end to end ----------------------
+
+/// Reduce/broadcast/barrier under uniform cross traffic, all engines:
+/// value semantics hold per collective (reduce: root holds the sum;
+/// broadcast: everyone holds the root's payload; barrier: one empty
+/// block everywhere). Ring carries no values and is verified for
+/// completion.
+#[test]
+fn derived_collectives_correct_under_cross_traffic() {
+    let collectives = [
+        Collective::Reduce { root: 0 },
+        Collective::Reduce { root: 3 },
+        Collective::Broadcast { root: 0 },
+        Collective::Broadcast { root: 2 },
+        Collective::Barrier,
+    ];
+    for c in collectives {
+        for algo in [
+            Algo::Canary,
+            Algo::StaticTree { n_trees: 1 },
+            Algo::StaticTree { n_trees: 4 },
+            Algo::Ring,
+        ] {
+            let sc = ScenarioBuilder::new(FatTreeConfig::tiny())
+                .sim(SimConfig::default().with_values(true))
+                .traffic(Some(TrafficSpec::uniform()))
+                .job(
+                    JobBuilder::new(algo)
+                        .collective(c)
+                        .hosts(5)
+                        .data_bytes(8 * 1024)
+                        .record_results(true),
                 );
-            }
+            let mut exp = sc.build(23);
+            runner::run_to_completion(&mut exp.net, 200_000 * US);
+            verify_job(&exp.net.jobs[exp.job as usize]).unwrap_or_else(
+                |e| panic!("{} on {}: {e}", c.name(), algo.name()),
+            );
         }
     }
+}
+
+#[test]
+fn derived_collectives_correct_under_packet_drops() {
+    // random loss + retransmission timers: the recovery machinery must
+    // preserve each collective's value semantics, not just allreduce's
+    check_property("derived-loss", 0xD0, 4, |rng: &mut Rng| {
+        let collectives = [
+            Collective::Reduce { root: 1 },
+            Collective::Broadcast { root: 1 },
+            Collective::Barrier,
+        ];
+        let c = *rng.choose(&collectives);
+        let hosts = 4 + rng.gen_range(4) as u32;
+        let sc = ScenarioBuilder::new(FatTreeConfig::tiny())
+            .sim(
+                SimConfig::default()
+                    .with_values(true)
+                    .with_retrans(200 * US, true),
+            )
+            .job(
+                JobBuilder::new(Algo::Canary)
+                    .collective(c)
+                    .hosts(hosts)
+                    .data_bytes(4 * 1024)
+                    .record_results(true),
+            );
+        let mut exp = sc.build(rng.next_u64());
+        exp.net.faults = FaultPlan::default().with_loss(0.02);
+        runner::run_to_completion(&mut exp.net, 2_000_000 * US);
+        verify_job(&exp.net.jobs[exp.job as usize])
+            .map_err(|e| format!("{}: {e}", c.name()))
+    });
+}
+
+/// A bounded in-flight window must not deadlock a reduce: non-root
+/// participants never receive result values, but the release wave
+/// (header-only on Canary, payload-stripped broadcast clones on static
+/// trees) must still drain their windows so later blocks flow.
+#[test]
+fn reduce_completes_with_a_bounded_window() {
+    for algo in [Algo::Canary, Algo::StaticTree { n_trees: 1 }] {
+        // 32 blocks against a 4-block window: completion requires ~8
+        // window refills at every non-root host
+        let sc = ScenarioBuilder::new(FatTreeConfig::tiny())
+            .sim(SimConfig::default().with_values(true).with_window(4))
+            .job(
+                JobBuilder::new(algo)
+                    .collective(Collective::Reduce { root: 0 })
+                    .hosts(6)
+                    .data_bytes(32 * 1024)
+                    .record_results(true),
+            );
+        let mut exp = sc.build(29);
+        runner::run_to_completion(&mut exp.net, 200_000 * US);
+        verify_job(&exp.net.jobs[exp.job as usize])
+            .unwrap_or_else(|e| panic!("windowed reduce on {}: {e}", algo.name()));
+    }
+}
+
+/// A canary reduce must not ship result payloads back down the fabric:
+/// its release wave is header-only (the root already has the sum), while
+/// an allreduce's broadcast carries full packets.
+#[test]
+fn reduce_release_wave_is_header_only() {
+    let bcast_bytes = |collective: Collective| -> u64 {
+        let sc = ScenarioBuilder::new(FatTreeConfig::tiny())
+            .sim(SimConfig::default().with_values(true))
+            .job(
+                JobBuilder::new(Algo::Canary)
+                    .collective(collective)
+                    .hosts(6)
+                    .data_bytes(32 * 1024)
+                    .record_results(true),
+            );
+        let mut exp = sc.build(31);
+        runner::run_to_completion(&mut exp.net, 200_000 * US);
+        verify_job(&exp.net.jobs[exp.job as usize]).unwrap();
+        exp.net.links.iter().map(|l| l.bytes_tx).sum()
+    };
+    let allreduce = bcast_bytes(Collective::Allreduce);
+    let reduce = bcast_bytes(Collective::Reduce { root: 0 });
+    assert!(
+        (reduce as f64) < 0.75 * allreduce as f64,
+        "reduce moved {reduce} B vs allreduce {allreduce} B — the \
+         broadcast phase should have shrunk to headers"
+    );
 }
 
 #[test]
@@ -290,15 +364,15 @@ fn all_load_balancers_preserve_correctness() {
         LoadBalancer::MinQueue,
         LoadBalancer::Flowlet { gap_ps: 5 * US },
     ] {
-        let mut sc = values_scenario(
+        let sc = values_scenario(
             FatTreeConfig::small(),
             SimConfig::default(),
             Algo::Canary,
             10,
             true,
             8 * 1024,
-        );
-        sc.lb = lb;
+        )
+        .lb(lb);
         run_and_verify(&sc, 13).unwrap();
     }
 }

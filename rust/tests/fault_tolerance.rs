@@ -2,66 +2,39 @@
 //! failures are handled end-to-end by the leader protocol — blocks are
 //! retransmitted or re-reduced under fresh ids, and values stay exact.
 
-use canary::collectives::{expected_block_sum, runner, Algo};
+use canary::collectives::{runner, verify_job, Algo, Collective};
 use canary::config::{FatTreeConfig, SimConfig};
 use canary::faults::FaultPlan;
-use canary::loadbalance::LoadBalancer;
 use canary::sim::US;
 use canary::util::proptest_lite::check_property;
 use canary::util::rng::Rng;
-use canary::workload::{build_scenario, Scenario};
+use canary::workload::{JobBuilder, ScenarioBuilder};
 
-fn lossy_scenario(hosts: u32, kib: u64) -> Scenario {
-    Scenario {
-        topo: FatTreeConfig::tiny(),
-        sim: SimConfig::default()
-            .with_values(true)
-            // short loss-recovery timer so tests converge quickly
-            .with_retrans(200 * US, true),
-        lb: LoadBalancer::default(),
-        algo: Algo::Canary,
-        n_allreduce_hosts: hosts,
-        traffic: None,
-        data_bytes: kib * 1024,
-        record_results: true,
-    }
+fn lossy_scenario(hosts: u32, kib: u64) -> ScenarioBuilder {
+    ScenarioBuilder::new(FatTreeConfig::tiny())
+        .sim(
+            SimConfig::default()
+                .with_values(true)
+                // short loss-recovery timer so tests converge quickly
+                .with_retrans(200 * US, true),
+        )
+        .job(
+            JobBuilder::new(Algo::Canary)
+                .hosts(hosts)
+                .data_bytes(kib * 1024)
+                .record_results(true),
+        )
 }
 
 fn verify(exp: &canary::workload::Experiment) -> Result<(), String> {
-    let job = &exp.net.jobs[exp.job as usize];
-    if job.finish.is_none() {
-        return Err(format!(
-            "unfinished: {}/{} hosts",
-            job.hosts_finished,
-            job.spec.participants.len()
-        ));
-    }
-    let lanes = job.spec.lanes();
-    for block in 0..job.spec.total_blocks() {
-        let expected = expected_block_sum(
-            job.spec.tenant,
-            &job.spec.participants,
-            block,
-            lanes,
-        );
-        for rank in 0..job.spec.participants.len() as u32 {
-            let got = job
-                .results
-                .get(&(rank, block))
-                .ok_or_else(|| format!("missing r{rank} b{block}"))?;
-            if got != &expected {
-                return Err(format!("wrong value r{rank} b{block}"));
-            }
-        }
-    }
-    Ok(())
+    verify_job(&exp.net.jobs[exp.job as usize])
 }
 
 #[test]
 fn survives_random_packet_loss() {
     check_property("loss-recovery", 0xF0, 5, |rng: &mut Rng| {
         let sc = lossy_scenario(4 + rng.gen_range(4) as u32, 4);
-        let mut exp = build_scenario(&sc, rng.next_u64());
+        let mut exp = sc.build(rng.next_u64());
         exp.net.faults = FaultPlan::default().with_loss(0.02);
         runner::run_to_completion(&mut exp.net, 2_000_000 * US);
         if exp.net.metrics.drops_injected == 0 {
@@ -74,7 +47,7 @@ fn survives_random_packet_loss() {
 #[test]
 fn survives_heavy_packet_loss() {
     let sc = lossy_scenario(4, 2);
-    let mut exp = build_scenario(&sc, 42);
+    let mut exp = sc.build(42);
     exp.net.faults = FaultPlan::default().with_loss(0.10);
     runner::run_to_completion(&mut exp.net, 5_000_000 * US);
     verify(&exp).unwrap();
@@ -91,7 +64,7 @@ fn survives_spine_switch_failure() {
     // kill one spine mid-transfer: its soft state is lost; the leaders
     // recover every affected block (loss-equivalent, Section 3.3)
     let sc = lossy_scenario(8, 64);
-    let mut exp = build_scenario(&sc, 21);
+    let mut exp = sc.build(21);
     let spine = exp.ft.spine_id(0);
     // fail mid-transfer (a 64 KiB allreduce runs for tens of us)
     exp.net.faults =
@@ -107,7 +80,7 @@ fn fallback_to_host_based_reduction() {
     // first failure round, which must still produce exact results
     let mut sc = lossy_scenario(5, 2);
     sc.sim.max_retries = 0;
-    let mut exp = build_scenario(&sc, 33);
+    let mut exp = sc.build(33);
     exp.net.faults = FaultPlan::default().with_loss(0.05);
     runner::run_to_completion(&mut exp.net, 5_000_000 * US);
     verify(&exp).unwrap();
@@ -116,10 +89,45 @@ fn fallback_to_host_based_reduction() {
 #[test]
 fn clean_run_has_no_recovery_activity() {
     let sc = lossy_scenario(6, 4);
-    let mut exp = build_scenario(&sc, 55);
+    let mut exp = sc.build(55);
     runner::run_to_completion(&mut exp.net, 2_000_000 * US);
     verify(&exp).unwrap();
     let m = &exp.net.metrics;
     assert_eq!(m.failures, 0);
     assert_eq!(m.drops_injected, 0);
+}
+
+#[test]
+fn derived_collectives_survive_packet_loss() {
+    // the loss-recovery machinery must stay correct when leaders are
+    // pinned to a root (reduce/broadcast) and for the one-block barrier
+    let collectives = [
+        Collective::Reduce { root: 0 },
+        Collective::Broadcast { root: 2 },
+        Collective::Barrier,
+    ];
+    for c in collectives {
+        let sc = ScenarioBuilder::new(FatTreeConfig::tiny())
+            .sim(
+                SimConfig::default()
+                    .with_values(true)
+                    .with_retrans(200 * US, true),
+            )
+            .job(
+                JobBuilder::new(Algo::Canary)
+                    .collective(c)
+                    .hosts(6)
+                    .data_bytes(4 * 1024)
+                    .record_results(true),
+            );
+        let mut exp = sc.build(19);
+        exp.net.faults = FaultPlan::default().with_loss(0.03);
+        runner::run_to_completion(&mut exp.net, 5_000_000 * US);
+        assert!(
+            exp.net.metrics.drops_injected > 0,
+            "{}: no loss injected",
+            c.name()
+        );
+        verify(&exp).unwrap_or_else(|e| panic!("{}: {e}", c.name()));
+    }
 }

@@ -4,14 +4,13 @@
 //! and the clos3 experiment's Canary-vs-static comparison runs at every
 //! oversubscription ratio.
 
-use canary::collectives::{expected_block_sum, runner, Algo};
+use canary::collectives::{runner, verify_job, Algo, Collective};
 use canary::config::{ClosConfig, SimConfig};
-use canary::loadbalance::LoadBalancer;
 use canary::sim::US;
 use canary::traffic::TrafficSpec;
 use canary::util::proptest_lite::check_property;
 use canary::util::rng::Rng;
-use canary::workload::{build_scenario, Scenario};
+use canary::workload::{JobBuilder, ScenarioBuilder};
 
 fn scenario3(
     topo: ClosConfig,
@@ -20,46 +19,20 @@ fn scenario3(
     congestion: bool,
     data_kib: u64,
     values: bool,
-) -> Scenario {
-    Scenario {
-        topo,
-        sim: SimConfig::default().with_values(values),
-        lb: LoadBalancer::default(),
-        algo,
-        n_allreduce_hosts: hosts,
-        traffic: congestion.then(TrafficSpec::uniform),
-        data_bytes: data_kib * 1024,
-        record_results: values,
-    }
+) -> ScenarioBuilder {
+    ScenarioBuilder::new(topo)
+        .sim(SimConfig::default().with_values(values))
+        .traffic(congestion.then(TrafficSpec::uniform))
+        .job(
+            JobBuilder::new(algo)
+                .hosts(hosts)
+                .data_bytes(data_kib * 1024)
+                .record_results(values),
+        )
 }
 
 fn verify_values(exp: &canary::workload::Experiment) -> Result<(), String> {
-    let job = &exp.net.jobs[exp.job as usize];
-    let spec = &job.spec;
-    if job.finish.is_none() {
-        return Err(format!(
-            "job did not finish ({}/{} hosts)",
-            job.hosts_finished,
-            spec.participants.len()
-        ));
-    }
-    let lanes = spec.lanes();
-    for block in 0..spec.total_blocks() {
-        let expected =
-            expected_block_sum(spec.tenant, &spec.participants, block, lanes);
-        for rank in 0..spec.participants.len() as u32 {
-            match job.results.get(&(rank, block)) {
-                None => {
-                    return Err(format!("missing r{rank} b{block}"))
-                }
-                Some(got) if got != &expected => {
-                    return Err(format!("wrong value r{rank} b{block}"))
-                }
-                _ => {}
-            }
-        }
-    }
-    Ok(())
+    verify_job(&exp.net.jobs[exp.job as usize])
 }
 
 #[test]
@@ -84,7 +57,7 @@ fn all_algorithms_complete_on_three_tiers() {
             1 + rng.gen_range(32),
             false,
         );
-        let mut exp = build_scenario(&sc, rng.next_u64());
+        let mut exp = sc.build(rng.next_u64());
         let res = runner::run_to_completion(&mut exp.net, 500_000 * US);
         if res[0].runtime_ps.is_none() {
             return Err(format!(
@@ -107,7 +80,7 @@ fn canary_values_exact_across_three_tiers() {
             1 + rng.gen_range(8),
             true,
         );
-        let mut exp = build_scenario(&sc, rng.next_u64());
+        let mut exp = sc.build(rng.next_u64());
         runner::run_to_completion(&mut exp.net, 500_000 * US);
         verify_values(&exp)
     });
@@ -125,9 +98,42 @@ fn static_tree_values_exact_across_three_tiers() {
             16,
             true,
         );
-        let mut exp = build_scenario(&sc, 11);
+        let mut exp = sc.build(11);
         runner::run_to_completion(&mut exp.net, 500_000 * US);
         verify_values(&exp).unwrap();
+    }
+}
+
+#[test]
+fn derived_collectives_run_across_three_tiers() {
+    // reduce/broadcast/barrier on the tiny3 fabric, every engine: the
+    // acceptance surface for the Collective API on multi-tier fabrics
+    let collectives = [
+        Collective::Reduce { root: 0 },
+        Collective::Broadcast { root: 0 },
+        Collective::Barrier,
+    ];
+    for c in collectives {
+        for algo in [
+            Algo::Canary,
+            Algo::StaticTree { n_trees: 1 },
+            Algo::Ring,
+        ] {
+            let sc = ScenarioBuilder::new(ClosConfig::tiny3())
+                .sim(SimConfig::default().with_values(true))
+                .job(
+                    JobBuilder::new(algo)
+                        .collective(c)
+                        .hosts(6)
+                        .data_bytes(8 * 1024)
+                        .record_results(true),
+                );
+            let mut exp = sc.build(13);
+            runner::run_to_completion(&mut exp.net, 500_000 * US);
+            verify_values(&exp).unwrap_or_else(|e| {
+                panic!("{} on {} (tiny3): {e}", c.name(), algo.name())
+            });
+        }
     }
 }
 
@@ -145,7 +151,7 @@ fn canary_restoration_works_across_tiers() {
         true,
     );
     sc.sim = sc.sim.with_slots(4);
-    let mut exp = build_scenario(&sc, 5);
+    let mut exp = sc.build(5);
     runner::run_to_completion(&mut exp.net, 500_000 * US);
     assert!(
         exp.net.metrics.collisions > 0,
@@ -163,7 +169,7 @@ fn oversubscribed_comparison_runs_end_to_end() {
         let mut goodputs = Vec::new();
         for algo in [Algo::StaticTree { n_trees: 1 }, Algo::Canary] {
             let sc = scenario3(topo, algo, 32, true, 64, false);
-            let mut exp = build_scenario(&sc, 9);
+            let mut exp = sc.build(9);
             let res =
                 runner::run_to_completion(&mut exp.net, 2_000_000 * US);
             let g = res[0]
@@ -184,7 +190,7 @@ fn deeper_fabric_uses_more_switch_hops() {
     let mut descriptor_allocs = Vec::new();
     for topo in [ClosConfig::small(), ClosConfig::small3()] {
         let sc = scenario3(topo, Algo::Canary, 16, false, 16, false);
-        let mut exp = build_scenario(&sc, 3);
+        let mut exp = sc.build(3);
         runner::run_to_completion(&mut exp.net, 500_000 * US);
         assert!(exp.net.jobs[0].finish.is_some());
         descriptor_allocs.push(exp.net.metrics.descriptors_allocated);

@@ -1,0 +1,301 @@
+//! Placement-policy invariants and the redesign's bit-compat pin.
+//!
+//! The Collective API replaced the `build_scenario`/`build_multi_tenant`
+//! free functions with the `ScenarioBuilder` path; the contract is that
+//! a single `RandomUniform` allreduce job makes **exactly** the RNG
+//! draws of the old placement in the same order, so every recorded
+//! figure series is bit-identical for the same placement seed. This
+//! file pins that against an inlined replica of the legacy placement,
+//! and checks the structural invariants of the new policies.
+
+use canary::collectives::{runner, Algo, Collective};
+use canary::config::FatTreeConfig;
+use canary::sim::{NodeId, US};
+use canary::traffic::TrafficSpec;
+use canary::util::rng::Rng;
+use canary::workload::{JobBuilder, Placement, ScenarioBuilder};
+
+/// The pre-redesign `build_scenario` placement, reproduced verbatim:
+/// one `Rng::new(placement_seed)`, `sample_indices` over all hosts,
+/// participants sorted; static roots sampled next from the same stream;
+/// background = the non-participants in ascending id order.
+fn legacy_placement(
+    topo: FatTreeConfig,
+    n_hosts: u32,
+    static_trees: Option<usize>,
+    placement_seed: u64,
+) -> (Vec<NodeId>, Vec<NodeId>, Vec<NodeId>) {
+    let mut rng = Rng::new(placement_seed);
+    let all: Vec<NodeId> = (0..topo.n_hosts()).collect();
+    let chosen_idx = rng.sample_indices(all.len(), n_hosts as usize);
+    let mut participants: Vec<NodeId> =
+        chosen_idx.iter().map(|&i| all[i]).collect();
+    participants.sort_unstable();
+    let roots = match static_trees {
+        Some(n) => {
+            // legacy random_roots: sample over the spine list
+            let spines: Vec<NodeId> = (topo.n_hosts() + topo.n_leaf()
+                ..topo.n_hosts() + topo.n_leaf() + topo.n_spine())
+                .collect();
+            let idx = rng.sample_indices(spines.len(), n.min(spines.len()));
+            idx.into_iter().map(|i| spines[i]).collect()
+        }
+        None => vec![],
+    };
+    let bg: Vec<NodeId> = all
+        .iter()
+        .copied()
+        .filter(|h| participants.binary_search(h).is_err())
+        .collect();
+    (participants, roots, bg)
+}
+
+fn built_sets(
+    sc: &ScenarioBuilder,
+    seed: u64,
+) -> (Vec<NodeId>, Vec<NodeId>, Vec<NodeId>) {
+    let exp = sc.build(seed);
+    let job = &exp.net.jobs[exp.job as usize];
+    let bg = exp
+        .net
+        .jobs
+        .iter()
+        .find(|j| !j.spec.algo.is_allreduce())
+        .map(|j| j.spec.participants.clone())
+        .unwrap_or_default();
+    (
+        job.spec.participants.clone(),
+        job.spec.tree_roots.clone(),
+        bg,
+    )
+}
+
+#[test]
+fn random_uniform_is_bit_identical_to_the_legacy_placement() {
+    let topo = FatTreeConfig::small();
+    for seed in [1u64, 42, 1000, 0xDEAD_BEEF] {
+        // canary job + uniform cross traffic (the standard figure cell)
+        let sc = ScenarioBuilder::new(topo)
+            .traffic(Some(TrafficSpec::uniform()))
+            .job(JobBuilder::new(Algo::Canary).hosts(24).data_bytes(8192));
+        let (got_p, got_r, got_bg) = built_sets(&sc, seed);
+        let (want_p, want_r, want_bg) =
+            legacy_placement(topo, 24, None, seed);
+        assert_eq!(got_p, want_p, "participants diverged at seed {seed}");
+        assert_eq!(got_r, want_r);
+        assert_eq!(got_bg, want_bg, "background set diverged at seed {seed}");
+
+        // static-tree job: the root draw must follow the participant
+        // draw on the same stream, as before
+        let sc = ScenarioBuilder::new(topo)
+            .traffic(Some(TrafficSpec::uniform()))
+            .job(
+                JobBuilder::new(Algo::StaticTree { n_trees: 4 })
+                    .hosts(24)
+                    .data_bytes(8192),
+            );
+        let (got_p, got_r, got_bg) = built_sets(&sc, seed);
+        let (want_p, want_r, want_bg) =
+            legacy_placement(topo, 24, Some(4), seed);
+        assert_eq!(got_p, want_p);
+        assert_eq!(got_r, want_r, "tree roots diverged at seed {seed}");
+        assert_eq!(got_bg, want_bg);
+    }
+}
+
+#[test]
+fn random_uniform_runs_are_fully_deterministic() {
+    // same scenario + seed twice: identical event streams end to end
+    let run = || {
+        let sc = ScenarioBuilder::new(FatTreeConfig::small())
+            .traffic(Some(TrafficSpec::uniform()))
+            .job(JobBuilder::new(Algo::Canary).hosts(16).data_bytes(32 * 1024));
+        let mut exp = sc.build(7);
+        let r = runner::run_to_completion(&mut exp.net, u64::MAX);
+        (exp.net.events_processed, r[0].runtime_ps)
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn clustered_placement_stays_within_leaf_boundaries() {
+    let topo = FatTreeConfig::small(); // 4 leaves x 16 hosts
+    let per_leaf = topo.hosts_per_leaf();
+    for (hosts, want_leaves) in [(16u32, 1usize), (20, 2), (48, 3)] {
+        let sc = ScenarioBuilder::new(topo).job(
+            JobBuilder::new(Algo::Canary)
+                .hosts(hosts)
+                .data_bytes(1024)
+                .placement(Placement::ClusteredByLeaf),
+        );
+        let exp = sc.build(3);
+        let spec = &exp.net.jobs[exp.job as usize].spec;
+        let mut leaves: Vec<u32> = spec
+            .participants
+            .iter()
+            .map(|&h| exp.ft.leaf_of_host(h))
+            .collect();
+        leaves.sort_unstable();
+        leaves.dedup();
+        assert_eq!(
+            leaves.len(),
+            want_leaves,
+            "{hosts} hosts at {per_leaf}/leaf must fill exactly \
+             {want_leaves} leaves"
+        );
+        // all but (at most) one leaf must be completely full
+        let mut counts = std::collections::BTreeMap::new();
+        for &h in &spec.participants {
+            *counts.entry(exp.ft.leaf_of_host(h)).or_insert(0u32) += 1;
+        }
+        let partial =
+            counts.values().filter(|&&c| c < per_leaf).count();
+        assert!(partial <= 1, "clustering left {partial} partial leaves");
+    }
+}
+
+#[test]
+fn striped_placement_round_robins_the_leaves() {
+    let topo = FatTreeConfig::small(); // 4 leaves x 16 hosts
+    for hosts in [4u32, 10, 33] {
+        let sc = ScenarioBuilder::new(topo).job(
+            JobBuilder::new(Algo::Canary)
+                .hosts(hosts)
+                .data_bytes(1024)
+                .placement(Placement::Striped),
+        );
+        let exp = sc.build(5);
+        let spec = &exp.net.jobs[exp.job as usize].spec;
+        let mut counts = std::collections::BTreeMap::new();
+        for &h in &spec.participants {
+            *counts.entry(exp.ft.leaf_of_host(h)).or_insert(0u32) += 1;
+        }
+        // every leaf is touched, and the per-leaf counts are balanced
+        assert_eq!(counts.len() as u32, topo.n_leaf().min(hosts));
+        let min = counts.values().min().unwrap();
+        let max = counts.values().max().unwrap();
+        assert!(
+            max - min <= 1,
+            "striping must balance leaves, got {counts:?}"
+        );
+    }
+}
+
+#[test]
+fn explicit_placement_is_used_verbatim() {
+    let hosts = vec![3u32, 17, 40, 62];
+    let sc = ScenarioBuilder::new(FatTreeConfig::small()).job(
+        JobBuilder::new(Algo::Canary)
+            .data_bytes(1024)
+            .placement(Placement::Explicit(hosts.clone())),
+    );
+    let exp = sc.build(9);
+    let spec = &exp.net.jobs[exp.job as usize].spec;
+    assert_eq!(spec.participants, hosts);
+}
+
+#[test]
+fn multi_job_placements_are_disjoint_and_traffic_gets_the_rest() {
+    let topo = FatTreeConfig::small();
+    let sc = ScenarioBuilder::new(topo)
+        .traffic(Some(TrafficSpec::uniform()))
+        .job(
+            JobBuilder::new(Algo::Canary)
+                .hosts(16)
+                .data_bytes(4096)
+                .placement(Placement::ClusteredByLeaf),
+        )
+        .job(
+            JobBuilder::new(Algo::Ring)
+                .hosts(12)
+                .data_bytes(4096)
+                .placement(Placement::Striped),
+        )
+        .job(JobBuilder::new(Algo::Canary).hosts(8).data_bytes(4096));
+    let exp = sc.build(11);
+    let mut seen = std::collections::BTreeSet::new();
+    let mut total = 0usize;
+    for j in &exp.net.jobs {
+        for &h in &j.spec.participants {
+            assert!(seen.insert(h), "host {h} claimed twice");
+        }
+        total += j.spec.participants.len();
+    }
+    // 16 + 12 + 8 participants + the rest as background
+    assert_eq!(total, topo.n_hosts() as usize);
+    let bg = exp
+        .net
+        .jobs
+        .iter()
+        .find(|j| !j.spec.algo.is_allreduce())
+        .expect("cross traffic must be installed in multi-job scenarios");
+    assert_eq!(bg.spec.participants.len(), 64 - 16 - 12 - 8);
+    // tenants are distinct and the descriptor table is partitioned
+    let tenants: Vec<u16> = exp
+        .net
+        .jobs
+        .iter()
+        .filter(|j| j.spec.algo.is_allreduce())
+        .map(|j| j.spec.tenant)
+        .collect();
+    assert_eq!(tenants, vec![1, 2, 3]);
+}
+
+#[test]
+fn start_offsets_delay_job_kickoff() {
+    let offset = 50 * US;
+    let sc = ScenarioBuilder::new(FatTreeConfig::tiny())
+        .job(JobBuilder::new(Algo::Canary).hosts(4).data_bytes(4096))
+        .job(
+            JobBuilder::new(Algo::Canary)
+                .hosts(4)
+                .data_bytes(4096)
+                .start_at(offset),
+        );
+    let mut exp = sc.build(13);
+    runner::run_to_completion(&mut exp.net, u64::MAX);
+    let first = &exp.net.jobs[exp.jobs[0] as usize];
+    let second = &exp.net.jobs[exp.jobs[1] as usize];
+    let f1 = first.finish.expect("job 0 finished");
+    let f2 = second.finish.expect("job 1 finished");
+    assert!(f2 >= offset, "delayed job finished before it started");
+    assert!(f1 < offset, "tiny transfer should finish before t=50us");
+    // runtime excludes the offset
+    assert_eq!(second.start, offset);
+    assert_eq!(second.runtime_ps(), Some(f2 - offset));
+}
+
+#[test]
+fn mixed_collectives_share_one_fabric() {
+    // a reduce, a broadcast and a barrier as concurrent tenants, plus
+    // cross traffic: all complete on one network
+    let sc = ScenarioBuilder::new(FatTreeConfig::small())
+        .traffic(Some(TrafficSpec::uniform()))
+        .job(
+            JobBuilder::new(Algo::Canary)
+                .collective(Collective::Reduce { root: 0 })
+                .hosts(8)
+                .data_bytes(8 * 1024),
+        )
+        .job(
+            JobBuilder::new(Algo::Canary)
+                .collective(Collective::Broadcast { root: 1 })
+                .hosts(8)
+                .data_bytes(8 * 1024),
+        )
+        .job(
+            JobBuilder::new(Algo::Canary)
+                .collective(Collective::Barrier)
+                .hosts(8),
+        );
+    let mut exp = sc.build(17);
+    let results = runner::run_to_completion(&mut exp.net, 500_000 * US);
+    assert_eq!(results.len(), 3);
+    for r in &results {
+        assert!(
+            r.runtime_ps.is_some(),
+            "{} did not finish",
+            r.collective.name()
+        );
+    }
+}

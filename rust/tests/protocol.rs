@@ -3,30 +3,23 @@
 //! the goodput relations the paper's evaluation depends on.
 
 use canary::collectives::{runner, Algo};
-use canary::config::{FatTreeConfig, SimConfig};
+use canary::config::FatTreeConfig;
 use canary::loadbalance::LoadBalancer;
 use canary::sim::US;
 use canary::traffic::TrafficSpec;
 use canary::util::proptest_lite::check_property;
 use canary::util::rng::Rng;
-use canary::workload::{build_scenario, Scenario};
+use canary::workload::{JobBuilder, ScenarioBuilder};
 
 fn scenario(
     algo: Algo,
     hosts: u32,
     congestion: bool,
     data_kib: u64,
-) -> Scenario {
-    Scenario {
-        topo: FatTreeConfig::small(),
-        sim: SimConfig::default(),
-        lb: LoadBalancer::default(),
-        algo,
-        n_allreduce_hosts: hosts,
-        traffic: congestion.then(TrafficSpec::uniform),
-        data_bytes: data_kib * 1024,
-        record_results: false,
-    }
+) -> ScenarioBuilder {
+    ScenarioBuilder::new(FatTreeConfig::small())
+        .traffic(congestion.then(TrafficSpec::uniform))
+        .job(JobBuilder::new(algo).hosts(hosts).data_bytes(data_kib * 1024))
 }
 
 #[test]
@@ -41,7 +34,7 @@ fn all_algorithms_complete_on_random_placements() {
         let algo = *rng.choose(&algos);
         let hosts = 2 + rng.gen_range(20) as u32;
         let sc = scenario(algo, hosts, rng.chance(0.5), 1 + rng.gen_range(64));
-        let mut exp = build_scenario(&sc, rng.next_u64());
+        let mut exp = sc.build(rng.next_u64());
         let res = runner::run_to_completion(&mut exp.net, 500_000 * US);
         if res[0].runtime_ps.is_none() {
             return Err(format!("{algo:?} with {hosts} hosts timed out"));
@@ -56,7 +49,7 @@ fn in_network_beats_ring_without_congestion() {
     let mut goodputs = std::collections::HashMap::new();
     for algo in [Algo::Ring, Algo::Canary, Algo::StaticTree { n_trees: 1 }] {
         let sc = scenario(algo, 32, false, 1024);
-        let mut exp = build_scenario(&sc, 5);
+        let mut exp = sc.build(5);
         let res = runner::run_to_completion(&mut exp.net, 500_000 * US);
         goodputs.insert(algo.name(), res[0].goodput_gbps.unwrap());
     }
@@ -81,13 +74,13 @@ fn canary_beats_static_tree_under_congestion() {
     let mut st1_sum = 0.0;
     for &seed in &seeds {
         let sc = scenario(Algo::Canary, 32, true, 1024);
-        let mut exp = build_scenario(&sc, seed);
+        let mut exp = sc.build(seed);
         canary_sum += runner::run_to_completion(&mut exp.net, 500_000 * US)
             [0]
         .goodput_gbps
         .unwrap();
         let sc = scenario(Algo::StaticTree { n_trees: 1 }, 32, true, 1024);
-        let mut exp = build_scenario(&sc, seed);
+        let mut exp = sc.build(seed);
         st1_sum += runner::run_to_completion(&mut exp.net, 500_000 * US)[0]
             .goodput_gbps
             .unwrap();
@@ -105,7 +98,7 @@ fn congestion_hurts_static_tree_more_than_canary() {
         let mut acc = 0.0;
         for seed in [1u64, 2] {
             let sc = scenario(algo, 32, cong, 1024);
-            let mut exp = build_scenario(&sc, seed);
+            let mut exp = sc.build(seed);
             acc += runner::run_to_completion(&mut exp.net, 500_000 * US)
                 [0]
             .goodput_gbps
@@ -133,7 +126,7 @@ fn straggler_count_scales_inversely_with_timeout() {
     let run = |timeout_ps: u64| -> u64 {
         let mut sc = scenario(Algo::Canary, 16, false, 256);
         sc.sim = sc.sim.with_timeout(timeout_ps);
-        let mut exp = build_scenario(&sc, 9);
+        let mut exp = sc.build(9);
         runner::run_to_completion(&mut exp.net, 500_000 * US);
         exp.net.metrics.stragglers
     };
@@ -151,7 +144,7 @@ fn background_traffic_saturates_and_drops() {
     // congestion generator alone: run for a fixed window and verify the
     // links carry traffic and overflow policing kicks in
     let sc = scenario(Algo::Canary, 2, true, 1);
-    let mut exp = build_scenario(&sc, 31);
+    let mut exp = sc.build(31);
     exp.net.kick_jobs();
     exp.net.run_all(2000 * US);
     let m = &exp.net.metrics;
@@ -163,17 +156,10 @@ fn background_traffic_saturates_and_drops() {
 fn fair_queueing_splits_a_shared_link() {
     // one allreduce host pair + heavy background through the same leaf:
     // neither class may starve
-    let sc = Scenario {
-        topo: FatTreeConfig::tiny(),
-        sim: SimConfig::default(),
-        lb: LoadBalancer::default(),
-        algo: Algo::Canary,
-        n_allreduce_hosts: 4,
-        traffic: Some(TrafficSpec::uniform()),
-        data_bytes: 512 * 1024,
-        record_results: false,
-    };
-    let mut exp = build_scenario(&sc, 17);
+    let sc = ScenarioBuilder::new(FatTreeConfig::tiny())
+        .traffic(Some(TrafficSpec::uniform()))
+        .job(JobBuilder::new(Algo::Canary).hosts(4).data_bytes(512 * 1024));
+    let mut exp = sc.build(17);
     let res = runner::run_to_completion(&mut exp.net, 500_000 * US);
     let g = res[0].goodput_gbps.unwrap();
     // must make progress but cannot hold the full line rate
@@ -187,7 +173,7 @@ fn ecmp_is_worse_than_adaptive_under_congestion() {
         for seed in [11u64, 12, 13] {
             let mut sc = scenario(Algo::Canary, 32, true, 1024);
             sc.lb = lb.clone();
-            let mut exp = build_scenario(&sc, seed);
+            let mut exp = sc.build(seed);
             acc += runner::run_to_completion(&mut exp.net, 500_000 * US)
                 [0]
             .goodput_gbps

@@ -7,24 +7,16 @@
 
 use canary::collectives::Algo;
 use canary::config::{FatTreeConfig, SimConfig};
-use canary::loadbalance::LoadBalancer;
 use canary::sim::{NodeBody, NodeId, US};
 use canary::traffic::engine::{self, next_message, DstPlan};
 use canary::traffic::{TrafficPattern, TrafficSpec};
 use canary::util::rng::Rng;
-use canary::workload::{build_scenario, Scenario};
+use canary::workload::{JobBuilder, ScenarioBuilder};
 
-fn scenario(traffic: Option<TrafficSpec>) -> Scenario {
-    Scenario {
-        topo: FatTreeConfig::small(),
-        sim: SimConfig::default(),
-        lb: LoadBalancer::default(),
-        algo: Algo::Canary,
-        n_allreduce_hosts: 8,
-        traffic,
-        data_bytes: 64 * 1024,
-        record_results: false,
-    }
+fn scenario(traffic: Option<TrafficSpec>) -> ScenarioBuilder {
+    ScenarioBuilder::new(FatTreeConfig::small())
+        .traffic(traffic)
+        .job(JobBuilder::new(Algo::Canary).hosts(8).data_bytes(64 * 1024))
 }
 
 /// The legacy `host/background.rs` message draw, reproduced verbatim:
@@ -103,7 +95,7 @@ fn every_pattern_is_deterministic_from_its_seed() {
         let run = || {
             // fixed window (no early allreduce exit) so every pattern
             // generates a substantial, fully comparable event stream
-            let mut exp = build_scenario(&scenario(Some(spec)), 42);
+            let mut exp = scenario(Some(spec)).build(42);
             exp.net.kick_jobs();
             exp.net.run_all(500 * US);
             let m = &exp.net.metrics;
@@ -143,7 +135,7 @@ fn installed_plans(
 
 #[test]
 fn permutation_installs_a_self_free_cycle() {
-    let exp = build_scenario(&scenario(Some(TrafficSpec::permutation())), 7);
+    let exp = scenario(Some(TrafficSpec::permutation())).build(7);
     let plans = installed_plans(&exp);
     assert!(plans.len() >= 2);
     let senders: Vec<NodeId> = plans.iter().map(|(h, _)| *h).collect();
@@ -167,8 +159,7 @@ fn permutation_installs_a_self_free_cycle() {
 #[test]
 fn incast_installs_sinks_and_aimed_senders() {
     let fan_in = 4u32;
-    let exp =
-        build_scenario(&scenario(Some(TrafficSpec::incast(fan_in))), 7);
+    let exp = scenario(Some(TrafficSpec::incast(fan_in))).build(7);
     let plans = installed_plans(&exp);
     let sinks: Vec<NodeId> = plans
         .iter()
@@ -190,7 +181,7 @@ fn incast_installs_sinks_and_aimed_senders() {
 
 #[test]
 fn flow_accounting_is_consistent_end_to_end() {
-    let mut exp = build_scenario(&scenario(Some(TrafficSpec::uniform())), 11);
+    let mut exp = scenario(Some(TrafficSpec::uniform())).build(11);
     exp.net.kick_jobs();
     exp.net.run_all(500 * US);
     let f = &exp.net.metrics.flows;
@@ -216,8 +207,7 @@ fn flow_accounting_is_consistent_end_to_end() {
 
 #[test]
 fn open_loop_empirical_draws_heavy_tailed_flows() {
-    let mut exp =
-        build_scenario(&scenario(Some(TrafficSpec::empirical())), 13);
+    let mut exp = scenario(Some(TrafficSpec::empirical())).build(13);
     exp.net.kick_jobs();
     exp.net.run_all(2000 * US);
     let f = &exp.net.metrics.flows;
@@ -235,7 +225,7 @@ fn open_loop_empirical_draws_heavy_tailed_flows() {
 fn lower_load_offers_fewer_bytes() {
     let run = |load: f64| {
         let spec = TrafficSpec::uniform().with_load(load);
-        let mut exp = build_scenario(&scenario(Some(spec)), 17);
+        let mut exp = scenario(Some(spec)).build(17);
         exp.net.kick_jobs();
         exp.net.run_all(2000 * US);
         exp.net.metrics.flows.offered_bytes
