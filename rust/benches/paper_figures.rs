@@ -4,10 +4,11 @@
 //! series are produced by the `figures` binary (`figures all --scale
 //! full`); these keep the whole harness exercised on every `cargo bench`.
 //!
-//! The `traffic_patterns` and `placement_locality` sweeps additionally
-//! record their timing to `results/BENCH_traffic.json` /
+//! The `traffic_patterns`, `transport_reactive` and `placement_locality`
+//! sweeps additionally record their timing to
+//! `results/BENCH_traffic.json` / `results/BENCH_transport.json` /
 //! `results/BENCH_placement.json` so per-commit tooling can track the
-//! end-to-end cost of the two beyond-paper harnesses.
+//! end-to-end cost of the beyond-paper harnesses.
 
 use std::time::Duration;
 
@@ -57,6 +58,8 @@ fn main() {
     run("clos3_multitier", figures::clos3);
     let (traffic_time, traffic_rows) =
         run("traffic_patterns", figures::traffic);
+    let (transport_time, transport_rows) =
+        run("transport_reactive", figures::transport);
     let (placement_time, placement_rows) =
         run("placement_locality", figures::placement);
     run("ablation_lb", figures::ablation_lb);
@@ -69,6 +72,12 @@ fn main() {
             "traffic_patterns",
             traffic_time,
             traffic_rows,
+        ),
+        (
+            "results/BENCH_transport.json",
+            "transport_reactive",
+            transport_time,
+            transport_rows,
         ),
         (
             "results/BENCH_placement.json",

@@ -49,6 +49,21 @@ pub struct SimConfig {
     /// pattern samples sizes from its bundled CDF instead —
     /// `crate::traffic`).
     pub bg_message_bytes: u64,
+    /// ECN CE marking on class-1 (background) queues. Off by default;
+    /// the scenario builder turns it on when the cross traffic runs a
+    /// reactive transport (`crate::transport`). With it off the mark
+    /// path is one branch and zero RNG draws, so legacy runs stay
+    /// bit-identical.
+    pub ecn_enabled: bool,
+    /// RED-style marking ramp: no CE below `kmin` bytes of
+    /// instantaneous class-1 backlog, always CE above `kmax`, linear
+    /// probability in between. `kmin == kmax` gives the deterministic
+    /// DCTCP-style step threshold.
+    pub ecn_kmin_bytes: u64,
+    pub ecn_kmax_bytes: u64,
+    /// Background-flow retransmission timeout (reactive transport loss
+    /// recovery; doubled per retry round up to 16x).
+    pub transport_rto_ps: Time,
     /// Master seed; every stochastic choice derives from it.
     pub seed: u64,
 }
@@ -75,6 +90,17 @@ impl Default for SimConfig {
             noise_prob: 0.0,
             noise_delay_ps: US,
             bg_message_bytes: 64 * 1024,
+            ecn_enabled: false,
+            // 1/8 and 1/2 of the port capacity: the ramp saturates well
+            // before the class-1 policer starts dropping, so reactive
+            // senders see CE before they see loss.
+            ecn_kmin_bytes: 16 * 1024,
+            ecn_kmax_bytes: 64 * 1024,
+            // Generous relative to worst-case queueing (~10.5 us to
+            // drain a full port at 100G): RTOs should mean loss, not
+            // patience. Spurious retransmits are deduplicated at the
+            // sink either way.
+            transport_rto_ps: 200 * US,
             seed: 0xCA11A8,
         }
     }
@@ -135,6 +161,21 @@ impl SimConfig {
     /// Message/flow size for the fixed-size background-traffic patterns.
     pub fn with_bg_bytes(mut self, bytes: u64) -> Self {
         self.bg_message_bytes = bytes;
+        self
+    }
+
+    /// Enable class-1 ECN marking with the given RED ramp (bytes).
+    pub fn with_ecn(mut self, kmin: u64, kmax: u64) -> Self {
+        assert!(kmin <= kmax, "ECN kmin must not exceed kmax");
+        self.ecn_enabled = true;
+        self.ecn_kmin_bytes = kmin;
+        self.ecn_kmax_bytes = kmax;
+        self
+    }
+
+    /// Background-flow retransmission timeout (reactive transport).
+    pub fn with_transport_rto(mut self, rto: Time) -> Self {
+        self.transport_rto_ps = rto;
         self
     }
 

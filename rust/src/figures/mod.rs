@@ -6,7 +6,7 @@
 //! ```text
 //! figures all            [--scale full|half|ci] [--seeds N] [--out DIR]
 //! figures fig2|fig6|fig7a|fig7b|fig8|fig9|fig10a|fig10b|fig11|mem|clos3
-//!         |traffic|placement|ablation ...
+//!         |traffic|transport|placement|ablation ...
 //! ```
 //!
 //! `full` reproduces the paper's parameters (1024 hosts, 4 MiB, 5 seeds —
@@ -31,6 +31,7 @@ use crate::metrics::{
 use crate::report::Series;
 use crate::sim::{ps_to_us, US};
 use crate::traffic::TrafficSpec;
+use crate::transport::TransportSpec;
 use crate::util::cli::Args;
 use crate::util::par::par_map;
 use crate::util::stats::{mean, percentile_sorted, stddev};
@@ -635,6 +636,120 @@ pub fn traffic(o: &Opts) -> Series {
     finish(s, o)
 }
 
+/// Reactive-transport sweep (DESIGN.md §2.4, beyond-paper): reactive vs
+/// unreactive cross traffic under incast overload, for every engine on
+/// the 2-tier paper fabric and the oversubscribed 3-tier pod Clos. The
+/// unreactive (`none`) column is the paper's worst-case congestion:
+/// senders never back off and policer-dropped flows die silently. The
+/// DCQCN/Swift columns answer the question the paper leaves open — does
+/// congestion-aware aggregation still win when the competing traffic is
+/// transport-governed and backs off on its own? Each cell reports the
+/// reduction goodput plus what the transport did for the cross traffic
+/// (completion fraction, FCT tail, marks/CNPs/retransmits).
+pub fn transport(o: &Opts) -> Series {
+    let mut s = Series::new(
+        "transport_reactive_cross_traffic",
+        &[
+            "topo",
+            "transport",
+            "algo",
+            "goodput_gbps",
+            "goodput_stddev",
+            "flows_completed_pct",
+            "fct_p50_us",
+            "fct_p99_us",
+            "ecn_marks",
+            "cnps",
+            "retrans_pkts",
+        ],
+    );
+    let fan_in = match o.scale {
+        Scale::Ci => 8,
+        _ => 32,
+    };
+    let transports = [
+        TransportSpec::None,
+        TransportSpec::Dcqcn,
+        TransportSpec::Swift,
+    ];
+
+    struct Cell {
+        topo_name: &'static str,
+        topo: ClosConfig,
+        tp: TransportSpec,
+        algo: Algo,
+    }
+    let mut cells = Vec::new();
+    for (topo_name, topo) in
+        [("clos2", o.scale.topo()), ("clos3", o.scale.topo3())]
+    {
+        for &tp in &transports {
+            for algo in algo_list(true, &[1]) {
+                cells.push(Cell {
+                    topo_name,
+                    topo,
+                    tp,
+                    algo,
+                });
+            }
+        }
+    }
+
+    let seeds = o.seeds.max(1);
+    let results = par_map(cells.len(), |i| {
+        let c = &cells[i];
+        let hosts = (c.topo.n_hosts() / 2).max(2);
+        let spec = TrafficSpec::incast(fan_in).with_transport(c.tp);
+        let mut gs = Vec::new();
+        let mut fct_us: Vec<f64> = Vec::new();
+        let (mut started, mut completed) = (0u64, 0u64);
+        let (mut marks, mut cnps, mut retrans) = (0u64, 0u64, 0u64);
+        for seed in 0..seeds {
+            let sc = ScenarioBuilder::new(c.topo).traffic(Some(spec)).job(
+                JobBuilder::new(c.algo)
+                    .hosts(hosts)
+                    .data_bytes(o.scale.data_bytes()),
+            );
+            let mut exp = sc.build(5000 + seed);
+            let r = runner::run_to_completion(&mut exp.net, u64::MAX);
+            gs.push(r[0].goodput_gbps.unwrap_or(0.0));
+            let m = &exp.net.metrics;
+            started += m.flows.started;
+            completed += m.flows.completed;
+            marks += m.ecn_marks;
+            cnps += m.flows.cnps_received;
+            retrans += m.flows.retrans_pkts;
+            fct_us.extend(m.flows.fct_ps.iter().map(|&p| ps_to_us(p)));
+        }
+        fct_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        (gs, fct_us, started, completed, marks, cnps, retrans)
+    });
+
+    for (c, (gs, fct_us, started, completed, marks, cnps, retrans)) in
+        cells.iter().zip(results)
+    {
+        let completed_pct = if started == 0 {
+            0.0
+        } else {
+            100.0 * completed as f64 / started as f64
+        };
+        s.push(vec![
+            c.topo_name.to_string(),
+            c.tp.name().to_string(),
+            c.algo.name(),
+            format!("{:.1}", mean(&gs)),
+            format!("{:.1}", stddev(&gs)),
+            format!("{completed_pct:.1}"),
+            format!("{:.1}", percentile_sorted(&fct_us, 50.0)),
+            format!("{:.1}", percentile_sorted(&fct_us, 99.0)),
+            marks.to_string(),
+            cnps.to_string(),
+            retrans.to_string(),
+        ]);
+    }
+    finish(s, o)
+}
+
 /// Placement-locality sweep (beyond-paper, new with the Collective API):
 /// random vs clustered-by-leaf vs striped placement for Canary, the
 /// static trees and the ring, with and without uniform cross traffic.
@@ -777,6 +892,7 @@ pub fn main_entry() {
         "mem" => drop(mem(&o)),
         "clos3" => drop(clos3(&o)),
         "traffic" => drop(traffic(&o)),
+        "transport" => drop(transport(&o)),
         "placement" => drop(placement(&o)),
         "ablation" => drop(ablation_lb(&o)),
         "all" => {
@@ -792,6 +908,7 @@ pub fn main_entry() {
             drop(mem(&o));
             drop(clos3(&o));
             drop(traffic(&o));
+            drop(transport(&o));
             drop(placement(&o));
             drop(ablation_lb(&o));
         }
@@ -799,7 +916,7 @@ pub fn main_entry() {
             eprintln!(
                 "unknown figure '{other}' \
                  (fig2|fig6|fig7a|fig7b|fig8|fig9|fig10a|fig10b|fig11|mem\
-                 |clos3|traffic|placement|ablation|all)"
+                 |clos3|traffic|transport|placement|ablation|all)"
             );
             std::process::exit(2);
         }

@@ -49,6 +49,9 @@ pub const TIMER_DELAYED_SEND: u8 = 2;
 pub const TIMER_DELAYED_STATIC: u8 = 3;
 /// Line-rate injection stream clock (one packet per serialization slot).
 pub const TIMER_STREAM: u8 = 4;
+/// Background-flow retransmission timeout (reactive transport; the
+/// `block` field carries the flow id's low 32 bits).
+pub const TIMER_TRANSPORT_RTO: u8 = 5;
 
 #[inline]
 pub fn encode_timer(kind: u8, job: u32, block: u32, aux: u8) -> u64 {
@@ -83,8 +86,12 @@ pub fn handle_packet(
             static_host::on_broadcast(h.id, sh, ctx, pkt)
         }
         (Proto::Ring(rh), K::Ring) => ring::on_packet(h.id, rh, ctx, pkt),
-        (Proto::Background(bg), K::Background) => {
-            // sink: account the delivery toward its flow's completion
+        (
+            Proto::Background(bg),
+            K::Background | K::TransportAck | K::TransportCnp,
+        ) => {
+            // sink: account the delivery toward its flow's completion;
+            // ACK/CNP control frames feed the reactive transport
             engine::on_packet(h.id, bg, ctx, pkt)
         }
         _ => {} // stray packet for an idle / mismatched host: drop
@@ -99,6 +106,9 @@ pub fn handle_timer(h: &mut HostState, ctx: &mut Ctx, timer: u64) {
         }
         Proto::Static(sh) => {
             static_host::on_timer(h.id, sh, &mut h.rng, ctx, timer)
+        }
+        Proto::Background(bg) => {
+            engine::on_timer(h.id, bg, ctx, timer)
         }
         _ => {}
     }

@@ -59,5 +59,6 @@ pub mod switch;
 pub mod topology;
 pub mod traffic;
 pub mod train;
+pub mod transport;
 pub mod util;
 pub mod workload;

@@ -35,11 +35,45 @@ impl Default for LoadBalancer {
     }
 }
 
+/// Flowlet-table sweeps run every this many selections (amortizes the
+/// `retain` scan to O(1) per packet).
+const FLOWLET_SWEEP_EVERY: u32 = 1024;
+/// Entries idle for more than this many flowlet gaps are evicted. Any
+/// entry past *one* gap already re-picks its port on the next packet,
+/// so eviction at 4 gaps can never change a routing decision — it only
+/// bounds the table.
+const FLOWLET_EVICT_GAPS: u64 = 4;
+
 /// Mutable per-switch LB state (only flowlets need any).
 #[derive(Clone, Debug, Default)]
 pub struct LbState {
     /// flow -> (up-port offset, last-seen time)
     flowlets: HashMap<u64, (u16, Time)>,
+    /// Selections since the last stale-entry sweep.
+    since_sweep: u32,
+}
+
+impl LbState {
+    /// Live flowlet-table entries (eviction bound, `tests`).
+    pub fn flowlet_count(&self) -> usize {
+        self.flowlets.len()
+    }
+
+    /// Amortized eviction of stale entries: every
+    /// [`FLOWLET_SWEEP_EVERY`] selections, drop entries idle longer
+    /// than [`FLOWLET_EVICT_GAPS`] flowlet gaps. Without this the
+    /// table grows monotonically with every flow the switch ever saw
+    /// (long runs leak memory and slow the hash map).
+    fn maybe_sweep(&mut self, now: Time, gap_ps: Time) {
+        self.since_sweep += 1;
+        if self.since_sweep < FLOWLET_SWEEP_EVERY {
+            return;
+        }
+        self.since_sweep = 0;
+        let cutoff = FLOWLET_EVICT_GAPS * gap_ps;
+        self.flowlets
+            .retain(|_, &mut (_, last)| now.saturating_sub(last) <= cutoff);
+    }
 }
 
 /// Pick an up-port offset in `[0, n_up)` for a packet with flow label
@@ -89,6 +123,7 @@ pub fn select_up(
         }
         LoadBalancer::Flowlet { gap_ps } => {
             let now = ctx.now;
+            state.maybe_sweep(now, *gap_ps);
             let entry = state.flowlets.get(&flow).copied();
             let port = match entry {
                 Some((p, last))
@@ -151,6 +186,35 @@ pub fn parse_policy(name: &str) -> Result<LoadBalancer, String> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn flowlet_table_evicts_stale_entries() {
+        // drive maybe_sweep directly (select_up needs a full Ctx): many
+        // distinct flows touch the table, time advances past the
+        // eviction horizon, and the sweep bounds the map
+        let gap = 5 * crate::sim::US;
+        let mut state = LbState::default();
+        let mut now: Time = 0;
+        for flow in 0..10_000u64 {
+            now += crate::sim::US; // 1 us between new flows
+            state.flowlets.insert(flow, (0, now));
+            state.maybe_sweep(now, gap);
+        }
+        // only flows seen within the last 4 gaps (20 us) may survive a
+        // sweep; the table must be far below the 10k flows ever seen
+        assert!(
+            state.flowlet_count() < 2 * FLOWLET_SWEEP_EVERY as usize,
+            "flowlet table leaked: {} entries",
+            state.flowlet_count()
+        );
+        // entries inside the idle horizon survive
+        let mut fresh = LbState::default();
+        fresh.flowlets.insert(7, (3, 100));
+        for _ in 0..FLOWLET_SWEEP_EVERY {
+            fresh.maybe_sweep(200, gap);
+        }
+        assert_eq!(fresh.flowlet_count(), 1, "live entry evicted");
+    }
 
     #[test]
     fn parse_names() {

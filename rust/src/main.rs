@@ -18,6 +18,7 @@ use canary::runtime::Runtime;
 use canary::sim::{ps_to_us, US};
 use canary::traffic::TrafficSpec;
 use canary::train::{TrainConfig, Trainer};
+use canary::transport::TransportSpec;
 use canary::util::cli::Args;
 use canary::workload::{JobBuilder, Placement, ScenarioBuilder};
 
@@ -32,6 +33,7 @@ USAGE:
                [--traffic none|uniform|permutation|incast:F|hotspot:K[:S]
                           |empirical[@open|@closed]]
                [--bg-load L] [--traffic-json FILE]
+               [--transport none|dcqcn|swift] [--ecn-kmin B] [--ecn-kmax B]
                [--timeout-us T] [--lb adaptive|ecmp|minqueue|flowlet]
                [--topo paper|small|tiny[3]] [--tiers 2|3] [--oversub A:B]
                [--topo-json FILE] [--values]
@@ -141,14 +143,69 @@ fn resolve_traffic(args: &Args) -> Result<Option<TrafficSpec>> {
         let load: f64 =
             l.parse().map_err(|_| format!("bad --bg-load '{l}'"))?;
         match spec.as_mut() {
-            Some(s) => {
-                s.load = load;
-                s.validate()?;
-            }
+            Some(s) => s.load = load,
             None => {
                 return Err(
                     "--bg-load is meaningless with traffic off".into()
                 )
+            }
+        }
+    }
+    // reactive transport + ECN marking-ramp knobs (crate::transport)
+    if let Some(t) = args.get("transport") {
+        let t = TransportSpec::parse(t)?;
+        match spec.as_mut() {
+            Some(s) => s.transport = t,
+            None if t.is_on() => {
+                return Err("--transport is meaningless with traffic off \
+                            (pick a --traffic pattern)"
+                    .into())
+            }
+            None => {}
+        }
+    }
+    let ecn_flag = |flag: &str| -> Result<Option<u64>> {
+        match args.get(flag) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("bad --{flag} '{v}'").into()),
+        }
+    };
+    let (kmin, kmax) = (ecn_flag("ecn-kmin")?, ecn_flag("ecn-kmax")?);
+    if kmin.is_some() || kmax.is_some() {
+        match spec.as_mut() {
+            Some(s) => {
+                s.ecn_kmin = kmin.or(s.ecn_kmin);
+                s.ecn_kmax = kmax.or(s.ecn_kmax);
+            }
+            None => {
+                return Err(
+                    "--ecn-kmin/--ecn-kmax are meaningless with traffic \
+                     off"
+                    .into(),
+                )
+            }
+        }
+    }
+    if let Some(s) = &spec {
+        s.validate()?;
+        // a one-sided override must still yield a sane *effective*
+        // ramp against the other side's default — catch it here as a
+        // usage error instead of panicking inside the builder
+        if s.transport.is_on() {
+            let d = SimConfig::default();
+            let kmin = s.ecn_kmin.unwrap_or(d.ecn_kmin_bytes);
+            let kmax = s.ecn_kmax.unwrap_or(d.ecn_kmax_bytes);
+            if kmin > kmax {
+                return Err(format!(
+                    "effective ECN ramp is inverted: kmin {kmin} > kmax \
+                     {kmax} (defaults {} / {}; set both --ecn-kmin and \
+                     --ecn-kmax)",
+                    d.ecn_kmin_bytes, d.ecn_kmax_bytes
+                )
+                .into());
             }
         }
     }
@@ -219,7 +276,14 @@ fn cmd_run(args: &Args) -> Result<()> {
         r.n_hosts,
         r.data_bytes,
         traffic
-            .map(|t| format!("{}(load={:.2})", t.name(), t.load))
+            .map(|t| {
+                let tp = if t.transport.is_on() {
+                    format!(",{}", t.transport.name())
+                } else {
+                    String::new()
+                };
+                format!("{}(load={:.2}{tp})", t.name(), t.load)
+            })
             .unwrap_or_else(|| "none".into()),
         topo.tiers
     );
@@ -255,11 +319,13 @@ fn cmd_run(args: &Args) -> Result<()> {
         100.0 * average_network_utilization(&exp.net, exp.net.now)
     );
     println!(
-        "collisions: {}  stragglers: {}  restorations: {}  drops(bg): {}",
+        "collisions: {}  stragglers: {}  restorations: {}  drops(bg): {}  \
+         ecn marks: {}",
         exp.net.metrics.collisions,
         exp.net.metrics.stragglers,
         exp.net.metrics.restorations,
-        exp.net.metrics.drops_overflow
+        exp.net.metrics.drops_overflow,
+        exp.net.metrics.ecn_marks
     );
     println!(
         "pkts by kind: reduce {} bcast {} restore {} rdata {} rreq {} fail {} direct {}",
@@ -374,9 +440,10 @@ fn main() -> Result<()> {
         &[
             "algo", "collective", "placement", "jobs", "hosts", "size",
             "congestion", "traffic", "bg-load", "traffic-json", "seed",
-            "timeout-us", "lb", "topo", "tiers", "oversub", "topo-json",
-            "values", "preset", "workers", "steps", "lr", "comm-every",
-            "diameter", "window", "debug-links",
+            "transport", "ecn-kmin", "ecn-kmax", "timeout-us", "lb",
+            "topo", "tiers", "oversub", "topo-json", "values", "preset",
+            "workers", "steps", "lr", "comm-every", "diameter", "window",
+            "debug-links",
         ],
     )?;
     match args.positional.first().map(|s| s.as_str()) {

@@ -29,10 +29,32 @@ pub struct FlowStats {
     pub completed: u64,
     /// Application bytes offered by started flows.
     pub offered_bytes: u64,
-    /// Application bytes delivered to sinks.
+    /// Application bytes delivered to sinks, first copies only
+    /// (goodput; duplicates land in `dup_bytes`).
     pub delivered_bytes: u64,
     /// Completion time of every finished flow, in event order.
     pub fct_ps: Vec<Time>,
+    // --- reactive-transport accounting (`crate::transport`) ---
+    /// CE-marked data packets accepted at sinks.
+    pub ecn_delivered: u64,
+    /// CNPs emitted by sinks (DCQCN notification points).
+    pub cnps_sent: u64,
+    /// CNPs received by senders (<= sent: CNPs are droppable).
+    pub cnps_received: u64,
+    /// Cumulative ACKs received by senders.
+    pub acks_received: u64,
+    /// Data packets re-sent by RTO rounds.
+    pub retrans_pkts: u64,
+    /// Retransmitted copies a sink had already seen (deduplicated —
+    /// they never count toward `delivered_bytes` or completion).
+    pub dup_pkts: u64,
+    /// Application bytes in those duplicate copies (throughput =
+    /// `delivered_bytes + dup_bytes`, goodput = `delivered_bytes`).
+    pub dup_bytes: u64,
+    /// RTO timer firings that triggered a retransmission round.
+    pub rto_fired: u64,
+    /// Flows abandoned after exhausting their retry budget.
+    pub abandoned: u64,
     live: HashMap<u64, LiveFlow>,
 }
 
@@ -92,6 +114,17 @@ impl FlowStats {
         self.fct_percentiles_us(&[q])[0]
     }
 
+    /// Goodput bytes: unique application bytes that reached sinks.
+    pub fn goodput_bytes(&self) -> u64 {
+        self.delivered_bytes
+    }
+
+    /// Throughput bytes: everything sinks absorbed, duplicates
+    /// included — the wire cost of loss recovery.
+    pub fn throughput_bytes(&self) -> u64 {
+        self.delivered_bytes + self.dup_bytes
+    }
+
     /// Several FCT percentiles at once — converts and sorts the sample
     /// vector a single time.
     pub fn fct_percentiles_us(&self, qs: &[f64]) -> Vec<f64> {
@@ -112,9 +145,12 @@ impl FlowStats {
 pub struct Metrics {
     pub pkts_delivered: u64,
     /// Deliveries by packet kind (indexed by `PacketKind as usize`).
-    pub pkts_by_kind: [u64; 11],
+    pub pkts_by_kind: [u64; 13],
     /// Droppable (background) packets lost to queue overflow.
     pub drops_overflow: u64,
+    /// Class-1 packets CE-marked by switch queues (each packet is
+    /// marked at most once, at the first over-threshold hop).
+    pub ecn_marks: u64,
     /// Packets lost because a link/switch was down.
     pub drops_link_down: u64,
     /// Random loss injected by the fault plan.

@@ -90,10 +90,12 @@ pub fn us(x: Option<u64>) -> String {
 }
 
 /// One-line human summary of a run's background-flow statistics
-/// (started/completed counts, completion fraction, FCT p50/p99).
+/// (started/completed counts, completion fraction, FCT p50/p99). With a
+/// reactive transport active, a second line reports what it did
+/// (CE echoes, CNPs, retransmissions, duplicates, abandoned flows).
 pub fn flow_summary(f: &crate::metrics::FlowStats) -> String {
     let p = f.fct_percentiles_us(&[50.0, 99.0]);
-    format!(
+    let mut line = format!(
         "flows: {} started, {} completed ({:.1}%)  \
          fct p50 {:.1} us  p99 {:.1} us",
         f.started,
@@ -101,7 +103,29 @@ pub fn flow_summary(f: &crate::metrics::FlowStats) -> String {
         100.0 * f.completion_fraction(),
         p[0],
         p[1],
-    )
+    );
+    let transport_active = f.ecn_delivered
+        + f.cnps_sent
+        + f.acks_received
+        + f.retrans_pkts
+        + f.rto_fired
+        > 0;
+    if transport_active {
+        line.push_str(&format!(
+            "\ntransport: ce {}  cnps {}/{}  retrans {} pkts \
+             ({} rto, {} dup, {} abandoned)  goodput/throughput {}/{} B",
+            f.ecn_delivered,
+            f.cnps_received,
+            f.cnps_sent,
+            f.retrans_pkts,
+            f.rto_fired,
+            f.dup_pkts,
+            f.abandoned,
+            f.goodput_bytes(),
+            f.throughput_bytes(),
+        ));
+    }
+    line
 }
 
 #[cfg(test)]

@@ -45,16 +45,30 @@ pub enum PacketKind {
     /// Ring allreduce data; `meta` carries the step index.
     Ring,
     /// Background random-uniform injection traffic (congestion generator).
+    /// With a reactive transport, `counter` carries the per-flow
+    /// sequence number, `hosts` the flow's total packet count and
+    /// `meta` the send timestamp (`crate::transport`).
     Background,
+    /// Sink -> sender cumulative ACK (`counter` = contiguous prefix,
+    /// `meta` = largest one-way delay since the last ACK, for Swift).
+    TransportAck,
+    /// Sink -> sender DCQCN congestion notification (CE echo).
+    TransportCnp,
 }
 
 impl PacketKind {
-    /// Background traffic is droppable on queue overflow; reduction
-    /// control/data is treated as lossless unless fault injection is on
-    /// (DESIGN.md: hosts window their injection, so reduction queues stay
-    /// bounded; drops of reduction packets come from `faults`).
+    /// Background traffic (and its transport control frames) is
+    /// droppable on queue overflow; reduction control/data is treated
+    /// as lossless unless fault injection is on (DESIGN.md: hosts
+    /// window their injection, so reduction queues stay bounded; drops
+    /// of reduction packets come from `faults`).
     pub fn droppable(self) -> bool {
-        matches!(self, PacketKind::Background)
+        matches!(
+            self,
+            PacketKind::Background
+                | PacketKind::TransportAck
+                | PacketKind::TransportCnp
+        )
     }
 }
 
@@ -108,6 +122,11 @@ pub struct Packet {
     pub meta: u64,
     /// Flow label for ECMP/flowlet hashing.
     pub flow: u64,
+    /// ECN Congestion Experienced: set by a switch queue whose class-1
+    /// backlog exceeds the RED-style marking threshold
+    /// (`SimConfig::ecn_kmin_bytes`/`ecn_kmax_bytes`); echoed by sinks
+    /// as CNPs under DCQCN. Never set when transport is off.
+    pub ecn: bool,
     /// Modelled size on the wire, including headers.
     pub wire_bytes: u32,
     pub payload: Payload,
@@ -130,6 +149,7 @@ impl Packet {
             restore: 0,
             meta: 0,
             flow: 0,
+            ecn: false,
             wire_bytes: WIRE_BYTES,
             payload: Payload::None,
         }
@@ -166,6 +186,8 @@ mod tests {
     #[test]
     fn droppable_only_background() {
         assert!(PacketKind::Background.droppable());
+        assert!(PacketKind::TransportAck.droppable());
+        assert!(PacketKind::TransportCnp.droppable());
         assert!(!PacketKind::CanaryReduce.droppable());
         assert!(!PacketKind::StaticBroadcast.droppable());
     }

@@ -151,7 +151,9 @@ pub fn handle_packet(
         | PacketKind::CanaryFailure
         | PacketKind::CanaryDirect
         | PacketKind::Ring
-        | PacketKind::Background => {
+        | PacketKind::Background
+        | PacketKind::TransportAck
+        | PacketKind::TransportCnp => {
             let port = route(sw, ctx, &pkt);
             ctx.send(port, pkt);
         }

@@ -9,10 +9,13 @@
 //! (`tests/traffic_engine.rs` pins this against an inlined replica of
 //! the legacy state machine).
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 
 use crate::sim::packet::{Packet, PacketKind};
 use crate::sim::{Ctx, NodeId, Time};
+use crate::transport::{
+    self, FlowCc, SinkFlow, TransportSpec, UnackedFlow,
+};
 use crate::util::rng::Rng;
 
 use super::cdf;
@@ -48,6 +51,9 @@ pub struct TrafficHost {
     pub plan: DstPlan,
     /// Packets left in the flow currently on the wire.
     pub remaining: u32,
+    /// Total packets of the flow currently on the wire (sequence
+    /// numbering for the reactive transport).
+    pub flow_pkts: u32,
     pub dst: NodeId,
     /// Messages/flows generated so far (also the flow-id low bits).
     pub msg_count: u64,
@@ -58,6 +64,15 @@ pub struct TrafficHost {
     /// Open loop: arrived flows waiting for the NIC.
     pub backlog: VecDeque<PendingFlow>,
     primed: bool,
+    // --- reactive transport (`crate::transport`; unused when off) ---
+    /// Sender-side congestion control (rate as a line-rate fraction).
+    pub cc: FlowCc,
+    /// Sender-side flows awaiting their final ACK, keyed by flow id.
+    pub unacked: HashMap<u64, UnackedFlow>,
+    /// Sink-side per-flow reassembly/dedup state, keyed by flow id.
+    pub sinks: HashMap<u64, SinkFlow>,
+    /// Data packets since the last stale sink-entry sweep.
+    since_sink_sweep: u32,
 }
 
 impl TrafficHost {
@@ -67,12 +82,17 @@ impl TrafficHost {
             spec,
             plan,
             remaining: 0,
+            flow_pkts: 0,
             dst: 0,
             msg_count: 0,
             flow: 0,
             next_arrival: 0,
             backlog: VecDeque::new(),
             primed: false,
+            cc: FlowCc::new(spec.transport),
+            unacked: HashMap::new(),
+            sinks: HashMap::new(),
+            since_sink_sweep: 0,
         }
     }
 }
@@ -204,6 +224,7 @@ fn closed_wake(
         let Some((dst, pkts)) = msg else { return };
         th.dst = dst;
         th.remaining = pkts;
+        th.flow_pkts = pkts;
         th.msg_count += 1;
         th.flow = flow_id(me, th.msg_count);
         let now = ctx.now;
@@ -213,17 +234,73 @@ fn closed_wake(
             pkts,
             pkts as u64 * payload,
         );
+        track_unacked(th, dst, pkts);
     }
 
+    let wire = send_data_packet(me, th, ctx, job);
+
+    let mut next = pace(wire * ctx.cfg.link_ps_per_byte, th.spec.load);
+    if th.spec.transport.is_on() {
+        th.cc.maybe_increase(ctx.now);
+        next = th.cc.stretch(next);
+    }
+    ctx.wake(next, job);
+}
+
+/// Register the new flow with the loss-recovery machinery (reactive
+/// transport only).
+fn track_unacked(th: &mut TrafficHost, dst: NodeId, pkts: u32) {
+    if th.spec.transport.is_on() {
+        th.unacked.insert(
+            th.flow,
+            UnackedFlow {
+                dst,
+                pkts,
+                acked_prefix: 0,
+                retries: 0,
+            },
+        );
+    }
+}
+
+/// Emit one data packet of the active flow; stamps the transport
+/// sequence/total/timestamp fields and arms the RTO when the flow's
+/// tail leaves. Returns the wire size.
+fn send_data_packet(
+    me: NodeId,
+    th: &mut TrafficHost,
+    ctx: &mut Ctx,
+    job: u32,
+) -> u64 {
     let mut pkt = Packet::data(PacketKind::Background, me, th.dst);
     pkt.wire_bytes = ctx.cfg.wire_bytes();
     pkt.flow = th.flow;
+    let reactive = th.spec.transport.is_on();
+    if reactive {
+        pkt.counter = th.flow_pkts - th.remaining; // sequence number
+        pkt.hosts = th.flow_pkts;
+        pkt.meta = ctx.now; // send timestamp (Swift delay base)
+    }
     let wire = pkt.wire_bytes as u64;
     ctx.send(0, pkt);
     th.remaining -= 1;
+    if reactive && th.remaining == 0 {
+        arm_rto(ctx, job, th.flow, 0);
+    }
+    wire
+}
 
-    let next = pace(wire * ctx.cfg.link_ps_per_byte, th.spec.load);
-    ctx.wake(next, job);
+/// Arm (or re-arm) the per-flow retransmission timer, with exponential
+/// backoff over the retry rounds.
+fn arm_rto(ctx: &mut Ctx, job: u32, flow: u64, retries: u8) {
+    let delay = ctx.cfg.transport_rto_ps << (retries.min(4) as u32);
+    let timer = crate::host::encode_timer(
+        crate::host::TIMER_TRANSPORT_RTO,
+        job,
+        flow as u32, // low bits: the sender's message counter
+        0,
+    );
+    ctx.host_timer(delay, timer);
 }
 
 /// Poisson open loop: flows arrive at `load` of the line rate whatever
@@ -285,7 +362,9 @@ fn open_wake(
             Some(p) => {
                 th.dst = p.dst;
                 th.remaining = p.pkts;
+                th.flow_pkts = p.pkts;
                 th.flow = p.flow;
+                track_unacked(th, p.dst, p.pkts);
             }
             None => {
                 // idle: sleep until the next arrival
@@ -295,29 +374,211 @@ fn open_wake(
         }
     }
 
-    let mut pkt = Packet::data(PacketKind::Background, me, th.dst);
-    pkt.wire_bytes = ctx.cfg.wire_bytes();
-    pkt.flow = th.flow;
-    let wire = pkt.wire_bytes as u64;
-    ctx.send(0, pkt);
-    th.remaining -= 1;
-    ctx.wake(wire * ctx.cfg.link_ps_per_byte, job);
+    let wire = send_data_packet(me, th, ctx, job);
+    // the NIC drains at line rate unless the transport says otherwise
+    // (arrivals above stay open-loop: offered load is unaffected)
+    let mut next = wire * ctx.cfg.link_ps_per_byte;
+    if th.spec.transport.is_on() {
+        th.cc.maybe_increase(ctx.now);
+        next = th.cc.stretch(next);
+    }
+    ctx.wake(next, job);
 }
 
-/// Delivery at a traffic sink: account the packet toward its flow's
-/// completion (FCT is recorded when the last packet lands).
+/// Delivery at a traffic host: data packets are accounted toward their
+/// flow's completion (FCT is recorded when the last packet lands);
+/// transport ACK/CNP control frames feed the sender-side state.
 pub fn on_packet(
-    _me: NodeId,
-    _th: &mut TrafficHost,
+    me: NodeId,
+    th: &mut TrafficHost,
     ctx: &mut Ctx,
     pkt: Packet,
 ) {
+    match pkt.kind {
+        PacketKind::Background => on_data(me, th, ctx, pkt),
+        PacketKind::TransportAck => on_ack(th, ctx, pkt),
+        PacketKind::TransportCnp => on_cnp(th, ctx, pkt),
+        _ => {}
+    }
+}
+
+/// Sink-side data path. Without a transport this is the legacy
+/// unconditional accounting; with one, the sink deduplicates
+/// retransmitted copies, echoes congestion feedback (CNPs for CE marks
+/// under DCQCN, max one-way delay on ACKs for Swift) and sends
+/// cumulative ACKs every [`transport::ACK_EVERY`] packets plus a final
+/// ACK on completion.
+fn on_data(me: NodeId, th: &mut TrafficHost, ctx: &mut Ctx, pkt: Packet) {
     let payload = pkt
         .wire_bytes
         .saturating_sub(crate::sim::packet::HEADER_OVERHEAD_BYTES)
         as u64;
     let now = ctx.now;
+    let tp = th.spec.transport;
+    if !tp.is_on() {
+        ctx.metrics.flows.on_delivery(pkt.flow, now, payload);
+        return;
+    }
+    // amortized eviction of stale flow entries — the sink-side twin of
+    // the flowlet-table sweep: an entry idle past the sender's longest
+    // possible retry chain can never see another packet, so dropping
+    // it only bounds the table (long open-loop runs would otherwise
+    // leak one entry per flow ever received)
+    th.since_sink_sweep += 1;
+    if th.since_sink_sweep >= transport::SINK_SWEEP_EVERY {
+        th.since_sink_sweep = 0;
+        let horizon = transport::SINK_EVICT_RTOS * ctx.cfg.transport_rto_ps;
+        th.sinks
+            .retain(|_, f| now.saturating_sub(f.last_seen_ps) <= horizon);
+    }
+    let total = pkt.hosts.max(1);
+    let sf = th
+        .sinks
+        .entry(pkt.flow)
+        .or_insert_with(|| SinkFlow::new(total));
+    sf.last_seen_ps = now;
+    // congestion feedback first — it applies to duplicates too (a
+    // retransmitted copy that crossed a hot queue is still a signal)
+    if pkt.ecn {
+        ctx.metrics.flows.ecn_delivered += 1;
+        let cnp_due = sf.last_cnp_ps == 0
+            || now.saturating_sub(sf.last_cnp_ps)
+                >= transport::CNP_INTERVAL_PS;
+        if tp == TransportSpec::Dcqcn && cnp_due {
+            sf.last_cnp_ps = now;
+            ctx.metrics.flows.cnps_sent += 1;
+            send_ctrl(ctx, PacketKind::TransportCnp, me, pkt.src, pkt.flow, 0, 0);
+        }
+    }
+    if tp == TransportSpec::Swift {
+        sf.max_delay_ps = sf.max_delay_ps.max(now.saturating_sub(pkt.meta));
+    }
+    if sf.done || !sf.record(pkt.counter) {
+        // duplicate of an already-delivered sequence: count the wire
+        // cost, never the goodput
+        ctx.metrics.flows.dup_pkts += 1;
+        ctx.metrics.flows.dup_bytes += payload;
+        // a duplicate means the sender's cumulative prefix is stale
+        // (lost ACKs — the final one, or enough running ones that its
+        // go-back-N window is behind the sink). Re-ACK the current
+        // prefix, throttled per flow so one retransmission round
+        // elicits one refresh, not one frame per duplicate; echo the
+        // real delay sample so a Swift sender doesn't read a healthy
+        // fabric out of a loss episode.
+        let reack_due = sf.last_reack_ps == 0
+            || now.saturating_sub(sf.last_reack_ps)
+                >= transport::CNP_INTERVAL_PS;
+        if reack_due {
+            sf.last_reack_ps = now;
+            let (counter, delay) = (
+                if sf.done { sf.total } else { sf.prefix },
+                sf.max_delay_ps,
+            );
+            send_ctrl(ctx, PacketKind::TransportAck, me, pkt.src, pkt.flow, counter, delay);
+        }
+        return;
+    }
     ctx.metrics.flows.on_delivery(pkt.flow, now, payload);
+    sf.since_ack += 1;
+    if sf.done || sf.since_ack >= transport::ACK_EVERY {
+        let (prefix, delay) = (
+            if sf.done { sf.total } else { sf.prefix },
+            sf.max_delay_ps,
+        );
+        sf.since_ack = 0;
+        sf.max_delay_ps = 0;
+        send_ctrl(ctx, PacketKind::TransportAck, me, pkt.src, pkt.flow, prefix, delay);
+    }
+}
+
+/// Sender-side ACK path: advance the acked prefix, retire completed
+/// flows, feed the Swift delay sample.
+fn on_ack(th: &mut TrafficHost, ctx: &mut Ctx, pkt: Packet) {
+    ctx.metrics.flows.acks_received += 1;
+    if th.spec.transport == TransportSpec::Swift {
+        th.cc.on_delay(ctx.now, pkt.meta);
+    }
+    let fully_acked = match th.unacked.get_mut(&pkt.flow) {
+        Some(u) => {
+            u.acked_prefix = u.acked_prefix.max(pkt.counter);
+            u.acked_prefix >= u.pkts
+        }
+        None => false, // late ACK for a completed/abandoned flow
+    };
+    if fully_acked {
+        th.unacked.remove(&pkt.flow);
+    }
+}
+
+/// Sender-side CNP path (DCQCN reaction point).
+fn on_cnp(th: &mut TrafficHost, ctx: &mut Ctx, _pkt: Packet) {
+    ctx.metrics.flows.cnps_received += 1;
+    th.cc.on_cnp(ctx.now);
+}
+
+/// Header-only transport control frame (ACK or CNP).
+fn send_ctrl(
+    ctx: &mut Ctx,
+    kind: PacketKind,
+    me: NodeId,
+    dst: NodeId,
+    flow: u64,
+    counter: u32,
+    delay: Time,
+) {
+    let mut pkt = Packet::data(kind, me, dst);
+    pkt.wire_bytes = transport::CTRL_WIRE_BYTES;
+    pkt.flow = flow;
+    pkt.counter = counter;
+    pkt.meta = delay;
+    ctx.send(0, pkt);
+}
+
+/// RTO timer: go-back-N retransmission of the unacked suffix, with a
+/// bounded retry budget. A timer whose flow has since been fully acked
+/// is a no-op (timers cannot be cancelled).
+pub fn on_timer(
+    me: NodeId,
+    th: &mut TrafficHost,
+    ctx: &mut Ctx,
+    timer: u64,
+) {
+    let (kind, job, flow_low, _aux) = crate::host::decode_timer(timer);
+    if kind != crate::host::TIMER_TRANSPORT_RTO {
+        return;
+    }
+    let flow = ((me as u64) << 32) | flow_low as u64;
+    let (dst, pkts, from, prev_retries) = match th.unacked.get(&flow) {
+        Some(u) => (u.dst, u.pkts, u.acked_prefix, u.retries),
+        None => return, // fully acked since the timer was armed
+    };
+    if prev_retries >= transport::MAX_FLOW_RETRIES {
+        th.unacked.remove(&flow);
+        ctx.metrics.flows.abandoned += 1;
+        return;
+    }
+    let retries = prev_retries + 1;
+    if let Some(u) = th.unacked.get_mut(&flow) {
+        u.retries = retries;
+    }
+    ctx.metrics.flows.rto_fired += 1;
+    // windowed go-back-N: one round resends at most
+    // RETRANS_WINDOW_PKTS from the acked prefix — a burst that fits
+    // the class-1 policer share, so recovery cannot self-drop at the
+    // sender's own first hop; longer gaps advance over later rounds as
+    // the cumulative ACK moves
+    let to = pkts.min(from + transport::RETRANS_WINDOW_PKTS);
+    for seq in from..to {
+        let mut pkt = Packet::data(PacketKind::Background, me, dst);
+        pkt.wire_bytes = ctx.cfg.wire_bytes();
+        pkt.flow = flow;
+        pkt.counter = seq;
+        pkt.hosts = pkts;
+        pkt.meta = ctx.now;
+        ctx.send(0, pkt);
+        ctx.metrics.flows.retrans_pkts += 1;
+    }
+    arm_rto(ctx, job, flow, retries);
 }
 
 /// Resolve one [`DstPlan`] per host for `spec`. `hosts` must be sorted

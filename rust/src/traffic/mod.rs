@@ -34,6 +34,8 @@ pub mod engine;
 
 pub use engine::{DstPlan, TrafficHost};
 
+use crate::transport::TransportSpec;
+
 /// Destination/size law of the generated cross traffic.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum TrafficPattern {
@@ -75,6 +77,16 @@ pub struct TrafficSpec {
     /// Offered load as a fraction of the NIC line rate, in `(0, 1]`.
     pub load: f64,
     pub injection: Injection,
+    /// Reactive transport governing the background senders
+    /// ([`crate::transport`]): `None` (the default) is bit-identical to
+    /// the unreactive legacy generator; `Dcqcn`/`Swift` turn on ECN
+    /// marking, rate control and loss recovery.
+    pub transport: TransportSpec,
+    /// Optional overrides of the fabric's ECN marking ramp
+    /// ([`crate::config::SimConfig::ecn_kmin_bytes`]/`ecn_kmax_bytes`),
+    /// applied by the scenario builder when `transport` is on.
+    pub ecn_kmin: Option<u64>,
+    pub ecn_kmax: Option<u64>,
 }
 
 impl Default for TrafficSpec {
@@ -93,6 +105,9 @@ impl TrafficSpec {
             pattern: TrafficPattern::Uniform,
             load: 1.0,
             injection: Injection::Closed,
+            transport: TransportSpec::None,
+            ecn_kmin: None,
+            ecn_kmax: None,
         }
     }
 
@@ -101,6 +116,9 @@ impl TrafficSpec {
             pattern: TrafficPattern::Permutation,
             load: 1.0,
             injection: Injection::Closed,
+            transport: TransportSpec::None,
+            ecn_kmin: None,
+            ecn_kmax: None,
         }
     }
 
@@ -109,6 +127,9 @@ impl TrafficSpec {
             pattern: TrafficPattern::Incast { fan_in },
             load: 1.0,
             injection: Injection::Closed,
+            transport: TransportSpec::None,
+            ecn_kmin: None,
+            ecn_kmax: None,
         }
     }
 
@@ -117,6 +138,9 @@ impl TrafficSpec {
             pattern: TrafficPattern::Hotspot { k, skew },
             load: 1.0,
             injection: Injection::Closed,
+            transport: TransportSpec::None,
+            ecn_kmin: None,
+            ecn_kmax: None,
         }
     }
 
@@ -127,6 +151,9 @@ impl TrafficSpec {
             pattern: TrafficPattern::Empirical,
             load: 0.6,
             injection: Injection::Open,
+            transport: TransportSpec::None,
+            ecn_kmin: None,
+            ecn_kmax: None,
         }
     }
 
@@ -142,6 +169,21 @@ impl TrafficSpec {
 
     pub fn closed(mut self) -> Self {
         self.injection = Injection::Closed;
+        self
+    }
+
+    /// Run the background senders under a reactive transport
+    /// ([`crate::transport`]).
+    pub fn with_transport(mut self, t: TransportSpec) -> Self {
+        self.transport = t;
+        self
+    }
+
+    /// Override the fabric's ECN marking ramp (bytes of class-1
+    /// backlog; applied only when a transport is on).
+    pub fn with_ecn(mut self, kmin: u64, kmax: u64) -> Self {
+        self.ecn_kmin = Some(kmin);
+        self.ecn_kmax = Some(kmax);
         self
     }
 
@@ -166,6 +208,20 @@ impl TrafficSpec {
                 "traffic load must be in (0, 1], got {}",
                 self.load
             ));
+        }
+        if let (Some(kmin), Some(kmax)) = (self.ecn_kmin, self.ecn_kmax) {
+            if kmin > kmax {
+                return Err(format!(
+                    "ECN kmin {kmin} must not exceed kmax {kmax}"
+                ));
+            }
+        }
+        if !self.transport.is_on()
+            && (self.ecn_kmin.is_some() || self.ecn_kmax.is_some())
+        {
+            return Err(
+                "ECN thresholds are meaningless with transport off".into()
+            );
         }
         match self.pattern {
             TrafficPattern::Incast { fan_in } if fan_in == 0 => {
@@ -325,6 +381,24 @@ impl TrafficSpec {
                 ))
             }
         }
+        if let Some(t) = v.get("transport").and_then(|x| x.as_str()) {
+            spec.transport = TransportSpec::parse(t)?;
+        }
+        let ecn_key = |key: &str| -> Result<Option<u64>, String> {
+            match v.get(key) {
+                None => Ok(None),
+                Some(x) => {
+                    let i = x.as_i64().ok_or_else(|| {
+                        format!("'{key}' must be an integer byte count")
+                    })?;
+                    u64::try_from(i)
+                        .map(Some)
+                        .map_err(|_| format!("'{key}' out of range: {i}"))
+                }
+            }
+        };
+        spec.ecn_kmin = ecn_key("ecn_kmin")?;
+        spec.ecn_kmax = ecn_key("ecn_kmax")?;
         spec.validate()?;
         Ok(Some(spec))
     }
@@ -408,6 +482,39 @@ mod tests {
                 .is_err()
         );
         assert!(TrafficSpec::from_json(r#"{"load": 0.5}"#).is_err());
+    }
+
+    #[test]
+    fn json_transport_keys() {
+        let s = TrafficSpec::from_json(
+            r#"{"pattern": "incast", "fan_in": 32, "transport": "dcqcn",
+                "ecn_kmin": 8192, "ecn_kmax": 32768}"#,
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(s.transport, TransportSpec::Dcqcn);
+        assert_eq!(s.ecn_kmin, Some(8192));
+        assert_eq!(s.ecn_kmax, Some(32768));
+        let s = TrafficSpec::from_json(
+            r#"{"pattern": "uniform", "transport": "swift"}"#,
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(s.transport, TransportSpec::Swift);
+        // garbage transport / inverted ramp / knobs without transport
+        assert!(TrafficSpec::from_json(
+            r#"{"pattern": "uniform", "transport": "tcp"}"#
+        )
+        .is_err());
+        assert!(TrafficSpec::from_json(
+            r#"{"pattern": "uniform", "transport": "dcqcn",
+                "ecn_kmin": 9000, "ecn_kmax": 100}"#
+        )
+        .is_err());
+        assert!(TrafficSpec::from_json(
+            r#"{"pattern": "uniform", "ecn_kmin": 100}"#
+        )
+        .is_err());
     }
 
     #[test]

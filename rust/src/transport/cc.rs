@@ -1,0 +1,238 @@
+//! Per-sender congestion-control state machines (DCQCN and Swift-style).
+//!
+//! A [`FlowCc`] holds the sending rate as a fraction of the NIC line
+//! rate; the traffic engine divides its load-derived pacing gap by that
+//! fraction, so `rate = 1.0` reproduces the unreactive cadence exactly.
+//!
+//! **DCQCN** (Zhu et al., SIGCOMM'15), reaction-point side: every CNP
+//! cuts the rate multiplicatively by `alpha/2` and refreshes the
+//! `alpha` EWMA; in the absence of CNPs the rate recovers toward the
+//! pre-cut target — first by halving the gap to it (fast recovery),
+//! then by pushing the target up additively. The byte-counter trigger
+//! of the original is folded into the timer trigger: one increase step
+//! per [`DCQCN_TIMER_PS`] without a CNP.
+//!
+//! **Swift** (Kumar et al., SIGCOMM'20), simplified to its core AIMD on
+//! delay: the sink echoes the largest one-way delay observed since the
+//! last ACK (the simulator's picosecond timestamps make this exact);
+//! above [`SWIFT_TARGET_DELAY_PS`] the sender cuts multiplicatively in
+//! proportion to the overshoot (at most once per
+//! [`SWIFT_DECREASE_GUARD_PS`], Swift's once-per-RTT rule), below it
+//! the rate climbs additively.
+
+use crate::sim::{Time, US};
+
+use super::TransportSpec;
+
+/// DCQCN alpha EWMA gain (`g` in the paper).
+pub const DCQCN_G: f64 = 1.0 / 16.0;
+/// DCQCN additive-increase step, as a fraction of line rate.
+pub const DCQCN_RAI: f64 = 0.05;
+/// DCQCN increase-timer period (one recovery step per period without
+/// a CNP).
+pub const DCQCN_TIMER_PS: Time = 55 * US;
+/// Fast-recovery steps before additive increase starts.
+pub const DCQCN_FAST_RECOVERY_STAGES: u32 = 5;
+
+/// Swift target one-way delay (fabric base delay + a shallow-queue
+/// allowance; the 2-tier base RTT is ~3 us).
+pub const SWIFT_TARGET_DELAY_PS: Time = 5 * US;
+/// Swift multiplicative-decrease gain (`beta`).
+pub const SWIFT_BETA: f64 = 0.8;
+/// Swift maximum fractional cut per decrease event.
+pub const SWIFT_MAX_MD: f64 = 0.7;
+/// Swift additive-increase step per on-target ACK.
+pub const SWIFT_AI: f64 = 0.05;
+/// Minimum spacing between Swift decreases (once-per-RTT rule).
+pub const SWIFT_DECREASE_GUARD_PS: Time = 10 * US;
+
+/// Rate floor: senders never stall completely (1/128 of line rate).
+pub const MIN_RATE: f64 = 1.0 / 128.0;
+
+/// Per-sender congestion-control state. One per background host: the
+/// traffic engine transmits one flow at a time, so the host's NIC rate
+/// is the flow rate.
+#[derive(Clone, Debug)]
+pub struct FlowCc {
+    spec: TransportSpec,
+    /// Current sending rate as a fraction of line rate, in
+    /// `[MIN_RATE, 1.0]`.
+    rate: f64,
+    /// DCQCN target rate (the rate before the last cut).
+    target: f64,
+    /// DCQCN congestion-extent EWMA.
+    alpha: f64,
+    /// Completed recovery steps since the last decrease.
+    stage: u32,
+    last_decrease_ps: Time,
+    last_increase_ps: Time,
+}
+
+impl FlowCc {
+    pub fn new(spec: TransportSpec) -> FlowCc {
+        FlowCc {
+            spec,
+            rate: 1.0,
+            target: 1.0,
+            alpha: 1.0,
+            stage: 0,
+            last_decrease_ps: 0,
+            last_increase_ps: 0,
+        }
+    }
+
+    /// Current rate as a fraction of line rate.
+    pub fn rate(&self) -> f64 {
+        self.rate
+    }
+
+    /// Stretch a line-rate pacing gap to the current rate.
+    pub fn stretch(&self, gap_ps: u64) -> u64 {
+        if self.rate >= 1.0 {
+            gap_ps
+        } else {
+            (gap_ps as f64 / self.rate.max(MIN_RATE)).ceil() as u64
+        }
+    }
+
+    /// DCQCN reaction point: a CNP arrived for one of our flows.
+    pub fn on_cnp(&mut self, now: Time) {
+        if self.spec != TransportSpec::Dcqcn {
+            return;
+        }
+        self.alpha = (1.0 - DCQCN_G) * self.alpha + DCQCN_G;
+        self.target = self.rate;
+        self.rate = (self.rate * (1.0 - self.alpha / 2.0)).max(MIN_RATE);
+        self.stage = 0;
+        self.last_decrease_ps = now;
+        self.last_increase_ps = now;
+    }
+
+    /// Swift reaction: an ACK echoed the largest one-way delay since
+    /// the previous ACK.
+    pub fn on_delay(&mut self, now: Time, delay_ps: Time) {
+        if self.spec != TransportSpec::Swift {
+            return;
+        }
+        if delay_ps > SWIFT_TARGET_DELAY_PS {
+            if now.saturating_sub(self.last_decrease_ps)
+                < SWIFT_DECREASE_GUARD_PS
+            {
+                return;
+            }
+            let overshoot = (delay_ps - SWIFT_TARGET_DELAY_PS) as f64
+                / delay_ps as f64;
+            let cut = (SWIFT_BETA * overshoot).min(SWIFT_MAX_MD);
+            self.rate = (self.rate * (1.0 - cut)).max(MIN_RATE);
+            self.last_decrease_ps = now;
+        } else {
+            self.rate = (self.rate + SWIFT_AI).min(1.0);
+        }
+    }
+
+    /// DCQCN recovery clock, called from the sender's wake path: one
+    /// recovery step per [`DCQCN_TIMER_PS`] without a CNP. Also decays
+    /// `alpha` so long CNP-free stretches forget past congestion.
+    pub fn maybe_increase(&mut self, now: Time) {
+        if self.spec != TransportSpec::Dcqcn {
+            return;
+        }
+        if now.saturating_sub(self.last_increase_ps) < DCQCN_TIMER_PS {
+            return;
+        }
+        self.last_increase_ps = now;
+        self.alpha *= 1.0 - DCQCN_G;
+        self.stage += 1;
+        if self.stage > DCQCN_FAST_RECOVERY_STAGES {
+            self.target = (self.target + DCQCN_RAI).min(1.0);
+        }
+        self.rate = ((self.rate + self.target) / 2.0).min(1.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_inert_at_line_rate() {
+        let mut cc = FlowCc::new(TransportSpec::None);
+        cc.on_cnp(0);
+        cc.on_delay(0, 100 * US);
+        cc.maybe_increase(10 * DCQCN_TIMER_PS);
+        assert_eq!(cc.rate(), 1.0);
+        assert_eq!(cc.stretch(1000), 1000);
+    }
+
+    #[test]
+    fn dcqcn_decrease_is_monotone_and_floored() {
+        let mut cc = FlowCc::new(TransportSpec::Dcqcn);
+        let mut prev = cc.rate();
+        for i in 0..64 {
+            cc.on_cnp(i * US);
+            assert!(cc.rate() < prev || cc.rate() == MIN_RATE);
+            assert!(cc.rate() >= MIN_RATE);
+            prev = cc.rate();
+        }
+        assert!(prev <= 2.0 * MIN_RATE, "sustained CNPs drive to the floor");
+    }
+
+    #[test]
+    fn dcqcn_recovery_is_monotone_back_to_line_rate() {
+        let mut cc = FlowCc::new(TransportSpec::Dcqcn);
+        for i in 0..10 {
+            cc.on_cnp(i * US);
+        }
+        let mut prev = cc.rate();
+        let mut t = 10 * US;
+        for _ in 0..200 {
+            t += DCQCN_TIMER_PS;
+            cc.maybe_increase(t);
+            assert!(cc.rate() >= prev, "recovery never decreases");
+            prev = cc.rate();
+        }
+        assert!(prev > 0.99, "recovery reaches line rate, got {prev}");
+    }
+
+    #[test]
+    fn dcqcn_increase_is_clocked_not_per_call() {
+        let mut cc = FlowCc::new(TransportSpec::Dcqcn);
+        cc.on_cnp(0);
+        let r = cc.rate();
+        cc.maybe_increase(US); // within the timer period: no step
+        assert_eq!(cc.rate(), r);
+        cc.maybe_increase(DCQCN_TIMER_PS + US);
+        assert!(cc.rate() > r);
+    }
+
+    #[test]
+    fn swift_aimd_on_delay_target() {
+        let mut cc = FlowCc::new(TransportSpec::Swift);
+        // overshoot: multiplicative cut, guarded once per RTT window
+        cc.on_delay(SWIFT_DECREASE_GUARD_PS, 4 * SWIFT_TARGET_DELAY_PS);
+        let after_cut = cc.rate();
+        assert!(after_cut < 1.0);
+        cc.on_delay(SWIFT_DECREASE_GUARD_PS + US, 4 * SWIFT_TARGET_DELAY_PS);
+        assert_eq!(cc.rate(), after_cut, "decrease guard holds");
+        // on-target: additive climb back to line rate
+        let mut prev = cc.rate();
+        for i in 0..40 {
+            cc.on_delay((2 + i) * SWIFT_DECREASE_GUARD_PS, US);
+            assert!(cc.rate() >= prev);
+            prev = cc.rate();
+        }
+        assert_eq!(prev, 1.0);
+    }
+
+    #[test]
+    fn stretch_divides_by_rate() {
+        let mut cc = FlowCc::new(TransportSpec::Dcqcn);
+        assert_eq!(cc.stretch(1000), 1000);
+        for i in 0..4 {
+            cc.on_cnp(i * US);
+        }
+        let g = cc.stretch(1000);
+        assert!(g > 1000);
+        assert_eq!(g, (1000.0 / cc.rate()).ceil() as u64);
+    }
+}

@@ -1,0 +1,248 @@
+//! Reactive transport for class-1 (background) traffic: ECN marking,
+//! DCQCN/Swift-style rate control and per-flow loss recovery.
+//!
+//! The paper's congestion generators are *unreactive*: background flows
+//! inject at a fixed offered load whatever the fabric does, and packets
+//! lost to the class-1 policer are simply gone. Real datacenter cross
+//! traffic is transport-governed — RoCE fabrics run DCQCN (the setting
+//! NetReduce targets for RDMA-compatible in-network reduction) and
+//! modern hyperscalers run delay-based congestion control (Swift).
+//! Whether Canary's adaptive trees still beat static ones when the
+//! competing traffic *backs off on its own* is the question this
+//! subsystem lets the simulator ask.
+//!
+//! Three pieces (DESIGN.md §2.4):
+//!
+//! - **ECN marking** lives in the sim core (`sim/network.rs`): when
+//!   [`crate::config::SimConfig::ecn_enabled`] is set, class-1 packets
+//!   are marked CE on enqueue with RED-style probability — zero below
+//!   `ecn_kmin_bytes` of instantaneous class-1 backlog, one above
+//!   `ecn_kmax_bytes`, linear in between. Reduction traffic (class 0)
+//!   is lossless/PFC-paused and is never marked. With transport off the
+//!   marking path is a single branch and draws nothing from the RNG, so
+//!   every recorded seed stays bit-identical (`tests/transport.rs`).
+//! - **Rate control** is a per-sender [`FlowCc`] state machine
+//!   ([`cc`]): DCQCN reacts to CNPs echoed by the sink (multiplicative
+//!   decrease, alpha-EWMA, fast-recovery + additive increase), Swift to
+//!   the one-way delay samples echoed on ACKs (target-delay AIMD). The
+//!   current rate stretches the pacing gap the traffic engine derives
+//!   from `load` ([`crate::traffic::engine`]).
+//! - **Loss recovery**: data packets carry a per-flow sequence number
+//!   and the flow's total packet count; sinks track received sequences
+//!   per flow ([`SinkFlow`]), deduplicate retransmitted copies, send a
+//!   cumulative ACK every [`ACK_EVERY`] packets plus a final ACK on
+//!   completion, and senders retransmit the unacked suffix after an RTO
+//!   (go-back-N from the cumulative prefix, exponential backoff,
+//!   bounded by [`MAX_FLOW_RETRIES`]). FCT/completion metrics therefore
+//!   stay meaningful under overload instead of flows silently dying.
+//!
+//! Pluggability: [`TransportSpec`] rides on
+//! [`crate::traffic::TrafficSpec`] (`--transport dcqcn`, JSON
+//! `"transport": "swift"`); `TransportSpec::None` — the default — is
+//! pinned bit-identical to the pre-transport simulator.
+
+pub mod cc;
+
+pub use cc::FlowCc;
+
+use crate::sim::{NodeId, Time, US};
+
+/// Which congestion-control law governs the background senders.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TransportSpec {
+    /// Unreactive legacy behavior: fixed offered load, no marking, no
+    /// recovery. Bit-identical to the pre-transport simulator.
+    #[default]
+    None,
+    /// DCQCN-style: sinks echo CNPs for CE-marked packets, senders do
+    /// multiplicative decrease + fast-recovery/additive increase.
+    Dcqcn,
+    /// Swift-style: sinks echo one-way delay samples on ACKs, senders
+    /// run target-delay AIMD on the picosecond timestamps.
+    Swift,
+}
+
+impl TransportSpec {
+    /// Is any reactive transport active?
+    pub fn is_on(self) -> bool {
+        self != TransportSpec::None
+    }
+
+    /// Stable tag for CSV cells and log lines.
+    pub fn name(self) -> &'static str {
+        match self {
+            TransportSpec::None => "none",
+            TransportSpec::Dcqcn => "dcqcn",
+            TransportSpec::Swift => "swift",
+        }
+    }
+
+    /// Parse the CLI spelling (`none`, `dcqcn`, `swift`).
+    pub fn parse(s: &str) -> Result<TransportSpec, String> {
+        match s {
+            "none" | "off" => Ok(TransportSpec::None),
+            "dcqcn" => Ok(TransportSpec::Dcqcn),
+            "swift" => Ok(TransportSpec::Swift),
+            other => Err(format!(
+                "unknown transport '{other}' (none|dcqcn|swift)"
+            )),
+        }
+    }
+}
+
+/// Wire size of the transport control packets (ACK/CNP): header-only
+/// frames, far below a data MTU.
+pub const CTRL_WIRE_BYTES: u32 = 64;
+
+/// Sinks send a cumulative ACK every this many newly received packets
+/// (plus always one on flow completion).
+pub const ACK_EVERY: u32 = 8;
+
+/// Minimum spacing between CNPs per flow (RoCE notification-point
+/// behavior: at most one CNP per flow per 50 us).
+pub const CNP_INTERVAL_PS: Time = 50 * US;
+
+/// RTO retransmission rounds before a sender abandons a flow.
+pub const MAX_FLOW_RETRIES: u8 = 8;
+
+/// Go-back-N window: packets retransmitted per RTO round. Bounds the
+/// burst a round injects (~70 KB on the wire, inside the 128 KiB
+/// class-1 policer share) so recovery cannot self-drop at the sender's
+/// own first hop; longer gaps advance over successive rounds as the
+/// cumulative ACK moves.
+pub const RETRANS_WINDOW_PKTS: u32 = 64;
+
+/// Sink-side flow-table sweeps run every this many data packets
+/// (amortizes the `retain` scan, as the flowlet-table eviction does).
+pub const SINK_SWEEP_EVERY: u32 = 4096;
+
+/// Sink flow entries idle longer than this many RTOs are evicted. The
+/// worst-case sender retry chain (exponential backoff, capped shift)
+/// sums to < 96 RTOs, so an entry this stale can never see another
+/// packet — eviction only bounds the table.
+pub const SINK_EVICT_RTOS: u64 = 128;
+
+/// Sender-side recovery state for one in-flight (fully sent but not
+/// fully acked) flow.
+#[derive(Clone, Debug)]
+pub struct UnackedFlow {
+    pub dst: NodeId,
+    /// Total data packets in the flow.
+    pub pkts: u32,
+    /// Highest cumulative contiguous prefix the sink has acked.
+    pub acked_prefix: u32,
+    /// RTO rounds used so far.
+    pub retries: u8,
+}
+
+/// Sink-side reassembly state for one flow: a received-sequence bitmap
+/// for deduplication, the cumulative prefix for ACKs, and the CNP/delay
+/// bookkeeping the congestion-control feedback needs.
+#[derive(Clone, Debug)]
+pub struct SinkFlow {
+    /// Total data packets the sender announced.
+    pub total: u32,
+    /// Bitmap over sequence numbers (dropped once the flow completes).
+    received: Vec<u64>,
+    pub n_received: u32,
+    /// Length of the contiguous received prefix (cumulative-ACK value).
+    pub prefix: u32,
+    /// All packets received; the bitmap has been released.
+    pub done: bool,
+    /// Last CNP emission instant (rate-limits CNPs per flow).
+    pub last_cnp_ps: Time,
+    /// Largest one-way delay observed since the last ACK (Swift echo).
+    pub max_delay_ps: Time,
+    /// Newly received packets since the last ACK.
+    pub since_ack: u32,
+    /// Last packet arrival (stale-entry eviction horizon).
+    pub last_seen_ps: Time,
+    /// Last duplicate-triggered re-ACK (throttles the re-ACK path: a
+    /// whole retransmission round elicits one prefix refresh, not one
+    /// control frame per duplicate).
+    pub last_reack_ps: Time,
+}
+
+impl SinkFlow {
+    pub fn new(total: u32) -> SinkFlow {
+        SinkFlow {
+            total,
+            received: vec![0u64; (total as usize).div_ceil(64)],
+            n_received: 0,
+            prefix: 0,
+            done: false,
+            last_cnp_ps: 0,
+            max_delay_ps: 0,
+            since_ack: 0,
+            last_seen_ps: 0,
+            last_reack_ps: 0,
+        }
+    }
+
+    /// Record sequence `seq`; returns `false` when it was already seen
+    /// (a duplicate from a retransmission round). Out-of-range
+    /// sequences (malformed) are treated as duplicates.
+    pub fn record(&mut self, seq: u32) -> bool {
+        let (word, bit) = (seq as usize / 64, seq as usize % 64);
+        if word >= self.received.len() || self.received[word] >> bit & 1 == 1 {
+            return false;
+        }
+        self.received[word] |= 1 << bit;
+        self.n_received += 1;
+        // advance the cumulative prefix over the bitmap
+        while self.prefix < self.total {
+            let (w, b) = (self.prefix as usize / 64, self.prefix as usize % 64);
+            if self.received[w] >> b & 1 == 0 {
+                break;
+            }
+            self.prefix += 1;
+        }
+        if self.n_received >= self.total {
+            self.done = true;
+            self.received = Vec::new(); // release the bitmap
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_name_round_trip() {
+        for t in [TransportSpec::None, TransportSpec::Dcqcn, TransportSpec::Swift] {
+            assert_eq!(TransportSpec::parse(t.name()).unwrap(), t);
+        }
+        assert_eq!(TransportSpec::parse("off").unwrap(), TransportSpec::None);
+        assert!(TransportSpec::parse("tcp").is_err());
+        assert!(!TransportSpec::None.is_on());
+        assert!(TransportSpec::Dcqcn.is_on());
+    }
+
+    #[test]
+    fn sink_flow_dedups_and_tracks_prefix() {
+        let mut f = SinkFlow::new(5);
+        assert!(f.record(0));
+        assert!(!f.record(0), "duplicate detected");
+        assert_eq!(f.prefix, 1);
+        assert!(f.record(3), "out of order accepted");
+        assert_eq!(f.prefix, 1, "gap holds the prefix");
+        assert!(f.record(1));
+        assert!(f.record(2));
+        assert_eq!(f.prefix, 4, "prefix jumps over the filled gap");
+        assert!(!f.done);
+        assert!(f.record(4));
+        assert!(f.done);
+        assert_eq!(f.prefix, 5);
+        assert!(f.received.is_empty(), "bitmap released on completion");
+        assert!(!f.record(2), "post-completion packets are duplicates");
+    }
+
+    #[test]
+    fn sink_flow_rejects_out_of_range() {
+        let mut f = SinkFlow::new(65);
+        assert!(f.record(64), "second bitmap word");
+        assert!(!f.record(1000), "out of range is a dup, not a panic");
+    }
+}

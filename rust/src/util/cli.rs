@@ -120,4 +120,21 @@ mod tests {
         assert!(a.flag("a"));
         assert_eq!(a.get("b"), Some("3"));
     }
+
+    #[test]
+    fn transport_flags_parse_when_known() {
+        // the canary CLI registers the transport/ECN knobs; unknown
+        // spellings must still be rejected, not silently dropped
+        let known = &["traffic", "transport", "ecn-kmin", "ecn-kmax"];
+        let a = Args::parse(
+            argv("run --traffic incast:8 --transport dcqcn \
+                  --ecn-kmin 8192 --ecn-kmax=32768"),
+            known,
+        )
+        .unwrap();
+        assert_eq!(a.get("transport"), Some("dcqcn"));
+        assert_eq!(a.get_parse::<u64>("ecn-kmin", 0).unwrap(), 8192);
+        assert_eq!(a.get_parse::<u64>("ecn-kmax", 0).unwrap(), 32768);
+        assert!(Args::parse(argv("--ecn-min 1"), known).is_err());
+    }
 }

@@ -344,6 +344,27 @@ impl ScenarioBuilder {
         // placement and sim randomness both derive from the placement
         // seed so one scenario+seed is one fully-determined world
         sim.seed = sim.seed ^ placement_seed.wrapping_mul(0x9E3779B97F4A7C15);
+        // a reactive cross-traffic transport turns on ECN marking in
+        // the sim core (and may override the marking ramp); with
+        // transport off nothing changes, keeping legacy seeds
+        // bit-identical (tests/transport.rs)
+        if let Some(spec) = &self.traffic {
+            if spec.transport.is_on() {
+                sim.ecn_enabled = true;
+                if let Some(k) = spec.ecn_kmin {
+                    sim.ecn_kmin_bytes = k;
+                }
+                if let Some(k) = spec.ecn_kmax {
+                    sim.ecn_kmax_bytes = k;
+                }
+                assert!(
+                    sim.ecn_kmin_bytes <= sim.ecn_kmax_bytes,
+                    "ECN kmin {} exceeds kmax {}",
+                    sim.ecn_kmin_bytes,
+                    sim.ecn_kmax_bytes
+                );
+            }
+        }
         let (mut net, ft) = build(self.topo, sim, self.lb.clone());
 
         // statically partition the descriptor table across tenants, as

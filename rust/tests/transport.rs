@@ -1,0 +1,255 @@
+//! Reactive-transport guarantees (DESIGN.md §2.4): the default
+//! `TransportSpec::None` is bit-identical to the pre-transport
+//! simulator and leaves zero transport footprint (so every recorded
+//! BENCH/figure series stays valid); ECN marking is deterministic at a
+//! step threshold; DCQCN/Swift back off, recover losses via RTO
+//! retransmission and complete flows an unreactive sender loses; and
+//! the CNP/retransmit accounting obeys its invariants end to end.
+//!
+//! (The DCQCN decrease/recovery monotonicity of the `FlowCc` state
+//! machine itself is unit-tested in `transport::cc`.)
+
+use canary::collectives::Algo;
+use canary::config::{FatTreeConfig, SimConfig};
+use canary::metrics::Metrics;
+use canary::sim::{PacketKind, Time, US};
+use canary::traffic::TrafficSpec;
+use canary::transport::TransportSpec;
+use canary::workload::{JobBuilder, ScenarioBuilder};
+
+/// The recorded fig2-style congestion cell at test scale: a Canary
+/// allreduce on the 64-host fabric under the paper's uniform line-rate
+/// cross traffic (the same scenario `tests/traffic_engine.rs` pins
+/// against the inlined legacy generator).
+fn figure_scenario(sim: SimConfig) -> ScenarioBuilder {
+    ScenarioBuilder::new(FatTreeConfig::small())
+        .sim(sim)
+        .traffic(Some(TrafficSpec::uniform()))
+        .job(JobBuilder::new(Algo::Canary).hosts(8).data_bytes(64 * 1024))
+}
+
+/// Tiny-fabric incast overload: 2 hosts run the allreduce, the other
+/// 6 form one 5-into-1 incast group at line rate — the sink's downlink
+/// is 5x oversubscribed, so the class-1 policer must drop.
+fn incast_scenario(tp: TransportSpec) -> ScenarioBuilder {
+    ScenarioBuilder::new(FatTreeConfig::tiny())
+        .traffic(Some(TrafficSpec::incast(5).with_transport(tp)))
+        .job(JobBuilder::new(Algo::Canary).hosts(2).data_bytes(64 * 1024))
+}
+
+/// Everything a run's outcome hangs on, bitwise.
+#[allow(clippy::type_complexity)]
+fn fingerprint(
+    m: &Metrics,
+    now: Time,
+    events: u64,
+) -> (u64, Time, u64, u64, u64, u64, u64, Vec<Time>) {
+    (
+        events,
+        now,
+        m.pkts_delivered,
+        m.drops_overflow,
+        m.flows.started,
+        m.flows.completed,
+        m.flows.delivered_bytes,
+        m.flows.fct_ps.clone(),
+    )
+}
+
+fn assert_zero_transport_footprint(m: &Metrics) {
+    assert_eq!(m.ecn_marks, 0, "marking ran with transport off");
+    assert_eq!(m.pkts_by_kind[PacketKind::TransportAck as usize], 0);
+    assert_eq!(m.pkts_by_kind[PacketKind::TransportCnp as usize], 0);
+    let f = &m.flows;
+    assert_eq!(
+        (
+            f.ecn_delivered,
+            f.cnps_sent,
+            f.cnps_received,
+            f.acks_received,
+            f.retrans_pkts,
+            f.dup_pkts,
+            f.dup_bytes,
+            f.rto_fired,
+            f.abandoned,
+        ),
+        (0, 0, 0, 0, 0, 0, 0, 0, 0),
+        "transport counters moved with transport off"
+    );
+}
+
+/// Bit-compat pin: with `TransportSpec::None` (the default) the
+/// recorded figure scenario's final metrics are bit-identical whatever
+/// the transport-layer knobs say, and the transport machinery leaves
+/// zero footprint — the ECN/CC/recovery code is provably inert, so
+/// every recorded BENCH series stays valid. (That the engine's send
+/// path makes the seed's exact RNG draws/packets/cadence is pinned
+/// separately against an inlined legacy replica in
+/// `tests/traffic_engine.rs`; together the two pins cover the
+/// transport-off surface.)
+#[test]
+fn transport_none_is_bit_identical_and_footprint_free() {
+    let baseline = {
+        let mut exp = figure_scenario(SimConfig::default()).build(42);
+        canary::collectives::runner::run_to_completion(&mut exp.net, u64::MAX);
+        assert_zero_transport_footprint(&exp.net.metrics);
+        fingerprint(&exp.net.metrics, exp.net.now, exp.net.events_processed)
+    };
+    // crank every transport-layer knob; with transport off none of
+    // them may perturb a single event
+    let mut sim = SimConfig::default().with_transport_rto(US);
+    sim.ecn_kmin_bytes = 1;
+    sim.ecn_kmax_bytes = 2;
+    let perturbed = {
+        let mut exp = figure_scenario(sim).build(42);
+        canary::collectives::runner::run_to_completion(&mut exp.net, u64::MAX);
+        assert_zero_transport_footprint(&exp.net.metrics);
+        fingerprint(&exp.net.metrics, exp.net.now, exp.net.events_processed)
+    };
+    assert_eq!(baseline, perturbed, "transport knobs leaked into a None run");
+    assert!(baseline.4 > 0, "cross traffic generated no flows");
+}
+
+/// ECN marking at a forced hotspot: with `kmin == kmax` the RED ramp
+/// degenerates to the deterministic DCTCP-style step, so two runs mark
+/// the exact same packets; an unreachably high threshold marks nothing.
+#[test]
+fn ecn_marking_is_deterministic_at_a_forced_hotspot() {
+    let run = |kmin: u64, kmax: u64| {
+        let sc = ScenarioBuilder::new(FatTreeConfig::tiny())
+            .traffic(Some(
+                TrafficSpec::incast(5)
+                    .with_transport(TransportSpec::Dcqcn)
+                    .with_ecn(kmin, kmax),
+            ))
+            .job(JobBuilder::new(Algo::Canary).hosts(2).data_bytes(64 * 1024));
+        let mut exp = sc.build(7);
+        exp.net.kick_jobs();
+        exp.net.run_all(500 * US);
+        (exp.net.metrics.ecn_marks, exp.net.events_processed)
+    };
+    let a = run(4096, 4096);
+    let b = run(4096, 4096);
+    assert_eq!(a, b, "step-threshold marking must be deterministic");
+    assert!(a.0 > 0, "a 5:1 incast must cross a 4 KiB threshold");
+    let silent = run(1 << 40, 1 << 40);
+    assert_eq!(silent.0, 0, "unreachable threshold must never mark");
+}
+
+/// Loss recovery end to end on `tiny`: the unreactive sender loses
+/// flow tails to the policer and they die silently; DCQCN backs off
+/// and retransmits, so the background completion fraction improves —
+/// the acceptance shape of the transport subsystem.
+#[test]
+fn dcqcn_retransmits_and_improves_completion_under_incast_overload() {
+    let run = |tp: TransportSpec| {
+        let mut exp = incast_scenario(tp).build(11);
+        exp.net.kick_jobs();
+        exp.net.run_all(3000 * US);
+        exp.net
+    };
+    let none = run(TransportSpec::None);
+    let dcqcn = run(TransportSpec::Dcqcn);
+
+    let nf = &none.metrics.flows;
+    assert!(none.metrics.drops_overflow > 0, "overload must drop");
+    assert!(nf.started > 0);
+    assert!(
+        nf.completion_fraction() < 0.9,
+        "unreactive overload should lose flows, completed {:.2}",
+        nf.completion_fraction()
+    );
+
+    let df = &dcqcn.metrics.flows;
+    assert!(dcqcn.metrics.ecn_marks > 0, "marking must engage");
+    assert!(df.cnps_sent > 0, "sinks must echo CNPs");
+    assert!(df.cnps_received > 0, "senders must hear CNPs");
+    assert!(df.retrans_pkts > 0, "lost tails must be retransmitted");
+    assert!(df.completed > 0);
+    assert!(
+        df.completion_fraction() > nf.completion_fraction(),
+        "reactive {:.3} must beat unreactive {:.3}",
+        df.completion_fraction(),
+        nf.completion_fraction()
+    );
+}
+
+/// Swift (delay-based) also reacts and recovers: ACKs flow back,
+/// retransmission fills policer losses, completion beats unreactive.
+#[test]
+fn swift_reacts_and_completes_flows() {
+    let run = |tp: TransportSpec| {
+        let mut exp = incast_scenario(tp).build(13);
+        exp.net.kick_jobs();
+        exp.net.run_all(3000 * US);
+        exp.net
+    };
+    let none = run(TransportSpec::None);
+    let swift = run(TransportSpec::Swift);
+    let sf = &swift.metrics.flows;
+    assert!(sf.acks_received > 0, "delay samples must reach senders");
+    assert_eq!(sf.cnps_sent, 0, "Swift never emits CNPs");
+    assert!(sf.completed > 0);
+    assert!(
+        sf.completion_fraction()
+            > none.metrics.flows.completion_fraction(),
+        "swift {:.3} must beat unreactive {:.3}",
+        sf.completion_fraction(),
+        none.metrics.flows.completion_fraction()
+    );
+}
+
+/// CNP / retransmission accounting invariants in `FlowStats`, checked
+/// on a run where everything engages.
+#[test]
+fn cnp_and_retransmit_accounting_invariants() {
+    let mut exp = incast_scenario(TransportSpec::Dcqcn).build(17);
+    exp.net.kick_jobs();
+    exp.net.run_all(3000 * US);
+    let m = &exp.net.metrics;
+    let f = &m.flows;
+
+    // CNPs: received <= sent (they ride the droppable class), sent <=
+    // CE deliveries (at most one CNP per marked delivery, interval-
+    // limited), CE deliveries <= marks (marked packets can be dropped
+    // downstream of the marking queue, never unmarked)
+    assert!(f.cnps_received <= f.cnps_sent);
+    assert!(f.cnps_sent <= f.ecn_delivered);
+    assert!(f.ecn_delivered <= m.ecn_marks);
+
+    // recovery: every duplicate a sink absorbed is a retransmitted
+    // copy; goodput counts first copies only
+    assert!(f.dup_pkts <= f.retrans_pkts);
+    assert!(f.throughput_bytes() >= f.goodput_bytes());
+    assert_eq!(f.throughput_bytes() - f.goodput_bytes(), f.dup_bytes);
+
+    // lifecycle stays consistent under retransmission and dedup
+    assert_eq!(f.fct_ps.len() as u64, f.completed);
+    assert_eq!(f.live_count() as u64 + f.completed, f.started);
+    assert!(f.delivered_bytes <= f.offered_bytes);
+
+    // control frames actually crossed the fabric
+    assert!(m.pkts_by_kind[PacketKind::TransportAck as usize] > 0);
+    assert!(m.pkts_by_kind[PacketKind::TransportCnp as usize] > 0);
+}
+
+/// The whole reactive stack is deterministic from its seed (the new
+/// RNG draws — RED marking — come from the seeded sim stream).
+#[test]
+fn reactive_runs_are_deterministic() {
+    for tp in [TransportSpec::Dcqcn, TransportSpec::Swift] {
+        let run = || {
+            let mut exp = incast_scenario(tp).build(23);
+            exp.net.kick_jobs();
+            exp.net.run_all(1000 * US);
+            (
+                exp.net.events_processed,
+                exp.net.metrics.ecn_marks,
+                exp.net.metrics.flows.completed,
+                exp.net.metrics.flows.retrans_pkts,
+                exp.net.metrics.flows.fct_ps.clone(),
+            )
+        };
+        assert_eq!(run(), run(), "non-deterministic {:?} run", tp);
+    }
+}
