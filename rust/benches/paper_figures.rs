@@ -8,7 +8,10 @@
 //! sweeps additionally record their timing to
 //! `results/BENCH_traffic.json` / `results/BENCH_transport.json` /
 //! `results/BENCH_placement.json` so per-commit tooling can track the
-//! end-to-end cost of the beyond-paper harnesses.
+//! end-to-end cost of the beyond-paper harnesses. The `scale` sweep
+//! writes `results/BENCH_scale.json` with per-cell engine throughput
+//! and the headline events/sec that `scripts/check_bench.py` gates CI
+//! on.
 
 use std::time::Duration;
 
@@ -62,6 +65,7 @@ fn main() {
         run("transport_reactive", figures::transport);
     let (placement_time, placement_rows) =
         run("placement_locality", figures::placement);
+    run("scale_weak_sweep", figures::scale);
     run("ablation_lb", figures::ablation_lb);
 
     // machine-readable entries for the sweeps (per-commit tracking)
@@ -96,5 +100,14 @@ fn main() {
             Ok(()) => println!("wrote {file}"),
             Err(e) => eprintln!("{file} write failed: {e}"),
         }
+    }
+
+    // the scale sweep writes its own richer entry (per-cell events/sec
+    // + the gated headline) into the bench out dir; publish it next to
+    // the other BENCH files for artifact upload / check_bench.py
+    let scale_src = format!("{}/BENCH_scale.json", opts().out);
+    match std::fs::copy(&scale_src, "results/BENCH_scale.json") {
+        Ok(_) => println!("wrote results/BENCH_scale.json"),
+        Err(e) => eprintln!("copying {scale_src} failed: {e}"),
     }
 }

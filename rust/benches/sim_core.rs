@@ -43,9 +43,10 @@ fn main() {
     );
     let _ = m;
 
-    // event heap in isolation
+    // calendar-queue scheduler in isolation: near-future pushes (the
+    // hot case — every entry lands inside the wheel window)
     use canary::sim::{Event, EventQueue};
-    let m = bench("event_heap_push_pop_10k", t, || {
+    let m = bench("scheduler_push_pop_10k_near", t, || {
         let mut q = EventQueue::new();
         let mut rng = Rng::new(1);
         for _ in 0..10_000 {
@@ -56,6 +57,47 @@ fn main() {
     println!(
         "   -> {:.2} M ops/s\n",
         throughput(&m, 20_000.0) / 1e6
+    );
+
+    // far-future timers: entries beyond the wheel horizon take the
+    // overflow heap and migrate back as the window slides
+    let m = bench("scheduler_push_pop_10k_far", t, || {
+        let mut q = EventQueue::new();
+        let mut rng = Rng::new(2);
+        for _ in 0..10_000 {
+            q.push(
+                rng.next_u64() % 40_000_000_000, // up to 40 ms
+                Event::TxDone { link: 0 },
+            );
+        }
+        while q.pop().is_some() {}
+    });
+    println!(
+        "   -> {:.2} M ops/s\n",
+        throughput(&m, 20_000.0) / 1e6
+    );
+
+    // packet arena churn: steady-state alloc/free through the free list
+    use canary::sim::{Packet, PacketArena, PacketKind};
+    let m = bench("arena_alloc_free_10k", t, || {
+        let mut a = PacketArena::new();
+        let mut live = Vec::with_capacity(64);
+        for i in 0..10_000u32 {
+            live.push(a.alloc(Packet::data(PacketKind::Background, 0, i)));
+            if live.len() == 64 {
+                for id in live.drain(..) {
+                    a.free(id);
+                }
+            }
+        }
+        for id in live.drain(..) {
+            a.free(id);
+        }
+        std::hint::black_box(a.slot_count());
+    });
+    println!(
+        "   -> {:.2} M alloc+free/s\n",
+        throughput(&m, 10_000.0) / 1e6
     );
 
     // RNG

@@ -301,6 +301,16 @@ impl ClosConfig {
         ClosConfig::three_tier(2, 2, 2, 2, 2)
     }
 
+    /// 4096 hosts on a 3-tier pod fabric (16 pods x 16 ToRs x 16
+    /// hosts, 2:1 oversubscribed at both lower tiers) — the largest
+    /// rung of the `figures scale` weak-scaling sweep. 4x the paper's
+    /// host count; a 2-tier shape cannot reach it inside the 64-port
+    /// radix bound, which is itself the paper's scaling argument for
+    /// multi-tier fabrics.
+    pub fn huge3() -> Self {
+        ClosConfig::three_tier(16, 16, 16, 8, 8)
+    }
+
     /// Rescale the uplink radixes so every switch tier below the top is
     /// `num:den` oversubscribed (downlinks : uplinks). `1:1` is
     /// non-blocking; `4:1` is a heavily tapered fabric. When the ratio
@@ -499,6 +509,17 @@ mod tests {
         // 2:1 oversubscription at both lower tiers
         assert_eq!(t.down[0], 2 * t.up[1]);
         assert_eq!(t.down[1], 2 * t.up[2]);
+    }
+
+    #[test]
+    fn huge3_counts() {
+        let t = ClosConfig::huge3();
+        assert_eq!(t.n_hosts(), 4096);
+        assert!(t.validate().is_ok());
+        // 2:1 oversubscription at ToR and aggregation tiers
+        assert_eq!(t.down[0], 2 * t.up[1]);
+        assert_eq!(t.down[1], 2 * t.up[2]);
+        assert!(t.n_spine() >= 4, "static4 needs 4 distinct roots");
     }
 
     #[test]

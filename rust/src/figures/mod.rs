@@ -6,7 +6,7 @@
 //! ```text
 //! figures all            [--scale full|half|ci] [--seeds N] [--out DIR]
 //! figures fig2|fig6|fig7a|fig7b|fig8|fig9|fig10a|fig10b|fig11|mem|clos3
-//!         |traffic|transport|placement|ablation ...
+//!         |traffic|transport|placement|scale|ablation ...
 //! ```
 //!
 //! `full` reproduces the paper's parameters (1024 hosts, 4 MiB, 5 seeds —
@@ -33,6 +33,7 @@ use crate::sim::{ps_to_us, US};
 use crate::traffic::TrafficSpec;
 use crate::transport::TransportSpec;
 use crate::util::cli::Args;
+use crate::util::json::{obj, Value};
 use crate::util::par::par_map;
 use crate::util::stats::{mean, percentile_sorted, stddev};
 use crate::workload::{JobBuilder, Placement, ScenarioBuilder};
@@ -86,6 +87,24 @@ impl Scale {
             Scale::Full => 5,
             Scale::Half => 2,
             Scale::Ci => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Scale::Full => "full",
+            Scale::Half => "half",
+            Scale::Ci => "ci",
+        }
+    }
+
+    /// Per-host data size for the weak-scaling sweep (fixed per rung so
+    /// total work grows linearly with the host count).
+    pub fn scale_sweep_bytes(self) -> u64 {
+        match self {
+            Scale::Full => 512 << 10,
+            Scale::Half => 128 << 10,
+            Scale::Ci => 16 << 10,
         }
     }
 }
@@ -820,6 +839,170 @@ pub fn placement(o: &Opts) -> Series {
     finish(s, o)
 }
 
+/// Weak-scaling engine sweep (DESIGN.md §2.5, EXPERIMENTS.md §Scale):
+/// 64 → 4096 hosts across 2- and 3-tier Clos fabrics, ring vs static
+/// trees vs Canary, ± uniform cross traffic at 50 % load, with fixed
+/// per-host data so total work grows with the fabric. Each cell
+/// reports the usual goodput/runtime *plus* the engine-throughput
+/// numbers the scheduler+arena rewrite is accountable for: events
+/// dispatched, events/sec, peak live packets and the arena high-water
+/// mark. Alongside the CSV it writes `BENCH_scale.json` — the recorded
+/// point of the perf trajectory that `scripts/check_bench.py` gates CI
+/// on. The gated headline events/sec comes from a *serial* re-run of
+/// the largest Canary cell (the sweep itself fans cells over worker
+/// threads, which is right for wall time but makes per-cell events/sec
+/// contention-noisy).
+///
+/// Coverage note (no silent caps): the host-based ring is excluded
+/// from the cross-traffic column on the 4096-host rung only — its
+/// 2(N−1)-step serial dependency makes that cell latency-bound
+/// (~8 ms of simulated time), so line-rate cross traffic would pour
+/// ~10⁹ events into a cell that measures the fabric, not the engine.
+/// The exclusion is visible in the series (no row), not papered over.
+pub fn scale(o: &Opts) -> Series {
+    let mut s = Series::new(
+        "scale_weak_sweep",
+        &[
+            "hosts",
+            "tiers",
+            "algo",
+            "cross",
+            "events",
+            "events_per_sec_m",
+            "peak_live_pkts",
+            "arena_slots",
+            "runtime_us",
+            "goodput_gbps",
+        ],
+    );
+    // the ladder: every rung that fits the 64-port radix bound on each
+    // tier count (4096 hosts only exist as a 3-tier fabric)
+    let shapes: Vec<ClosConfig> = vec![
+        ClosConfig::small(),                    // 64 hosts, 2-tier
+        ClosConfig::small3(),                   // 64 hosts, 3-tier
+        ClosConfig::two_tier(16, 16, 16),       // 256 hosts, 2-tier
+        ClosConfig::three_tier(8, 8, 4, 4, 4),  // 256 hosts, 3-tier
+        ClosConfig::paper(),                    // 1024 hosts, 2-tier
+        ClosConfig::paper3(),                   // 1024 hosts, 3-tier
+        ClosConfig::huge3(),                    // 4096 hosts, 3-tier
+    ];
+    let data_bytes = o.scale.scale_sweep_bytes();
+    let cross_spec = TrafficSpec::uniform().with_load(0.5);
+
+    struct Cell {
+        topo: ClosConfig,
+        algo: Algo,
+        cross: bool,
+    }
+    let mut cells = Vec::new();
+    for &topo in &shapes {
+        // static4 wherever the fabric can root 4 distinct trees (every
+        // ladder rung can; tiny fabrics would degrade to static1)
+        let trees: Vec<u8> =
+            if topo.n_spine() >= 4 { vec![4] } else { vec![1] };
+        for algo in algo_list(true, &trees) {
+            for &cross in &[false, true] {
+                if cross && algo == Algo::Ring && topo.n_hosts() >= 4096 {
+                    continue; // latency-bound cell; see the doc note
+                }
+                cells.push(Cell { topo, algo, cross });
+            }
+        }
+    }
+
+    let run_cell = |topo: ClosConfig, algo: Algo, cross: bool| {
+        let sc = ScenarioBuilder::new(topo)
+            .traffic(cross.then_some(cross_spec))
+            .job(
+                JobBuilder::new(algo)
+                    .hosts((topo.n_hosts() / 2).max(2))
+                    .data_bytes(data_bytes),
+            );
+        let mut exp = sc.build(6000);
+        let r = runner::run_to_completion(&mut exp.net, u64::MAX);
+        (
+            exp.net.metrics.engine.clone(),
+            r[0].runtime_ps,
+            r[0].goodput_gbps,
+        )
+    };
+
+    let results = par_map(cells.len(), |i| {
+        let c = &cells[i];
+        run_cell(c.topo, c.algo, c.cross)
+    });
+
+    let mut cell_values = Vec::new();
+    for (c, (engine, runtime_ps, goodput)) in cells.iter().zip(&results) {
+        s.push(vec![
+            c.topo.n_hosts().to_string(),
+            c.topo.tiers.to_string(),
+            c.algo.name(),
+            c.cross.to_string(),
+            engine.events.to_string(),
+            format!("{:.2}", engine.events_per_sec() / 1e6),
+            engine.peak_live_packets.to_string(),
+            engine.arena_slots.to_string(),
+            format!(
+                "{:.1}",
+                runtime_ps.map(ps_to_us).unwrap_or(f64::NAN)
+            ),
+            format!("{:.1}", goodput.unwrap_or(0.0)),
+        ]);
+        cell_values.push(obj(vec![
+            ("hosts", Value::Int(c.topo.n_hosts() as i64)),
+            ("tiers", Value::Int(c.topo.tiers as i64)),
+            ("algo", Value::Str(c.algo.name())),
+            ("cross", Value::Bool(c.cross)),
+            ("events", Value::Int(engine.events as i64)),
+            ("events_per_sec", Value::Float(engine.events_per_sec())),
+            (
+                "peak_live_pkts",
+                Value::Int(engine.peak_live_packets as i64),
+            ),
+            ("arena_slots", Value::Int(engine.arena_slots as i64)),
+        ]));
+    }
+
+    // headline: the biggest Canary cell under cross traffic, re-run
+    // serially so events/sec is free of worker-thread contention —
+    // this is the number check_bench.py gates against its baseline
+    let head_topo = *shapes.last().expect("ladder is non-empty");
+    let (head, _, _) = run_cell(head_topo, Algo::Canary, true);
+    println!(
+        "scale headline (canary, {} hosts, cross): \
+         {:.2} M events/s ({} events in {:.3}s)",
+        head_topo.n_hosts(),
+        head.events_per_sec() / 1e6,
+        head.events,
+        head.wall_secs,
+    );
+
+    let entry = obj(vec![
+        ("bench", Value::Str("scale_weak_sweep".into())),
+        ("scale", Value::Str(o.scale.name().into())),
+        (
+            "headline_cell",
+            Value::Str(format!(
+                "canary_{}hosts_{}tier_cross",
+                head_topo.n_hosts(),
+                head_topo.tiers
+            )),
+        ),
+        ("headline_events", Value::Int(head.events as i64)),
+        ("headline_seconds", Value::Float(head.wall_secs)),
+        ("events_per_sec", Value::Float(head.events_per_sec())),
+        ("cells", Value::Array(cell_values)),
+    ]);
+    let path = format!("{}/BENCH_scale.json", o.out);
+    let _ = std::fs::create_dir_all(&o.out);
+    match std::fs::write(&path, entry.to_json()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("{path} write failed: {e}"),
+    }
+    finish(s, o)
+}
+
 /// Ablation: Canary goodput under different load balancers (design-choice
 /// bench called out in DESIGN.md §5).
 pub fn ablation_lb(o: &Opts) -> Series {
@@ -894,6 +1077,7 @@ pub fn main_entry() {
         "traffic" => drop(traffic(&o)),
         "transport" => drop(transport(&o)),
         "placement" => drop(placement(&o)),
+        "scale" => drop(scale(&o)),
         "ablation" => drop(ablation_lb(&o)),
         "all" => {
             drop(fig2(&o));
@@ -910,13 +1094,14 @@ pub fn main_entry() {
             drop(traffic(&o));
             drop(transport(&o));
             drop(placement(&o));
+            drop(scale(&o));
             drop(ablation_lb(&o));
         }
         other => {
             eprintln!(
                 "unknown figure '{other}' \
                  (fig2|fig6|fig7a|fig7b|fig8|fig9|fig10a|fig10b|fig11|mem\
-                 |clos3|traffic|transport|placement|ablation|all)"
+                 |clos3|traffic|transport|placement|scale|ablation|all)"
             );
             std::process::exit(2);
         }

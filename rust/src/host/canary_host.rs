@@ -12,7 +12,7 @@
 use std::collections::HashMap;
 
 use crate::sim::packet::{Packet, PacketKind, Payload};
-use crate::sim::{Ctx, NodeId, Time};
+use crate::sim::{Ctx, NodeId, PacketId, Time};
 use crate::util::rng::Rng;
 
 use super::{
@@ -197,14 +197,16 @@ fn leader_add_own(me: NodeId, ch: &mut CanaryHost, ctx: &mut Ctx, idx: u32) {
     leader_check_complete(me, ch, ctx, idx);
 }
 
-/// Packet arrival at a Canary host.
+/// Packet arrival at a Canary host (takes ownership of the arena
+/// entry — hosts terminate every packet addressed to them).
 pub fn on_packet(
     me: NodeId,
     ch: &mut CanaryHost,
     rng: &mut Rng,
     ctx: &mut Ctx,
-    pkt: Packet,
+    pid: PacketId,
 ) {
+    let pkt = ctx.take(pid);
     match pkt.kind {
         PacketKind::CanaryReduce | PacketKind::CanaryDirect => {
             leader_on_contribution(me, ch, rng, ctx, pkt)
@@ -236,12 +238,7 @@ fn leader_on_contribution(
         return; // stale round, or late straggler after completion
     }
     lb.counter += pkt.counter;
-    if let Payload::Lanes(v) = &pkt.payload {
-        match &mut lb.acc {
-            Some(acc) => crate::switch::alu::sat_accumulate(acc, v),
-            None => lb.acc = Some(v.to_vec()),
-        }
-    }
+    crate::switch::alu::fold_payload(&mut lb.acc, pkt.payload);
     if let Some((sw, port)) = pkt.collision {
         *lb.restore.entry(sw).or_insert(0) |= 1u64 << port;
     }

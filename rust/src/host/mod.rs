@@ -11,7 +11,7 @@ pub mod canary_host;
 pub mod ring;
 pub mod static_host;
 
-use crate::sim::{Ctx, NodeId};
+use crate::sim::{Ctx, NodeId, PacketId};
 use crate::traffic::{engine, TrafficHost};
 use crate::util::rng::Rng;
 
@@ -72,29 +72,34 @@ pub fn decode_timer(t: u64) -> (u8, u32, u32, u8) {
     )
 }
 
-/// Packet entry point.
+/// Packet entry point. Hosts terminate every packet they receive, so
+/// each protocol handler takes the packet out of the arena itself
+/// (mismatched strays are freed here).
 pub fn handle_packet(
     h: &mut HostState,
     ctx: &mut Ctx,
     _in_port: u16,
-    pkt: crate::sim::Packet,
+    pid: PacketId,
 ) {
     use crate::sim::packet::PacketKind as K;
-    match (&mut h.proto, pkt.kind) {
-        (Proto::Canary(ch), _) => canary_host::on_packet(h.id, ch, &mut h.rng, ctx, pkt),
-        (Proto::Static(sh), K::StaticBroadcast) => {
-            static_host::on_broadcast(h.id, sh, ctx, pkt)
+    let kind = ctx.pkt(pid).kind;
+    match (&mut h.proto, kind) {
+        (Proto::Canary(ch), _) => {
+            canary_host::on_packet(h.id, ch, &mut h.rng, ctx, pid)
         }
-        (Proto::Ring(rh), K::Ring) => ring::on_packet(h.id, rh, ctx, pkt),
+        (Proto::Static(sh), K::StaticBroadcast) => {
+            static_host::on_broadcast(h.id, sh, ctx, pid)
+        }
+        (Proto::Ring(rh), K::Ring) => ring::on_packet(h.id, rh, ctx, pid),
         (
             Proto::Background(bg),
             K::Background | K::TransportAck | K::TransportCnp,
         ) => {
             // sink: account the delivery toward its flow's completion;
             // ACK/CNP control frames feed the reactive transport
-            engine::on_packet(h.id, bg, ctx, pkt)
+            engine::on_packet(h.id, bg, ctx, pid)
         }
-        _ => {} // stray packet for an idle / mismatched host: drop
+        _ => ctx.free(pid), // stray packet for an idle/mismatched host
     }
 }
 

@@ -10,7 +10,7 @@
 //! chunk serialization time whenever `chunk_time >= hop_latency`.
 
 use crate::sim::packet::{Packet, PacketKind};
-use crate::sim::{Ctx, NodeId};
+use crate::sim::{Ctx, NodeId, PacketId};
 
 /// Ring protocol state for one participating host.
 pub struct RingHost {
@@ -85,7 +85,8 @@ fn send_packet(
     ctx.send(0, pkt);
 }
 
-pub fn on_packet(me: NodeId, rh: &mut RingHost, ctx: &mut Ctx, pkt: Packet) {
+pub fn on_packet(me: NodeId, rh: &mut RingHost, ctx: &mut Ctx, pid: PacketId) {
+    let pkt = ctx.take(pid);
     let step = pkt.meta as u32;
     if step >= rh.total_steps || rh.finished {
         return;

@@ -4,7 +4,7 @@
 //! do.)
 
 use crate::sim::packet::{Packet, PacketKind, Payload};
-use crate::sim::{Ctx, NodeId};
+use crate::sim::{Ctx, NodeId, PacketId};
 use crate::util::rng::Rng;
 
 use super::{encode_timer, TIMER_STREAM};
@@ -98,8 +98,9 @@ pub fn on_broadcast(
     me: NodeId,
     sh: &mut StaticHost,
     ctx: &mut Ctx,
-    pkt: Packet,
+    pid: PacketId,
 ) {
+    let pkt = ctx.take(pid);
     let idx = pkt.block;
     if idx >= sh.total_blocks || sh.done[idx as usize] {
         return;

@@ -36,7 +36,7 @@ USAGE:
                [--transport none|dcqcn|swift] [--ecn-kmin B] [--ecn-kmax B]
                [--timeout-us T] [--lb adaptive|ecmp|minqueue|flowlet]
                [--topo paper|small|tiny[3]] [--tiers 2|3] [--oversub A:B]
-               [--topo-json FILE] [--values]
+               [--topo-json FILE] [--values] [--fingerprint]
   canary train [--preset tiny|base] [--workers N] [--steps N] [--lr F]
                [--algo ...] [--comm-every N] [--seed S]
   canary mem   [--timeout-us T] [--diameter D]
@@ -318,6 +318,17 @@ fn cmd_run(args: &Args) -> Result<()> {
         exp.net.events_processed,
         100.0 * average_network_utilization(&exp.net, exp.net.now)
     );
+    println!("{}", canary::report::engine_summary(&exp.net.metrics));
+    if args.flag("fingerprint") {
+        // bit-exact digest of the run's outcome (CI `determinism` job:
+        // two seeded runs must print the same line)
+        println!(
+            "fingerprint: {:016x}",
+            exp.net
+                .metrics
+                .fingerprint(exp.net.now, exp.net.events_processed)
+        );
+    }
     println!(
         "collisions: {}  stragglers: {}  restorations: {}  drops(bg): {}  \
          ecn marks: {}",
@@ -443,7 +454,7 @@ fn main() -> Result<()> {
             "transport", "ecn-kmin", "ecn-kmax", "timeout-us", "lb",
             "topo", "tiers", "oversub", "topo-json", "values", "preset",
             "workers", "steps", "lr", "comm-every", "diameter", "window",
-            "debug-links",
+            "debug-links", "fingerprint",
         ],
     )?;
     match args.positional.first().map(|s| s.as_str()) {

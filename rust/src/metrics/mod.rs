@@ -140,6 +140,37 @@ impl FlowStats {
     }
 }
 
+/// Engine-throughput numbers for the run (filled in by
+/// `Network::run`/`run_all` when a run segment ends). `wall_secs` is
+/// host wall-clock measurement — the only non-deterministic field in
+/// all of [`Metrics`]; it never feeds back into the simulation and is
+/// excluded from [`Metrics::fingerprint`].
+#[derive(Clone, Debug, Default)]
+pub struct EngineStats {
+    /// Events dispatched (mirror of `Network::events_processed`).
+    pub events: u64,
+    /// Wall-clock seconds spent in the dispatch loop (accumulated over
+    /// `run`/`run_all` segments).
+    pub wall_secs: f64,
+    /// Peak simultaneously-live packets in the arena.
+    pub peak_live_packets: u64,
+    /// Arena slab size — equals the peak, since freed slots recycle.
+    pub arena_slots: u64,
+    /// Packet allocations served (slab growth + free-list reuse).
+    pub arena_allocs: u64,
+}
+
+impl EngineStats {
+    /// Events per wall-clock second (0 when nothing ran).
+    pub fn events_per_sec(&self) -> f64 {
+        if self.wall_secs <= 0.0 {
+            0.0
+        } else {
+            self.events as f64 / self.wall_secs
+        }
+    }
+}
+
 /// Counters accumulated during a run.
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
@@ -182,6 +213,8 @@ pub struct Metrics {
     pub descriptor_residency_ps: u64,
     /// Background-flow lifecycle tracking (traffic engine).
     pub flows: FlowStats,
+    /// Engine throughput / packet-arena accounting.
+    pub engine: EngineStats,
 }
 
 impl Metrics {
@@ -196,6 +229,64 @@ impl Metrics {
         self.descriptors_freed += 1;
         self.descriptors_live = self.descriptors_live.saturating_sub(1);
         self.descriptor_residency_ps += residency;
+    }
+
+    /// One 64-bit digest of everything a run's outcome hangs on: event
+    /// and delivery counts, every drop/protocol counter, the flow
+    /// lifecycle totals and each recorded FCT sample, plus the
+    /// deterministic arena peaks. Two seeded runs of the same scenario
+    /// must produce the same fingerprint bit for bit — the CI
+    /// `determinism` job and `tests/scheduler.rs` pin exactly this
+    /// (`--fingerprint` on the CLI prints it). Wall-clock fields are
+    /// excluded by construction.
+    pub fn fingerprint(&self, now: Time, events: u64) -> u64 {
+        let mut h: u64 = 0x9E37_79B9_7F4A_7C15;
+        let mut mix = |x: u64| {
+            let mut s = h ^ x.wrapping_mul(0xA24B_AED4_963E_E407);
+            h = crate::util::rng::splitmix64(&mut s);
+        };
+        mix(events);
+        mix(now);
+        mix(self.pkts_delivered);
+        for &k in &self.pkts_by_kind {
+            mix(k);
+        }
+        mix(self.drops_overflow);
+        mix(self.ecn_marks);
+        mix(self.drops_link_down);
+        mix(self.drops_injected);
+        mix(self.stragglers);
+        mix(self.collisions);
+        mix(self.restorations);
+        mix(self.retrans_requests);
+        mix(self.failures);
+        mix(self.fallbacks);
+        mix(self.switch_failures);
+        mix(self.descriptors_allocated);
+        mix(self.descriptors_freed);
+        mix(self.descriptor_high_water);
+        mix(self.descriptor_residency_ps);
+        let f = &self.flows;
+        mix(f.started);
+        mix(f.completed);
+        mix(f.offered_bytes);
+        mix(f.delivered_bytes);
+        mix(f.ecn_delivered);
+        mix(f.cnps_sent);
+        mix(f.cnps_received);
+        mix(f.acks_received);
+        mix(f.retrans_pkts);
+        mix(f.dup_pkts);
+        mix(f.dup_bytes);
+        mix(f.rto_fired);
+        mix(f.abandoned);
+        for &fct in &f.fct_ps {
+            mix(fct);
+        }
+        mix(self.engine.peak_live_packets);
+        mix(self.engine.arena_slots);
+        mix(self.engine.arena_allocs);
+        h
     }
 }
 
@@ -278,6 +369,43 @@ mod tests {
         // but otherwise ignored
         f.on_delivery(99, 1000, 10);
         assert_eq!(f.completed, 2);
+    }
+
+    #[test]
+    fn fingerprint_is_stable_and_sensitive() {
+        let a = Metrics {
+            pkts_delivered: 10,
+            flows: FlowStats {
+                fct_ps: vec![1, 2, 3],
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let mut b = a.clone();
+        assert_eq!(a.fingerprint(99, 5), b.fingerprint(99, 5));
+        // wall-clock must never perturb the digest
+        b.engine.wall_secs = 123.4;
+        assert_eq!(a.fingerprint(99, 5), b.fingerprint(99, 5));
+        b.pkts_delivered += 1;
+        assert_ne!(a.fingerprint(99, 5), b.fingerprint(99, 5));
+        // order of FCT samples matters, not just their multiset
+        let mut c = a.clone();
+        c.flows.fct_ps = vec![1, 3, 2];
+        assert_ne!(a.fingerprint(99, 5), c.fingerprint(99, 5));
+        // now and event count feed the digest too
+        assert_ne!(a.fingerprint(99, 5), a.fingerprint(100, 5));
+        assert_ne!(a.fingerprint(99, 5), a.fingerprint(99, 6));
+    }
+
+    #[test]
+    fn engine_stats_throughput() {
+        assert_eq!(EngineStats::default().events_per_sec(), 0.0);
+        let e = EngineStats {
+            events: 1_000_000,
+            wall_secs: 0.5,
+            ..Default::default()
+        };
+        assert!((e.events_per_sec() - 2_000_000.0).abs() < 1e-6);
     }
 
     #[test]

@@ -128,9 +128,43 @@ pub fn flow_summary(f: &crate::metrics::FlowStats) -> String {
     line
 }
 
+/// One-line engine-throughput summary (events/sec over the dispatch
+/// loop's wall time, arena peaks) — the numbers the `figures scale`
+/// sweep records per cell and `scripts/check_bench.py` gates on.
+pub fn engine_summary(m: &crate::metrics::Metrics) -> String {
+    let e = &m.engine;
+    format!(
+        "engine: {:.2} M events/s ({} events, {:.3}s wall)  \
+         peak live pkts {}  arena slots {} ({} allocs)",
+        e.events_per_sec() / 1e6,
+        e.events,
+        e.wall_secs,
+        e.peak_live_packets,
+        e.arena_slots,
+        e.arena_allocs,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn engine_summary_reads_sanely() {
+        let m = crate::metrics::Metrics {
+            engine: crate::metrics::EngineStats {
+                events: 4_000_000,
+                wall_secs: 2.0,
+                peak_live_packets: 1234,
+                arena_slots: 1234,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let line = engine_summary(&m);
+        assert!(line.contains("2.00 M events/s"), "{line}");
+        assert!(line.contains("peak live pkts 1234"), "{line}");
+    }
 
     #[test]
     fn csv_roundtrip() {

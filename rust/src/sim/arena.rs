@@ -1,0 +1,220 @@
+//! Generational packet arena: slab storage + free list for every
+//! in-flight [`Packet`], so the event hot path never touches the
+//! allocator (EXPERIMENTS.md §Perf).
+//!
+//! Packets used to ride the event heap as `Box<Packet>` — one
+//! malloc/free per link hop, the second-largest cost in the event loop
+//! after the heap itself. Now the simulator core owns all live packets
+//! in one `Vec` of slots; events and port queues carry a copyable
+//! 8-byte [`PacketId`] and the arena recycles freed slots through a
+//! free list, so steady-state forwarding performs zero heap
+//! allocations (payload lanes, when carried, keep their own box and
+//! move with the packet).
+//!
+//! Ids are **generational**: each slot counts how many times it has
+//! been reused, and an id is only valid while its generation matches
+//! the slot's. A stale id (kept across a free, e.g. by a buggy handler
+//! that both forwards and frees) can therefore never alias the
+//! unrelated packet that now occupies the slot — `get`/`try_take`
+//! return `None`, the panicking accessors abort loudly
+//! (`tests/scheduler.rs` pins the rejection).
+
+use super::packet::Packet;
+
+/// Handle to a live packet in the [`PacketArena`]. Small and `Copy`:
+/// this is what `Event::Arrive` and the link FIFOs carry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PacketId {
+    index: u32,
+    generation: u32,
+}
+
+struct Slot {
+    generation: u32,
+    packet: Option<Packet>,
+}
+
+/// Slab of all in-flight packets, with generational reuse.
+#[derive(Default)]
+pub struct PacketArena {
+    slots: Vec<Slot>,
+    free: Vec<u32>,
+    live: u32,
+    peak_live: u32,
+    allocs: u64,
+}
+
+impl PacketArena {
+    pub fn new() -> PacketArena {
+        PacketArena::default()
+    }
+
+    /// Store `packet`, reusing a freed slot when one exists (steady
+    /// state: the free list covers every alloc, so the slab never
+    /// grows past the peak number of simultaneously live packets).
+    pub fn alloc(&mut self, packet: Packet) -> PacketId {
+        self.allocs += 1;
+        self.live += 1;
+        self.peak_live = self.peak_live.max(self.live);
+        match self.free.pop() {
+            Some(index) => {
+                let slot = &mut self.slots[index as usize];
+                debug_assert!(slot.packet.is_none());
+                slot.packet = Some(packet);
+                PacketId {
+                    index,
+                    generation: slot.generation,
+                }
+            }
+            None => {
+                let index = self.slots.len() as u32;
+                self.slots.push(Slot {
+                    generation: 0,
+                    packet: Some(packet),
+                });
+                PacketId {
+                    index,
+                    generation: 0,
+                }
+            }
+        }
+    }
+
+    /// Shared access; `None` if `id` is stale (freed slot or recycled
+    /// generation).
+    pub fn get(&self, id: PacketId) -> Option<&Packet> {
+        let slot = self.slots.get(id.index as usize)?;
+        if slot.generation != id.generation {
+            return None;
+        }
+        slot.packet.as_ref()
+    }
+
+    /// Mutable access; `None` if `id` is stale.
+    pub fn get_mut(&mut self, id: PacketId) -> Option<&mut Packet> {
+        let slot = self.slots.get_mut(id.index as usize)?;
+        if slot.generation != id.generation {
+            return None;
+        }
+        slot.packet.as_mut()
+    }
+
+    /// Move the packet out and retire the slot (its generation bumps,
+    /// so `id` — and any copy of it — is dead from here on).
+    pub fn try_take(&mut self, id: PacketId) -> Option<Packet> {
+        let slot = self.slots.get_mut(id.index as usize)?;
+        if slot.generation != id.generation {
+            return None;
+        }
+        let packet = slot.packet.take()?;
+        slot.generation = slot.generation.wrapping_add(1);
+        self.free.push(id.index);
+        self.live -= 1;
+        Some(packet)
+    }
+
+    /// Like [`try_take`](Self::try_take) but treats a stale id as the
+    /// engine bug it is.
+    pub fn take(&mut self, id: PacketId) -> Packet {
+        self.try_take(id)
+            .unwrap_or_else(|| panic!("stale {id:?} taken from arena"))
+    }
+
+    /// Drop the packet behind `id` (loss paths: dead links, policer,
+    /// fault injection).
+    pub fn free(&mut self, id: PacketId) {
+        let p = self.try_take(id);
+        debug_assert!(p.is_some(), "stale {id:?} freed");
+        drop(p);
+    }
+
+    /// Packets currently in flight (events + port queues).
+    pub fn live(&self) -> u32 {
+        self.live
+    }
+
+    /// High-water mark of simultaneously live packets.
+    pub fn peak_live(&self) -> u32 {
+        self.peak_live
+    }
+
+    /// Slots ever created — the arena's memory footprint, equal to
+    /// [`peak_live`](Self::peak_live) by construction (the free list
+    /// absorbs all churn).
+    pub fn slot_count(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total allocations served (slab growth + free-list reuse).
+    pub fn allocs(&self) -> u64 {
+        self.allocs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::packet::PacketKind;
+
+    fn pkt(dst: u32) -> Packet {
+        Packet::data(PacketKind::Background, 0, dst)
+    }
+
+    #[test]
+    fn alloc_take_roundtrip() {
+        let mut a = PacketArena::new();
+        let id = a.alloc(pkt(7));
+        assert_eq!(a.live(), 1);
+        assert_eq!(a.get(id).unwrap().dst, 7);
+        let p = a.take(id);
+        assert_eq!(p.dst, 7);
+        assert_eq!(a.live(), 0);
+    }
+
+    #[test]
+    fn slots_recycle_through_the_free_list() {
+        let mut a = PacketArena::new();
+        for i in 0..100 {
+            let id = a.alloc(pkt(i));
+            a.free(id);
+        }
+        assert_eq!(a.slot_count(), 1, "one slot serves serial churn");
+        assert_eq!(a.peak_live(), 1);
+        assert_eq!(a.allocs(), 100);
+    }
+
+    #[test]
+    fn stale_generation_is_rejected() {
+        let mut a = PacketArena::new();
+        let id = a.alloc(pkt(1));
+        a.free(id);
+        let recycled = a.alloc(pkt(2));
+        assert_eq!(recycled.index, id.index, "slot was recycled");
+        assert!(a.get(id).is_none(), "stale id must not read the new packet");
+        assert!(a.get_mut(id).is_none());
+        assert!(a.try_take(id).is_none());
+        assert_eq!(a.get(recycled).unwrap().dst, 2);
+    }
+
+    #[test]
+    fn peak_tracks_simultaneous_liveness() {
+        let mut a = PacketArena::new();
+        let ids: Vec<PacketId> = (0..5).map(|i| a.alloc(pkt(i))).collect();
+        assert_eq!(a.peak_live(), 5);
+        for id in ids {
+            a.free(id);
+        }
+        assert_eq!(a.live(), 0);
+        assert_eq!(a.peak_live(), 5);
+        assert_eq!(a.slot_count(), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "stale")]
+    fn take_panics_on_double_free() {
+        let mut a = PacketArena::new();
+        let id = a.alloc(pkt(0));
+        a.free(id);
+        a.take(id);
+    }
+}

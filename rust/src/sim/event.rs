@@ -1,22 +1,57 @@
-//! Event heap for the discrete-event engine.
+//! Event scheduler for the discrete-event engine: a hierarchical
+//! calendar queue (timing wheel + overflow heap).
 //!
-//! Events are ordered by (time, sequence). The sequence number makes the
-//! order of simultaneous events deterministic (insertion order), which
-//! keeps whole runs bit-reproducible from the seed.
+//! Events are ordered by (time, sequence). The sequence number makes
+//! the order of simultaneous events deterministic (insertion order),
+//! which keeps whole runs bit-reproducible from the seed.
+//!
+//! The old implementation was one global `BinaryHeap`: every push/pop
+//! paid an `O(log n)` sift over the whole frontier, and with hundreds
+//! of thousands of in-flight events on the 1024–4096-host fabrics the
+//! sift was the single largest cost in the event loop (EXPERIMENTS.md
+//! §Perf). The calendar queue exploits what a network simulator knows
+//! about its own future: almost every scheduled event lands within a
+//! few link-hops of *now*. Time is bucketed into `2^SLOT_SHIFT` ps
+//! slots (~65.5 ns — about one MTU serialization at 100 Gbps) across a
+//! `WHEEL_SLOTS`-wide window (~268 µs); a push into the window is an
+//! O(1) `Vec` append, and only the handful of events sharing the
+//! *current* slot ever enter a comparison-ordered heap. Far-future
+//! events (multi-ms retransmission timers) wait in an overflow heap
+//! and migrate into the wheel as the window slides over them.
+//!
+//! Determinism argument: every entry carries the same
+//! `(time << 64) | seq` key the old heap ordered by. The wheel only
+//! partitions entries by time slot — all entries of slot `s` are
+//! dumped into the `current` heap before any of them pops, pushes into
+//! the live slot go straight to `current`, and the overflow heap is
+//! drained into the window *ahead* of the slots it covers — so pops
+//! are globally key-ordered, exactly like the reference heap
+//! (`tests/scheduler.rs` pins the equivalence on random streams with
+//! duplicate timestamps; the seeded-run fingerprint pin and the CI
+//! `determinism` job hold the end-to-end guarantee).
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
-use super::packet::Packet;
+use super::arena::PacketId;
 use super::Time;
+
+/// Wheel slot width: `2^16` ps = 65.536 ns.
+const SLOT_SHIFT: u32 = 16;
+/// Wheel width in slots (must be a power of two): 4096 slots ≈ 268 µs
+/// of look-ahead — beyond every per-hop delay and the common protocol
+/// timers; only multi-ms timers take the overflow path.
+const WHEEL_SLOTS: u64 = 1 << 12;
+const WHEEL_MASK: u64 = WHEEL_SLOTS - 1;
 
 /// All event kinds the engine dispatches.
 #[derive(Debug)]
 pub enum Event {
     /// Packet finishes propagation and arrives at `links[link].to`.
-    /// Boxed: keeps heap entries small — heap sift cost dominates the
-    /// event loop otherwise (EXPERIMENTS.md §Perf).
-    Arrive { link: usize, packet: Box<Packet> },
+    /// Carries a copyable arena id, not the packet: scheduler entries
+    /// stay 32 bytes and the hot path never touches the allocator
+    /// (`sim/arena.rs`, EXPERIMENTS.md §Perf).
+    Arrive { link: usize, packet: PacketId },
     /// Sender port of `links[link]` finished serializing; pop next.
     TxDone { link: usize },
     /// Canary descriptor timeout (switch, table slot, generation).
@@ -31,10 +66,16 @@ pub enum Event {
 
 struct HeapEntry {
     /// `(time << 64) | seq` — one u128 comparison per sift step instead
-    /// of two u64 compares (the heap dominates the event loop; see
-    /// EXPERIMENTS.md §Perf).
+    /// of two u64 compares.
     key: u128,
     event: Event,
+}
+
+impl HeapEntry {
+    #[inline]
+    fn slot(&self) -> u64 {
+        ((self.key >> 64) as u64) >> SLOT_SHIFT
+    }
 }
 
 impl PartialEq for HeapEntry {
@@ -55,11 +96,43 @@ impl Ord for HeapEntry {
     }
 }
 
-/// Deterministic min-heap of timestamped events.
-#[derive(Default)]
+/// Deterministic min-priority scheduler of timestamped events
+/// (calendar queue; same push/pop surface as the old global heap).
 pub struct EventQueue {
-    heap: BinaryHeap<HeapEntry>,
+    /// Entries of the slot the clock currently occupies (plus any
+    /// defensively accepted past-time pushes) — the only entries that
+    /// ever pay heap sift cost.
+    current: BinaryHeap<HeapEntry>,
+    /// `WHEEL_SLOTS` buckets of future entries within the window;
+    /// bucket `s & WHEEL_MASK` holds exactly the entries of absolute
+    /// slot `s` for the one `s` inside `(cur_slot, cur_slot + WHEEL_SLOTS)`.
+    wheel: Vec<Vec<HeapEntry>>,
+    /// One bit per bucket: non-empty. Advancing the clock scans words,
+    /// not buckets.
+    occupied: Vec<u64>,
+    /// Entries in the wheel (not counting `current`/`overflow`).
+    wheel_len: usize,
+    /// Entries at or beyond the window horizon.
+    overflow: BinaryHeap<HeapEntry>,
+    /// Absolute slot index of the `current` epoch.
+    cur_slot: u64,
     next_seq: u64,
+    len: usize,
+}
+
+impl Default for EventQueue {
+    fn default() -> Self {
+        EventQueue {
+            current: BinaryHeap::new(),
+            wheel: (0..WHEEL_SLOTS).map(|_| Vec::new()).collect(),
+            occupied: vec![0u64; (WHEEL_SLOTS / 64) as usize],
+            wheel_len: 0,
+            overflow: BinaryHeap::new(),
+            cur_slot: 0,
+            next_seq: 0,
+            len: 0,
+        }
+    }
 }
 
 impl EventQueue {
@@ -70,22 +143,124 @@ impl EventQueue {
     pub fn push(&mut self, time: Time, event: Event) {
         let seq = self.next_seq;
         self.next_seq += 1;
-        let key = ((time as u128) << 64) | seq as u128;
-        self.heap.push(HeapEntry { key, event });
+        let entry = HeapEntry {
+            key: ((time as u128) << 64) | seq as u128,
+            event,
+        };
+        self.len += 1;
+        let slot = time >> SLOT_SHIFT;
+        if slot <= self.cur_slot {
+            // the live slot (or, defensively, the past): straight into
+            // the ordered heap so it pops before everything later
+            self.current.push(entry);
+        } else if slot < self.cur_slot + WHEEL_SLOTS {
+            self.bucket_push(slot, entry);
+        } else {
+            self.overflow.push(entry);
+        }
     }
 
     pub fn pop(&mut self) -> Option<(Time, Event)> {
-        self.heap
-            .pop()
-            .map(|e| (((e.key >> 64) as Time), e.event))
+        loop {
+            if let Some(e) = self.current.pop() {
+                self.len -= 1;
+                return Some(((e.key >> 64) as Time, e.event));
+            }
+            // `current` is dry: advance the clock to the next populated
+            // slot. Window invariant (re-established by `advance_to`):
+            // overflow entries are all at/beyond the horizon, so the
+            // wheel — when non-empty — always holds the earliest event.
+            if self.wheel_len > 0 {
+                let slot = self.next_wheel_slot();
+                self.advance_to(slot);
+            } else if let Some(top) = self.overflow.peek() {
+                let slot = top.slot();
+                self.advance_to(slot);
+            } else {
+                return None;
+            }
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len == 0
+    }
+
+    #[inline]
+    fn bucket_push(&mut self, slot: u64, entry: HeapEntry) {
+        let b = (slot & WHEEL_MASK) as usize;
+        if self.wheel[b].is_empty() {
+            self.occupied[b >> 6] |= 1u64 << (b & 63);
+        }
+        self.wheel[b].push(entry);
+        self.wheel_len += 1;
+    }
+
+    /// Move the clock to `slot`: dump that bucket into `current`, then
+    /// slide the window — overflow entries now inside the horizon
+    /// migrate to their buckets (each entry migrates at most once).
+    fn advance_to(&mut self, slot: u64) {
+        debug_assert!(slot > self.cur_slot);
+        self.cur_slot = slot;
+        let b = (slot & WHEEL_MASK) as usize;
+        if !self.wheel[b].is_empty() {
+            self.wheel_len -= self.wheel[b].len();
+            self.occupied[b >> 6] &= !(1u64 << (b & 63));
+            let mut bucket = std::mem::take(&mut self.wheel[b]);
+            self.current.extend(bucket.drain(..));
+            // hand the emptied allocation back for reuse
+            self.wheel[b] = bucket;
+        }
+        let horizon = self.cur_slot + WHEEL_SLOTS;
+        while let Some(top) = self.overflow.peek() {
+            let s = top.slot();
+            if s >= horizon {
+                break;
+            }
+            let entry = self.overflow.pop().unwrap();
+            if s <= self.cur_slot {
+                self.current.push(entry);
+            } else {
+                self.bucket_push(s, entry);
+            }
+        }
+    }
+
+    /// First populated absolute slot after `cur_slot` (caller
+    /// guarantees `wheel_len > 0`), via the occupancy bitmap.
+    fn next_wheel_slot(&self) -> u64 {
+        let words = self.occupied.len();
+        let start = ((self.cur_slot + 1) & WHEEL_MASK) as usize;
+        let (w0, bit0) = (start >> 6, start & 63);
+        let mut found = None;
+        let masked = self.occupied[w0] & (!0u64 << bit0);
+        if masked != 0 {
+            found = Some((w0 << 6) + masked.trailing_zeros() as usize);
+        } else {
+            for i in 1..=words {
+                let w = (w0 + i) % words;
+                let m = if w == w0 {
+                    // wrapped all the way: the bits below `bit0`
+                    self.occupied[w] & !(!0u64 << bit0)
+                } else {
+                    self.occupied[w]
+                };
+                if m != 0 {
+                    found = Some((w << 6) + m.trailing_zeros() as usize);
+                    break;
+                }
+            }
+        }
+        let residue =
+            found.expect("wheel_len > 0 with empty occupancy bitmap") as u64;
+        // map the bucket residue back to the one absolute slot it can
+        // hold, in (cur_slot, cur_slot + WHEEL_SLOTS)
+        let next = self.cur_slot + 1;
+        next + ((residue + WHEEL_SLOTS - (next & WHEEL_MASK)) & WHEEL_MASK)
     }
 }
 
@@ -125,5 +300,68 @@ mod tests {
         assert_eq!(q.len(), 1);
         q.pop();
         assert!(q.is_empty());
+    }
+
+    /// Entries across all three tiers (current slot, wheel window,
+    /// overflow) interleave into one key-ordered stream.
+    #[test]
+    fn wheel_and_overflow_interleave_in_order() {
+        let mut q = EventQueue::new();
+        let horizon = WHEEL_SLOTS << SLOT_SHIFT;
+        let times = [
+            0,                   // current slot
+            1,                   // current slot, later seq
+            1 << SLOT_SHIFT,     // first wheel bucket
+            horizon - 1,         // last wheel bucket
+            horizon,             // first overflow entry
+            horizon * 7 + 12345, // deep overflow
+        ];
+        // push in reverse so insertion order disagrees with time order
+        for (i, &t) in times.iter().enumerate().rev() {
+            q.push(t, Event::TxDone { link: i });
+        }
+        let popped: Vec<Time> =
+            std::iter::from_fn(|| q.pop().map(|(t, _)| t)).collect();
+        assert_eq!(popped, times);
+    }
+
+    /// Pushing at (or before) the time currently being popped still
+    /// orders after already-popped entries and by sequence among ties.
+    #[test]
+    fn push_at_now_lands_in_the_live_slot() {
+        let mut q = EventQueue::new();
+        let far = 100 << SLOT_SHIFT;
+        q.push(far, Event::TxDone { link: 0 });
+        assert_eq!(q.pop().unwrap().0, far); // clock advanced to `far`
+        q.push(far, Event::TxDone { link: 1 }); // same slot, zero delay
+        q.push(far + 2, Event::TxDone { link: 2 });
+        q.push(far, Event::TxDone { link: 3 });
+        let order: Vec<usize> = std::iter::from_fn(|| {
+            q.pop().map(|(_, e)| match e {
+                Event::TxDone { link } => link,
+                _ => unreachable!(),
+            })
+        })
+        .collect();
+        assert_eq!(order, vec![1, 3, 2]);
+    }
+
+    /// Overflow entries migrate into the window as the clock slides,
+    /// without ever overtaking wheel entries.
+    #[test]
+    fn overflow_migrates_behind_the_window() {
+        let mut q = EventQueue::new();
+        let horizon = WHEEL_SLOTS << SLOT_SHIFT;
+        // wheel entry early, overflow entries that later join the wheel
+        q.push(5, Event::TxDone { link: 0 });
+        q.push(horizon + 5, Event::TxDone { link: 1 });
+        q.push(2 * horizon + 5, Event::TxDone { link: 2 });
+        assert_eq!(q.pop().unwrap().0, 5);
+        // after the first advance past `horizon`, entry 1 is in the
+        // window; pushing a nearer event must still pop first
+        q.push(horizon + 1, Event::TxDone { link: 3 });
+        let order: Vec<Time> =
+            std::iter::from_fn(|| q.pop().map(|(t, _)| t)).collect();
+        assert_eq!(order, vec![horizon + 1, horizon + 5, 2 * horizon + 5]);
     }
 }

@@ -6,10 +6,12 @@
 //! Time is in integer **picoseconds** (1 byte at 100 Gbps = 80 ps), so all
 //! scheduling is exact and runs are bit-reproducible.
 
+pub mod arena;
 pub mod event;
 pub mod network;
 pub mod packet;
 
+pub use arena::{PacketArena, PacketId};
 pub use event::{Event, EventQueue};
 pub use network::{Ctx, Link, LinkId, Network, Node, NodeBody, NodeId};
 pub use packet::{Packet, PacketKind, Payload};

@@ -1,10 +1,15 @@
 //! Network state and the discrete-event dispatch loop.
 //!
-//! The `Network` owns all nodes, directed links, the event heap, the
-//! fault plan and the job table. Protocol logic lives in `crate::switch`
-//! and `crate::host`; they receive a [`Ctx`] that exposes exactly the
-//! mutable state a node may touch (its ports, the event queue, metrics,
-//! the RNG and its job entry) so the borrow structure stays simple.
+//! The `Network` owns all nodes, directed links, the calendar-queue
+//! scheduler, the packet arena, the fault plan and the job table.
+//! Protocol logic lives in `crate::switch` and `crate::host`; they
+//! receive a [`Ctx`] that exposes exactly the mutable state a node may
+//! touch (its ports, the event queue, the arena, metrics, the RNG and
+//! its job entry) so the borrow structure stays simple. Delivered
+//! packets are handed to handlers as arena ids ([`PacketId`]); a
+//! handler must consume each id exactly once — [`Ctx::take`] to own
+//! the packet, [`Ctx::forward`] to pass it on zero-copy, or
+//! [`Ctx::free`] to drop it.
 
 use std::collections::VecDeque;
 
@@ -16,6 +21,7 @@ use crate::metrics::Metrics;
 use crate::switch::SwitchState;
 use crate::util::rng::Rng;
 
+use super::arena::{PacketArena, PacketId};
 use super::event::{Event, EventQueue};
 use super::packet::{Packet, PacketKind};
 use super::Time;
@@ -54,7 +60,10 @@ pub struct Link {
     pub queued_bytes: u64,
     /// Single shared FIFO (the paper's switches have one output buffer
     /// per port; classes share it proportionally to their arrivals).
-    queue: VecDeque<Packet>,
+    /// Entries carry the arena id plus the two fields the port logic
+    /// reads per packet (size, class), so serving the queue never
+    /// chases the arena.
+    queue: VecDeque<QueuedPkt>,
     /// Per-class byte accounting (policing, PFC, diagnostics).
     class_bytes: [u64; 2],
     /// True while this link's class-0 backlog exceeds the pause
@@ -68,6 +77,15 @@ pub struct Link {
     pub busy_ps: u64,
     pub bytes_tx: u64,
     pub drops: u64,
+}
+
+/// One port-FIFO entry: the arena id plus the size/class the port
+/// logic needs on every serve.
+#[derive(Clone, Copy, Debug)]
+struct QueuedPkt {
+    id: PacketId,
+    bytes: u32,
+    class: u8,
 }
 
 #[inline]
@@ -128,7 +146,7 @@ impl Link {
     fn head_serveable(&self, blocked0: bool) -> bool {
         match self.queue.front() {
             None => false,
-            Some(p) => !(blocked0 && class_of(p) == 0),
+            Some(q) => !(blocked0 && q.class == 0),
         }
     }
 
@@ -179,6 +197,7 @@ pub struct Ctx<'a> {
     pub ports: &'a [LinkId],
     pub links: &'a mut [Link],
     pub queue: &'a mut EventQueue,
+    pub arena: &'a mut PacketArena,
     pub rng: &'a mut Rng,
     pub metrics: &'a mut Metrics,
     pub jobs: &'a mut [JobRuntime],
@@ -188,20 +207,47 @@ pub struct Ctx<'a> {
 }
 
 impl<'a> Ctx<'a> {
-    /// Enqueue `packet` on this node's outgoing `port`.
+    /// Enqueue a freshly built `packet` on this node's outgoing `port`
+    /// (allocates an arena slot — recycled from the free list in
+    /// steady state).
     pub fn send(&mut self, port: u16, packet: Packet) {
+        let id = self.arena.alloc(packet);
+        self.forward(port, id);
+    }
+
+    /// Enqueue the live packet `id` on `port` without moving it out of
+    /// the arena — the zero-copy path for pure forwarding hops.
+    pub fn forward(&mut self, port: u16, id: PacketId) {
         let link_id = self.ports[port as usize];
         enqueue_on_link(
             self.links,
             self.queue,
+            self.arena,
             self.metrics,
             self.now,
             link_id,
-            packet,
+            id,
             self.node_paused,
             self.cfg,
             self.rng,
         );
+    }
+
+    /// Read a delivered packet's fields in place.
+    pub fn pkt(&self, id: PacketId) -> &Packet {
+        self.arena
+            .get(id)
+            .unwrap_or_else(|| panic!("stale {id:?} read by a handler"))
+    }
+
+    /// Take ownership of a delivered packet (frees its arena slot).
+    pub fn take(&mut self, id: PacketId) -> Packet {
+        self.arena.take(id)
+    }
+
+    /// Drop a delivered packet (frees its arena slot).
+    pub fn free(&mut self, id: PacketId) {
+        self.arena.free(id);
     }
 
     /// Class-0 backlog on `port` (host NIC pacing input).
@@ -274,15 +320,18 @@ impl<'a> Ctx<'a> {
     }
 }
 
-/// Shared enqueue logic (also used by the dispatch loop itself).
+/// Shared enqueue logic (also used by the dispatch loop itself). Takes
+/// ownership of the arena entry `id`: it either joins the port FIFO or
+/// is freed on a drop path.
 #[allow(clippy::too_many_arguments)]
 fn enqueue_on_link(
     links: &mut [Link],
     queue: &mut EventQueue,
+    arena: &mut PacketArena,
     metrics: &mut Metrics,
     now: Time,
     link_id: LinkId,
-    mut packet: Packet,
+    id: PacketId,
     node_paused: &mut [u32],
     cfg: &SimConfig,
     rng: &mut Rng,
@@ -290,14 +339,19 @@ fn enqueue_on_link(
     let link = &mut links[link_id];
     if !link.alive {
         metrics.drops_link_down += 1;
+        arena.free(id);
         return;
     }
+    let packet = arena
+        .get_mut(id)
+        .unwrap_or_else(|| panic!("stale {id:?} enqueued"));
     let size = packet.wire_bytes as u64;
-    let class = class_of(&packet);
+    let class = class_of(packet);
     // droppable traffic is policed against its class share of the port
     if class == 1 && link.class_bytes[1] + size > link.capacity_bytes {
         link.drops += 1;
         metrics.drops_overflow += 1;
+        arena.free(id);
         return;
     }
     // ECN: RED-style CE marking on the class-1 backlog (reactive
@@ -325,9 +379,14 @@ fn enqueue_on_link(
             metrics.ecn_marks += 1;
         }
     }
+    let entry = QueuedPkt {
+        id,
+        bytes: packet.wire_bytes,
+        class: class as u8,
+    };
     link.queued_bytes += size;
     link.class_bytes[class] += size;
-    link.queue.push_back(packet);
+    link.queue.push_back(entry);
     // lossless backpressure: an over-watermark class-0 backlog on an
     // up-port pauses the up-inputs of the node this port belongs to
     if class == 0
@@ -357,7 +416,7 @@ fn start_tx(
         return;
     }
     link.busy = true;
-    let head_bytes = link.queue.front().unwrap().wire_bytes as u64;
+    let head_bytes = link.queue.front().unwrap().bytes as u64;
     let ser = head_bytes * link.ps_per_byte;
     link.busy_ps += ser;
     queue.push(now + ser, Event::TxDone { link: link_id });
@@ -368,6 +427,8 @@ pub struct Network {
     pub nodes: Vec<Node>,
     pub links: Vec<Link>,
     pub queue: EventQueue,
+    /// Slab of all in-flight packets (`sim/arena.rs`).
+    pub arena: PacketArena,
     pub now: Time,
     pub rng: Rng,
     pub metrics: Metrics,
@@ -387,6 +448,7 @@ impl Network {
             nodes: Vec::new(),
             links: Vec::new(),
             queue: EventQueue::new(),
+            arena: PacketArena::new(),
             now: 0,
             rng,
             metrics: Metrics::default(),
@@ -452,6 +514,7 @@ impl Network {
     /// Run until all allreduce jobs complete, the event queue drains, or
     /// `max_time` is reached. Returns the end time.
     pub fn run(&mut self, max_time: Time) -> Time {
+        let t0 = std::time::Instant::now();
         while let Some((t, ev)) = self.queue.pop() {
             if t > max_time {
                 // put it back and stop
@@ -464,12 +527,14 @@ impl Network {
                 break;
             }
         }
+        self.note_engine_stats(t0.elapsed().as_secs_f64());
         self.now
     }
 
     /// Run every event up to `max_time` without the early job-completion
     /// exit (used by pure-traffic tests).
     pub fn run_all(&mut self, max_time: Time) -> Time {
+        let t0 = std::time::Instant::now();
         while let Some((t, ev)) = self.queue.pop() {
             if t > max_time {
                 self.queue.push(t, ev);
@@ -478,7 +543,21 @@ impl Network {
             }
             self.dispatch(t, ev);
         }
+        self.note_engine_stats(t0.elapsed().as_secs_f64());
         self.now
+    }
+
+    /// Fold this run segment's throughput numbers into the metrics
+    /// (events/sec over accumulated wall time, arena high-water marks).
+    /// Wall time is measurement-only — it never feeds back into the
+    /// simulation, so determinism is untouched.
+    fn note_engine_stats(&mut self, wall_secs: f64) {
+        let e = &mut self.metrics.engine;
+        e.events = self.events_processed;
+        e.wall_secs += wall_secs;
+        e.peak_live_packets = self.arena.peak_live() as u64;
+        e.arena_slots = self.arena.slot_count() as u64;
+        e.arena_allocs = self.arena.allocs();
     }
 
     fn dispatch(&mut self, time: Time, event: Event) {
@@ -486,7 +565,7 @@ impl Network {
         self.events_processed += 1;
         match event {
             Event::TxDone { link } => self.tx_done(link),
-            Event::Arrive { link, packet } => self.deliver(link, *packet),
+            Event::Arrive { link, packet } => self.deliver(link, packet),
             Event::SwitchTimeout {
                 node,
                 slot,
@@ -515,12 +594,12 @@ impl Network {
     fn tx_done(&mut self, link_id: LinkId) {
         let link = &mut self.links[link_id];
         link.busy = false;
-        let packet = link
+        let entry = link
             .queue
             .pop_front()
             .expect("TxDone with empty queue");
-        let class = class_of(&packet);
-        let size = packet.wire_bytes as u64;
+        let class = entry.class as usize;
+        let size = entry.bytes as u64;
         link.queued_bytes -= size;
         link.class_bytes[class] -= size;
         link.bytes_tx += size;
@@ -540,11 +619,12 @@ impl Network {
                 self.now + link.latency_ps,
                 Event::Arrive {
                     link: link_id,
-                    packet: Box::new(packet),
+                    packet: entry.id,
                 },
             );
         } else {
             self.metrics.drops_link_down += 1;
+            self.arena.free(entry.id);
         }
         let link = &self.links[link_id];
         if link.queue_len() > 0 {
@@ -574,29 +654,37 @@ impl Network {
         }
     }
 
-    fn deliver(&mut self, link_id: LinkId, packet: Packet) {
+    fn deliver(&mut self, link_id: LinkId, id: PacketId) {
         let (to, in_port) = {
             let l = &self.links[link_id];
             (l.to, l.to_port)
         };
+        let kind = self
+            .arena
+            .get(id)
+            .unwrap_or_else(|| panic!("stale {id:?} delivered"))
+            .kind;
         // random loss injection on reduction traffic (fault tolerance
         // runs); droppable background/transport frames already have
         // their own loss story (the class-1 policer + RTO recovery)
         if self.faults.loss_prob > 0.0
-            && !packet.kind.droppable()
+            && !kind.droppable()
             && self.rng.chance(self.faults.loss_prob)
         {
             self.metrics.drops_injected += 1;
+            self.arena.free(id);
             return;
         }
         self.metrics.pkts_delivered += 1;
-        self.metrics.pkts_by_kind[packet.kind as usize] += 1;
+        self.metrics.pkts_by_kind[kind as usize] += 1;
+        // the handler owns the arena entry from here: it must take,
+        // forward or free it
         self.with_ctx(to, |body, ctx| match body {
             NodeBody::Switch(sw) => {
-                crate::switch::handle_packet(sw, ctx, in_port, packet)
+                crate::switch::handle_packet(sw, ctx, in_port, id)
             }
             NodeBody::Host(h) => {
-                crate::host::handle_packet(h, ctx, in_port, packet)
+                crate::host::handle_packet(h, ctx, in_port, id)
             }
         });
     }
@@ -612,6 +700,7 @@ impl Network {
             nodes,
             links,
             queue,
+            arena,
             rng,
             metrics,
             jobs,
@@ -627,6 +716,7 @@ impl Network {
             ports: &n.ports,
             links,
             queue,
+            arena,
             rng,
             metrics,
             jobs,

@@ -19,6 +19,24 @@ pub fn sat_accumulate(acc: &mut [i32], x: &[i32]) {
     }
 }
 
+/// Fold an owned packet payload into an optional accumulator: the
+/// first value-carrying contribution *moves* its lanes in (reusing the
+/// box the packet arrived with — no copy on the arena-threaded hot
+/// path), later ones saturating-accumulate. `Payload::None` (size-only
+/// mode) is a no-op. Shared by every aggregation point (Canary
+/// descriptors, static-tree partials, the leader fold).
+pub fn fold_payload(
+    acc: &mut Option<Vec<i32>>,
+    payload: crate::sim::packet::Payload,
+) {
+    if let crate::sim::packet::Payload::Lanes(v) = payload {
+        match acc {
+            Some(a) => sat_accumulate(a, &v),
+            None => *acc = Some(v.into_vec()),
+        }
+    }
+}
+
 /// Saturating fold of packet payload rows (the oracle shape used by the
 /// Python `ref.aggregate_ref`).
 pub fn aggregate_rows(rows: &[&[i32]], lanes: usize) -> Vec<i32> {
@@ -63,6 +81,20 @@ mod tests {
         let mut acc = vec![i32::MAX - 1, i32::MIN + 1, 0];
         sat_accumulate(&mut acc, &[5, -5, 7]);
         assert_eq!(acc, vec![i32::MAX, i32::MIN, 7]);
+    }
+
+    #[test]
+    fn fold_payload_moves_then_accumulates() {
+        use crate::sim::packet::Payload;
+        let mut acc = None;
+        fold_payload(&mut acc, Payload::None);
+        assert!(acc.is_none(), "size-only packets fold to nothing");
+        fold_payload(&mut acc, Payload::Lanes(vec![1, 2].into()));
+        assert_eq!(acc.as_deref(), Some(&[1, 2][..]));
+        fold_payload(&mut acc, Payload::Lanes(vec![10, i32::MAX].into()));
+        assert_eq!(acc.as_deref(), Some(&[11, i32::MAX][..]));
+        fold_payload(&mut acc, Payload::None);
+        assert_eq!(acc.as_deref(), Some(&[11, i32::MAX][..]));
     }
 
     #[test]

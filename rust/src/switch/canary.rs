@@ -7,7 +7,7 @@
 //! dies — recovery is the leader's job, Section 3.3).
 
 use crate::sim::packet::{Packet, PacketKind, Payload};
-use crate::sim::{Ctx, NodeId, Time};
+use crate::sim::{Ctx, NodeId, PacketId, Time};
 use crate::util::rng::splitmix64;
 
 use super::alu;
@@ -99,8 +99,9 @@ pub fn on_reduce(
     sw: &mut SwitchState,
     ctx: &mut Ctx,
     in_port: u16,
-    mut pkt: Packet,
+    pid: PacketId,
 ) {
+    let mut pkt = ctx.take(pid);
     let key = pkt.block_key();
     let slot = sw.canary.slot_of(key) as usize;
     match &mut sw.canary.table[slot] {
@@ -109,10 +110,11 @@ pub fn on_reduce(
             // start the timer, swallow the packet (Section 3.1.1)
             let generation = sw.canary.next_generation;
             sw.canary.next_generation += 1;
-            let acc = match &pkt.payload {
-                Payload::Lanes(v) => Some(v.to_vec()),
-                Payload::None => None,
-            };
+            let mut acc = None;
+            alu::fold_payload(
+                &mut acc,
+                std::mem::replace(&mut pkt.payload, Payload::None),
+            );
             let complete = pkt.counter >= pkt.hosts;
             sw.canary.table[slot] = Some(Descriptor {
                 key,
@@ -211,7 +213,8 @@ fn forward_partial(sw: &mut SwitchState, ctx: &mut Ctx, slot: usize) {
 
 /// Broadcast-phase packet arriving from our parent: fan out to the
 /// recorded children and free the descriptor (Section 3.1.2).
-pub fn on_broadcast(sw: &mut SwitchState, ctx: &mut Ctx, pkt: Packet) {
+pub fn on_broadcast(sw: &mut SwitchState, ctx: &mut Ctx, pid: PacketId) {
+    let pkt = ctx.take(pid);
     let key = pkt.block_key();
     let slot = sw.canary.slot_of(key) as usize;
     match &sw.canary.table[slot] {
@@ -231,7 +234,8 @@ pub fn on_broadcast(sw: &mut SwitchState, ctx: &mut Ctx, pkt: Packet) {
 
 /// Restoration packet addressed to this switch: bootstrap the local
 /// broadcast on the ports the leader tells us (Section 3.2.1).
-pub fn on_restore(sw: &mut SwitchState, ctx: &mut Ctx, pkt: Packet) {
+pub fn on_restore(sw: &mut SwitchState, ctx: &mut Ctx, pid: PacketId) {
+    let pkt = ctx.take(pid);
     ctx.metrics.restorations += 1;
     // also free any descriptor this id may have (partial children were
     // already served by the regular broadcast path)

@@ -22,7 +22,7 @@ pub mod static_tree;
 
 use crate::loadbalance::{select_up, LbState, LoadBalancer};
 use crate::sim::packet::{Packet, PacketKind};
-use crate::sim::{Ctx, NodeId};
+use crate::sim::{Ctx, NodeId, PacketId};
 use crate::topology::{Clos, Hop};
 
 /// Position of the switch in the Clos fabric.
@@ -113,39 +113,52 @@ pub fn route(sw: &mut SwitchState, ctx: &Ctx, pkt: &Packet) -> u16 {
     }
 }
 
-/// Main packet entry point for a switch.
+/// Pick the egress port for the live packet `pid` (see [`route`]).
+pub fn route_id(sw: &mut SwitchState, ctx: &Ctx, pid: PacketId) -> u16 {
+    let pkt = ctx.pkt(pid);
+    route(sw, ctx, pkt)
+}
+
+/// Main packet entry point for a switch. Owns the arena entry `pid`:
+/// transit traffic is forwarded zero-copy, the aggregation dataplanes
+/// take the packet out of the arena when they consume it.
 pub fn handle_packet(
     sw: &mut SwitchState,
     ctx: &mut Ctx,
     in_port: u16,
-    pkt: Packet,
+    pid: PacketId,
 ) {
     if sw.failed {
         ctx.metrics.drops_link_down += 1;
+        ctx.free(pid);
         return;
     }
+    let (kind, bypass, dst) = {
+        let p = ctx.pkt(pid);
+        (p.kind, p.bypass, p.dst)
+    };
     // Bypass-marked packets skip all processing (Section 4.1).
-    if pkt.bypass {
-        let port = route(sw, ctx, &pkt);
-        ctx.send(port, pkt);
+    if bypass {
+        let port = route_id(sw, ctx, pid);
+        ctx.forward(port, pid);
         return;
     }
-    match pkt.kind {
-        PacketKind::CanaryReduce => canary::on_reduce(sw, ctx, in_port, pkt),
-        PacketKind::CanaryBroadcast => canary::on_broadcast(sw, ctx, pkt),
+    match kind {
+        PacketKind::CanaryReduce => canary::on_reduce(sw, ctx, in_port, pid),
+        PacketKind::CanaryBroadcast => canary::on_broadcast(sw, ctx, pid),
         PacketKind::CanaryRestore => {
-            if pkt.dst == sw.id {
-                canary::on_restore(sw, ctx, pkt);
+            if dst == sw.id {
+                canary::on_restore(sw, ctx, pid);
             } else {
-                let port = route(sw, ctx, &pkt);
-                ctx.send(port, pkt);
+                let port = route_id(sw, ctx, pid);
+                ctx.forward(port, pid);
             }
         }
-        PacketKind::StaticReduce => static_tree::on_reduce(sw, ctx, pkt),
+        PacketKind::StaticReduce => static_tree::on_reduce(sw, ctx, pid),
         PacketKind::StaticBroadcast => {
-            static_tree::on_broadcast(sw, ctx, pkt)
+            static_tree::on_broadcast(sw, ctx, pid)
         }
-        // host-to-host traffic: plain forwarding
+        // host-to-host traffic: plain forwarding, zero-copy
         PacketKind::CanaryRetransReq
         | PacketKind::CanaryRetransData
         | PacketKind::CanaryFailure
@@ -154,8 +167,8 @@ pub fn handle_packet(
         | PacketKind::Background
         | PacketKind::TransportAck
         | PacketKind::TransportCnp => {
-            let port = route(sw, ctx, &pkt);
-            ctx.send(port, pkt);
+            let port = route_id(sw, ctx, pid);
+            ctx.forward(port, pid);
         }
     }
 }

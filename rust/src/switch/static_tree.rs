@@ -10,7 +10,7 @@
 use std::collections::HashMap;
 
 use crate::sim::packet::{Packet, PacketKind, Payload};
-use crate::sim::Ctx;
+use crate::sim::{Ctx, PacketId};
 
 use super::alu;
 use super::SwitchState;
@@ -66,14 +66,15 @@ impl StaticState {
 }
 
 /// Reduce-phase packet at an on-tree switch.
-pub fn on_reduce(sw: &mut SwitchState, ctx: &mut Ctx, pkt: Packet) {
-    let Some(role) = role_of(sw, &pkt) else {
+pub fn on_reduce(sw: &mut SwitchState, ctx: &mut Ctx, pid: PacketId) {
+    let Some(role) = role_of(sw, ctx.pkt(pid)) else {
         // not on this tree (e.g. transit spine for a bypassing packet):
-        // plain-forward toward the root
-        let port = super::route(sw, ctx, &pkt);
-        ctx.send(port, pkt);
+        // plain-forward toward the root, zero-copy
+        let port = super::route_id(sw, ctx, pid);
+        ctx.forward(port, pid);
         return;
     };
+    let mut pkt = ctx.take(pid);
     let TreeRole {
         parent_port,
         expected,
@@ -92,12 +93,10 @@ pub fn on_reduce(sw: &mut SwitchState, ctx: &mut Ctx, pkt: Packet) {
     });
     agg.count += 1;
     agg.counter += pkt.counter;
-    if let Payload::Lanes(v) = &pkt.payload {
-        match &mut agg.acc {
-            Some(acc) => alu::sat_accumulate(acc, v),
-            None => agg.acc = Some(v.to_vec()),
-        }
-    }
+    alu::fold_payload(
+        &mut agg.acc,
+        std::mem::replace(&mut pkt.payload, Payload::None),
+    );
     if agg.count < expected {
         return; // swallow, keep waiting (static trees know their fan-in)
     }
@@ -146,13 +145,14 @@ pub fn on_reduce(sw: &mut SwitchState, ctx: &mut Ctx, pkt: Packet) {
 /// configured reverse edges (interior switches reach their subtree
 /// heads, leaves reach their hosts). For a reduce, only the clone on
 /// `value_port` keeps the payload; the rest shrink to releases.
-pub fn on_broadcast(sw: &mut SwitchState, ctx: &mut Ctx, pkt: Packet) {
-    let Some(role) = role_of(sw, &pkt) else {
-        // not configured for this tree: forward toward dst
-        let port = super::route(sw, ctx, &pkt);
-        ctx.send(port, pkt);
+pub fn on_broadcast(sw: &mut SwitchState, ctx: &mut Ctx, pid: PacketId) {
+    let Some(role) = role_of(sw, ctx.pkt(pid)) else {
+        // not configured for this tree: forward toward dst, zero-copy
+        let port = super::route_id(sw, ctx, pid);
+        ctx.forward(port, pid);
         return;
     };
+    let pkt = ctx.take(pid);
     let value_port = role.value_port;
     for port in role.child_ports {
         let mut down = pkt.clone();

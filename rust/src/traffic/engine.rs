@@ -12,7 +12,7 @@
 use std::collections::{HashMap, VecDeque};
 
 use crate::sim::packet::{Packet, PacketKind};
-use crate::sim::{Ctx, NodeId, Time};
+use crate::sim::{Ctx, NodeId, PacketId, Time};
 use crate::transport::{
     self, FlowCc, SinkFlow, TransportSpec, UnackedFlow,
 };
@@ -387,13 +387,15 @@ fn open_wake(
 
 /// Delivery at a traffic host: data packets are accounted toward their
 /// flow's completion (FCT is recorded when the last packet lands);
-/// transport ACK/CNP control frames feed the sender-side state.
+/// transport ACK/CNP control frames feed the sender-side state. Takes
+/// ownership of the arena entry — traffic hosts are sinks.
 pub fn on_packet(
     me: NodeId,
     th: &mut TrafficHost,
     ctx: &mut Ctx,
-    pkt: Packet,
+    pid: PacketId,
 ) {
+    let pkt = ctx.take(pid);
     match pkt.kind {
         PacketKind::Background => on_data(me, th, ctx, pkt),
         PacketKind::TransportAck => on_ack(th, ctx, pkt),

@@ -30,24 +30,45 @@ impl Measurement {
 }
 
 /// Benchmark `f`, auto-scaling iterations to `min_time` of wall clock.
+///
+/// Warm-up runs untimed calls until 10 % of `min_time` has elapsed (at
+/// least one call) — a single call under-warms multi-ms scenario
+/// benches, whose first iteration pays page faults and cold caches.
+/// The measured phase then runs until `min_time` is met with no hard
+/// sample cap: sub-microsecond bodies are *batched* so each recorded
+/// sample covers at least ~10 µs of work, which bounds the sample
+/// vector without truncating the run before `min_time` (the old fixed
+/// 10 000-sample cap cut fast bodies off early and skewed the stddev
+/// toward the cold start).
 pub fn bench<F: FnMut()>(name: &str, min_time: Duration, mut f: F) -> Measurement {
-    // warm-up: one untimed call
-    f();
+    let warm_deadline = min_time.mul_f64(0.10);
+    let warm_start = Instant::now();
+    let mut warm_calls = 0u64;
+    loop {
+        f();
+        warm_calls += 1;
+        if warm_start.elapsed() >= warm_deadline {
+            break;
+        }
+    }
+    // batch sub-microsecond bodies: ~10 us of work per recorded sample
+    let per_call = warm_start.elapsed().as_secs_f64() / warm_calls as f64;
+    let batch = ((10e-6 / per_call.max(1e-12)) as usize).clamp(1, 1 << 20);
+
     let mut samples: Vec<f64> = Vec::new();
     let start = Instant::now();
     while start.elapsed() < min_time || samples.len() < 5 {
         let t0 = Instant::now();
-        f();
-        samples.push(t0.elapsed().as_secs_f64());
-        if samples.len() >= 10_000 {
-            break;
+        for _ in 0..batch {
+            f();
         }
+        samples.push(t0.elapsed().as_secs_f64() / batch as f64);
     }
     let m = Measurement {
         name: name.to_string(),
         mean: Duration::from_secs_f64(stats::mean(&samples)),
         stddev: Duration::from_secs_f64(stats::stddev(&samples)),
-        iters: samples.len(),
+        iters: samples.len() * batch,
     };
     m.print();
     m
@@ -73,6 +94,20 @@ mod tests {
         });
         assert!(m.iters >= 5);
         assert!(m.mean.as_nanos() > 0);
+    }
+
+    /// A sub-microsecond body must keep measuring until `min_time` is
+    /// met (the old 10 000-sample cap truncated it after ~1 ms) — with
+    /// batching, total calls far exceed the old cap.
+    #[test]
+    fn fast_bodies_fill_min_time() {
+        let min_time = Duration::from_millis(50);
+        let t0 = Instant::now();
+        let m = bench("noop", min_time, || {
+            std::hint::black_box(1u64);
+        });
+        assert!(t0.elapsed() >= min_time, "run truncated before min_time");
+        assert!(m.iters > 10_000, "old cap would have stopped at 10k");
     }
 
     #[test]

@@ -1,0 +1,180 @@
+//! Scheduler + arena guarantees for the calendar-queue rewrite
+//! (DESIGN.md §2.5): the calendar queue pops in exactly the reference
+//! `BinaryHeap` order on random event streams with duplicate
+//! timestamps (property test), a recycled `PacketId` from a stale
+//! generation is rejected, a clean run returns every packet to the
+//! arena (no id leaks), and seeded end-to-end runs are bit-identical —
+//! the same pin the CI `determinism` job holds from the outside via
+//! `canary run --fingerprint`.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use canary::collectives::Algo;
+use canary::config::FatTreeConfig;
+use canary::prop_assert;
+use canary::sim::{Event, EventQueue, Packet, PacketArena, PacketKind, MS};
+use canary::traffic::TrafficSpec;
+use canary::transport::TransportSpec;
+use canary::util::proptest_lite::check_property;
+use canary::workload::{JobBuilder, ScenarioBuilder};
+
+fn ev(tag: usize) -> Event {
+    Event::TxDone { link: tag }
+}
+
+fn tag_of(e: &Event) -> usize {
+    match e {
+        Event::TxDone { link } => *link,
+        other => panic!("unexpected event {other:?}"),
+    }
+}
+
+/// Calendar-queue pops match a reference global heap ordered by
+/// `(time, seq)` — on streams that hit all three tiers (current slot,
+/// wheel window, overflow horizon), force duplicate timestamps, and
+/// interleave pops with pushes (including pushes *behind* the popped
+/// frontier, which the queue must order first).
+#[test]
+fn calendar_queue_matches_reference_heap() {
+    check_property("scheduler equivalence", 0xCA1E, 150, |rng| {
+        let mut q = EventQueue::new();
+        let mut reference: BinaryHeap<Reverse<(u64, u64, usize)>> =
+            BinaryHeap::new();
+        let mut seq = 0u64;
+        let mut next_tag = 0usize;
+        let base = rng.next_u64() % (1u64 << 40);
+        let n_ops = 200 + rng.index(800);
+        for _ in 0..n_ops {
+            if rng.chance(0.6) || q.is_empty() {
+                let t = base
+                    + match rng.index(4) {
+                        // dense duplicates inside one wheel slot
+                        0 => rng.next_u64() % 16,
+                        // same-slot spread
+                        1 => rng.next_u64() % (1 << 16),
+                        // across the wheel window (~268 us)
+                        2 => rng.next_u64() % (1 << 28),
+                        // far beyond the horizon (up to ~100 ms)
+                        _ => rng.next_u64() % (100 * MS),
+                    };
+                q.push(t, ev(next_tag));
+                reference.push(Reverse((t, seq, next_tag)));
+                seq += 1;
+                next_tag += 1;
+            } else {
+                let got = q.pop();
+                let want = reference.pop();
+                match (got, want) {
+                    (Some((t, e)), Some(Reverse((rt, _, rtag)))) => {
+                        prop_assert!(
+                            t == rt && tag_of(&e) == rtag,
+                            "popped ({t}, {}), reference ({rt}, {rtag})",
+                            tag_of(&e)
+                        );
+                    }
+                    (None, None) => {}
+                    (g, w) => {
+                        return Err(format!(
+                            "length divergence: got {g:?}, want {w:?}"
+                        ))
+                    }
+                }
+                prop_assert!(
+                    q.len() == reference.len(),
+                    "len {} != reference {}",
+                    q.len(),
+                    reference.len()
+                );
+            }
+        }
+        while let Some(Reverse((rt, _, rtag))) = reference.pop() {
+            let (t, e) = q
+                .pop()
+                .ok_or_else(|| "queue drained before reference".to_string())?;
+            prop_assert!(
+                t == rt && tag_of(&e) == rtag,
+                "drain popped ({t}, {}), reference ({rt}, {rtag})",
+                tag_of(&e)
+            );
+        }
+        prop_assert!(q.pop().is_none(), "queue outlived reference");
+        prop_assert!(q.is_empty(), "is_empty disagrees after drain");
+        Ok(())
+    });
+}
+
+/// A recycled `PacketId` from a stale generation must be rejected by
+/// every accessor — a handler that both forwards and frees an id can
+/// never alias the unrelated packet now occupying the slot.
+#[test]
+fn recycled_packet_id_from_stale_generation_is_rejected() {
+    let mut a = PacketArena::new();
+    let stale = a.alloc(Packet::data(PacketKind::Background, 0, 1));
+    assert_eq!(a.take(stale).dst, 1);
+    // the freed slot is recycled for an unrelated packet
+    let recycled = a.alloc(Packet::data(PacketKind::Ring, 2, 3));
+    assert_eq!(a.slot_count(), 1, "second alloc must reuse the slot");
+    assert!(a.get(stale).is_none(), "stale read leaked the new packet");
+    assert!(a.get_mut(stale).is_none());
+    assert!(a.try_take(stale).is_none());
+    assert_eq!(a.get(recycled).map(|p| p.dst), Some(3));
+}
+
+/// Every delivered packet id is consumed exactly once: after a fully
+/// drained run the arena holds zero live packets, and its slab never
+/// grew past the peak number of simultaneously in-flight packets.
+#[test]
+fn clean_runs_return_every_packet_to_the_arena() {
+    for algo in [Algo::Canary, Algo::StaticTree { n_trees: 1 }, Algo::Ring] {
+        let sc = ScenarioBuilder::new(FatTreeConfig::tiny())
+            .job(JobBuilder::new(algo).hosts(6).data_bytes(64 * 1024));
+        let mut exp = sc.build(3);
+        exp.net.kick_jobs();
+        exp.net.run_all(u64::MAX);
+        assert!(exp.net.queue.is_empty(), "{algo:?}: events left behind");
+        assert_eq!(
+            exp.net.arena.live(),
+            0,
+            "{algo:?}: packet ids leaked (taken/forwarded/freed violated)"
+        );
+        assert!(exp.net.arena.peak_live() > 0, "{algo:?}: nothing flew");
+        assert_eq!(
+            exp.net.arena.slot_count() as u32,
+            exp.net.arena.peak_live(),
+            "{algo:?}: slab grew past the live peak (free list bypassed)"
+        );
+    }
+}
+
+fn fingerprint_of(sc: &ScenarioBuilder, seed: u64) -> u64 {
+    let mut exp = sc.build(seed);
+    canary::collectives::runner::run_to_completion(&mut exp.net, u64::MAX);
+    exp.net
+        .metrics
+        .fingerprint(exp.net.now, exp.net.events_processed)
+}
+
+/// The scheduler+arena rewrite preserves bit-reproducibility: the same
+/// seeded scenario produces the same fingerprint, run after run — with
+/// plain uniform cross traffic and under the reactive-transport incast
+/// (ECN marks, CNPs, RTO retransmissions all included in the digest).
+#[test]
+fn seeded_runs_are_bit_identical() {
+    let plain = ScenarioBuilder::new(FatTreeConfig::small())
+        .traffic(Some(TrafficSpec::uniform()))
+        .job(JobBuilder::new(Algo::Canary).hosts(8).data_bytes(64 * 1024));
+    assert_eq!(fingerprint_of(&plain, 42), fingerprint_of(&plain, 42));
+    assert_ne!(
+        fingerprint_of(&plain, 42),
+        fingerprint_of(&plain, 43),
+        "distinct seeds collapsed to one world"
+    );
+
+    let reactive = ScenarioBuilder::new(FatTreeConfig::small())
+        .traffic(Some(
+            TrafficSpec::incast(8).with_transport(TransportSpec::Dcqcn),
+        ))
+        .job(JobBuilder::new(Algo::Canary).hosts(8).data_bytes(64 * 1024));
+    assert_eq!(fingerprint_of(&reactive, 7), fingerprint_of(&reactive, 7));
+}

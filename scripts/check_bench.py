@@ -1,0 +1,105 @@
+#!/usr/bin/env python3
+"""Gate CI on the engine-throughput trajectory (EXPERIMENTS.md §Scale).
+
+Usage:
+    python3 scripts/check_bench.py CURRENT.json BASELINE.json
+
+CURRENT.json is the `BENCH_scale.json` a fresh `figures scale --scale
+ci` (or `cargo bench --bench paper_figures`) just wrote; BASELINE.json
+is the checked-in reference under `scripts/bench_baselines/`. The gate
+compares the *headline* events/sec — the serial re-run of the largest
+Canary cell — and fails (exit 1) when the current run is more than
+MAX_REGRESSION (25 %) slower than the baseline.
+
+Updating the baseline
+---------------------
+When a PR legitimately changes engine throughput (or to record the
+first real measurement — the seed baseline ships with
+"events_per_sec": null, which makes this script report-and-pass):
+
+    cargo run --release --bin figures -- scale --scale ci --out results
+    cp results/BENCH_scale.json scripts/bench_baselines/BENCH_scale.json
+    git add scripts/bench_baselines/BENCH_scale.json   # commit with the PR
+
+Record the before/after numbers in EXPERIMENTS.md §Scale alongside the
+refresh. Baselines are machine-dependent: refresh them from a CI run's
+uploaded `bench-json` artifact, not from a laptop, so the comparison
+stays apples-to-apples. The 25 % tolerance absorbs normal
+runner-to-runner jitter; if the gate flaps without a real change,
+re-measure on CI before loosening anything.
+"""
+
+import json
+import sys
+
+MAX_REGRESSION = 0.25  # fail when current < (1 - this) * baseline
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        return None
+    except json.JSONDecodeError as e:
+        sys.exit(f"check_bench: {path} is not valid JSON: {e}")
+
+
+def main():
+    if len(sys.argv) != 3:
+        sys.exit(__doc__)
+    current_path, baseline_path = sys.argv[1], sys.argv[2]
+
+    current = load(current_path)
+    if current is None:
+        sys.exit(f"check_bench: current results {current_path} not found "
+                 "(did the scale sweep run?)")
+    cur = current.get("events_per_sec")
+    if not isinstance(cur, (int, float)) or cur <= 0:
+        sys.exit(f"check_bench: {current_path} has no positive "
+                 f"events_per_sec (got {cur!r})")
+
+    baseline = load(baseline_path)
+    if baseline is None:
+        # a *missing* baseline file is a broken gate (typo'd path,
+        # renamed file), not a bootstrap: only an explicitly committed
+        # "events_per_sec": null may pass unarmed
+        sys.exit(f"check_bench: baseline {baseline_path} not found — "
+                 "refusing to run unarmed; commit a baseline (or the "
+                 "null-valued seed file) at that path")
+    base = baseline.get("events_per_sec")
+    cell = current.get("headline_cell", "?")
+    print(f"check_bench: headline cell {cell}")
+    print(f"check_bench: current  {cur / 1e6:8.2f} M events/s "
+          f"({current.get('headline_events', '?')} events)")
+
+    if base is None:
+        print(f"check_bench: baseline in {baseline_path} is null — "
+              "PASS (bootstrap).")
+        print("check_bench: record one with the steps in this script's "
+              "header to arm the regression gate.")
+        return
+    if not isinstance(base, (int, float)) or base <= 0:
+        sys.exit(f"check_bench: baseline {baseline_path} has a "
+                 f"non-positive events_per_sec ({base!r}) — fix or "
+                 "re-record it")
+
+    ratio = cur / base
+    print(f"check_bench: baseline {base / 1e6:8.2f} M events/s "
+          f"(current/baseline = {ratio:.3f})")
+    if ratio < 1.0 - MAX_REGRESSION:
+        sys.exit(f"check_bench: FAIL — events/sec regressed "
+                 f"{(1.0 - ratio) * 100.0:.1f}% "
+                 f"(> {MAX_REGRESSION * 100:.0f}% tolerance). If this "
+                 "change intentionally trades throughput, refresh the "
+                 "baseline per the script header and document it in "
+                 "EXPERIMENTS.md §Scale.")
+    if ratio > 1.0 + MAX_REGRESSION:
+        print(f"check_bench: current is {(ratio - 1.0) * 100.0:.1f}% "
+              "faster than the baseline — consider refreshing it so the "
+              "gate protects the new level.")
+    print("check_bench: PASS")
+
+
+if __name__ == "__main__":
+    main()
