@@ -66,6 +66,7 @@ fn main() {
     let (placement_time, placement_rows) =
         run("placement_locality", figures::placement);
     run("scale_weak_sweep", figures::scale);
+    run("churn_sweep", figures::churn);
     run("ablation_lb", figures::ablation_lb);
 
     // machine-readable entries for the sweeps (per-commit tracking)
@@ -109,5 +110,13 @@ fn main() {
     match std::fs::copy(&scale_src, "results/BENCH_scale.json") {
         Ok(_) => println!("wrote results/BENCH_scale.json"),
         Err(e) => eprintln!("copying {scale_src} failed: {e}"),
+    }
+
+    // same for the churn sweep (completion/recovery percentiles per
+    // timeout x fault-level x engine cell)
+    let churn_src = format!("{}/BENCH_churn.json", opts().out);
+    match std::fs::copy(&churn_src, "results/BENCH_churn.json") {
+        Ok(_) => println!("wrote results/BENCH_churn.json"),
+        Err(e) => eprintln!("copying {churn_src} failed: {e}"),
     }
 }

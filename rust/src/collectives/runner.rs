@@ -29,6 +29,12 @@ pub struct JobResult {
     pub data_bytes: u64,
     pub runtime_ps: Option<Time>,
     pub goodput_gbps: Option<f64>,
+    /// Did the job finish inside the run's time bound? `false` is the
+    /// documented degradation outcome (stall/abort) for engines without
+    /// recovery machinery under unrecovered faults — static trees and
+    /// ring stall when their fixed path dies, Canary falls back or
+    /// retries (DESIGN.md §2.6).
+    pub completed: bool,
 }
 
 fn set_proto(net: &mut Network, host: NodeId, proto: Proto) {
@@ -285,6 +291,15 @@ pub(crate) fn install_background_job(
 pub fn run_to_completion(net: &mut Network, max_time: Time) -> Vec<JobResult> {
     net.kick_jobs();
     net.run(max_time);
+    for j in net.jobs.iter() {
+        if j.spec.algo.is_allreduce() {
+            if j.finish.is_some() {
+                net.metrics.jobs_completed += 1;
+            } else {
+                net.metrics.jobs_stalled += 1;
+            }
+        }
+    }
     net.jobs
         .iter()
         .filter(|j| j.spec.algo.is_allreduce())
@@ -296,6 +311,7 @@ pub fn run_to_completion(net: &mut Network, max_time: Time) -> Vec<JobResult> {
             data_bytes: j.spec.data_bytes,
             runtime_ps: j.runtime_ps(),
             goodput_gbps: j.goodput_gbps(),
+            completed: j.finish.is_some(),
         })
         .collect()
 }

@@ -1,31 +1,325 @@
-//! Fault injection: random packet loss and scheduled switch failures.
+//! Fault injection: random packet loss plus a scheduled timeline of
+//! typed churn events (link flaps, switch failures with optional
+//! recovery, straggler hosts).
 //!
-//! The paper treats both identically at the protocol level (Section 3.3):
-//! the leader times out / hosts time out, retransmission requests flow to
-//! the leader, and either the finished result is re-sent or the block is
-//! reduced again from scratch under a fresh id.
+//! The paper treats loss and switch death identically at the protocol
+//! level (Section 3.3): the leader times out / hosts time out,
+//! retransmission requests flow to the leader, and either the finished
+//! result is re-sent or the block is reduced again from scratch under a
+//! fresh id. The churn timeline (DESIGN.md §2.6) extends that to the
+//! *dynamic* fabric the paper's mechanism is designed for: a downed
+//! link drops/queues nothing, a failed switch blackholes all its ports
+//! until recovery, and a straggler host runs all its protocol timers
+//! `slowdown`x slower — stressing exactly the timeout-driven partial
+//! aggregation that distinguishes Canary from static trees.
+//!
+//! A [`FaultSpec`] is declarative: it is installed before the run (via
+//! `ScenarioBuilder::faults` or directly on `Network::faults`) and
+//! `Network::kick_jobs` converts it into sim-core events. An empty
+//! timeline schedules nothing and draws nothing from the RNG, so a run
+//! with `FaultSpec::default()` is bit-identical to a fault-free run
+//! (pinned in `tests/churn.rs`).
 
-use crate::sim::{NodeId, Time};
+use crate::sim::{NodeId, Time, US};
 
-/// Declarative fault plan, installed before the run.
-#[derive(Clone, Debug, Default)]
-pub struct FaultPlan {
-    /// Per-delivery probability of dropping a non-background packet.
-    pub loss_prob: f64,
-    /// (time, switch) pairs: at `time` the switch dies (its links go
-    /// down, its soft state is lost).
-    pub switch_failures: Vec<(Time, NodeId)>,
+/// One scheduled churn event.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FaultEvent {
+    /// The bidirectional link between nodes `a` and `b` goes down at
+    /// `down_at` and comes back at `up_at`. Packets queued on it are
+    /// dropped (`drops_link_down`), packets routed onto it while down
+    /// are dropped at enqueue, and adaptive/flowlet routing steers
+    /// around it via the port-down bit (`Ctx::port_alive`).
+    LinkFlap {
+        a: NodeId,
+        b: NodeId,
+        down_at: Time,
+        up_at: Time,
+    },
+    /// The switch dies at `at`: every link touching it goes down and
+    /// its soft state (descriptors, flowlet tables) is lost. With
+    /// `recover_at` set the links come back up at that time; the soft
+    /// state stays lost — leaders re-reduce affected blocks, exactly
+    /// the Section 3.3 loss-equivalence.
+    SwitchFail {
+        switch: NodeId,
+        at: Time,
+        recover_at: Option<Time>,
+    },
+    /// Every protocol timer of `host` is stretched by `slowdown`x for
+    /// the whole run (injection pacing, retry timers — everything that
+    /// goes through `Ctx::host_timer`). `slowdown == 1` is provably
+    /// inert. This is the adversary of the Canary aggregation timeout:
+    /// switches stop waiting for the straggler's contributions and
+    /// forward partial aggregates instead.
+    StragglerHost { host: NodeId, slowdown: u32 },
 }
 
-impl FaultPlan {
+/// Declarative fault plan: random loss plus the churn-event timeline.
+/// Installed before the run; see the module docs.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultSpec {
+    /// Per-delivery probability of dropping a non-background packet.
+    pub loss_prob: f64,
+    /// Scheduled churn events, in any order (scheduling sorts by time
+    /// via the event queue).
+    pub events: Vec<FaultEvent>,
+}
+
+/// Backwards-compatible alias (the pre-churn name).
+pub type FaultPlan = FaultSpec;
+
+impl FaultSpec {
     pub fn with_loss(mut self, p: f64) -> Self {
         self.loss_prob = p;
         self
     }
 
-    pub fn with_switch_failure(mut self, t: Time, node: NodeId) -> Self {
-        self.switch_failures.push((t, node));
+    /// A link flap between nodes `a` and `b` (either direction order).
+    pub fn with_link_flap(
+        mut self,
+        a: NodeId,
+        b: NodeId,
+        down_at: Time,
+        up_at: Time,
+    ) -> Self {
+        assert!(down_at < up_at, "flap must go down before it comes up");
+        self.events.push(FaultEvent::LinkFlap {
+            a,
+            b,
+            down_at,
+            up_at,
+        });
         self
+    }
+
+    /// Legacy spelling: a permanent switch failure at `t`.
+    pub fn with_switch_failure(self, t: Time, node: NodeId) -> Self {
+        self.with_switch_fail(node, t, None)
+    }
+
+    /// A switch failure at `at`, optionally recovering at `recover_at`.
+    pub fn with_switch_fail(
+        mut self,
+        switch: NodeId,
+        at: Time,
+        recover_at: Option<Time>,
+    ) -> Self {
+        if let Some(r) = recover_at {
+            assert!(at < r, "switch must fail before it recovers");
+        }
+        self.events.push(FaultEvent::SwitchFail {
+            switch,
+            at,
+            recover_at,
+        });
+        self
+    }
+
+    /// Stretch all of `host`'s protocol timers by `slowdown`x.
+    pub fn with_straggler(mut self, host: NodeId, slowdown: u32) -> Self {
+        assert!(slowdown >= 1, "slowdown factor must be >= 1");
+        self.events
+            .push(FaultEvent::StragglerHost { host, slowdown });
+        self
+    }
+
+    /// Nothing to inject: no loss, no events. An empty spec leaves a
+    /// run bit-identical to one with no spec at all.
+    pub fn is_empty(&self) -> bool {
+        self.loss_prob == 0.0 && self.events.is_empty()
+    }
+
+    /// Parse the CLI spelling: comma-separated items, times in µs.
+    ///
+    /// ```text
+    /// loss:P                    random loss probability P
+    /// flap:A:B:DOWN_US:UP_US    link A<->B down at DOWN_US, up at UP_US
+    /// fail:SW:AT_US[:REC_US]    switch SW dies at AT_US (recovers at REC_US)
+    /// straggler:H:FACTOR        host H's timers run FACTOR x slower
+    /// ```
+    pub fn parse(s: &str) -> Result<FaultSpec, String> {
+        let mut spec = FaultSpec::default();
+        for item in s.split(',').filter(|i| !i.is_empty()) {
+            let parts: Vec<&str> = item.split(':').collect();
+            let num = |i: usize, what: &str| -> Result<u64, String> {
+                parts
+                    .get(i)
+                    .ok_or_else(|| format!("'{item}' is missing {what}"))?
+                    .parse::<u64>()
+                    .map_err(|_| format!("bad {what} in '{item}'"))
+            };
+            match parts[0] {
+                "loss" => {
+                    let p: f64 = parts
+                        .get(1)
+                        .ok_or_else(|| {
+                            format!("'{item}' is missing a probability")
+                        })?
+                        .parse()
+                        .map_err(|_| format!("bad probability in '{item}'"))?;
+                    if !(0.0..=1.0).contains(&p) {
+                        return Err(format!(
+                            "loss probability {p} outside [0, 1]"
+                        ));
+                    }
+                    spec.loss_prob = p;
+                }
+                "flap" => {
+                    if parts.len() != 5 {
+                        return Err(format!(
+                            "'{item}' wants flap:A:B:DOWN_US:UP_US"
+                        ));
+                    }
+                    let (a, b) =
+                        (num(1, "node a")? as NodeId, num(2, "node b")? as NodeId);
+                    let (down, up) =
+                        (num(3, "down time")? * US, num(4, "up time")? * US);
+                    if down >= up {
+                        return Err(format!(
+                            "'{item}': down time must precede up time"
+                        ));
+                    }
+                    spec = spec.with_link_flap(a, b, down, up);
+                }
+                "fail" => {
+                    if parts.len() != 3 && parts.len() != 4 {
+                        return Err(format!(
+                            "'{item}' wants fail:SW:AT_US[:REC_US]"
+                        ));
+                    }
+                    let sw = num(1, "switch id")? as NodeId;
+                    let at = num(2, "fail time")? * US;
+                    let rec = if parts.len() == 4 {
+                        let r = num(3, "recovery time")? * US;
+                        if at >= r {
+                            return Err(format!(
+                                "'{item}': failure must precede recovery"
+                            ));
+                        }
+                        Some(r)
+                    } else {
+                        None
+                    };
+                    spec = spec.with_switch_fail(sw, at, rec);
+                }
+                "straggler" => {
+                    if parts.len() != 3 {
+                        return Err(format!(
+                            "'{item}' wants straggler:H:FACTOR"
+                        ));
+                    }
+                    let host = num(1, "host id")? as NodeId;
+                    let factor = num(2, "slowdown factor")? as u32;
+                    if factor < 1 {
+                        return Err(format!(
+                            "'{item}': slowdown factor must be >= 1"
+                        ));
+                    }
+                    spec = spec.with_straggler(host, factor);
+                }
+                other => {
+                    return Err(format!(
+                        "unknown fault item '{other}' \
+                         (loss|flap|fail|straggler)"
+                    ))
+                }
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Parse a JSON fault description, e.g.
+    ///
+    /// ```json
+    /// {"loss": 0.01, "events": [
+    ///   {"kind": "link_flap", "a": 8, "b": 12,
+    ///    "down_at_us": 5, "up_at_us": 40},
+    ///   {"kind": "switch_fail", "switch": 12, "at_us": 5,
+    ///    "recover_at_us": 40},
+    ///   {"kind": "straggler", "host": 3, "slowdown": 4}
+    /// ]}
+    /// ```
+    pub fn from_json(text: &str) -> Result<FaultSpec, String> {
+        let v = crate::util::json::parse(text)?;
+        let mut spec = FaultSpec::default();
+        if let Some(p) = v.get("loss").and_then(|x| x.as_f64()) {
+            if !(0.0..=1.0).contains(&p) {
+                return Err(format!("loss probability {p} outside [0, 1]"));
+            }
+            spec.loss_prob = p;
+        }
+        let Some(events) = v.get("events") else {
+            return Ok(spec);
+        };
+        let events = events
+            .as_array()
+            .ok_or("'events' must be an array of fault objects")?;
+        for e in events {
+            let kind = e
+                .get("kind")
+                .and_then(|k| k.as_str())
+                .ok_or("fault event needs a string 'kind'")?;
+            let int_key = |key: &str| -> Result<u64, String> {
+                let i = e
+                    .get(key)
+                    .and_then(|x| x.as_i64())
+                    .ok_or_else(|| {
+                        format!("'{kind}' needs integer key '{key}'")
+                    })?;
+                u64::try_from(i)
+                    .map_err(|_| format!("'{key}' out of range: {i}"))
+            };
+            match kind {
+                "link_flap" => {
+                    let (a, b) =
+                        (int_key("a")? as NodeId, int_key("b")? as NodeId);
+                    let down = int_key("down_at_us")? * US;
+                    let up = int_key("up_at_us")? * US;
+                    if down >= up {
+                        return Err(
+                            "link_flap: down_at_us must precede up_at_us"
+                                .into(),
+                        );
+                    }
+                    spec = spec.with_link_flap(a, b, down, up);
+                }
+                "switch_fail" => {
+                    let sw = int_key("switch")? as NodeId;
+                    let at = int_key("at_us")? * US;
+                    let rec = match e.get("recover_at_us") {
+                        None => None,
+                        Some(_) => {
+                            let r = int_key("recover_at_us")? * US;
+                            if at >= r {
+                                return Err("switch_fail: at_us must \
+                                            precede recover_at_us"
+                                    .into());
+                            }
+                            Some(r)
+                        }
+                    };
+                    spec = spec.with_switch_fail(sw, at, rec);
+                }
+                "straggler" => {
+                    let host = int_key("host")? as NodeId;
+                    let slowdown = int_key("slowdown")? as u32;
+                    if slowdown < 1 {
+                        return Err(
+                            "straggler: slowdown must be >= 1".into()
+                        );
+                    }
+                    spec = spec.with_straggler(host, slowdown);
+                }
+                other => {
+                    return Err(format!(
+                        "unknown fault kind '{other}' \
+                         (link_flap|switch_fail|straggler)"
+                    ))
+                }
+            }
+        }
+        Ok(spec)
     }
 }
 
@@ -35,11 +329,105 @@ mod tests {
 
     #[test]
     fn builder() {
-        let f = FaultPlan::default()
+        let f = FaultSpec::default()
             .with_loss(0.01)
             .with_switch_failure(100, 7)
             .with_switch_failure(200, 9);
         assert_eq!(f.loss_prob, 0.01);
-        assert_eq!(f.switch_failures.len(), 2);
+        assert_eq!(f.events.len(), 2);
+        assert_eq!(
+            f.events[0],
+            FaultEvent::SwitchFail {
+                switch: 7,
+                at: 100,
+                recover_at: None
+            }
+        );
+        assert!(!f.is_empty());
+        assert!(FaultSpec::default().is_empty());
+    }
+
+    #[test]
+    fn typed_builders() {
+        let f = FaultSpec::default()
+            .with_link_flap(8, 12, 5 * US, 40 * US)
+            .with_switch_fail(12, 5 * US, Some(40 * US))
+            .with_straggler(3, 4);
+        assert_eq!(f.events.len(), 3);
+        assert_eq!(
+            f.events[2],
+            FaultEvent::StragglerHost { host: 3, slowdown: 4 }
+        );
+    }
+
+    #[test]
+    fn cli_parse_roundtrip() {
+        let f = FaultSpec::parse(
+            "loss:0.02,flap:8:12:5:40,fail:12:5:40,fail:9:7,straggler:3:4",
+        )
+        .unwrap();
+        assert_eq!(f.loss_prob, 0.02);
+        assert_eq!(
+            f.events,
+            vec![
+                FaultEvent::LinkFlap {
+                    a: 8,
+                    b: 12,
+                    down_at: 5 * US,
+                    up_at: 40 * US
+                },
+                FaultEvent::SwitchFail {
+                    switch: 12,
+                    at: 5 * US,
+                    recover_at: Some(40 * US)
+                },
+                FaultEvent::SwitchFail {
+                    switch: 9,
+                    at: 7 * US,
+                    recover_at: None
+                },
+                FaultEvent::StragglerHost { host: 3, slowdown: 4 },
+            ]
+        );
+        assert!(FaultSpec::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn cli_parse_rejects_garbage() {
+        assert!(FaultSpec::parse("loss:2.0").is_err());
+        assert!(FaultSpec::parse("flap:1:2:40:5").is_err());
+        assert!(FaultSpec::parse("flap:1:2:5").is_err());
+        assert!(FaultSpec::parse("fail:1:40:5").is_err());
+        assert!(FaultSpec::parse("straggler:1:0").is_err());
+        assert!(FaultSpec::parse("teleport:1:2").is_err());
+    }
+
+    #[test]
+    fn json_parse() {
+        let f = FaultSpec::from_json(
+            r#"{"loss": 0.01, "events": [
+                 {"kind": "link_flap", "a": 8, "b": 12,
+                  "down_at_us": 5, "up_at_us": 40},
+                 {"kind": "switch_fail", "switch": 12, "at_us": 5,
+                  "recover_at_us": 40},
+                 {"kind": "straggler", "host": 3, "slowdown": 4}
+               ]}"#,
+        )
+        .unwrap();
+        assert_eq!(f.loss_prob, 0.01);
+        assert_eq!(f.events.len(), 3);
+        assert_eq!(
+            f.events[1],
+            FaultEvent::SwitchFail {
+                switch: 12,
+                at: 5 * US,
+                recover_at: Some(40 * US)
+            }
+        );
+        assert!(FaultSpec::from_json(r#"{}"#).unwrap().is_empty());
+        assert!(FaultSpec::from_json(
+            r#"{"events": [{"kind": "warp"}]}"#
+        )
+        .is_err());
     }
 }

@@ -6,7 +6,7 @@
 //! ```text
 //! figures all            [--scale full|half|ci] [--seeds N] [--out DIR]
 //! figures fig2|fig6|fig7a|fig7b|fig8|fig9|fig10a|fig10b|fig11|mem|clos3
-//!         |traffic|transport|placement|scale|ablation ...
+//!         |traffic|transport|placement|scale|churn|ablation ...
 //! ```
 //!
 //! `full` reproduces the paper's parameters (1024 hosts, 4 MiB, 5 seeds —
@@ -24,12 +24,14 @@
 
 use crate::collectives::{runner, Algo};
 use crate::config::{ClosConfig, FatTreeConfig, SimConfig};
+use crate::faults::FaultSpec;
 use crate::loadbalance::LoadBalancer;
 use crate::metrics::{
     average_network_utilization, memory_model_bytes, utilization_histogram,
 };
 use crate::report::Series;
 use crate::sim::{ps_to_us, US};
+use crate::topology::Clos;
 use crate::traffic::TrafficSpec;
 use crate::transport::TransportSpec;
 use crate::util::cli::Args;
@@ -1003,6 +1005,193 @@ pub fn scale(o: &Opts) -> Series {
     finish(s, o)
 }
 
+/// Churn timeout-sensitivity sweep (DESIGN.md §2.6, EXPERIMENTS.md
+/// §Churn): aggregation timeout x fault level x engine on the 2- and
+/// 3-tier fabrics. Each fault level flaps that many distinct
+/// leaf-uplinks mid-operation (staggered, 25 us windows); per cell we
+/// report completion %, mean goodput of the completed seeds, and
+/// recovery time (runtime minus the same engine's fault-free baseline
+/// at the same seed) at p50/p95 — written to `BENCH_churn.json` for
+/// the bench harness. Canary sweeps its aggregation timeout; static
+/// tree and ring run their documented degradation semantics (stall
+/// when the failed path is load-bearing — `completed == false`).
+pub fn churn(o: &Opts) -> Series {
+    let mut s = Series::new(
+        "churn_timeout_sensitivity",
+        &[
+            "topo",
+            "algo",
+            "timeout_us",
+            "flaps",
+            "completion_pct",
+            "goodput_gbps",
+            "recovery_p50_us",
+            "recovery_p95_us",
+            "partial_aggs",
+            "dead_drops",
+        ],
+    );
+    let data_bytes = o.scale.scale_sweep_bytes();
+    // Canary sweeps the aggregation timeout; static/ring have none
+    // (timeout_us = 0 in the output marks "not applicable")
+    struct Engine {
+        algo: Algo,
+        timeout_us: u64,
+    }
+    let engines = [
+        Engine { algo: Algo::Canary, timeout_us: 1 },
+        Engine { algo: Algo::Canary, timeout_us: 4 },
+        Engine { algo: Algo::Canary, timeout_us: 16 },
+        Engine { algo: Algo::StaticTree { n_trees: 1 }, timeout_us: 0 },
+        Engine { algo: Algo::Ring, timeout_us: 0 },
+    ];
+    const FLAP_LEVELS: [u32; 3] = [0, 1, 3];
+
+    #[derive(Clone, Copy)]
+    struct Cell {
+        label: &'static str,
+        topo: ClosConfig,
+        algo: Algo,
+        timeout_us: u64,
+        flaps: u32,
+    }
+    let topos: [(&'static str, ClosConfig); 2] =
+        [("clos2", o.scale.topo()), ("clos3", o.scale.topo3())];
+    let mut cells = Vec::new();
+    for &(label, topo) in &topos {
+        for e in &engines {
+            for &flaps in &FLAP_LEVELS {
+                cells.push(Cell {
+                    label,
+                    topo,
+                    algo: e.algo,
+                    timeout_us: e.timeout_us,
+                    flaps,
+                });
+            }
+        }
+    }
+
+    // flap `n` distinct leaf-uplinks: leaf i <-> its first tier-2
+    // parent, down at (5 + 10i) us for 25 us — mid-operation for every
+    // scale's data size
+    let flap_spec = |topo: ClosConfig, n: u32| {
+        let ft = Clos { cfg: topo };
+        let mut f = FaultSpec::default();
+        for i in 0..n.min(topo.tier_size(1)) {
+            let leaf = ft.switch_id(1, i);
+            let parent = ft.switch_id(2, ft.parent_index(1, i, 0));
+            let down = (5 + 10 * i as u64) * US;
+            f = f.with_link_flap(leaf, parent, down, down + 25 * US);
+        }
+        f
+    };
+
+    let seeds = o.seeds.max(1) as usize;
+    // generous bound: stalled runs end when their event queue drains,
+    // the bound only caps pathological livelock
+    let max_t = 1_000_000 * US;
+    let results = par_map(cells.len() * seeds, |i| {
+        let c = &cells[i / seeds];
+        let seed = 1000 + (i % seeds) as u64;
+        let mut sim = SimConfig::default();
+        if c.algo == Algo::Canary {
+            // leader-driven loss recovery on; sweep the aggregation
+            // timeout
+            sim = sim
+                .with_timeout(c.timeout_us * US)
+                .with_retrans(200 * US, true);
+        }
+        let sc = ScenarioBuilder::new(c.topo)
+            .sim(sim)
+            .faults(flap_spec(c.topo, c.flaps))
+            .job(
+                JobBuilder::new(c.algo)
+                    .hosts((c.topo.n_hosts() / 2).max(2))
+                    .data_bytes(data_bytes),
+            );
+        let mut exp = sc.build(seed);
+        let r = runner::run_to_completion(&mut exp.net, max_t);
+        (
+            r[0].completed,
+            r[0].runtime_ps,
+            r[0].goodput_gbps,
+            exp.net.metrics.partial_aggregates,
+            exp.net.metrics.drops_link_down,
+        )
+    });
+
+    let mut cell_values = Vec::new();
+    for (ci, c) in cells.iter().enumerate() {
+        let rs = &results[ci * seeds..(ci + 1) * seeds];
+        // fault-free baseline of the same engine cell: FLAP_LEVELS
+        // starts with 0 and is the innermost loop, so the baseline is
+        // `flap_pos` cells back
+        let flap_pos = FLAP_LEVELS
+            .iter()
+            .position(|&f| f == c.flaps)
+            .expect("cell flap level not in FLAP_LEVELS");
+        let base = &results[(ci - flap_pos) * seeds..(ci - flap_pos + 1) * seeds];
+        let mut recovery_us: Vec<f64> = rs
+            .iter()
+            .zip(base)
+            .filter_map(|(r, b)| match (r.1, b.1) {
+                (Some(rt), Some(bt)) => {
+                    Some(ps_to_us(rt.saturating_sub(bt)))
+                }
+                _ => None,
+            })
+            .collect();
+        recovery_us.sort_by(|a, b| a.total_cmp(b));
+        let completed = rs.iter().filter(|r| r.0).count();
+        let completion_pct = 100.0 * completed as f64 / seeds as f64;
+        let goodput: Vec<f64> =
+            rs.iter().filter_map(|r| r.2).collect();
+        let partials: u64 = rs.iter().map(|r| r.3).sum();
+        let dead_drops: u64 = rs.iter().map(|r| r.4).sum();
+        let p50 = percentile_sorted(&recovery_us, 50.0);
+        let p95 = percentile_sorted(&recovery_us, 95.0);
+        s.push(vec![
+            c.label.to_string(),
+            c.algo.name(),
+            c.timeout_us.to_string(),
+            c.flaps.to_string(),
+            format!("{completion_pct:.0}"),
+            format!("{:.1}", mean(&goodput)),
+            format!("{p50:.1}"),
+            format!("{p95:.1}"),
+            partials.to_string(),
+            dead_drops.to_string(),
+        ]);
+        cell_values.push(obj(vec![
+            ("topo", Value::Str(c.label.into())),
+            ("algo", Value::Str(c.algo.name())),
+            ("timeout_us", Value::Int(c.timeout_us as i64)),
+            ("flaps", Value::Int(c.flaps as i64)),
+            ("completion_pct", Value::Float(completion_pct)),
+            ("goodput_gbps", Value::Float(mean(&goodput))),
+            ("recovery_p50_us", Value::Float(p50)),
+            ("recovery_p95_us", Value::Float(p95)),
+            ("partial_aggregates", Value::Int(partials as i64)),
+            ("drops_link_down", Value::Int(dead_drops as i64)),
+        ]));
+    }
+
+    let entry = obj(vec![
+        ("bench", Value::Str("churn_sweep".into())),
+        ("scale", Value::Str(o.scale.name().into())),
+        ("seeds", Value::Int(seeds as i64)),
+        ("cells", Value::Array(cell_values)),
+    ]);
+    let path = format!("{}/BENCH_churn.json", o.out);
+    let _ = std::fs::create_dir_all(&o.out);
+    match std::fs::write(&path, entry.to_json()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("{path} write failed: {e}"),
+    }
+    finish(s, o)
+}
+
 /// Ablation: Canary goodput under different load balancers (design-choice
 /// bench called out in DESIGN.md §5).
 pub fn ablation_lb(o: &Opts) -> Series {
@@ -1078,6 +1267,7 @@ pub fn main_entry() {
         "transport" => drop(transport(&o)),
         "placement" => drop(placement(&o)),
         "scale" => drop(scale(&o)),
+        "churn" => drop(churn(&o)),
         "ablation" => drop(ablation_lb(&o)),
         "all" => {
             drop(fig2(&o));
@@ -1095,13 +1285,15 @@ pub fn main_entry() {
             drop(transport(&o));
             drop(placement(&o));
             drop(scale(&o));
+            drop(churn(&o));
             drop(ablation_lb(&o));
         }
         other => {
             eprintln!(
                 "unknown figure '{other}' \
                  (fig2|fig6|fig7a|fig7b|fig8|fig9|fig10a|fig10b|fig11|mem\
-                 |clos3|traffic|transport|placement|scale|ablation|all)"
+                 |clos3|traffic|transport|placement|scale|churn|ablation\
+                 |all)"
             );
             std::process::exit(2);
         }

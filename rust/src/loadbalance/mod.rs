@@ -51,6 +51,11 @@ pub struct LbState {
     flowlets: HashMap<u64, (u16, Time)>,
     /// Selections since the last stale-entry sweep.
     since_sweep: u32,
+    /// Reconvergence counter: selections where the port the policy
+    /// would otherwise have used (hash default, cached flowlet port)
+    /// was dead and the selector re-routed around it. Stays zero on a
+    /// healthy fabric — congestion-driven re-picks don't count.
+    pub dead_reroutes: u64,
 }
 
 impl LbState {
@@ -100,10 +105,14 @@ pub fn select_up(
     let alive = |off: u16| ctx.port_alive(up_base_port + off);
     match lb {
         LoadBalancer::DefaultAdaptive { threshold } => {
-            if !alive(dflt)
+            let dead = !alive(dflt);
+            if dead
                 || ctx.port_class_occupancy(up_base_port + dflt, class)
                     > *threshold
             {
+                if dead {
+                    state.dead_reroutes += 1;
+                }
                 min_queue_port(ctx, up_base_port, n_up, class)
             } else {
                 dflt
@@ -115,9 +124,12 @@ pub fn select_up(
             if alive(port) {
                 port
             } else {
+                state.dead_reroutes += 1;
                 min_queue_port(ctx, up_base_port, n_up, class)
             }
         }
+        // MinQueue has no sticky choice to reconverge from — it already
+        // skips dead ports on every selection
         LoadBalancer::MinQueue => {
             min_queue_port(ctx, up_base_port, n_up, class)
         }
@@ -126,11 +138,15 @@ pub fn select_up(
             state.maybe_sweep(now, *gap_ps);
             let entry = state.flowlets.get(&flow).copied();
             let port = match entry {
-                Some((p, last))
-                    if now.saturating_sub(last) <= *gap_ps
-                        && alive(p) =>
-                {
-                    p
+                // a live cached port within the gap sticks; a dead one
+                // breaks the flowlet immediately (reconvergence)
+                Some((p, last)) if now.saturating_sub(last) <= *gap_ps => {
+                    if alive(p) {
+                        p
+                    } else {
+                        state.dead_reroutes += 1;
+                        min_queue_port(ctx, up_base_port, n_up, class)
+                    }
                 }
                 _ => min_queue_port(ctx, up_base_port, n_up, class),
             };

@@ -10,6 +10,7 @@
 
 use canary::collectives::{runner, verify_job, Algo, Collective};
 use canary::config::{parse_oversub, ClosConfig, SimConfig};
+use canary::faults::FaultSpec;
 use canary::util::error::Result;
 use canary::loadbalance::parse_policy;
 use canary::metrics::{average_network_utilization, memory_model_bytes};
@@ -34,9 +35,13 @@ USAGE:
                           |empirical[@open|@closed]]
                [--bg-load L] [--traffic-json FILE]
                [--transport none|dcqcn|swift] [--ecn-kmin B] [--ecn-kmax B]
-               [--timeout-us T] [--lb adaptive|ecmp|minqueue|flowlet]
+               [--timeout-us T] [--retrans-us T]
+               [--lb adaptive|ecmp|minqueue|flowlet]
                [--topo paper|small|tiny[3]] [--tiers 2|3] [--oversub A:B]
                [--topo-json FILE] [--values] [--fingerprint]
+               [--faults loss:P,flap:A:B:DOWN_US:UP_US,
+                         fail:SW:AT_US[:REC_US],straggler:H:FACTOR]
+               [--faults-json FILE]
   canary train [--preset tiny|base] [--workers N] [--steps N] [--lr F]
                [--algo ...] [--comm-every N] [--seed S]
   canary mem   [--timeout-us T] [--diameter D]
@@ -212,6 +217,23 @@ fn resolve_traffic(args: &Args) -> Result<Option<TrafficSpec>> {
     Ok(spec)
 }
 
+/// Combine --faults/--faults-json into the scenario's fault plan
+/// (random loss + scheduled churn events; see `canary::faults`).
+fn resolve_faults(args: &Args) -> Result<FaultSpec> {
+    match (args.get("faults-json"), args.get("faults")) {
+        (Some(_), Some(_)) => Err("--faults-json conflicts with --faults \
+                                   (the JSON file fully defines the plan)"
+            .into()),
+        (Some(path), None) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| format!("reading {path}: {e}"))?;
+            Ok(FaultSpec::from_json(&text)?)
+        }
+        (None, Some(s)) => Ok(FaultSpec::parse(s)?),
+        (None, None) => Ok(FaultSpec::default()),
+    }
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     let algo = parse_algo(args.get_or("algo", "canary"))?;
     let collective = Collective::parse(args.get_or("collective", "allreduce"))?;
@@ -244,25 +266,35 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
     let size: u64 = args.get_parse("size", 4 * 1024 * 1024)?;
     let traffic = resolve_traffic(args)?;
+    let faults = resolve_faults(args)?;
     let seed: u64 = args.get_parse("seed", 1)?;
     let timeout_us: u64 = args.get_parse("timeout-us", 1)?;
+    let retrans_us: u64 = args.get_parse("retrans-us", 0)?;
     let lb = parse_policy(args.get_or("lb", "adaptive"))?;
     let values = args.flag("values");
 
     let window: u32 = args.get_parse("window", 0)?;
-    let sim = SimConfig::default()
+    let mut sim = SimConfig::default()
         .with_timeout(timeout_us * US)
         .with_window(window)
         .with_values(values);
-    let sc = ScenarioBuilder::new(topo).sim(sim).lb(lb).traffic(traffic).jobs(
-        n_jobs,
-        JobBuilder::new(algo)
-            .collective(collective)
-            .hosts(hosts)
-            .data_bytes(size)
-            .placement(placement.clone())
-            .record_results(values),
-    );
+    if retrans_us > 0 {
+        sim = sim.with_retrans(retrans_us * US, true);
+    }
+    let sc = ScenarioBuilder::new(topo)
+        .sim(sim)
+        .lb(lb)
+        .traffic(traffic)
+        .faults(faults)
+        .jobs(
+            n_jobs,
+            JobBuilder::new(algo)
+                .collective(collective)
+                .hosts(hosts)
+                .data_bytes(size)
+                .placement(placement.clone())
+                .record_results(values),
+        );
     let mut exp = sc.build(seed);
     let results = runner::run_to_completion(&mut exp.net, u64::MAX);
     let r = &results[0];
@@ -319,6 +351,9 @@ fn cmd_run(args: &Args) -> Result<()> {
         100.0 * average_network_utilization(&exp.net, exp.net.now)
     );
     println!("{}", canary::report::engine_summary(&exp.net.metrics));
+    if canary::report::fault_activity(&exp.net.metrics) {
+        println!("{}", canary::report::fault_summary(&exp.net.metrics));
+    }
     if args.flag("fingerprint") {
         // bit-exact digest of the run's outcome (CI `determinism` job:
         // two seeded runs must print the same line)
@@ -454,7 +489,8 @@ fn main() -> Result<()> {
             "transport", "ecn-kmin", "ecn-kmax", "timeout-us", "lb",
             "topo", "tiers", "oversub", "topo-json", "values", "preset",
             "workers", "steps", "lr", "comm-every", "diameter", "window",
-            "debug-links", "fingerprint",
+            "debug-links", "fingerprint", "faults", "faults-json",
+            "retrans-us",
         ],
     )?;
     match args.positional.first().map(|s| s.as_str()) {

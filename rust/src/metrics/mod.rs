@@ -201,6 +201,26 @@ pub struct Metrics {
     pub fallbacks: u64,
     /// Switch failures injected.
     pub switch_failures: u64,
+    /// Switch recoveries fired (churn timeline).
+    pub switch_recoveries: u64,
+    /// Link-down flap edges fired (churn timeline).
+    pub link_flaps: u64,
+    /// Link-up flap edges fired (churn timeline).
+    pub link_recoveries: u64,
+    /// Straggler hosts installed with a slowdown factor > 1.
+    pub straggler_slowdowns: u64,
+    /// Canary: descriptor timeouts that fired with an incomplete
+    /// contribution counter and forwarded a *partial* aggregate —
+    /// the paper's best-effort escape hatch (Section 3.1.1). Zero on
+    /// a clean run: complete blocks forward from `on_reduce`, and a
+    /// timeout finding `counter == hosts` is a straggler-passthrough
+    /// race, not a partial emission.
+    pub partial_aggregates: u64,
+    /// Allreduce jobs that finished within the run's time bound...
+    pub jobs_completed: u64,
+    /// ...and those that did not (stalled/aborted — the documented
+    /// degradation outcome for engines without recovery machinery).
+    pub jobs_stalled: u64,
     /// Descriptor allocations / deallocations (leak check: must balance
     /// at the end of a clean run).
     pub descriptors_allocated: u64,
@@ -262,6 +282,13 @@ impl Metrics {
         mix(self.failures);
         mix(self.fallbacks);
         mix(self.switch_failures);
+        mix(self.switch_recoveries);
+        mix(self.link_flaps);
+        mix(self.link_recoveries);
+        mix(self.straggler_slowdowns);
+        mix(self.partial_aggregates);
+        mix(self.jobs_completed);
+        mix(self.jobs_stalled);
         mix(self.descriptors_allocated);
         mix(self.descriptors_freed);
         mix(self.descriptor_high_water);

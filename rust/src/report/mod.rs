@@ -145,6 +145,45 @@ pub fn engine_summary(m: &crate::metrics::Metrics) -> String {
     )
 }
 
+/// One-line churn/fault summary: what the fault plan did to the run
+/// (flaps, switch deaths/recoveries, stragglers, drops on dead links,
+/// partial aggregates the timeouts emitted, job completion split).
+/// Meant to be printed only when some fault counter moved — see
+/// [`fault_activity`].
+pub fn fault_summary(m: &crate::metrics::Metrics) -> String {
+    format!(
+        "faults: {} flaps ({} recovered)  {} switch fails \
+         ({} recovered)  {} stragglers  {} link-down drops  \
+         {} injected drops  {} partial aggregates  \
+         jobs {} completed / {} stalled",
+        m.link_flaps,
+        m.link_recoveries,
+        m.switch_failures,
+        m.switch_recoveries,
+        m.straggler_slowdowns,
+        m.drops_link_down,
+        m.drops_injected,
+        m.partial_aggregates,
+        m.jobs_completed,
+        m.jobs_stalled,
+    )
+}
+
+/// Did any fault machinery engage this run? (Gates printing the
+/// [`fault_summary`] line so clean runs stay visually unchanged.)
+pub fn fault_activity(m: &crate::metrics::Metrics) -> bool {
+    m.link_flaps
+        + m.link_recoveries
+        + m.switch_failures
+        + m.switch_recoveries
+        + m.straggler_slowdowns
+        + m.drops_link_down
+        + m.drops_injected
+        + m.partial_aggregates
+        + m.jobs_stalled
+        > 0
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -164,6 +203,21 @@ mod tests {
         let line = engine_summary(&m);
         assert!(line.contains("2.00 M events/s"), "{line}");
         assert!(line.contains("peak live pkts 1234"), "{line}");
+    }
+
+    #[test]
+    fn fault_summary_reads_sanely() {
+        let mut m = crate::metrics::Metrics::default();
+        assert!(!fault_activity(&m), "clean metrics reported activity");
+        m.link_flaps = 2;
+        m.link_recoveries = 2;
+        m.partial_aggregates = 5;
+        m.jobs_completed = 1;
+        assert!(fault_activity(&m));
+        let line = fault_summary(&m);
+        assert!(line.contains("2 flaps (2 recovered)"), "{line}");
+        assert!(line.contains("5 partial aggregates"), "{line}");
+        assert!(line.contains("jobs 1 completed / 0 stalled"), "{line}");
     }
 
     #[test]

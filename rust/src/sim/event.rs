@@ -58,8 +58,17 @@ pub enum Event {
     SwitchTimeout { node: u32, slot: u32, generation: u64 },
     /// Host protocol timer (retransmission, noise-delayed send, ...).
     HostTimer { node: u32, timer: u64 },
-    /// Scheduled switch/link failure (fault injection).
+    /// Scheduled switch failure (fault injection): all links touching
+    /// `node` go down and its soft state is lost.
     Fail { node: u32 },
+    /// Scheduled switch recovery: the links come back; the soft state
+    /// stays lost (leaders re-reduce, Section 3.3 loss equivalence).
+    Recover { node: u32 },
+    /// Scheduled link-down edge of a flap: both directed links between
+    /// `a` and `b` die, dropping their queues.
+    LinkDown { a: u32, b: u32 },
+    /// Scheduled link-up edge of a flap.
+    LinkUp { a: u32, b: u32 },
     /// Generic job kick-off (start a host's injection loop).
     JobWake { node: u32, job: u32 },
 }

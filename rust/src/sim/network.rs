@@ -15,7 +15,7 @@ use std::collections::VecDeque;
 
 use crate::collectives::JobRuntime;
 use crate::config::SimConfig;
-use crate::faults::FaultPlan;
+use crate::faults::{FaultEvent, FaultPlan};
 use crate::host::HostState;
 use crate::metrics::Metrics;
 use crate::switch::SwitchState;
@@ -71,8 +71,13 @@ pub struct Link {
     /// inputs (PFC-style lossless backpressure; DESIGN.md).
     pausing: bool,
     busy: bool,
-    /// Links go down when their endpoints fail (fault injection).
+    /// Links go down when their endpoints fail or a scheduled flap
+    /// hits (fault injection). Kept in sync with `down_refs` so every
+    /// read site stays a plain flag test.
     pub alive: bool,
+    /// Count of active down-causes (overlapping flap windows and
+    /// switch-failure intervals stack): the link is alive iff zero.
+    down_refs: u32,
     // --- metrics ---
     pub busy_ps: u64,
     pub bytes_tx: u64,
@@ -119,6 +124,7 @@ impl Link {
             pausing: false,
             busy: false,
             alive: true,
+            down_refs: 0,
             busy_ps: 0,
             bytes_tx: 0,
             drops: 0,
@@ -204,6 +210,11 @@ pub struct Ctx<'a> {
     pub cfg: &'a SimConfig,
     /// Per-node count of over-watermark output queues (paused inputs).
     pub node_paused: &'a mut [u32],
+    /// Straggler factor of this node (1 = nominal). Every delay passed
+    /// to [`Ctx::host_timer`] is stretched by it, so a straggler host
+    /// runs its whole protocol clock — injection pacing, retry timers —
+    /// `slowdown`x slower (fault injection; only ever > 1 for hosts).
+    pub slowdown: u32,
 }
 
 impl<'a> Ctx<'a> {
@@ -261,10 +272,12 @@ impl<'a> Ctx<'a> {
         self.links[self.ports[port as usize]].alive
     }
 
-    /// Schedule a host timer event.
+    /// Schedule a host timer event. A straggler host's timers are
+    /// stretched by its slowdown factor (1 for everyone else, so the
+    /// arithmetic is bit-identical in the nominal case).
     pub fn host_timer(&mut self, delay: Time, timer: u64) {
         self.queue.push(
-            self.now + delay,
+            self.now + delay * self.slowdown as Time,
             Event::HostTimer {
                 node: self.node_id,
                 timer,
@@ -411,6 +424,10 @@ fn start_tx(
 ) {
     let link = &mut links[link_id];
     debug_assert!(!link.busy);
+    if !link.alive {
+        // a dead transmitter serves nothing; `link_bring_up` re-kicks
+        return;
+    }
     let blocked0 = link.is_up() && node_paused[link.to as usize] > 0;
     if !link.head_serveable(blocked0) {
         return;
@@ -439,6 +456,9 @@ pub struct Network {
     /// Per-node count of over-watermark up-ports (inputs paused while
     /// non-zero).
     pub node_paused: Vec<u32>,
+    /// Per-node straggler factor (1 = nominal; set from the fault
+    /// plan's `StragglerHost` events at `kick_jobs`).
+    pub host_slowdown: Vec<u32>,
 }
 
 impl Network {
@@ -457,6 +477,7 @@ impl Network {
             cfg,
             events_processed: 0,
             node_paused: Vec::new(),
+            host_slowdown: Vec::new(),
         }
     }
 
@@ -470,6 +491,7 @@ impl Network {
             in_links: Vec::new(),
         });
         self.node_paused.push(0);
+        self.host_slowdown.push(1);
         id
     }
 
@@ -499,8 +521,28 @@ impl Network {
                 );
             }
         }
-        for (t, node) in self.faults.switch_failures.clone() {
-            self.queue.push(t, Event::Fail { node });
+        // convert the declarative fault timeline into sim events; an
+        // empty timeline schedules nothing (and draws nothing from the
+        // RNG), so it is provably inert (tests/churn.rs)
+        for ev in self.faults.events.clone() {
+            match ev {
+                FaultEvent::LinkFlap { a, b, down_at, up_at } => {
+                    self.queue.push(down_at, Event::LinkDown { a, b });
+                    self.queue.push(up_at, Event::LinkUp { a, b });
+                }
+                FaultEvent::SwitchFail { switch, at, recover_at } => {
+                    self.queue.push(at, Event::Fail { node: switch });
+                    if let Some(r) = recover_at {
+                        self.queue.push(r, Event::Recover { node: switch });
+                    }
+                }
+                FaultEvent::StragglerHost { host, slowdown } => {
+                    if slowdown > 1 {
+                        self.metrics.straggler_slowdowns += 1;
+                    }
+                    self.host_slowdown[host as usize] = slowdown;
+                }
+            }
         }
     }
 
@@ -588,6 +630,19 @@ impl Network {
                 }
             }),
             Event::Fail { node } => self.fail_switch(node),
+            Event::Recover { node } => self.recover_switch(node),
+            Event::LinkDown { a, b } => {
+                self.metrics.link_flaps += 1;
+                for li in self.links_between(a, b) {
+                    self.link_take_down(li);
+                }
+            }
+            Event::LinkUp { a, b } => {
+                self.metrics.link_recoveries += 1;
+                for li in self.links_between(a, b) {
+                    self.link_bring_up(li);
+                }
+            }
         }
     }
 
@@ -638,18 +693,25 @@ impl Network {
         }
         // resume the up-links that were blocked on this node
         if let Some(node) = unpaused_node {
-            let ins = self.nodes[node].in_links.clone();
-            for l in ins {
-                let link = &self.links[l];
-                if !link.busy && link.is_up() && link.queue_len() > 0 {
-                    start_tx(
-                        &mut self.links,
-                        &self.node_paused,
-                        &mut self.queue,
-                        self.now,
-                        l,
-                    );
-                }
+            self.rekick_node_inputs(node);
+        }
+    }
+
+    /// Restart any idle, backlogged up-link feeding `node` (after its
+    /// pause count drops to zero — via drain hysteresis or because a
+    /// pausing output died).
+    fn rekick_node_inputs(&mut self, node: usize) {
+        let ins = self.nodes[node].in_links.clone();
+        for l in ins {
+            let link = &self.links[l];
+            if !link.busy && link.is_up() && link.queue_len() > 0 {
+                start_tx(
+                    &mut self.links,
+                    &self.node_paused,
+                    &mut self.queue,
+                    self.now,
+                    l,
+                );
             }
         }
     }
@@ -707,6 +769,7 @@ impl Network {
             cfg,
             now,
             node_paused,
+            host_slowdown,
             ..
         } = self;
         let n = &mut nodes[node as usize];
@@ -722,29 +785,132 @@ impl Network {
             jobs,
             cfg,
             node_paused,
+            slowdown: host_slowdown[node as usize],
         };
         f(&mut n.body, &mut ctx);
     }
 
+    /// Every directed link touching `node` (its out-ports plus the
+    /// links terminating at it).
+    fn touching_links(&self, node: NodeId) -> Vec<LinkId> {
+        let n = &self.nodes[node as usize];
+        n.ports.iter().chain(n.in_links.iter()).copied().collect()
+    }
+
+    /// Both directed links between `a` and `b` (a flap kills the cable,
+    /// not one direction).
+    fn links_between(&self, a: NodeId, b: NodeId) -> Vec<LinkId> {
+        let ls: Vec<LinkId> = self.nodes[a as usize]
+            .ports
+            .iter()
+            .copied()
+            .filter(|&l| self.links[l].to == b)
+            .chain(
+                self.nodes[b as usize]
+                    .ports
+                    .iter()
+                    .copied()
+                    .filter(|&l| self.links[l].to == a),
+            )
+            .collect();
+        assert!(!ls.is_empty(), "fault plan flaps nonexistent link {a}<->{b}");
+        ls
+    }
+
+    /// Take one down-reference on link `li` (overlapping flap windows
+    /// and switch-failure intervals stack via the refcount). On the
+    /// 0 -> 1 edge the link dies: every queued packet is dropped and
+    /// freed (a downed link drops/queues nothing — the serializing
+    /// head, if any, stays and is dropped by its pending `TxDone`),
+    /// its pause contribution is released, and senders the release
+    /// unblocks are re-kicked. Leak-free by construction: the random-
+    /// fault-timeline property test in tests/churn.rs drains the run
+    /// and asserts zero live arena packets.
+    fn link_take_down(&mut self, li: LinkId) {
+        let link = &mut self.links[li];
+        link.down_refs += 1;
+        if link.down_refs > 1 {
+            return; // already down via another fault window
+        }
+        link.alive = false;
+        // flush the FIFO from the tail, keeping the in-flight head for
+        // its TxDone (which frees it on the dead-link branch)
+        let keep = usize::from(link.busy);
+        let mut dropped: Vec<QueuedPkt> = Vec::new();
+        while link.queue.len() > keep {
+            dropped.push(link.queue.pop_back().unwrap());
+        }
+        for q in &dropped {
+            let size = q.bytes as u64;
+            link.queued_bytes -= size;
+            link.class_bytes[q.class as usize] -= size;
+        }
+        // dead links stop pausing anyone
+        let mut unpaused = None;
+        if link.pausing {
+            link.pausing = false;
+            let from = link.from as usize;
+            self.node_paused[from] -= 1;
+            if self.node_paused[from] == 0 {
+                unpaused = Some(from);
+            }
+        }
+        for q in dropped {
+            self.metrics.drops_link_down += 1;
+            self.arena.free(q.id);
+        }
+        if let Some(node) = unpaused {
+            self.rekick_node_inputs(node);
+        }
+    }
+
+    /// Release one down-reference on link `li`; on the 1 -> 0 edge the
+    /// link revives and resumes serving (its queue is normally empty —
+    /// enqueues drop while down — but a pre-fault head may still be
+    /// serializing, and routing may have kept feeding a live reverse
+    /// direction).
+    fn link_bring_up(&mut self, li: LinkId) {
+        let link = &mut self.links[li];
+        debug_assert!(link.down_refs > 0, "bring-up on a live link");
+        link.down_refs = link.down_refs.saturating_sub(1);
+        if link.down_refs > 0 {
+            return; // still held down by an overlapping fault
+        }
+        link.alive = true;
+        if !link.busy && link.queue_len() > 0 {
+            start_tx(
+                &mut self.links,
+                &self.node_paused,
+                &mut self.queue,
+                self.now,
+                li,
+            );
+        }
+    }
+
     /// Fault injection: kill a switch — all its links (both directions)
-    /// go down and its soft state is lost (Section 3.3: treated like
-    /// packet loss by the protocol).
+    /// go down, dropping their queues, and its soft state is lost
+    /// (Section 3.3: treated like packet loss by the protocol).
     pub fn fail_switch(&mut self, node: NodeId) {
         self.metrics.switch_failures += 1;
-        for l in self.links.iter_mut() {
-            if l.from == node || l.to == node {
-                l.alive = false;
-                // dead links stop pausing anyone
-                if l.pausing {
-                    l.pausing = false;
-                    self.node_paused[l.from as usize] -= 1;
-                }
-            }
+        for li in self.touching_links(node) {
+            self.link_take_down(li);
         }
         if let NodeBody::Switch(sw) =
             &mut self.nodes[node as usize].body
         {
             crate::switch::clear_soft_state(sw);
+        }
+    }
+
+    /// Fault injection: revive a failed switch. Its links come back up
+    /// but the soft state stays lost — in-flight reductions that
+    /// depended on it recover through the protocol (leader timeouts,
+    /// retransmission, re-reduction), not through state restoration.
+    pub fn recover_switch(&mut self, node: NodeId) {
+        self.metrics.switch_recoveries += 1;
+        for li in self.touching_links(node) {
+            self.link_bring_up(li);
         }
     }
 

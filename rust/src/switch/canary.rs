@@ -190,6 +190,11 @@ pub fn on_timeout(
     if d.generation != generation || d.sent {
         return; // stale timer or already forwarded
     }
+    if d.counter < d.hosts {
+        // genuinely incomplete: the timeout is cutting stragglers off
+        // and emitting a partial aggregate (Section 3.1.1)
+        ctx.metrics.partial_aggregates += 1;
+    }
     forward_partial(sw, ctx, slot as usize);
 }
 

@@ -23,6 +23,7 @@
 use crate::collectives::runner::{install_background_job, install_job};
 use crate::collectives::{Algo, Collective, JobSpec};
 use crate::config::{ClosConfig, SimConfig};
+use crate::faults::FaultSpec;
 use crate::loadbalance::LoadBalancer;
 use crate::sim::{Network, NodeBody, NodeId, Time};
 use crate::topology::{build, FatTree};
@@ -272,6 +273,10 @@ pub struct ScenarioBuilder {
     pub sim: SimConfig,
     pub lb: LoadBalancer,
     pub traffic: Option<TrafficSpec>,
+    /// Fault plan installed on the built network (loss probability plus
+    /// the churn-event timeline). Empty by default — and an empty plan
+    /// is provably inert (tests/churn.rs).
+    pub faults: FaultSpec,
     jobs: Vec<JobBuilder>,
 }
 
@@ -282,6 +287,7 @@ impl ScenarioBuilder {
             sim: SimConfig::default(),
             lb: LoadBalancer::default(),
             traffic: None,
+            faults: FaultSpec::default(),
             jobs: Vec::new(),
         }
     }
@@ -310,6 +316,12 @@ impl ScenarioBuilder {
     /// multi-job scenarios alike.
     pub fn traffic(mut self, spec: Option<TrafficSpec>) -> Self {
         self.traffic = spec;
+        self
+    }
+
+    /// Install a fault plan (random loss + scheduled churn events).
+    pub fn faults(mut self, spec: FaultSpec) -> Self {
+        self.faults = spec;
         self
     }
 
@@ -366,6 +378,7 @@ impl ScenarioBuilder {
             }
         }
         let (mut net, ft) = build(self.topo, sim, self.lb.clone());
+        net.faults = self.faults.clone();
 
         // statically partition the descriptor table across tenants, as
         // most in-network algorithms do and the paper adopts for

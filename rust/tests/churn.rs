@@ -1,0 +1,329 @@
+//! Churn & failure scenario engine (DESIGN.md §2.6): scheduled link
+//! flaps, timed switch failure/recovery and straggler hosts installed
+//! through `FaultSpec` — pinned for determinism and inertness, checked
+//! end to end (Canary survives a mid-operation flap with exact values,
+//! static trees and ring stall as documented), and property-tested for
+//! packet-arena leaks under arbitrary finite fault timelines.
+
+mod common;
+
+use canary::collectives::{runner, Algo};
+use canary::config::{FatTreeConfig, SimConfig};
+use canary::faults::FaultSpec;
+use canary::loadbalance::LoadBalancer;
+use canary::sim::{Network, NodeBody, US};
+use canary::topology::FatTree;
+use canary::util::proptest_lite::check_property;
+use canary::util::rng::Rng;
+use canary::workload::{JobBuilder, ScenarioBuilder};
+use common::{fingerprint_bounded, lossy_scenario, verify};
+
+/// Total dead-port reroutes across every switch (the loadbalance
+/// reconvergence counter — stays zero on a healthy fabric).
+fn dead_reroutes(net: &Network) -> u64 {
+    net.nodes
+        .iter()
+        .map(|n| match &n.body {
+            NodeBody::Switch(sw) => sw.lb_state.dead_reroutes,
+            NodeBody::Host(_) => 0,
+        })
+        .sum()
+}
+
+/// A timeline exercising every scheduled event type at once.
+fn busy_spec() -> FaultSpec {
+    let ft = FatTree { cfg: FatTreeConfig::tiny() };
+    FaultSpec::default()
+        .with_link_flap(0, 8, 5 * US, 40 * US)
+        .with_straggler(3, 4)
+        .with_switch_fail(ft.spine_id(1), 20 * US, Some(60 * US))
+}
+
+// ---------------------------------------------------------------- pins
+
+/// Determinism: the same seed and the same fault timeline reproduce
+/// the run bit for bit; a different seed lands in a different world.
+#[test]
+fn faulted_runs_are_deterministic_from_their_seed() {
+    let sc = lossy_scenario(8, 64).faults(busy_spec());
+    let bound = 5_000_000 * US;
+    assert_eq!(
+        fingerprint_bounded(&sc, 42, bound),
+        fingerprint_bounded(&sc, 42, bound),
+        "same seed + same FaultSpec diverged"
+    );
+    assert_ne!(
+        fingerprint_bounded(&sc, 42, bound),
+        fingerprint_bounded(&sc, 43, bound),
+        "distinct seeds collapsed to one world"
+    );
+}
+
+/// Inertness: an empty fault timeline (and a slowdown-1 "straggler")
+/// is bit-identical to the fault-free build, and no fault counter
+/// moves — the engine is provably free for every recorded series.
+#[test]
+fn empty_fault_timeline_is_bit_identical_to_fault_free() {
+    let bound = 2_000_000 * US;
+    let plain = fingerprint_bounded(&lossy_scenario(6, 8), 42, bound);
+    let empty = fingerprint_bounded(
+        &lossy_scenario(6, 8).faults(FaultSpec::default()),
+        42,
+        bound,
+    );
+    let unit_straggler = fingerprint_bounded(
+        &lossy_scenario(6, 8)
+            .faults(FaultSpec::default().with_straggler(2, 1)),
+        42,
+        bound,
+    );
+    assert_eq!(plain, empty, "an empty FaultSpec perturbed the run");
+    assert_eq!(plain, unit_straggler, "slowdown 1 perturbed the run");
+
+    let mut exp =
+        lossy_scenario(6, 8).faults(FaultSpec::default()).build(42);
+    runner::run_to_completion(&mut exp.net, bound);
+    let m = &exp.net.metrics;
+    assert_eq!(
+        (
+            m.link_flaps,
+            m.link_recoveries,
+            m.switch_failures,
+            m.switch_recoveries,
+            m.straggler_slowdowns,
+            m.drops_link_down,
+            m.drops_injected,
+            m.partial_aggregates,
+            m.jobs_stalled,
+        ),
+        (0, 0, 0, 0, 0, 0, 0, 0, 0),
+        "fault counters moved on an empty timeline"
+    );
+    assert!(
+        !canary::report::fault_activity(m),
+        "clean run reported fault activity"
+    );
+    assert_eq!(m.jobs_completed, 1);
+    assert_eq!(dead_reroutes(&exp.net), 0, "healthy fabric rerouted");
+}
+
+// ------------------------------------------------------- end to end
+
+/// Canary completes a value-verified allreduce across a mid-operation
+/// flap of a host access link (the host is fully cut for 35 us; the
+/// leader protocol recovers every lost block once the link returns).
+#[test]
+fn canary_survives_mid_operation_access_link_flap() {
+    let sc = lossy_scenario(8, 64)
+        .faults(FaultSpec::default().with_link_flap(0, 8, 5 * US, 40 * US));
+    let mut exp = sc.build(31);
+    let res = runner::run_to_completion(&mut exp.net, 5_000_000 * US);
+    assert!(res[0].completed, "canary did not recover from the flap");
+    verify(&exp).unwrap();
+    let m = &exp.net.metrics;
+    assert_eq!((m.link_flaps, m.link_recoveries), (1, 1));
+    assert!(m.drops_link_down > 0, "the flap window hit no traffic");
+    assert_eq!((m.jobs_completed, m.jobs_stalled), (1, 0));
+}
+
+/// Same on the 3-tier fabric, flapping a leaf->agg uplink: the leaf
+/// still has a second parent, so the fabric stays connected throughout.
+#[test]
+fn canary_survives_leaf_uplink_flap_on_tiny3() {
+    let ft = FatTree { cfg: FatTreeConfig::tiny3() };
+    let leaf = ft.switch_id(1, 0);
+    let parent = ft.switch_id(2, ft.parent_index(1, 0, 0));
+    let sc = ScenarioBuilder::new(FatTreeConfig::tiny3())
+        .sim(
+            SimConfig::default()
+                .with_values(true)
+                .with_retrans(200 * US, true),
+        )
+        .faults(
+            FaultSpec::default().with_link_flap(leaf, parent, 5 * US, 40 * US),
+        )
+        .job(
+            JobBuilder::new(Algo::Canary)
+                .hosts(8)
+                .data_bytes(64 * 1024)
+                .record_results(true),
+        );
+    let mut exp = sc.build(17);
+    let res = runner::run_to_completion(&mut exp.net, 5_000_000 * US);
+    assert!(res[0].completed, "canary did not recover on tiny3");
+    verify(&exp).unwrap();
+    assert_eq!(exp.net.metrics.link_flaps, 1);
+    assert_eq!(exp.net.metrics.link_recoveries, 1);
+}
+
+/// The documented degradation contrast (DESIGN.md §2.6): under the
+/// exact flap Canary survives above, engines without recovery
+/// machinery lose in-flight packets and stall — the run ends inside
+/// the time bound with the job unfinished and counted as stalled.
+#[test]
+fn static_tree_and_ring_stall_under_the_same_flap() {
+    for algo in [Algo::StaticTree { n_trees: 1 }, Algo::Ring] {
+        let sc = ScenarioBuilder::new(FatTreeConfig::tiny())
+            .faults(
+                FaultSpec::default().with_link_flap(0, 8, 5 * US, 40 * US),
+            )
+            .job(JobBuilder::new(algo).hosts(8).data_bytes(64 * 1024));
+        let mut exp = sc.build(9);
+        let res = runner::run_to_completion(&mut exp.net, 10_000 * US);
+        assert!(!res[0].completed, "{algo:?} has no recovery, yet finished");
+        assert!(res[0].runtime_ps.is_none(), "{algo:?} reported a runtime");
+        let m = &exp.net.metrics;
+        assert!(m.drops_link_down > 0, "{algo:?}: flap hit no traffic");
+        assert_eq!(
+            (m.jobs_completed, m.jobs_stalled),
+            (0, 1),
+            "{algo:?}: completion split wrong"
+        );
+    }
+}
+
+/// Routing reconvergence: with a leaf->spine uplink down for the whole
+/// run, up-hop selection must re-route around the dead port (the
+/// port-down bit) — and Canary's recovery machinery patches the
+/// down-direction losses the local bit cannot see, so the job still
+/// completes with exact values.
+#[test]
+fn load_balancer_reroutes_around_a_downed_uplink() {
+    let ft = FatTree { cfg: FatTreeConfig::tiny() };
+    let spine = ft.spine_id(0);
+    let sc = lossy_scenario(8, 64)
+        .lb(LoadBalancer::Ecmp)
+        .faults(
+            FaultSpec::default().with_link_flap(8, spine, 1, 1_000_000 * US),
+        );
+    let mut exp = sc.build(13);
+    let res = runner::run_to_completion(&mut exp.net, 5_000_000 * US);
+    assert!(res[0].completed, "canary did not route around the dead spine");
+    verify(&exp).unwrap();
+    assert!(
+        dead_reroutes(&exp.net) > 0,
+        "no up-hop ever re-picked around the dead port"
+    );
+}
+
+// ------------------------------------------------- timeout sensitivity
+
+/// Shrinking the Canary timeout under a straggler host monotonically
+/// increases partial-aggregate emissions (non-strict): each smaller
+/// timeout fires at least as often before the slow host's
+/// contributions arrive. Values stay exact throughout — partials are
+/// patched by the leader protocol.
+#[test]
+fn shrinking_timeout_increases_partials_under_a_straggler() {
+    let timeouts = [256 * US, 16 * US, US];
+    let mut partials = Vec::new();
+    for &t in &timeouts {
+        let mut sc = lossy_scenario(8, 4)
+            .faults(FaultSpec::default().with_straggler(3, 16));
+        sc.sim.canary_timeout_ps = t;
+        let mut exp = sc.build(77);
+        let res = runner::run_to_completion(&mut exp.net, 5_000_000 * US);
+        assert!(res[0].completed, "timeout {t} ps: run did not complete");
+        verify(&exp).unwrap();
+        assert_eq!(exp.net.metrics.straggler_slowdowns, 1);
+        partials.push(exp.net.metrics.partial_aggregates);
+    }
+    assert!(
+        partials.windows(2).all(|w| w[0] <= w[1]),
+        "partials must be non-decreasing as the timeout shrinks \
+         (timeouts {timeouts:?} -> partials {partials:?})"
+    );
+    assert!(
+        partials[timeouts.len() - 1] > 0,
+        "the aggressive timeout never fired on a 16x straggler"
+    );
+}
+
+/// An oversized timeout must never deadlock: the aggregation simply
+/// waits the straggler out and completes inside the simulated-time
+/// bound without a single partial emission.
+#[test]
+fn oversized_timeout_waits_out_the_straggler_without_deadlock() {
+    let mut sc = lossy_scenario(8, 4)
+        .faults(FaultSpec::default().with_straggler(5, 8));
+    sc.sim.canary_timeout_ps = 100_000 * US;
+    let mut exp = sc.build(99);
+    let res = runner::run_to_completion(&mut exp.net, 1_000_000 * US);
+    assert!(
+        res[0].completed && res[0].runtime_ps.is_some(),
+        "oversized timeout deadlocked the aggregation"
+    );
+    verify(&exp).unwrap();
+    assert_eq!(
+        exp.net.metrics.partial_aggregates,
+        0,
+        "a timeout far beyond the runtime still fired"
+    );
+}
+
+// ------------------------------------------------------ leak property
+
+/// Any random finite fault timeline — flaps on access links, a timed
+/// spine failure with recovery, a straggler — drains cleanly for every
+/// engine: no event left behind, every packet returned to the arena,
+/// and the arena slab never grew past its live peak (the scheduler
+/// suite's zero-leak bar, now under churn). This is what pins the
+/// take-down path's drop-vs-flush accounting.
+#[test]
+fn random_fault_timelines_never_leak_arena_packets() {
+    check_property("churn-drain", 0xC4, 6, |rng: &mut Rng| {
+        let ft = FatTree { cfg: FatTreeConfig::tiny() };
+        let mut spec = FaultSpec::default();
+        for _ in 0..(1 + rng.gen_range(3)) {
+            let h = rng.gen_range(8) as u32;
+            let leaf = ft.switch_id(1, ft.leaf_of_host(h));
+            let down = (1 + rng.gen_range(50)) * US;
+            let up = down + (1 + rng.gen_range(100)) * US;
+            spec = spec.with_link_flap(h, leaf, down, up);
+        }
+        if rng.chance(0.5) {
+            let host = rng.gen_range(8) as u32;
+            let factor = 1 + rng.gen_range(4) as u32;
+            spec = spec.with_straggler(host, factor);
+        }
+        if rng.chance(0.5) {
+            let at = (1 + rng.gen_range(30)) * US;
+            spec = spec.with_switch_fail(
+                ft.spine_id(rng.gen_range(2) as u32),
+                at,
+                Some(at + 50 * US),
+            );
+        }
+        for algo in [Algo::Canary, Algo::StaticTree { n_trees: 1 }, Algo::Ring] {
+            let mut sc = ScenarioBuilder::new(FatTreeConfig::tiny())
+                .faults(spec.clone())
+                .job(JobBuilder::new(algo).hosts(6).data_bytes(32 * 1024));
+            if algo == Algo::Canary {
+                // arm recovery so the canary run converges rather than
+                // re-arming retransmission timers forever
+                sc = sc.sim(SimConfig::default().with_retrans(200 * US, true));
+            }
+            let mut exp = sc.build(rng.next_u64());
+            exp.net.kick_jobs();
+            exp.net.run_all(u64::MAX);
+            if !exp.net.queue.is_empty() {
+                return Err(format!("{algo:?}: events left behind"));
+            }
+            if exp.net.arena.live() != 0 {
+                return Err(format!(
+                    "{algo:?}: {} packet ids leaked under {spec:?}",
+                    exp.net.arena.live()
+                ));
+            }
+            if exp.net.arena.peak_live() == 0 {
+                return Err(format!("{algo:?}: nothing flew"));
+            }
+            if exp.net.arena.slot_count() as u32 != exp.net.arena.peak_live() {
+                return Err(format!(
+                    "{algo:?}: slab grew past the live peak"
+                ));
+            }
+        }
+        Ok(())
+    });
+}

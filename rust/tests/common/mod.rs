@@ -1,0 +1,79 @@
+//! Shared scenario setup for the integration-test crates.
+//!
+//! Each crate pulls these in with `mod common;`. The helpers were
+//! extracted from `tests/fault_tolerance.rs` / `tests/transport.rs`
+//! where they had been copy-pasted; `tests/churn.rs` reuses them for
+//! the fault-injection harness. Any single crate uses a subset, hence
+//! the dead_code allow.
+#![allow(dead_code)]
+
+use canary::collectives::{runner, verify_job, Algo};
+use canary::config::{FatTreeConfig, SimConfig};
+use canary::sim::{Time, US};
+use canary::traffic::TrafficSpec;
+use canary::transport::TransportSpec;
+use canary::workload::{Experiment, JobBuilder, ScenarioBuilder};
+
+/// Canary allreduce on the tiny fabric with value recording and a
+/// short loss-recovery timer — the base scenario of the fault and
+/// churn suites (loss/flap/failure specs are layered on per test).
+pub fn lossy_scenario(hosts: u32, kib: u64) -> ScenarioBuilder {
+    ScenarioBuilder::new(FatTreeConfig::tiny())
+        .sim(
+            SimConfig::default()
+                .with_values(true)
+                // short loss-recovery timer so tests converge quickly
+                .with_retrans(200 * US, true),
+        )
+        .job(
+            JobBuilder::new(Algo::Canary)
+                .hosts(hosts)
+                .data_bytes(kib * 1024)
+                .record_results(true),
+        )
+}
+
+/// The recorded fig2-style congestion cell at test scale: a Canary
+/// allreduce on the 64-host fabric under the paper's uniform line-rate
+/// cross traffic (the same scenario `tests/traffic_engine.rs` pins
+/// against the inlined legacy generator).
+pub fn figure_scenario(sim: SimConfig) -> ScenarioBuilder {
+    ScenarioBuilder::new(FatTreeConfig::small())
+        .sim(sim)
+        .traffic(Some(TrafficSpec::uniform()))
+        .job(JobBuilder::new(Algo::Canary).hosts(8).data_bytes(64 * 1024))
+}
+
+/// Tiny-fabric incast overload: 2 hosts run the allreduce, the other
+/// 6 form one 5-into-1 incast group at line rate — the sink's downlink
+/// is 5x oversubscribed, so the class-1 policer must drop.
+pub fn incast_scenario(tp: TransportSpec) -> ScenarioBuilder {
+    ScenarioBuilder::new(FatTreeConfig::tiny())
+        .traffic(Some(TrafficSpec::incast(5).with_transport(tp)))
+        .job(JobBuilder::new(Algo::Canary).hosts(2).data_bytes(64 * 1024))
+}
+
+/// Check the experiment's job produced exact allreduce values.
+pub fn verify(exp: &Experiment) -> Result<(), String> {
+    verify_job(&exp.net.jobs[exp.job as usize])
+}
+
+/// Run a scenario to completion and digest everything the outcome
+/// hangs on into one u64 (same shape `tests/scheduler.rs` pins on).
+pub fn fingerprint_of(sc: &ScenarioBuilder, seed: u64) -> u64 {
+    fingerprint_bounded(sc, seed, u64::MAX)
+}
+
+/// [`fingerprint_of`] with an explicit simulated-time bound, for runs
+/// that may legitimately stall (faulted scenarios).
+pub fn fingerprint_bounded(
+    sc: &ScenarioBuilder,
+    seed: u64,
+    max_time: Time,
+) -> u64 {
+    let mut exp = sc.build(seed);
+    runner::run_to_completion(&mut exp.net, max_time);
+    exp.net
+        .metrics
+        .fingerprint(exp.net.now, exp.net.events_processed)
+}

@@ -1,41 +1,29 @@
 //! Fault tolerance (paper Section 3.3): random packet loss and switch
 //! failures are handled end-to-end by the leader protocol — blocks are
 //! retransmitted or re-reduced under fresh ids, and values stay exact.
+//!
+//! Scheduled churn (link flaps, timed switch recovery, stragglers)
+//! lives in `tests/churn.rs`; this suite covers the random-loss and
+//! permanent-failure half of the `FaultSpec` surface.
 
-use canary::collectives::{runner, verify_job, Algo, Collective};
+mod common;
+
+use canary::collectives::{runner, Algo, Collective};
 use canary::config::{FatTreeConfig, SimConfig};
-use canary::faults::FaultPlan;
+use canary::faults::FaultSpec;
 use canary::sim::US;
+use canary::topology::FatTree;
 use canary::util::proptest_lite::check_property;
 use canary::util::rng::Rng;
 use canary::workload::{JobBuilder, ScenarioBuilder};
-
-fn lossy_scenario(hosts: u32, kib: u64) -> ScenarioBuilder {
-    ScenarioBuilder::new(FatTreeConfig::tiny())
-        .sim(
-            SimConfig::default()
-                .with_values(true)
-                // short loss-recovery timer so tests converge quickly
-                .with_retrans(200 * US, true),
-        )
-        .job(
-            JobBuilder::new(Algo::Canary)
-                .hosts(hosts)
-                .data_bytes(kib * 1024)
-                .record_results(true),
-        )
-}
-
-fn verify(exp: &canary::workload::Experiment) -> Result<(), String> {
-    verify_job(&exp.net.jobs[exp.job as usize])
-}
+use common::{lossy_scenario, verify};
 
 #[test]
 fn survives_random_packet_loss() {
     check_property("loss-recovery", 0xF0, 5, |rng: &mut Rng| {
-        let sc = lossy_scenario(4 + rng.gen_range(4) as u32, 4);
+        let sc = lossy_scenario(4 + rng.gen_range(4) as u32, 4)
+            .faults(FaultSpec::default().with_loss(0.02));
         let mut exp = sc.build(rng.next_u64());
-        exp.net.faults = FaultPlan::default().with_loss(0.02);
         runner::run_to_completion(&mut exp.net, 2_000_000 * US);
         if exp.net.metrics.drops_injected == 0 {
             return Err("no loss was injected".into());
@@ -46,9 +34,9 @@ fn survives_random_packet_loss() {
 
 #[test]
 fn survives_heavy_packet_loss() {
-    let sc = lossy_scenario(4, 2);
+    let sc = lossy_scenario(4, 2)
+        .faults(FaultSpec::default().with_loss(0.10));
     let mut exp = sc.build(42);
-    exp.net.faults = FaultPlan::default().with_loss(0.10);
     runner::run_to_completion(&mut exp.net, 5_000_000 * US);
     verify(&exp).unwrap();
     // heavy loss must have exercised the failure/retry machinery
@@ -62,15 +50,15 @@ fn survives_heavy_packet_loss() {
 #[test]
 fn survives_spine_switch_failure() {
     // kill one spine mid-transfer: its soft state is lost; the leaders
-    // recover every affected block (loss-equivalent, Section 3.3)
-    let sc = lossy_scenario(8, 64);
-    let mut exp = sc.build(21);
-    let spine = exp.ft.spine_id(0);
+    // recover every affected block (loss-equivalent, Section 3.3).
     // fail mid-transfer (a 64 KiB allreduce runs for tens of us)
-    exp.net.faults =
-        FaultPlan::default().with_switch_failure(5 * US, spine);
+    let spine = FatTree { cfg: FatTreeConfig::tiny() }.spine_id(0);
+    let sc = lossy_scenario(8, 64)
+        .faults(FaultSpec::default().with_switch_fail(spine, 5 * US, None));
+    let mut exp = sc.build(21);
     runner::run_to_completion(&mut exp.net, 5_000_000 * US);
     assert_eq!(exp.net.metrics.switch_failures, 1);
+    assert_eq!(exp.net.metrics.switch_recoveries, 0);
     verify(&exp).unwrap();
 }
 
@@ -78,10 +66,10 @@ fn survives_spine_switch_failure() {
 fn fallback_to_host_based_reduction() {
     // max_retries 0 forces direct (host-based) contributions on the
     // first failure round, which must still produce exact results
-    let mut sc = lossy_scenario(5, 2);
+    let mut sc = lossy_scenario(5, 2)
+        .faults(FaultSpec::default().with_loss(0.05));
     sc.sim.max_retries = 0;
     let mut exp = sc.build(33);
-    exp.net.faults = FaultPlan::default().with_loss(0.05);
     runner::run_to_completion(&mut exp.net, 5_000_000 * US);
     verify(&exp).unwrap();
 }
@@ -113,6 +101,7 @@ fn derived_collectives_survive_packet_loss() {
                     .with_values(true)
                     .with_retrans(200 * US, true),
             )
+            .faults(FaultSpec::default().with_loss(0.03))
             .job(
                 JobBuilder::new(Algo::Canary)
                     .collective(c)
@@ -121,7 +110,6 @@ fn derived_collectives_survive_packet_loss() {
                     .record_results(true),
             );
         let mut exp = sc.build(19);
-        exp.net.faults = FaultPlan::default().with_loss(0.03);
         runner::run_to_completion(&mut exp.net, 5_000_000 * US);
         assert!(
             exp.net.metrics.drops_injected > 0,

@@ -9,6 +9,8 @@
 //! (The DCQCN decrease/recovery monotonicity of the `FlowCc` state
 //! machine itself is unit-tested in `transport::cc`.)
 
+mod common;
+
 use canary::collectives::Algo;
 use canary::config::{FatTreeConfig, SimConfig};
 use canary::metrics::Metrics;
@@ -16,26 +18,7 @@ use canary::sim::{PacketKind, Time, US};
 use canary::traffic::TrafficSpec;
 use canary::transport::TransportSpec;
 use canary::workload::{JobBuilder, ScenarioBuilder};
-
-/// The recorded fig2-style congestion cell at test scale: a Canary
-/// allreduce on the 64-host fabric under the paper's uniform line-rate
-/// cross traffic (the same scenario `tests/traffic_engine.rs` pins
-/// against the inlined legacy generator).
-fn figure_scenario(sim: SimConfig) -> ScenarioBuilder {
-    ScenarioBuilder::new(FatTreeConfig::small())
-        .sim(sim)
-        .traffic(Some(TrafficSpec::uniform()))
-        .job(JobBuilder::new(Algo::Canary).hosts(8).data_bytes(64 * 1024))
-}
-
-/// Tiny-fabric incast overload: 2 hosts run the allreduce, the other
-/// 6 form one 5-into-1 incast group at line rate — the sink's downlink
-/// is 5x oversubscribed, so the class-1 policer must drop.
-fn incast_scenario(tp: TransportSpec) -> ScenarioBuilder {
-    ScenarioBuilder::new(FatTreeConfig::tiny())
-        .traffic(Some(TrafficSpec::incast(5).with_transport(tp)))
-        .job(JobBuilder::new(Algo::Canary).hosts(2).data_bytes(64 * 1024))
-}
+use common::{figure_scenario, incast_scenario};
 
 /// Everything a run's outcome hangs on, bitwise.
 #[allow(clippy::type_complexity)]

@@ -11,12 +11,13 @@ compares the *headline* events/sec — the serial re-run of the largest
 Canary cell — and fails (exit 1) when the current run is more than
 MAX_REGRESSION (25 %) slower than the baseline.
 
-Updating the baseline
----------------------
-When a PR legitimately changes engine throughput (or to record the
-first real measurement — the seed baseline ships with
-"events_per_sec": null, which makes this script report-and-pass):
+A baseline with "events_per_sec": null is an UNARMED gate: it compares
+nothing and protects nothing. This script fails loudly on it (it used
+to report-and-pass, which let the null seed baseline ride along
+unnoticed for several PRs) — record a real measurement to arm it.
 
+Updating (or first recording) the baseline
+------------------------------------------
     cargo run --release --bin figures -- scale --scale ci --out results
     cp results/BENCH_scale.json scripts/bench_baselines/BENCH_scale.json
     git add scripts/bench_baselines/BENCH_scale.json   # commit with the PR
@@ -27,12 +28,40 @@ uploaded `bench-json` artifact, not from a laptop, so the comparison
 stays apples-to-apples. The 25 % tolerance absorbs normal
 runner-to-runner jitter; if the gate flaps without a real change,
 re-measure on CI before loosening anything.
+
+The pure comparison lives in gate() so scripts/test_check_bench.py can
+unit-test it without benchmark files.
 """
 
 import json
 import sys
 
 MAX_REGRESSION = 0.25  # fail when current < (1 - this) * baseline
+
+REFRESH_STEPS = (
+    "  cargo run --release --bin figures -- scale --scale ci --out results\n"
+    "  cp results/BENCH_scale.json scripts/bench_baselines/BENCH_scale.json\n"
+    "  git add scripts/bench_baselines/BENCH_scale.json\n"
+    "(refresh from a CI run's uploaded bench-json artifact, not a "
+    "laptop — see this script's header)"
+)
+
+
+def gate(cur, base, max_regression=MAX_REGRESSION):
+    """Pure gate verdict for a current vs. baseline events/sec pair.
+
+    Returns (verdict, ratio) with verdict one of:
+      "fail" — current regressed past the tolerance
+      "fast" — current improved past the tolerance (refresh suggested)
+      "pass" — within tolerance
+    Both inputs must already be validated positive numbers.
+    """
+    ratio = cur / base
+    if ratio < 1.0 - max_regression:
+        return "fail", ratio
+    if ratio > 1.0 + max_regression:
+        return "fast", ratio
+    return "pass", ratio
 
 
 def load(path):
@@ -62,11 +91,9 @@ def main():
     baseline = load(baseline_path)
     if baseline is None:
         # a *missing* baseline file is a broken gate (typo'd path,
-        # renamed file), not a bootstrap: only an explicitly committed
-        # "events_per_sec": null may pass unarmed
+        # renamed file) — same disease as a null value, same cure
         sys.exit(f"check_bench: baseline {baseline_path} not found — "
-                 "refusing to run unarmed; commit a baseline (or the "
-                 "null-valued seed file) at that path")
+                 "refusing to run unarmed; record one:\n" + REFRESH_STEPS)
     base = baseline.get("events_per_sec")
     cell = current.get("headline_cell", "?")
     print(f"check_bench: headline cell {cell}")
@@ -74,27 +101,25 @@ def main():
           f"({current.get('headline_events', '?')} events)")
 
     if base is None:
-        print(f"check_bench: baseline in {baseline_path} is null — "
-              "PASS (bootstrap).")
-        print("check_bench: record one with the steps in this script's "
-              "header to arm the regression gate.")
-        return
+        sys.exit(f"check_bench: FAIL — baseline in {baseline_path} is "
+                 "null, so the regression gate is unarmed and gates "
+                 "NOTHING. Record a real baseline:\n" + REFRESH_STEPS)
     if not isinstance(base, (int, float)) or base <= 0:
         sys.exit(f"check_bench: baseline {baseline_path} has a "
                  f"non-positive events_per_sec ({base!r}) — fix or "
                  "re-record it")
 
-    ratio = cur / base
+    verdict, ratio = gate(cur, base)
     print(f"check_bench: baseline {base / 1e6:8.2f} M events/s "
           f"(current/baseline = {ratio:.3f})")
-    if ratio < 1.0 - MAX_REGRESSION:
+    if verdict == "fail":
         sys.exit(f"check_bench: FAIL — events/sec regressed "
                  f"{(1.0 - ratio) * 100.0:.1f}% "
                  f"(> {MAX_REGRESSION * 100:.0f}% tolerance). If this "
                  "change intentionally trades throughput, refresh the "
                  "baseline per the script header and document it in "
                  "EXPERIMENTS.md §Scale.")
-    if ratio > 1.0 + MAX_REGRESSION:
+    if verdict == "fast":
         print(f"check_bench: current is {(ratio - 1.0) * 100.0:.1f}% "
               "faster than the baseline — consider refreshing it so the "
               "gate protects the new level.")

@@ -1,0 +1,153 @@
+#!/usr/bin/env python3
+"""Unit tests for the CI bench gate (scripts/check_bench.py).
+
+Run directly:  python3 scripts/test_check_bench.py
+
+Covers the pure gate() verdicts at and around the tolerance boundary,
+and the end-to-end exit codes of main() via subprocess on temp JSON —
+in particular that a null baseline is a loud FAILURE (the seed shipped
+a null baseline that the old script reported-and-passed on, gating
+nothing).
+"""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import unittest
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+SCRIPT = os.path.join(HERE, "check_bench.py")
+sys.path.insert(0, HERE)
+
+import check_bench  # noqa: E402
+
+
+class GateLogic(unittest.TestCase):
+    def test_equal_passes(self):
+        verdict, ratio = check_bench.gate(100.0, 100.0)
+        self.assertEqual(verdict, "pass")
+        self.assertAlmostEqual(ratio, 1.0)
+
+    def test_small_regression_within_tolerance_passes(self):
+        verdict, _ = check_bench.gate(80.0, 100.0)  # -20% < 25% tolerance
+        self.assertEqual(verdict, "pass")
+
+    def test_boundary_regression_passes(self):
+        # exactly at (1 - MAX_REGRESSION): not *more than* 25% slower
+        verdict, _ = check_bench.gate(75.0, 100.0)
+        self.assertEqual(verdict, "pass")
+
+    def test_past_boundary_regression_fails(self):
+        verdict, ratio = check_bench.gate(74.9, 100.0)
+        self.assertEqual(verdict, "fail")
+        self.assertLess(ratio, 1.0 - check_bench.MAX_REGRESSION)
+
+    def test_large_regression_fails(self):
+        self.assertEqual(check_bench.gate(10.0, 100.0)[0], "fail")
+
+    def test_improvement_within_tolerance_passes(self):
+        self.assertEqual(check_bench.gate(120.0, 100.0)[0], "pass")
+
+    def test_boundary_improvement_passes(self):
+        self.assertEqual(check_bench.gate(125.0, 100.0)[0], "pass")
+
+    def test_large_improvement_flags_fast(self):
+        verdict, ratio = check_bench.gate(200.0, 100.0)
+        self.assertEqual(verdict, "fast")
+        self.assertAlmostEqual(ratio, 2.0)
+
+    def test_custom_tolerance(self):
+        self.assertEqual(check_bench.gate(89.0, 100.0, 0.10)[0], "fail")
+        self.assertEqual(check_bench.gate(91.0, 100.0, 0.10)[0], "pass")
+
+
+class MainExitCodes(unittest.TestCase):
+    def setUp(self):
+        self.dir = tempfile.TemporaryDirectory()
+
+    def tearDown(self):
+        self.dir.cleanup()
+
+    def _write(self, name, payload):
+        path = os.path.join(self.dir.name, name)
+        with open(path, "w") as f:
+            json.dump(payload, f)
+        return path
+
+    def _run(self, cur_path, base_path):
+        return subprocess.run(
+            [sys.executable, SCRIPT, cur_path, base_path],
+            capture_output=True,
+            text=True,
+        )
+
+    def _current(self, eps):
+        return {
+            "bench": "scale_weak_sweep",
+            "headline_cell": "canary_4096hosts_3tier_cross",
+            "headline_events": 123456,
+            "events_per_sec": eps,
+        }
+
+    def test_healthy_run_exits_zero(self):
+        cur = self._write("cur.json", self._current(1.0e6))
+        base = self._write("base.json", {"events_per_sec": 1.0e6})
+        r = self._run(cur, base)
+        self.assertEqual(r.returncode, 0, r.stderr)
+        self.assertIn("PASS", r.stdout)
+
+    def test_null_baseline_fails_loudly(self):
+        cur = self._write("cur.json", self._current(1.0e6))
+        base = self._write("base.json", {"events_per_sec": None})
+        r = self._run(cur, base)
+        self.assertNotEqual(r.returncode, 0)
+        self.assertIn("unarmed", r.stderr)
+        # refresh instructions must be in the failure message
+        self.assertIn("bench_baselines", r.stderr)
+
+    def test_missing_baseline_fails(self):
+        cur = self._write("cur.json", self._current(1.0e6))
+        r = self._run(cur, os.path.join(self.dir.name, "nope.json"))
+        self.assertNotEqual(r.returncode, 0)
+        self.assertIn("not found", r.stderr)
+
+    def test_regression_fails(self):
+        cur = self._write("cur.json", self._current(0.5e6))
+        base = self._write("base.json", {"events_per_sec": 1.0e6})
+        r = self._run(cur, base)
+        self.assertNotEqual(r.returncode, 0)
+        self.assertIn("regressed", r.stderr)
+
+    def test_big_improvement_passes_with_note(self):
+        cur = self._write("cur.json", self._current(2.0e6))
+        base = self._write("base.json", {"events_per_sec": 1.0e6})
+        r = self._run(cur, base)
+        self.assertEqual(r.returncode, 0, r.stderr)
+        self.assertIn("faster", r.stdout)
+
+    def test_missing_current_fails(self):
+        base = self._write("base.json", {"events_per_sec": 1.0e6})
+        r = self._run(os.path.join(self.dir.name, "nope.json"), base)
+        self.assertNotEqual(r.returncode, 0)
+
+    def test_nonnumeric_current_fails(self):
+        cur = self._write("cur.json", self._current("fast"))
+        base = self._write("base.json", {"events_per_sec": 1.0e6})
+        r = self._run(cur, base)
+        self.assertNotEqual(r.returncode, 0)
+        self.assertIn("positive", r.stderr)
+
+    def test_invalid_json_fails(self):
+        path = os.path.join(self.dir.name, "bad.json")
+        with open(path, "w") as f:
+            f.write("{not json")
+        base = self._write("base.json", {"events_per_sec": 1.0e6})
+        r = self._run(path, base)
+        self.assertNotEqual(r.returncode, 0)
+        self.assertIn("not valid JSON", r.stderr)
+
+
+if __name__ == "__main__":
+    unittest.main(verbosity=2)
