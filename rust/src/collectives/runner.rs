@@ -16,6 +16,7 @@ use crate::host::{
 use crate::sim::{Network, NodeBody, NodeId, Time};
 use crate::switch::static_tree::TreeRole;
 use crate::topology::{FatTree, Hop};
+use crate::trace::SpanKind;
 use crate::traffic::{engine, TrafficHost, TrafficSpec};
 use crate::util::rng::Rng;
 
@@ -69,6 +70,14 @@ pub(crate) fn install_job(
             spec.participants.len()
         );
     }
+    net.tracer.span(
+        0,
+        SpanKind::Install,
+        net.jobs.len() as u32,
+        spec.participants[0],
+        None,
+        spec.participants.len() as u64,
+    );
     match spec.algo {
         Algo::Canary => install_canary_job(net, spec),
         Algo::StaticTree { .. } => install_static_job(net, ft, spec),
@@ -291,12 +300,28 @@ pub(crate) fn install_background_job(
 pub fn run_to_completion(net: &mut Network, max_time: Time) -> Vec<JobResult> {
     net.kick_jobs();
     net.run(max_time);
-    for j in net.jobs.iter() {
+    for (idx, j) in net.jobs.iter().enumerate() {
         if j.spec.algo.is_allreduce() {
-            if j.finish.is_some() {
+            if let Some(finish) = j.finish {
                 net.metrics.jobs_completed += 1;
+                net.tracer.span(
+                    finish,
+                    SpanKind::Complete,
+                    idx as u32,
+                    j.spec.participants[0],
+                    None,
+                    j.spec.participants.len() as u64,
+                );
             } else {
                 net.metrics.jobs_stalled += 1;
+                net.tracer.span(
+                    net.now,
+                    SpanKind::Stalled,
+                    idx as u32,
+                    j.spec.participants[0],
+                    None,
+                    j.spec.participants.len() as u64,
+                );
             }
         }
     }

@@ -6,7 +6,7 @@
 //! ```text
 //! figures all            [--scale full|half|ci] [--seeds N] [--out DIR]
 //! figures fig2|fig6|fig7a|fig7b|fig8|fig9|fig10a|fig10b|fig11|mem|clos3
-//!         |traffic|transport|placement|scale|churn|ablation ...
+//!         |traffic|transport|placement|scale|churn|trace|ablation ...
 //! ```
 //!
 //! `full` reproduces the paper's parameters (1024 hosts, 4 MiB, 5 seeds —
@@ -32,12 +32,13 @@ use crate::metrics::{
 use crate::report::Series;
 use crate::sim::{ps_to_us, US};
 use crate::topology::Clos;
+use crate::trace::TraceSpec;
 use crate::traffic::TrafficSpec;
 use crate::transport::TransportSpec;
 use crate::util::cli::Args;
 use crate::util::json::{obj, Value};
 use crate::util::par::par_map;
-use crate::util::stats::{mean, percentile_sorted, stddev};
+use crate::util::stats::{mean, percentile, percentile_sorted, stddev};
 use crate::workload::{JobBuilder, Placement, ScenarioBuilder};
 
 /// Experiment scale knob.
@@ -1132,7 +1133,7 @@ pub fn churn(o: &Opts) -> Series {
             .position(|&f| f == c.flaps)
             .expect("cell flap level not in FLAP_LEVELS");
         let base = &results[(ci - flap_pos) * seeds..(ci - flap_pos + 1) * seeds];
-        let mut recovery_us: Vec<f64> = rs
+        let recovery_us: Vec<f64> = rs
             .iter()
             .zip(base)
             .filter_map(|(r, b)| match (r.1, b.1) {
@@ -1142,15 +1143,15 @@ pub fn churn(o: &Opts) -> Series {
                 _ => None,
             })
             .collect();
-        recovery_us.sort_by(|a, b| a.total_cmp(b));
         let completed = rs.iter().filter(|r| r.0).count();
         let completion_pct = 100.0 * completed as f64 / seeds as f64;
         let goodput: Vec<f64> =
             rs.iter().filter_map(|r| r.2).collect();
         let partials: u64 = rs.iter().map(|r| r.3).sum();
         let dead_drops: u64 = rs.iter().map(|r| r.4).sum();
-        let p50 = percentile_sorted(&recovery_us, 50.0);
-        let p95 = percentile_sorted(&recovery_us, 95.0);
+        // quantiles via the one shared implementation (util::stats)
+        let p50 = percentile(&recovery_us, 50.0);
+        let p95 = percentile(&recovery_us, 95.0);
         s.push(vec![
             c.label.to_string(),
             c.algo.name(),
@@ -1188,6 +1189,63 @@ pub fn churn(o: &Opts) -> Series {
     match std::fs::write(&path, entry.to_json()) {
         Ok(()) => println!("wrote {path}"),
         Err(e) => eprintln!("{path} write failed: {e}"),
+    }
+    finish(s, o)
+}
+
+/// Telemetry demo: one traced tiny3 churn run (leaf-uplink flap plus a
+/// 16x straggler, 1 µs aggregation timeout) that exercises all three
+/// trace collectors and writes `trace_timeline.csv`,
+/// `trace_spans.csv`, and `trace_trees.json` under `<out>/trace`
+/// (EXPERIMENTS.md "Trace workflow"; render with
+/// `scripts/plot_trace.py`).
+pub fn trace_cell(o: &Opts) -> Series {
+    let topo = ClosConfig::tiny3();
+    let ft = Clos { cfg: topo };
+    let leaf = ft.switch_id(1, 0);
+    let parent = ft.switch_id(2, ft.parent_index(1, 0, 0));
+    let faults = FaultSpec::default()
+        .with_link_flap(leaf, parent, 5 * US, 30 * US)
+        .with_straggler(3, 16);
+    let sim = SimConfig::default().with_timeout(US).with_retrans(200 * US, true);
+    let sc = ScenarioBuilder::new(topo)
+        .sim(sim)
+        .faults(faults)
+        .trace(Some(TraceSpec::default()))
+        .job(
+            JobBuilder::new(Algo::Canary)
+                .hosts(topo.n_hosts())
+                .data_bytes(16 << 10),
+        );
+    let mut exp = sc.build(17);
+    runner::run_to_completion(&mut exp.net, 1_000_000 * US);
+
+    let dir = format!("{}/trace", o.out);
+    match crate::trace::export(&exp.net, &dir) {
+        Ok(paths) => {
+            for p in paths {
+                println!("wrote {p}");
+            }
+        }
+        Err(e) => eprintln!("trace export to {dir} failed: {e}"),
+    }
+
+    let trees = exp.net.tracer.tree_records();
+    let timeout_fwds = trees.iter().filter(|r| r.via_timeout).count();
+    let partial_fwds = trees
+        .iter()
+        .filter(|r| r.contributed < r.expected)
+        .count();
+    let mut s = Series::new("trace_demo", &["metric", "value"]);
+    let rows: [(&str, u64); 5] = [
+        ("samples", exp.net.tracer.n_samples() as u64),
+        ("spans", exp.net.tracer.spans().len() as u64),
+        ("tree_forwards", trees.len() as u64),
+        ("timeout_forwards", timeout_fwds as u64),
+        ("partial_forwards", partial_fwds as u64),
+    ];
+    for (k, v) in rows {
+        s.push(vec![k.to_string(), v.to_string()]);
     }
     finish(s, o)
 }
@@ -1268,6 +1326,7 @@ pub fn main_entry() {
         "placement" => drop(placement(&o)),
         "scale" => drop(scale(&o)),
         "churn" => drop(churn(&o)),
+        "trace" => drop(trace_cell(&o)),
         "ablation" => drop(ablation_lb(&o)),
         "all" => {
             drop(fig2(&o));
@@ -1286,14 +1345,15 @@ pub fn main_entry() {
             drop(placement(&o));
             drop(scale(&o));
             drop(churn(&o));
+            drop(trace_cell(&o));
             drop(ablation_lb(&o));
         }
         other => {
             eprintln!(
                 "unknown figure '{other}' \
                  (fig2|fig6|fig7a|fig7b|fig8|fig9|fig10a|fig10b|fig11|mem\
-                 |clos3|traffic|transport|placement|scale|churn|ablation\
-                 |all)"
+                 |clos3|traffic|transport|placement|scale|churn|trace\
+                 |ablation|all)"
             );
             std::process::exit(2);
         }

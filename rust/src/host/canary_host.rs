@@ -13,6 +13,7 @@ use std::collections::HashMap;
 
 use crate::sim::packet::{Packet, PacketKind, Payload};
 use crate::sim::{Ctx, NodeId, PacketId, Time};
+use crate::trace::SpanKind;
 use crate::util::rng::Rng;
 
 use super::{
@@ -108,6 +109,14 @@ fn pump(me: NodeId, ch: &mut CanaryHost, rng: &mut Rng, ctx: &mut Ctx) {
     let idx = ch.next_block;
     ch.next_block += 1;
     ch.inflight += 1;
+    if idx == 0 {
+        ctx.tracer
+            .span(ctx.now, SpanKind::FirstSend, ch.job, me, Some(idx), 0);
+    }
+    if idx + 1 == ch.total_blocks {
+        ctx.tracer
+            .span(ctx.now, SpanKind::LastSend, ch.job, me, Some(idx), 0);
+    }
     activate_block(me, ch, ctx, idx);
 
     let wire = ctx.jobs[ch.job as usize].spec.wire_bytes() as u64
@@ -267,6 +276,14 @@ fn leader_check_complete(
         return;
     }
     lb.complete = true;
+    ctx.tracer.span(
+        ctx.now,
+        SpanKind::Aggregated,
+        ch.job,
+        me,
+        Some(idx),
+        hosts as u64,
+    );
     lb.result = lb.acc.take();
     let result = lb.result.clone();
     let restore: Vec<(NodeId, u64)> =
@@ -288,6 +305,14 @@ fn leader_check_complete(
             pkt.payload = Payload::Lanes(r.clone().into_boxed_slice());
         }
         ctx.send(0, pkt);
+        ctx.tracer.span(
+            ctx.now,
+            SpanKind::Broadcast,
+            ch.job,
+            me,
+            Some(idx),
+            hosts as u64,
+        );
     }
     // tree restoration packets for collided switches (Section 3.2.1)
     for (sw, bitmap) in restore {
@@ -319,6 +344,14 @@ fn leader_on_retrans_req(
 ) {
     ctx.metrics.retrans_requests += 1;
     let orig = ch.orig_of(pkt.block);
+    ctx.tracer.span(
+        ctx.now,
+        SpanKind::RetransReq,
+        ch.job,
+        me,
+        Some(orig),
+        pkt.src as u64,
+    );
     let spec = &ctx.jobs[ch.job as usize].spec;
     let tenant = spec.tenant;
     let hosts = spec.participants.len() as u32;
@@ -363,6 +396,14 @@ fn leader_on_retrans_req(
     let round = lb.round;
     ch.round[orig as usize] = round;
     ctx.metrics.failures += 1;
+    ctx.tracer.span(
+        ctx.now,
+        SpanKind::RetryRound,
+        ch.job,
+        me,
+        Some(orig),
+        round as u64,
+    );
 
     for &h in participants.iter() {
         if h == me {
@@ -402,6 +443,14 @@ fn on_failure_notice(
     let direct = new_round as u32 >= ctx.cfg.max_retries;
     if direct {
         ctx.metrics.fallbacks += 1;
+        ctx.tracer.span(
+            ctx.now,
+            SpanKind::Fallback,
+            ch.job,
+            me,
+            Some(idx),
+            new_round as u64,
+        );
     }
     send_data_now(me, ch, ctx, idx, direct);
     if ctx.cfg.arm_retrans_timers {
@@ -440,6 +489,8 @@ fn mark_done(
         ch.finished = true;
         let rank = ch.rank;
         let now = ctx.now;
+        ctx.tracer
+            .span(now, SpanKind::HostDone, ch.job, me, None, rank as u64);
         ctx.jobs[ch.job as usize].host_finished(rank, now);
     }
 }

@@ -11,6 +11,7 @@
 
 use crate::sim::packet::{Packet, PacketKind};
 use crate::sim::{Ctx, NodeId, PacketId};
+use crate::trace::SpanKind;
 
 /// Ring protocol state for one participating host.
 pub struct RingHost {
@@ -61,6 +62,8 @@ pub fn on_wake(me: NodeId, rh: &mut RingHost, ctx: &mut Ctx) {
         finish(rh, ctx);
         return;
     }
+    ctx.tracer
+        .span(ctx.now, SpanKind::FirstSend, rh.job, me, Some(0), 0);
     // inject the whole step-0 chunk; the NIC serializes at line rate
     for p in 0..rh.chunk_packets {
         send_packet(me, rh, ctx, 0, p);
@@ -111,5 +114,13 @@ fn finish(rh: &mut RingHost, ctx: &mut Ctx) {
     rh.finished = true;
     let rank = rh.rank;
     let now = ctx.now;
+    ctx.tracer.span(
+        now,
+        SpanKind::HostDone,
+        rh.job,
+        ctx.node_id,
+        None,
+        rank as u64,
+    );
     ctx.jobs[rh.job as usize].host_finished(rank, now);
 }

@@ -5,6 +5,7 @@
 
 use crate::sim::packet::{Packet, PacketKind, Payload};
 use crate::sim::{Ctx, NodeId, PacketId};
+use crate::trace::SpanKind;
 use crate::util::rng::Rng;
 
 use super::{encode_timer, TIMER_STREAM};
@@ -62,6 +63,14 @@ fn pump(me: NodeId, sh: &mut StaticHost, rng: &mut Rng, ctx: &mut Ctx) {
     let idx = sh.next_block;
     sh.next_block += 1;
     sh.inflight += 1;
+    if idx == 0 {
+        ctx.tracer
+            .span(ctx.now, SpanKind::FirstSend, sh.job, me, Some(idx), 0);
+    }
+    if idx + 1 == sh.total_blocks {
+        ctx.tracer
+            .span(ctx.now, SpanKind::LastSend, sh.job, me, Some(idx), 0);
+    }
     send_block(me, sh, ctx, idx);
 
     let wire = ctx.jobs[sh.job as usize].spec.wire_bytes() as u64
@@ -123,6 +132,8 @@ pub fn on_broadcast(
         sh.finished = true;
         let rank = sh.rank;
         let now = ctx.now;
+        ctx.tracer
+            .span(now, SpanKind::HostDone, sh.job, me, None, rank as u64);
         ctx.jobs[sh.job as usize].host_finished(rank, now);
     }
 }

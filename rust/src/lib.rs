@@ -57,6 +57,7 @@ pub mod runtime;
 pub mod sim;
 pub mod switch;
 pub mod topology;
+pub mod trace;
 pub mod traffic;
 pub mod train;
 pub mod transport;

@@ -16,8 +16,9 @@ use canary::loadbalance::parse_policy;
 use canary::metrics::{average_network_utilization, memory_model_bytes};
 use canary::report::gbps;
 use canary::runtime::Runtime;
-use canary::sim::{ps_to_us, US};
+use canary::sim::{ps_to_us, PacketKind, US};
 use canary::traffic::TrafficSpec;
+use canary::trace::TraceSpec;
 use canary::train::{TrainConfig, Trainer};
 use canary::transport::TransportSpec;
 use canary::util::cli::Args;
@@ -42,6 +43,7 @@ USAGE:
                [--faults loss:P,flap:A:B:DOWN_US:UP_US,
                          fail:SW:AT_US[:REC_US],straggler:H:FACTOR]
                [--faults-json FILE]
+               [--trace[=CADENCE_US]] [--trace-dir DIR]
   canary train [--preset tiny|base] [--workers N] [--steps N] [--lr F]
                [--algo ...] [--comm-every N] [--seed S]
   canary mem   [--timeout-us T] [--diameter D]
@@ -217,6 +219,24 @@ fn resolve_traffic(args: &Args) -> Result<Option<TrafficSpec>> {
     Ok(spec)
 }
 
+/// `--trace` / `--trace=CADENCE_US` into an optional telemetry spec
+/// (absent flag = tracing off = zero-footprint).
+fn resolve_trace(args: &Args) -> Result<Option<TraceSpec>> {
+    match args.get("trace") {
+        None => Ok(None),
+        Some("true") => Ok(Some(TraceSpec::default())),
+        Some(v) => {
+            let us: u64 = v
+                .parse()
+                .map_err(|_| format!("bad --trace cadence '{v}' (µs)"))?;
+            if us == 0 {
+                return Err("--trace cadence must be >= 1 µs".into());
+            }
+            Ok(Some(TraceSpec::default().with_cadence(us * US)))
+        }
+    }
+}
+
 /// Combine --faults/--faults-json into the scenario's fault plan
 /// (random loss + scheduled churn events; see `canary::faults`).
 fn resolve_faults(args: &Args) -> Result<FaultSpec> {
@@ -286,6 +306,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         .lb(lb)
         .traffic(traffic)
         .faults(faults)
+        .trace(resolve_trace(args)?)
         .jobs(
             n_jobs,
             JobBuilder::new(algo)
@@ -373,15 +394,16 @@ fn cmd_run(args: &Args) -> Result<()> {
         exp.net.metrics.drops_overflow,
         exp.net.metrics.ecn_marks
     );
+    let by_kind = |k: PacketKind| exp.net.metrics.pkts_of_kind(k);
     println!(
         "pkts by kind: reduce {} bcast {} restore {} rdata {} rreq {} fail {} direct {}",
-        exp.net.metrics.pkts_by_kind[0],
-        exp.net.metrics.pkts_by_kind[1],
-        exp.net.metrics.pkts_by_kind[2],
-        exp.net.metrics.pkts_by_kind[3],
-        exp.net.metrics.pkts_by_kind[4],
-        exp.net.metrics.pkts_by_kind[5],
-        exp.net.metrics.pkts_by_kind[6],
+        by_kind(PacketKind::CanaryReduce),
+        by_kind(PacketKind::CanaryBroadcast),
+        by_kind(PacketKind::CanaryRestore),
+        by_kind(PacketKind::CanaryRetransData),
+        by_kind(PacketKind::CanaryRetransReq),
+        by_kind(PacketKind::CanaryFailure),
+        by_kind(PacketKind::CanaryDirect),
     );
     println!(
         "descriptors: alloc {} freed {} live {} highwater {}",
@@ -392,6 +414,23 @@ fn cmd_run(args: &Args) -> Result<()> {
     );
     if traffic.is_some() {
         println!("{}", canary::report::flow_summary(&exp.net.metrics.flows));
+    }
+    if exp.net.tracer.enabled() {
+        let dir = args.get_or("trace-dir", "results/trace");
+        let paths = canary::trace::export(&exp.net, dir)
+            .map_err(|e| format!("writing trace artifacts to {dir}: {e}"))?;
+        let (evicted, span_drops, tree_drops) = exp.net.tracer.dropped();
+        println!(
+            "trace: {} samples, {} spans, {} tree records \
+             (dropped: {evicted} samples, {span_drops} spans, \
+             {tree_drops} trees)",
+            exp.net.tracer.n_samples(),
+            exp.net.tracer.spans().len(),
+            exp.net.tracer.tree_records().len(),
+        );
+        for p in paths {
+            println!("  wrote {p}");
+        }
     }
     if args.flag("debug-links") {
         let end = exp.net.now;
@@ -490,7 +529,7 @@ fn main() -> Result<()> {
             "topo", "tiers", "oversub", "topo-json", "values", "preset",
             "workers", "steps", "lr", "comm-every", "diameter", "window",
             "debug-links", "fingerprint", "faults", "faults-json",
-            "retrans-us",
+            "retrans-us", "trace", "trace-dir",
         ],
     )?;
     match args.positional.first().map(|s| s.as_str()) {

@@ -5,7 +5,7 @@
 
 use std::collections::HashMap;
 
-use crate::sim::{Network, Time};
+use crate::sim::{Network, PacketKind, Time};
 use crate::util::stats::Histogram;
 
 /// A background flow in flight: born at `born`, complete when all
@@ -175,8 +175,10 @@ impl EngineStats {
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
     pub pkts_delivered: u64,
-    /// Deliveries by packet kind (indexed by `PacketKind as usize`).
-    pub pkts_by_kind: [u64; 13],
+    /// Deliveries by packet kind. Index through [`Metrics::on_delivery`]
+    /// / [`Metrics::pkts_of_kind`], never by raw arithmetic — a new
+    /// `PacketKind` variant then can't silently misalign counters.
+    pub pkts_by_kind: [u64; PacketKind::COUNT],
     /// Droppable (background) packets lost to queue overflow.
     pub drops_overflow: u64,
     /// Class-1 packets CE-marked by switch queues (each packet is
@@ -238,6 +240,20 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Count one delivered packet of `kind` (total + per-kind).
+    #[inline]
+    pub fn on_delivery(&mut self, kind: PacketKind) {
+        self.pkts_delivered += 1;
+        self.pkts_by_kind[kind as usize] += 1;
+    }
+
+    /// Deliveries of one packet kind (named accessor over the raw
+    /// per-kind array).
+    #[inline]
+    pub fn pkts_of_kind(&self, kind: PacketKind) -> u64 {
+        self.pkts_by_kind[kind as usize]
+    }
+
     pub fn on_descriptor_alloc(&mut self) {
         self.descriptors_allocated += 1;
         self.descriptors_live += 1;
@@ -358,6 +374,21 @@ pub fn memory_model_bytes(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn per_kind_delivery_accessors() {
+        let mut m = Metrics::default();
+        m.on_delivery(PacketKind::CanaryReduce);
+        m.on_delivery(PacketKind::CanaryReduce);
+        m.on_delivery(PacketKind::TransportCnp);
+        assert_eq!(m.pkts_delivered, 3);
+        assert_eq!(m.pkts_of_kind(PacketKind::CanaryReduce), 2);
+        assert_eq!(m.pkts_of_kind(PacketKind::TransportCnp), 1);
+        assert_eq!(m.pkts_of_kind(PacketKind::Ring), 0);
+        // the named accessors index the same array the fingerprint
+        // walks — the per-kind sum must match the delivered total
+        assert_eq!(m.pkts_by_kind.iter().sum::<u64>(), m.pkts_delivered);
+    }
 
     #[test]
     fn descriptor_accounting() {

@@ -239,6 +239,61 @@ mod tests {
     }
 
     #[test]
+    fn formatting_edge_cases() {
+        // zero is a value, not a timeout
+        assert_eq!(gbps(Some(0.0)), "0.0");
+        assert_eq!(us(Some(0)), "0.0");
+        assert_eq!(us(None), "timeout");
+        // sub-microsecond times and huge (stalled-run) times
+        assert_eq!(us(Some(100_000)), "0.1");
+        assert_eq!(us(Some(u64::MAX)), format!("{:.1}", u64::MAX as f64 / 1e6));
+    }
+
+    #[test]
+    fn flow_summary_handles_an_idle_engine() {
+        // nothing started: no division blow-up, percentiles are 0
+        let f = crate::metrics::FlowStats::default();
+        let line = flow_summary(&f);
+        assert!(line.contains("0 started"), "{line}");
+        assert!(line.contains("(0.0%)"), "{line}");
+        assert!(line.contains("p50 0.0 us"), "{line}");
+        assert!(
+            !line.contains("transport:"),
+            "idle stats printed a transport line: {line}"
+        );
+    }
+
+    #[test]
+    fn flow_summary_transport_line_appears_with_activity() {
+        let mut f = crate::metrics::FlowStats::default();
+        f.on_start(1, 0, 1, 100);
+        f.cnps_sent = 3;
+        let line = flow_summary(&f);
+        assert!(line.contains("transport:"), "{line}");
+        assert!(line.contains("cnps 0/3"), "{line}");
+    }
+
+    #[test]
+    fn fault_summary_survives_saturated_counters() {
+        // u64::MAX everywhere must format, not overflow or panic
+        let m = crate::metrics::Metrics {
+            link_flaps: u64::MAX,
+            link_recoveries: u64::MAX,
+            switch_failures: u64::MAX,
+            switch_recoveries: u64::MAX,
+            straggler_slowdowns: u64::MAX,
+            drops_link_down: u64::MAX,
+            drops_injected: u64::MAX,
+            partial_aggregates: u64::MAX,
+            jobs_completed: u64::MAX,
+            jobs_stalled: u64::MAX,
+            ..Default::default()
+        };
+        let line = fault_summary(&m);
+        assert!(line.contains(&u64::MAX.to_string()), "{line}");
+    }
+
+    #[test]
     fn flow_summary_reads_sanely() {
         let mut f = crate::metrics::FlowStats::default();
         f.on_start(1, 0, 1, 100);

@@ -71,6 +71,11 @@ pub enum Event {
     LinkUp { a: u32, b: u32 },
     /// Generic job kick-off (start a host's injection loop).
     JobWake { node: u32, job: u32 },
+    /// Telemetry sampler tick (`trace/`). Scheduled only while tracing
+    /// is enabled; re-arms itself while other work is pending and is
+    /// dispatched *outside* the `events_processed` counter so traced
+    /// runs keep fingerprints comparable to untraced ones.
+    TraceSample,
 }
 
 struct HeapEntry {

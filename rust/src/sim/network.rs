@@ -19,6 +19,7 @@ use crate::faults::{FaultEvent, FaultPlan};
 use crate::host::HostState;
 use crate::metrics::Metrics;
 use crate::switch::SwitchState;
+use crate::trace::Tracer;
 use crate::util::rng::Rng;
 
 use super::arena::{PacketArena, PacketId};
@@ -215,6 +216,9 @@ pub struct Ctx<'a> {
     /// runs its whole protocol clock — injection pacing, retry timers —
     /// `slowdown`x slower (fault injection; only ever > 1 for hosts).
     pub slowdown: u32,
+    /// Telemetry recorder (`trace/`): disabled by default, in which
+    /// case every hook is a single branch (zero-footprint contract).
+    pub tracer: &'a mut Tracer,
 }
 
 impl<'a> Ctx<'a> {
@@ -459,6 +463,9 @@ pub struct Network {
     /// Per-node straggler factor (1 = nominal; set from the fault
     /// plan's `StragglerHost` events at `kick_jobs`).
     pub host_slowdown: Vec<u32>,
+    /// Telemetry recorder; `Tracer::off()` unless a `TraceSpec` was
+    /// installed (see `workload::ScenarioBuilder::trace`).
+    pub tracer: Tracer,
 }
 
 impl Network {
@@ -478,6 +485,7 @@ impl Network {
             events_processed: 0,
             node_paused: Vec::new(),
             host_slowdown: Vec::new(),
+            tracer: Tracer::off(),
         }
     }
 
@@ -520,6 +528,19 @@ impl Network {
                     },
                 );
             }
+            self.tracer.span(
+                job.spec.start_ps,
+                crate::trace::SpanKind::Kick,
+                job_idx as u32,
+                job.spec.participants.first().copied().unwrap_or(0),
+                None,
+                job.spec.participants.len() as u64,
+            );
+        }
+        // arm the telemetry sampler; with tracing off nothing is
+        // scheduled at all (the zero-footprint contract)
+        if self.tracer.enabled() {
+            self.queue.push(0, Event::TraceSample);
         }
         // convert the declarative fault timeline into sim events; an
         // empty timeline schedules nothing (and draws nothing from the
@@ -603,6 +624,15 @@ impl Network {
     }
 
     fn dispatch(&mut self, time: Time, event: Event) {
+        // sampler ticks are observational: they mutate nothing the
+        // simulation reads, stay outside `events_processed`, and do
+        // not advance `now` (a trailing tick after the last real
+        // event must not move the end-of-run clock), so a traced run
+        // fingerprints identically to an untraced one
+        if let Event::TraceSample = event {
+            self.trace_sample(time);
+            return;
+        }
         self.now = time;
         self.events_processed += 1;
         match event {
@@ -642,6 +672,30 @@ impl Network {
                 for li in self.links_between(a, b) {
                     self.link_bring_up(li);
                 }
+            }
+            Event::TraceSample => unreachable!("handled before dispatch"),
+        }
+    }
+
+    /// One telemetry sampler tick: snapshot link/arena/descriptor
+    /// gauges and re-arm. The tick re-arms only while the queue holds
+    /// other work, so it never keeps a drained simulation alive.
+    fn trace_sample(&mut self, at: Time) {
+        let live_desc: u64 = self
+            .nodes
+            .iter()
+            .map(|n| match &n.body {
+                NodeBody::Switch(sw) => sw.canary.live_descriptors() as u64,
+                NodeBody::Host(_) => 0,
+            })
+            .sum();
+        let arena_live = self.arena.live();
+        let ecn = self.metrics.ecn_marks;
+        self.tracer
+            .sample(at, &self.links, arena_live, live_desc, ecn);
+        if let Some(cadence) = self.tracer.cadence_ps() {
+            if !self.queue.is_empty() {
+                self.queue.push(at + cadence, Event::TraceSample);
             }
         }
     }
@@ -737,8 +791,7 @@ impl Network {
             self.arena.free(id);
             return;
         }
-        self.metrics.pkts_delivered += 1;
-        self.metrics.pkts_by_kind[kind as usize] += 1;
+        self.metrics.on_delivery(kind);
         // the handler owns the arena entry from here: it must take,
         // forward or free it
         self.with_ctx(to, |body, ctx| match body {
@@ -770,6 +823,7 @@ impl Network {
             now,
             node_paused,
             host_slowdown,
+            tracer,
             ..
         } = self;
         let n = &mut nodes[node as usize];
@@ -786,6 +840,7 @@ impl Network {
             cfg,
             node_paused,
             slowdown: host_slowdown[node as usize],
+            tracer,
         };
         f(&mut n.body, &mut ctx);
     }

@@ -57,6 +57,10 @@ pub enum PacketKind {
 }
 
 impl PacketKind {
+    /// Number of variants — sizes the per-kind delivery counters
+    /// (`Metrics::pkts_by_kind`); keep in sync with the enum.
+    pub const COUNT: usize = 13;
+
     /// Background traffic (and its transport control frames) is
     /// droppable on queue overflow; reduction control/data is treated
     /// as lossless unless fault injection is on (DESIGN.md: hosts

@@ -132,7 +132,7 @@ pub fn on_reduce(
             ctx.metrics.on_descriptor_alloc();
             if complete {
                 // everything already aggregated upstream: forward now
-                forward_partial(sw, ctx, slot);
+                forward_partial(sw, ctx, slot, false);
             } else {
                 ctx.switch_timeout(
                     ctx.cfg.canary_timeout_ps,
@@ -153,7 +153,7 @@ pub fn on_reduce(
                 d.children |= 1u64 << in_port;
                 if d.counter >= d.hosts {
                     // all contributions seen: no need to wait the timer
-                    forward_partial(sw, ctx, slot);
+                    forward_partial(sw, ctx, slot, false);
                 }
             } else {
                 // straggler: record the child so the broadcast reaches
@@ -195,12 +195,30 @@ pub fn on_timeout(
         // and emitting a partial aggregate (Section 3.1.1)
         ctx.metrics.partial_aggregates += 1;
     }
-    forward_partial(sw, ctx, slot as usize);
+    forward_partial(sw, ctx, slot as usize, true);
 }
 
-fn forward_partial(sw: &mut SwitchState, ctx: &mut Ctx, slot: usize) {
+fn forward_partial(
+    sw: &mut SwitchState,
+    ctx: &mut Ctx,
+    slot: usize,
+    via_timeout: bool,
+) {
     let d = sw.canary.table[slot].as_mut().expect("descriptor");
     d.sent = true;
+    // realized-tree capture: this forward *is* one edge set of the
+    // dynamic tree (which ports fed this switch for this block)
+    ctx.tracer.tree(crate::trace::TreeRecord {
+        t_ps: ctx.now,
+        tenant: d.tenant as u32,
+        block: d.block,
+        switch: sw.id,
+        children: d.children,
+        contributed: d.counter,
+        expected: d.hosts,
+        via_timeout,
+        latency_ps: ctx.now - d.alloc_time,
+    });
     let mut pkt = Packet::data(PacketKind::CanaryReduce, sw.id, d.leader);
     pkt.tenant = d.tenant;
     pkt.block = d.block;

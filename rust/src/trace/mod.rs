@@ -1,0 +1,618 @@
+//! Run-time telemetry: time-series sampling, per-job lifecycle spans,
+//! and dynamic aggregation-tree capture (DESIGN.md §2.7).
+//!
+//! The [`Tracer`] is owned by the [`Network`] and threaded through
+//! `Ctx`, so every layer (switch dataplane, host engines, the
+//! collective runner) can emit records without extra plumbing. Three
+//! collectors live behind one `Option` box:
+//!
+//! 1. **Sampler** — on a configurable cadence the engine snapshots
+//!    per-link queue depth / utilization, live arena packets, ECN
+//!    marks, and live aggregation descriptors into a ring buffer.
+//! 2. **Spans** — structured job-lifecycle events (install → kick →
+//!    first/last send → aggregated → broadcast → complete/stalled,
+//!    plus retransmission and fault-fallback markers).
+//! 3. **Trees** — one record per Canary partial-aggregate forward:
+//!    which switch, which ports contributed, expected vs actual
+//!    fan-in, and whether the timeout (rather than fan-in
+//!    completion) fired it. This is the realized dynamic tree.
+//!
+//! **Zero-footprint when off.** A disabled tracer is a `None` box:
+//! every hook is a single branch, no RNG is drawn, no event is
+//! scheduled, and no metric moves — seeded fingerprints are
+//! bit-identical with tracing on or off (pinned in `tests/trace.rs`).
+//! The sampler event itself is dispatched *outside* the
+//! `events_processed` counter for the same reason.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::report::Series;
+use crate::sim::{Link, Network, Time, US};
+use crate::util::json::{obj, Value};
+use crate::util::stats::Histogram;
+
+/// Recorder configuration: cadence plus per-collector capacity caps
+/// (the sampler ring evicts oldest, span/tree logs stop appending and
+/// count drops — a trace must never OOM a long run).
+#[derive(Clone, Debug)]
+pub struct TraceSpec {
+    /// Sampler cadence in picoseconds (default 1 µs).
+    pub cadence_ps: Time,
+    /// Sampler ring capacity in samples (oldest evicted beyond this).
+    pub ring_capacity: usize,
+    /// Span log cap; further spans are counted as dropped.
+    pub max_spans: usize,
+    /// Tree-record log cap; further records are counted as dropped.
+    pub max_tree_records: usize,
+}
+
+impl Default for TraceSpec {
+    fn default() -> TraceSpec {
+        TraceSpec {
+            cadence_ps: US,
+            ring_capacity: 4096,
+            max_spans: 65_536,
+            max_tree_records: 65_536,
+        }
+    }
+}
+
+impl TraceSpec {
+    /// Builder: override the sampler cadence (picoseconds).
+    pub fn with_cadence(mut self, ps: Time) -> TraceSpec {
+        self.cadence_ps = ps.max(1);
+        self
+    }
+}
+
+/// Per-link state captured by one sampler tick. Only *active* links
+/// (transmitted since the previous tick, non-empty queue, or down)
+/// are recorded, which keeps big idle fabrics cheap.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkSample {
+    pub link: u32,
+    pub queued_bytes: u64,
+    pub class0_bytes: u64,
+    /// Fraction of the sampling interval the link spent serializing.
+    pub util: f64,
+    pub drops: u64,
+    pub alive: bool,
+}
+
+/// One sampler tick: global gauges plus the active-link snapshot.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub t_ps: Time,
+    pub arena_live: u32,
+    pub ecn_marks: u64,
+    pub live_descriptors: u64,
+    pub links: Vec<LinkSample>,
+}
+
+/// Job-lifecycle span kinds, in rough temporal order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Job installed into the fabric (trees programmed, hosts armed).
+    Install,
+    /// Participant woken at the job's start time.
+    Kick,
+    /// A host injected its first block.
+    FirstSend,
+    /// A host injected its final block.
+    LastSend,
+    /// Leader observed a block fully aggregated.
+    Aggregated,
+    /// Leader broadcast a finished block to the group.
+    Broadcast,
+    /// Leader received a retransmission request (loss recovery).
+    RetransReq,
+    /// Leader opened a new retry round for a damaged block.
+    RetryRound,
+    /// Host fell back to direct-to-leader sends (fault recovery).
+    Fallback,
+    /// One host finished all of its blocks.
+    HostDone,
+    /// The whole job completed.
+    Complete,
+    /// The run ended with this job still incomplete.
+    Stalled,
+}
+
+impl SpanKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Install => "install",
+            SpanKind::Kick => "kick",
+            SpanKind::FirstSend => "first_send",
+            SpanKind::LastSend => "last_send",
+            SpanKind::Aggregated => "aggregated",
+            SpanKind::Broadcast => "broadcast",
+            SpanKind::RetransReq => "retrans_req",
+            SpanKind::RetryRound => "retry_round",
+            SpanKind::Fallback => "fallback",
+            SpanKind::HostDone => "host_done",
+            SpanKind::Complete => "complete",
+            SpanKind::Stalled => "stalled",
+        }
+    }
+}
+
+/// One lifecycle event. `detail` is kind-specific (participant count
+/// for install, host count for aggregated, round for retry, rank for
+/// host_done, ...).
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    pub t_ps: Time,
+    pub kind: SpanKind,
+    pub job: u32,
+    pub node: u32,
+    pub block: Option<u32>,
+    pub detail: u64,
+}
+
+/// One realized aggregation-tree edge set: a Canary switch forwarding
+/// its (possibly partial) accumulator upstream for one block.
+#[derive(Clone, Copy, Debug)]
+pub struct TreeRecord {
+    pub t_ps: Time,
+    pub tenant: u32,
+    pub block: u32,
+    pub switch: u32,
+    /// Bitmap of ingress ports that contributed to this aggregation.
+    pub children: u64,
+    /// Packets actually merged before the forward.
+    pub contributed: u32,
+    /// Fan-in the descriptor expected.
+    pub expected: u32,
+    /// True when the aggregation timeout fired the forward (partial).
+    pub via_timeout: bool,
+    /// Descriptor residency: allocation to forward.
+    pub latency_ps: Time,
+}
+
+impl TreeRecord {
+    /// Achieved fan-in as a fraction of the expected fan-in.
+    pub fn fanin_fraction(&self) -> f64 {
+        if self.expected == 0 {
+            1.0
+        } else {
+            self.contributed as f64 / self.expected as f64
+        }
+    }
+}
+
+/// Live collector state; exists only while tracing is enabled.
+#[derive(Debug)]
+struct TraceState {
+    spec: TraceSpec,
+    samples: VecDeque<Sample>,
+    samples_evicted: u64,
+    spans: Vec<Span>,
+    spans_dropped: u64,
+    trees: Vec<TreeRecord>,
+    trees_dropped: u64,
+    /// `busy_ps` per link at the previous tick (utilization deltas).
+    prev_busy: Vec<u64>,
+    prev_t: Time,
+}
+
+/// The recorder. Disabled is the default and costs one branch per
+/// hook; see the module docs for the zero-footprint contract.
+#[derive(Debug, Default)]
+pub struct Tracer {
+    state: Option<Box<TraceState>>,
+}
+
+impl Tracer {
+    /// A disabled tracer (the `Network::new` default).
+    pub fn off() -> Tracer {
+        Tracer { state: None }
+    }
+
+    /// An enabled tracer with the given spec.
+    pub fn on(spec: TraceSpec) -> Tracer {
+        Tracer {
+            state: Some(Box::new(TraceState {
+                spec,
+                samples: VecDeque::new(),
+                samples_evicted: 0,
+                spans: Vec::new(),
+                spans_dropped: 0,
+                trees: Vec::new(),
+                trees_dropped: 0,
+                prev_busy: Vec::new(),
+                prev_t: 0,
+            })),
+        }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.state.is_some()
+    }
+
+    /// Sampler cadence, if tracing is enabled.
+    pub fn cadence_ps(&self) -> Option<Time> {
+        self.state.as_ref().map(|s| s.spec.cadence_ps)
+    }
+
+    /// Record one sampler tick. Called by the engine's `TraceSample`
+    /// event only — never on the untraced path.
+    pub fn sample(
+        &mut self,
+        now: Time,
+        links: &[Link],
+        arena_live: u32,
+        live_descriptors: u64,
+        ecn_marks: u64,
+    ) {
+        let Some(s) = self.state.as_mut() else { return };
+        s.prev_busy.resize(links.len(), 0);
+        let interval = now.saturating_sub(s.prev_t);
+        let mut snap = Vec::new();
+        for (i, l) in links.iter().enumerate() {
+            let delta = l.busy_ps.saturating_sub(s.prev_busy[i]);
+            s.prev_busy[i] = l.busy_ps;
+            if delta == 0 && l.queued_bytes == 0 && l.alive {
+                continue; // idle link: skip to bound memory
+            }
+            let util = if interval > 0 {
+                (delta as f64 / interval as f64).min(1.0)
+            } else {
+                0.0
+            };
+            snap.push(LinkSample {
+                link: i as u32,
+                queued_bytes: l.queued_bytes,
+                class0_bytes: l.class0_bytes(),
+                util,
+                drops: l.drops,
+                alive: l.alive,
+            });
+        }
+        s.prev_t = now;
+        if s.samples.len() >= s.spec.ring_capacity {
+            s.samples.pop_front();
+            s.samples_evicted += 1;
+        }
+        s.samples.push_back(Sample {
+            t_ps: now,
+            arena_live,
+            ecn_marks,
+            live_descriptors,
+            links: snap,
+        });
+    }
+
+    /// Record a job-lifecycle span.
+    #[inline]
+    pub fn span(
+        &mut self,
+        t_ps: Time,
+        kind: SpanKind,
+        job: u32,
+        node: u32,
+        block: Option<u32>,
+        detail: u64,
+    ) {
+        let Some(s) = self.state.as_mut() else { return };
+        if s.spans.len() >= s.spec.max_spans {
+            s.spans_dropped += 1;
+            return;
+        }
+        s.spans.push(Span {
+            t_ps,
+            kind,
+            job,
+            node,
+            block,
+            detail,
+        });
+    }
+
+    /// Record a realized-tree forward (Canary dataplane only).
+    #[inline]
+    pub fn tree(&mut self, rec: TreeRecord) {
+        let Some(s) = self.state.as_mut() else { return };
+        if s.trees.len() >= s.spec.max_tree_records {
+            s.trees_dropped += 1;
+            return;
+        }
+        s.trees.push(rec);
+    }
+
+    // --- read side (all empty/zero when disabled) ---
+
+    pub fn n_samples(&self) -> usize {
+        self.state.as_ref().map_or(0, |s| s.samples.len())
+    }
+
+    pub fn samples(&self) -> impl Iterator<Item = &Sample> {
+        self.state.iter().flat_map(|s| s.samples.iter())
+    }
+
+    pub fn spans(&self) -> &[Span] {
+        match &self.state {
+            Some(s) => &s.spans,
+            None => &[],
+        }
+    }
+
+    pub fn tree_records(&self) -> &[TreeRecord] {
+        match &self.state {
+            Some(s) => &s.trees,
+            None => &[],
+        }
+    }
+
+    /// (samples evicted, spans dropped, tree records dropped).
+    pub fn dropped(&self) -> (u64, u64, u64) {
+        self.state.as_ref().map_or((0, 0, 0), |s| {
+            (s.samples_evicted, s.spans_dropped, s.trees_dropped)
+        })
+    }
+}
+
+/// Decode a port bitmap into the contributing port list.
+fn ports_of(children: u64) -> Vec<Value> {
+    (0..64)
+        .filter(|p| children & (1u64 << p) != 0)
+        .map(Value::Int)
+        .collect()
+}
+
+/// Write the three trace artifacts (`trace_timeline.csv`,
+/// `trace_spans.csv`, `trace_trees.json`) under `dir` and return the
+/// written paths. The timeline carries one global gauge row per tick
+/// (`link == -1`) plus one row per active link, so the file is
+/// non-empty whenever the sampler ran at all.
+pub fn export(net: &Network, dir: &str) -> std::io::Result<Vec<String>> {
+    let tr = &net.tracer;
+    let mut paths = Vec::new();
+
+    let mut timeline = Series::new(
+        "trace_timeline",
+        &[
+            "t_us",
+            "link",
+            "from",
+            "to",
+            "queued_bytes",
+            "class0_bytes",
+            "util_pct",
+            "drops",
+            "alive",
+            "arena_live",
+            "live_desc",
+            "ecn_marks",
+        ],
+    );
+    for s in tr.samples() {
+        let t_us = s.t_ps as f64 / US as f64;
+        let total_q: u64 = s.links.iter().map(|l| l.queued_bytes).sum();
+        let total_c0: u64 = s.links.iter().map(|l| l.class0_bytes).sum();
+        timeline.push_display(&[
+            &format!("{t_us:.3}"),
+            &-1i64,
+            &-1i64,
+            &-1i64,
+            &total_q,
+            &total_c0,
+            &"",
+            &"",
+            &"",
+            &s.arena_live,
+            &s.live_descriptors,
+            &s.ecn_marks,
+        ]);
+        for l in &s.links {
+            let (from, to) = {
+                let link = &net.links[l.link as usize];
+                (link.from as i64, link.to as i64)
+            };
+            timeline.push_display(&[
+                &format!("{t_us:.3}"),
+                &(l.link as i64),
+                &from,
+                &to,
+                &l.queued_bytes,
+                &l.class0_bytes,
+                &format!("{:.1}", 100.0 * l.util),
+                &l.drops,
+                &(l.alive as u8),
+                &"",
+                &"",
+                &"",
+            ]);
+        }
+    }
+    paths.push(timeline.write_csv(dir)?);
+
+    let mut spans = Series::new(
+        "trace_spans",
+        &["t_us", "kind", "job", "node", "block", "detail"],
+    );
+    for sp in tr.spans() {
+        spans.push_display(&[
+            &format!("{:.3}", sp.t_ps as f64 / US as f64),
+            &sp.kind.name(),
+            &sp.job,
+            &sp.node,
+            &sp.block.map_or(-1, |b| b as i64),
+            &sp.detail,
+        ]);
+    }
+    paths.push(spans.write_csv(dir)?);
+
+    paths.push(export_trees(net, dir)?);
+    Ok(paths)
+}
+
+/// `trace_trees.json`: per-(tenant, block) realized-tree forwards, a
+/// fan-in-fraction histogram, and timeout/partial totals.
+fn export_trees(net: &Network, dir: &str) -> std::io::Result<String> {
+    let tr = &net.tracer;
+    let recs = tr.tree_records();
+    let mut blocks: BTreeMap<String, Vec<Value>> = BTreeMap::new();
+    let mut hist = Histogram::new(0.0, 1.0, 10);
+    let mut timeout_forwards = 0i64;
+    let mut partial_forwards = 0i64;
+    for r in recs {
+        hist.add(r.fanin_fraction());
+        if r.via_timeout {
+            timeout_forwards += 1;
+        }
+        if r.contributed < r.expected {
+            partial_forwards += 1;
+        }
+        blocks
+            .entry(format!("t{}/b{}", r.tenant, r.block))
+            .or_default()
+            .push(obj(vec![
+                ("t_us", Value::Float(r.t_ps as f64 / US as f64)),
+                ("switch", Value::Int(r.switch as i64)),
+                ("ports", Value::Array(ports_of(r.children))),
+                ("contributed", Value::Int(r.contributed as i64)),
+                ("expected", Value::Int(r.expected as i64)),
+                ("via_timeout", Value::Bool(r.via_timeout)),
+                (
+                    "latency_us",
+                    Value::Float(r.latency_ps as f64 / US as f64),
+                ),
+            ]));
+    }
+    let (_, _, trees_dropped) = tr.dropped();
+    let doc = obj(vec![
+        ("forwards_total", Value::Int(recs.len() as i64)),
+        ("timeout_forwards", Value::Int(timeout_forwards)),
+        ("partial_forwards", Value::Int(partial_forwards)),
+        ("dropped_records", Value::Int(trees_dropped as i64)),
+        (
+            "fanin_histogram",
+            obj(vec![
+                ("lo", Value::Float(0.0)),
+                ("hi", Value::Float(1.0)),
+                (
+                    "counts",
+                    Value::Array(
+                        hist.counts
+                            .iter()
+                            .map(|&c| Value::Int(c as i64))
+                            .collect(),
+                    ),
+                ),
+            ]),
+        ),
+        (
+            "blocks",
+            Value::Object(
+                blocks
+                    .into_iter()
+                    .map(|(k, v)| (k, Value::Array(v)))
+                    .collect(),
+            ),
+        ),
+    ]);
+    std::fs::create_dir_all(dir)?;
+    let path = std::path::Path::new(dir).join("trace_trees.json");
+    std::fs::write(&path, doc.to_json())?;
+    Ok(path.to_string_lossy().to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_tracer_is_inert_and_empty() {
+        let mut t = Tracer::off();
+        assert!(!t.enabled());
+        assert_eq!(t.cadence_ps(), None);
+        t.span(5, SpanKind::Kick, 0, 1, None, 0);
+        t.tree(TreeRecord {
+            t_ps: 5,
+            tenant: 0,
+            block: 0,
+            switch: 9,
+            children: 0b11,
+            contributed: 2,
+            expected: 3,
+            via_timeout: true,
+            latency_ps: 1,
+        });
+        assert_eq!(t.n_samples(), 0);
+        assert!(t.spans().is_empty());
+        assert!(t.tree_records().is_empty());
+        assert_eq!(t.dropped(), (0, 0, 0));
+    }
+
+    #[test]
+    fn ring_evicts_oldest_sample() {
+        let spec = TraceSpec {
+            ring_capacity: 2,
+            ..TraceSpec::default()
+        };
+        let mut t = Tracer::on(spec);
+        for i in 1..=3u64 {
+            t.sample(i * US, &[], i as u32, 0, 0);
+        }
+        assert_eq!(t.n_samples(), 2);
+        assert_eq!(t.dropped().0, 1);
+        let first = t.samples().next().unwrap();
+        assert_eq!(first.t_ps, 2 * US);
+    }
+
+    #[test]
+    fn span_and_tree_caps_count_drops() {
+        let spec = TraceSpec {
+            max_spans: 1,
+            max_tree_records: 1,
+            ..TraceSpec::default()
+        };
+        let mut t = Tracer::on(spec);
+        for i in 0..3 {
+            t.span(i, SpanKind::FirstSend, 0, 0, Some(0), 0);
+            t.tree(TreeRecord {
+                t_ps: i,
+                tenant: 0,
+                block: 0,
+                switch: 0,
+                children: 1,
+                contributed: 1,
+                expected: 2,
+                via_timeout: false,
+                latency_ps: 0,
+            });
+        }
+        assert_eq!(t.spans().len(), 1);
+        assert_eq!(t.tree_records().len(), 1);
+        assert_eq!(t.dropped(), (0, 2, 2));
+    }
+
+    #[test]
+    fn fanin_fraction_handles_zero_expected() {
+        let mut r = TreeRecord {
+            t_ps: 0,
+            tenant: 0,
+            block: 0,
+            switch: 0,
+            children: 0,
+            contributed: 3,
+            expected: 4,
+            via_timeout: false,
+            latency_ps: 0,
+        };
+        assert_eq!(r.fanin_fraction(), 0.75);
+        r.expected = 0;
+        assert_eq!(r.fanin_fraction(), 1.0);
+    }
+
+    #[test]
+    fn ports_decode_from_bitmap() {
+        let ports: Vec<i64> = ports_of(0b1010_0001)
+            .iter()
+            .map(|v| v.as_i64().unwrap())
+            .collect();
+        assert_eq!(ports, vec![0, 5, 7]);
+    }
+}

@@ -129,6 +129,26 @@ mod tests {
     }
 
     #[test]
+    fn single_sample_is_every_percentile() {
+        let xs = [42.0];
+        for q in [0.0, 37.0, 50.0, 99.9, 100.0] {
+            assert_eq!(percentile(&xs, q), 42.0);
+            assert_eq!(percentile_sorted(&xs, q), 42.0);
+        }
+    }
+
+    #[test]
+    fn ties_interpolate_flat() {
+        // repeated values: any quantile landing inside the tied run
+        // must return the tied value exactly (no interpolation drift)
+        let xs = [1.0, 5.0, 5.0, 5.0];
+        assert_eq!(percentile(&xs, 50.0), 5.0);
+        assert_eq!(percentile(&xs, 75.0), 5.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert!((percentile(&xs, 25.0) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
     fn histogram_buckets_and_clamping() {
         let mut h = Histogram::new(0.0, 1.0, 10);
         h.add(0.05);

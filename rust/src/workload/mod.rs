@@ -27,6 +27,7 @@ use crate::faults::FaultSpec;
 use crate::loadbalance::LoadBalancer;
 use crate::sim::{Network, NodeBody, NodeId, Time};
 use crate::topology::{build, FatTree};
+use crate::trace::{TraceSpec, Tracer};
 use crate::traffic::TrafficSpec;
 use crate::util::rng::Rng;
 
@@ -277,6 +278,9 @@ pub struct ScenarioBuilder {
     /// the churn-event timeline). Empty by default — and an empty plan
     /// is provably inert (tests/churn.rs).
     pub faults: FaultSpec,
+    /// Telemetry spec (`trace/`): `None` (the default) leaves the
+    /// network's tracer off, which is zero-footprint (tests/trace.rs).
+    pub trace: Option<TraceSpec>,
     jobs: Vec<JobBuilder>,
 }
 
@@ -288,6 +292,7 @@ impl ScenarioBuilder {
             lb: LoadBalancer::default(),
             traffic: None,
             faults: FaultSpec::default(),
+            trace: None,
             jobs: Vec::new(),
         }
     }
@@ -322,6 +327,12 @@ impl ScenarioBuilder {
     /// Install a fault plan (random loss + scheduled churn events).
     pub fn faults(mut self, spec: FaultSpec) -> Self {
         self.faults = spec;
+        self
+    }
+
+    /// Enable telemetry recording (`Some(spec)`) on the built network.
+    pub fn trace(mut self, spec: Option<TraceSpec>) -> Self {
+        self.trace = spec;
         self
     }
 
@@ -379,6 +390,11 @@ impl ScenarioBuilder {
         }
         let (mut net, ft) = build(self.topo, sim, self.lb.clone());
         net.faults = self.faults.clone();
+        // enable the tracer before jobs are installed so install-time
+        // spans land too
+        if let Some(ts) = &self.trace {
+            net.tracer = Tracer::on(ts.clone());
+        }
 
         // statically partition the descriptor table across tenants, as
         // most in-network algorithms do and the paper adopts for

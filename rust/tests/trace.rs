@@ -1,0 +1,176 @@
+//! Telemetry recorder (DESIGN.md §2.7): the three collectors — the
+//! time-series sampler, the job lifecycle spans, and the realized
+//! dynamic-tree capture — observed end to end on a churny Canary run,
+//! plus the zero-footprint contract: with tracing off (and even with
+//! it on) the seeded fingerprint is bit-identical, because sampler
+//! ticks live outside `events_processed` and never advance the clock.
+
+mod common;
+
+use canary::collectives::runner;
+use canary::faults::FaultSpec;
+use canary::sim::US;
+use canary::trace::{SpanKind, TraceSpec};
+use canary::util::json;
+use canary::workload::ScenarioBuilder;
+use common::{fingerprint_bounded, lossy_scenario, verify};
+
+/// The churn scenario of the trace suite: an access-link flap plus a
+/// 16x straggler under an aggressive 1 µs aggregation timeout, so the
+/// dynamic-tree collector sees timeout-fired partial aggregations.
+fn churny() -> ScenarioBuilder {
+    let mut sc = lossy_scenario(8, 4).faults(
+        FaultSpec::default()
+            .with_link_flap(0, 8, 5 * US, 40 * US)
+            .with_straggler(3, 16),
+    );
+    sc.sim.canary_timeout_ps = US;
+    sc
+}
+
+const BOUND: u64 = 5_000_000 * US;
+
+// ---------------------------------------------------------------- pins
+
+/// The zero-footprint contract, both halves. (a) Tracing off is the
+/// deterministic baseline: same seed, same fingerprint. (b) Turning
+/// tracing ON still reproduces that fingerprint bit for bit — the
+/// recorder draws no RNG, schedules nothing the simulation reads, and
+/// its ticks stay outside `events_processed` and `now`.
+#[test]
+fn tracing_is_zero_footprint_on_the_seeded_fingerprint() {
+    let off = fingerprint_bounded(&churny(), 42, BOUND);
+    let off2 = fingerprint_bounded(&churny(), 42, BOUND);
+    assert_eq!(off, off2, "untraced runs diverged at the same seed");
+    let on = fingerprint_bounded(
+        &churny().trace(Some(TraceSpec::default())),
+        42,
+        BOUND,
+    );
+    assert_eq!(
+        off, on,
+        "enabling --trace perturbed the simulation fingerprint"
+    );
+    // a non-default cadence is equally invisible
+    let fast = fingerprint_bounded(
+        &churny().trace(Some(TraceSpec::default().with_cadence(US / 4))),
+        42,
+        BOUND,
+    );
+    assert_eq!(off, fast, "sampler cadence leaked into the simulation");
+}
+
+// ---------------------------------------------- collectors, end to end
+
+/// One traced churny run feeds all three collectors: the sampler
+/// produced ticks, every lifecycle phase left a span, and the
+/// dynamic-tree capture recorded at least one timeout-fired *partial*
+/// aggregation (fewer contributors than expected) — while values stay
+/// exact and the fault is fully recovered from.
+#[test]
+fn traced_churn_run_feeds_all_three_collectors() {
+    let mut exp = churny().trace(Some(TraceSpec::default())).build(77);
+    let res = runner::run_to_completion(&mut exp.net, BOUND);
+    assert!(res[0].completed, "traced churn run did not complete");
+    verify(&exp).unwrap();
+
+    // collector 1: time series
+    let tracer = &exp.net.tracer;
+    assert!(tracer.n_samples() > 0, "sampler never ticked");
+    let last = tracer.samples().last().unwrap();
+    assert!(
+        last.t_ps <= exp.net.now + TraceSpec::default().cadence_ps,
+        "sampler ran past the end of the simulation"
+    );
+
+    // collector 2: lifecycle spans, in causal order
+    let kinds: Vec<SpanKind> =
+        tracer.spans().iter().map(|s| s.kind).collect();
+    for want in [
+        SpanKind::Install,
+        SpanKind::Kick,
+        SpanKind::FirstSend,
+        SpanKind::LastSend,
+        SpanKind::Aggregated,
+        SpanKind::Broadcast,
+        SpanKind::HostDone,
+        SpanKind::Complete,
+    ] {
+        assert!(
+            kinds.contains(&want),
+            "lifecycle span {} missing (got {kinds:?})",
+            want.name()
+        );
+    }
+    let pos = |k: SpanKind| kinds.iter().position(|&x| x == k).unwrap();
+    assert!(pos(SpanKind::Install) < pos(SpanKind::FirstSend));
+    assert!(pos(SpanKind::FirstSend) < pos(SpanKind::Complete));
+
+    // collector 3: realized dynamic trees
+    let trees = tracer.tree_records();
+    assert!(!trees.is_empty(), "no aggregation forwards recorded");
+    assert!(
+        trees.iter().all(|r| r.contributed <= r.expected.max(1)),
+        "a forward claims more contributors than participants"
+    );
+    let partial = trees
+        .iter()
+        .filter(|r| r.via_timeout && r.contributed < r.expected)
+        .count();
+    assert!(
+        partial >= 1,
+        "no timeout-fired partial aggregation was captured \
+         (metrics says {})",
+        exp.net.metrics.partial_aggregates
+    );
+    assert!(
+        exp.net.metrics.partial_aggregates >= 1,
+        "scenario no longer produces partial aggregations"
+    );
+}
+
+// ------------------------------------------------------------- exports
+
+/// `trace::export` writes the three artifacts, non-empty and
+/// parseable: the timeline CSV with its pinned header, the span CSV,
+/// and the realized-tree JSON (round-tripped through `util::json`).
+#[test]
+fn export_writes_three_parseable_artifacts() {
+    let mut exp = churny().trace(Some(TraceSpec::default())).build(77);
+    runner::run_to_completion(&mut exp.net, BOUND);
+
+    let dir = std::env::temp_dir()
+        .join(format!("canary_trace_test_{}", std::process::id()));
+    let dir = dir.to_str().unwrap().to_string();
+    let paths = canary::trace::export(&exp.net, &dir).unwrap();
+    assert_eq!(paths.len(), 3, "expected exactly three artifacts");
+
+    let timeline = std::fs::read_to_string(format!(
+        "{dir}/trace_timeline.csv"
+    ))
+    .unwrap();
+    let mut lines = timeline.lines();
+    assert_eq!(
+        lines.next().unwrap(),
+        "t_us,link,from,to,queued_bytes,class0_bytes,util_pct,drops,\
+         alive,arena_live,live_desc,ecn_marks",
+        "timeline header drifted"
+    );
+    assert!(lines.next().is_some(), "timeline has no data rows");
+
+    let spans =
+        std::fs::read_to_string(format!("{dir}/trace_spans.csv")).unwrap();
+    assert!(spans.lines().count() > 1, "span CSV has no data rows");
+    assert!(spans.contains("complete"), "no completion span exported");
+
+    let trees =
+        std::fs::read_to_string(format!("{dir}/trace_trees.json")).unwrap();
+    let v = json::parse(&trees).expect("trace_trees.json is not JSON");
+    let n = match v.get("forwards_total") {
+        Some(json::Value::Int(n)) => *n,
+        other => panic!("forwards_total missing/mistyped: {other:?}"),
+    };
+    assert!(n > 0, "tree export saw no forwards");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -41,8 +41,8 @@ fn fingerprint(
 
 fn assert_zero_transport_footprint(m: &Metrics) {
     assert_eq!(m.ecn_marks, 0, "marking ran with transport off");
-    assert_eq!(m.pkts_by_kind[PacketKind::TransportAck as usize], 0);
-    assert_eq!(m.pkts_by_kind[PacketKind::TransportCnp as usize], 0);
+    assert_eq!(m.pkts_of_kind(PacketKind::TransportAck), 0);
+    assert_eq!(m.pkts_of_kind(PacketKind::TransportCnp), 0);
     let f = &m.flows;
     assert_eq!(
         (
@@ -212,8 +212,8 @@ fn cnp_and_retransmit_accounting_invariants() {
     assert!(f.delivered_bytes <= f.offered_bytes);
 
     // control frames actually crossed the fabric
-    assert!(m.pkts_by_kind[PacketKind::TransportAck as usize] > 0);
-    assert!(m.pkts_by_kind[PacketKind::TransportCnp as usize] > 0);
+    assert!(m.pkts_of_kind(PacketKind::TransportAck) > 0);
+    assert!(m.pkts_of_kind(PacketKind::TransportCnp) > 0);
 }
 
 /// The whole reactive stack is deterministic from its seed (the new

@@ -1,0 +1,298 @@
+#!/usr/bin/env python3
+"""ASCII renderer for the trace artifacts (DESIGN.md §2.7).
+
+Usage:
+    python3 scripts/plot_trace.py [--dir results/trace] [--links N]
+    python3 scripts/plot_trace.py --check
+
+Reads the three files a traced run exports (``--trace`` on the main
+binary, or ``figures trace``):
+
+* ``trace_timeline.csv`` — sampler ticks: per-link queue depth and
+  utilization plus global gauges (live arena packets, live switch
+  descriptors, cumulative ECN marks). Rendered as one sparkline per
+  busiest link and one per global gauge.
+* ``trace_spans.csv`` — job lifecycle spans (install → kick → sends →
+  aggregated → broadcast → host_done → complete/stalled, plus
+  recovery markers). Rendered as a time-ordered table.
+* ``trace_trees.json`` — realized dynamic trees: one record per
+  switch aggregation forward (contributing ports, expected vs actual
+  fan-in, timeout flag). Rendered as a fan-in histogram and a
+  per-block forward list.
+
+Stdlib only (csv/json/argparse) — no matplotlib, runs anywhere CI
+does. ``--check`` runs the internal self-tests on synthetic data and
+exits 0/1; the CI lint job runs it on every push.
+"""
+
+import argparse
+import csv
+import json
+import os
+import sys
+
+BARS = " .:-=+*#%@"
+
+
+def spark(values, width=60):
+    """Downsample `values` to `width` buckets and render one line."""
+    if not values:
+        return ""
+    if len(values) > width:
+        # bucket-max keeps bursts visible where bucket-mean hides them
+        n = len(values)
+        values = [
+            max(values[i * n // width:(i + 1) * n // width] or [0.0])
+            for i in range(width)
+        ]
+    lo, hi = min(values), max(values)
+    span = (hi - lo) or 1.0
+    idx = [int((v - lo) / span * (len(BARS) - 1)) for v in values]
+    return "".join(BARS[i] for i in idx)
+
+
+def load_timeline(path):
+    """Split the timeline into global-gauge rows and per-link rows."""
+    gauges = []  # (t_us, arena_live, live_desc, ecn_marks)
+    links = {}  # link id -> list of (t_us, queued_bytes, util_pct)
+    with open(path, newline="") as f:
+        for row in csv.DictReader(f):
+            t = float(row["t_us"])
+            if row["link"] == "-1":
+                gauges.append(
+                    (
+                        t,
+                        int(row["arena_live"]),
+                        int(row["live_desc"]),
+                        int(row["ecn_marks"]),
+                    )
+                )
+            else:
+                links.setdefault(int(row["link"]), []).append(
+                    (t, int(row["queued_bytes"]), float(row["util_pct"]))
+                )
+    return gauges, links
+
+
+def render_timeline(gauges, links, top_n):
+    out = []
+    if gauges:
+        t0, t1 = gauges[0][0], gauges[-1][0]
+        out.append(
+            f"timeline: {len(gauges)} ticks, {t0:.1f} .. {t1:.1f} us"
+        )
+        for label, i in (("arena_live", 1), ("live_desc", 2), ("ecn", 3)):
+            vals = [float(g[i]) for g in gauges]
+            out.append(
+                f"  {label:>10} [{min(vals):>8.0f}..{max(vals):>8.0f}] "
+                f"{spark(vals)}"
+            )
+    # busiest links by peak queue depth
+    ranked = sorted(
+        links.items(),
+        key=lambda kv: max(q for _, q, _ in kv[1]),
+        reverse=True,
+    )[:top_n]
+    if ranked:
+        out.append(f"busiest {len(ranked)} links (peak queued bytes):")
+        for link, rows in ranked:
+            q = [float(r[1]) for r in rows]
+            out.append(
+                f"  link {link:>4} [{min(q):>8.0f}..{max(q):>8.0f}] "
+                f"{spark(q)}"
+            )
+    return "\n".join(out)
+
+
+def render_spans(path, limit=40):
+    out = []
+    with open(path, newline="") as f:
+        rows = list(csv.DictReader(f))
+    out.append(f"spans: {len(rows)} recorded")
+    shown = rows[:limit]
+    for r in shown:
+        blk = "" if r["block"] == "-1" else f" block {r['block']}"
+        out.append(
+            f"  {float(r['t_us']):>10.1f} us  job {r['job']} "
+            f"node {r['node']:>4}  {r['kind']}{blk}"
+        )
+    if len(rows) > len(shown):
+        out.append(f"  ... {len(rows) - len(shown)} more")
+    return "\n".join(out)
+
+
+def render_trees(path):
+    with open(path) as f:
+        t = json.load(f)
+    out = [
+        "realized trees: {} forwards ({} via timeout, {} partial)".format(
+            t["forwards_total"], t["timeout_forwards"], t["partial_forwards"]
+        )
+    ]
+    h = t.get("fanin_histogram")
+    if h and sum(h["counts"]):
+        total = sum(h["counts"])
+        width = (h["hi"] - h["lo"]) / len(h["counts"])
+        out.append("fan-in fraction (contributed/expected):")
+        for i, c in enumerate(h["counts"]):
+            if not c:
+                continue
+            frac = c / total
+            bar = "#" * max(1, int(frac * 50))
+            mid = h["lo"] + (i + 0.5) * width
+            out.append(f"  {mid:>5.2f}  {bar} {c}")
+    blocks = t.get("blocks", {})
+    partials = [
+        (key, fw)
+        for key, fwds in sorted(blocks.items())
+        for fw in fwds
+        if fw["contributed"] < fw["expected"]
+    ]
+    if partials:
+        out.append(f"partial forwards ({len(partials)}):")
+        for key, fw in partials[:20]:
+            out.append(
+                "  {:>10.1f} us  {}  sw {}  {}/{} ports {}{}".format(
+                    fw["t_us"],
+                    key,
+                    fw["switch"],
+                    fw["contributed"],
+                    fw["expected"],
+                    fw["ports"],
+                    "  (timeout)" if fw["via_timeout"] else "",
+                )
+            )
+    return "\n".join(out)
+
+
+def main(argv):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--dir", default="results/trace")
+    ap.add_argument("--links", type=int, default=8)
+    ap.add_argument(
+        "--check",
+        action="store_true",
+        help="run internal self-tests on synthetic data and exit",
+    )
+    args = ap.parse_args(argv)
+    if args.check:
+        return self_test()
+
+    timeline = os.path.join(args.dir, "trace_timeline.csv")
+    spans = os.path.join(args.dir, "trace_spans.csv")
+    trees = os.path.join(args.dir, "trace_trees.json")
+    missing = [p for p in (timeline, spans, trees) if not os.path.exists(p)]
+    if missing:
+        print(f"missing artifacts: {', '.join(missing)}", file=sys.stderr)
+        print("run with --trace (or `figures trace`) first", file=sys.stderr)
+        return 1
+    gauges, links = load_timeline(timeline)
+    print(render_timeline(gauges, links, args.links))
+    print()
+    print(render_spans(spans))
+    print()
+    print(render_trees(trees))
+    return 0
+
+
+# --------------------------------------------------------- self-tests
+
+TIMELINE_HEADER = (
+    "t_us,link,from,to,queued_bytes,class0_bytes,util_pct,drops,"
+    "alive,arena_live,live_desc,ecn_marks"
+)
+
+
+def self_test():
+    import tempfile
+
+    failures = []
+
+    def check(name, cond):
+        if not cond:
+            failures.append(name)
+
+    # spark: constant, ramp, empty, downsampled burst
+    check("spark empty", spark([]) == "")
+    check("spark const", set(spark([5.0] * 10)) == {BARS[0]})
+    ramp = spark([float(i) for i in range(10)])
+    check("spark ramp ends high", ramp[-1] == BARS[-1])
+    burst = spark([0.0] * 200 + [9.0] + [0.0] * 200, width=20)
+    check("spark keeps bursts", BARS[-1] in burst)
+
+    with tempfile.TemporaryDirectory() as d:
+        tpath = os.path.join(d, "trace_timeline.csv")
+        with open(tpath, "w") as f:
+            f.write(TIMELINE_HEADER + "\n")
+            f.write("0.0,-1,-1,-1,128,128,,,,3,2,0\n")
+            f.write("0.0,4,0,8,128,128,55.0,0,true,,,\n")
+            f.write("1.0,-1,-1,-1,0,0,,,,1,0,2\n")
+        gauges, links = load_timeline(tpath)
+        check("gauge rows parsed", len(gauges) == 2)
+        check("gauge ecn cumulative", gauges[-1][3] == 2)
+        check("link rows parsed", list(links) == [4])
+        rendered = render_timeline(gauges, links, 8)
+        check("timeline mentions link", "link    4" in rendered)
+
+        spath = os.path.join(d, "trace_spans.csv")
+        with open(spath, "w") as f:
+            f.write("t_us,kind,job,node,block,detail\n")
+            f.write("0.0,install,0,1,-1,8\n")
+            f.write("12.5,aggregated,0,9,3,8\n")
+        srendered = render_spans(spath)
+        check("span count", "2 recorded" in srendered)
+        check("span block", "block 3" in srendered)
+        check("span blockless", "block -1" not in srendered)
+
+        jpath = os.path.join(d, "trace_trees.json")
+        with open(jpath, "w") as f:
+            json.dump(
+                {
+                    "forwards_total": 2,
+                    "timeout_forwards": 1,
+                    "partial_forwards": 1,
+                    "dropped_records": 0,
+                    "fanin_histogram": {
+                        "lo": 0.0,
+                        "hi": 1.0,
+                        "counts": [1, 0, 0, 0, 0, 0, 0, 1],
+                    },
+                    "blocks": {
+                        "t0/b0": [
+                            {
+                                "t_us": 3.0,
+                                "switch": 9,
+                                "ports": [0, 1],
+                                "contributed": 2,
+                                "expected": 2,
+                                "via_timeout": False,
+                                "latency_us": 1.0,
+                            },
+                            {
+                                "t_us": 9.0,
+                                "switch": 9,
+                                "ports": [0],
+                                "contributed": 1,
+                                "expected": 2,
+                                "via_timeout": True,
+                                "latency_us": 7.0,
+                            },
+                        ]
+                    },
+                },
+                f,
+            )
+        trendered = render_trees(jpath)
+        check("tree totals", "2 forwards (1 via timeout" in trendered)
+        check("tree partial listed", "1/2 ports [0]" in trendered)
+        check("tree timeout tagged", "(timeout)" in trendered)
+
+    if failures:
+        print("FAIL: " + ", ".join(failures), file=sys.stderr)
+        return 1
+    print("plot_trace self-tests passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
