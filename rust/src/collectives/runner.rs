@@ -204,6 +204,7 @@ fn install_static_job(net: &mut Network, ft: &FatTree, spec: JobSpec) -> u32 {
         }
         // the climb converges on the root, which starts the broadcast
         assert_eq!(members.len(), 1);
+        // lint: allow(unordered-iter, single entry, pinned by the assert_eq just above)
         let (&idx, ports) = members.iter().next().unwrap();
         assert_eq!(ft.switch_id(tiers, idx), root);
         let role = TreeRole {

@@ -64,6 +64,11 @@ pub struct SimConfig {
     /// Background-flow retransmission timeout (reactive transport loss
     /// recovery; doubled per retry round up to 16x).
     pub transport_rto_ps: Time,
+    /// Run the end-of-segment conservation audit (`sim::invariants`)
+    /// even in release builds (`--paranoid` on the CLI). Debug builds
+    /// always audit. The audit is read-only, so this cannot change a
+    /// run's fingerprint — only whether accounting bugs abort it.
+    pub paranoid: bool,
     /// Master seed; every stochastic choice derives from it.
     pub seed: u64,
 }
@@ -101,6 +106,7 @@ impl Default for SimConfig {
             // patience. Spurious retransmits are deduplicated at the
             // sink either way.
             transport_rto_ps: 200 * US,
+            paranoid: false,
             seed: 0xCA11A8,
         }
     }
@@ -128,6 +134,11 @@ impl SimConfig {
 
     pub fn with_values(mut self, on: bool) -> Self {
         self.carry_values = on;
+        self
+    }
+
+    pub fn with_paranoid(mut self, on: bool) -> Self {
+        self.paranoid = on;
         self
     }
 

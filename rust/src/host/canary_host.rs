@@ -286,8 +286,9 @@ fn leader_check_complete(
     );
     lb.result = lb.acc.take();
     let result = lb.result.clone();
-    let restore: Vec<(NodeId, u64)> =
+    let mut restores: Vec<(NodeId, u64)> =
         lb.restore.iter().map(|(&k, &v)| (k, v)).collect();
+    restores.sort_unstable_by_key(|&(sw, _)| sw);
     let wire_id = ch.wire_id(idx);
     let bcast_wire = if stays { 64 } else { wire };
     let bcast_payload = if stays { None } else { result.as_ref() };
@@ -314,8 +315,9 @@ fn leader_check_complete(
             hosts as u64,
         );
     }
-    // tree restoration packets for collided switches (Section 3.2.1)
-    for (sw, bitmap) in restore {
+    // tree restoration packets for collided switches (Section 3.2.1),
+    // in switch-id order so seeded runs emit them identically
+    for (sw, bitmap) in restores {
         let mut pkt = Packet::data(PacketKind::CanaryRestore, me, sw);
         pkt.tenant = tenant;
         pkt.block = wire_id;

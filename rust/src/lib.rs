@@ -50,6 +50,7 @@ pub mod config;
 pub mod faults;
 pub mod figures;
 pub mod host;
+pub mod lint;
 pub mod loadbalance;
 pub mod metrics;
 pub mod report;

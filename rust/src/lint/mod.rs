@@ -1,0 +1,486 @@
+//! `canary lint` — repo-specific static analysis for determinism and
+//! ownership discipline (DESIGN.md §2.8).
+//!
+//! A token-level scanner over `rust/src/**` — no syntax tree, no
+//! external crates, consistent with the workspace's zero-dependency
+//! rule. Five rules guard the properties every figure, fingerprint pin
+//! and CI determinism job in this repo rests on:
+//!
+//! - **D1 `unordered-iter`** — iterating a `HashMap`/`HashSet` binding
+//!   observes the process-random hasher order, so any such iteration
+//!   that can reach events, metrics or exported rows is a
+//!   cross-process nondeterminism hazard. Sites must provably sort
+//!   (a `.sort*` call on the same or a following line) or carry
+//!   `// lint: allow(unordered-iter, <reason>)`.
+//! - **D2 `wall-clock`** — `Instant`/`SystemTime` are allowed only in
+//!   the bench/figure harness allowlist or under
+//!   `// lint: allow(wall-clock, <reason>)`, and never in a file that
+//!   defines `fn fingerprint` (no annotation can excuse that).
+//! - **D3 `rng`** — all randomness flows through the seeded
+//!   generators in `util/rng.rs`; ambient-entropy tokens
+//!   (`thread_rng`, `OsRng`, `RandomState`, ...) are flagged.
+//! - **D4 `fp-coverage`** — every counter field of the metrics
+//!   structs must appear in `fingerprint()` or carry
+//!   `// fp: excluded(<reason>)`, so new counters cannot silently
+//!   escape the digest.
+//! - **D5 `cli-doc`** — every flag in `main.rs`'s known-flag list
+//!   must be documented as `--flag` in README.md.
+//!
+//! Annotations live in line comments on the flagged line or on a
+//! comment-only line directly above it, and must carry a non-empty
+//! reason — a bare `allow(...)` is itself a finding.
+
+pub mod rules;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Which rule produced a finding.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    /// D1: iteration over a hash-ordered container.
+    UnorderedIter,
+    /// D2: wall-clock type outside the allowlist.
+    WallClock,
+    /// D3: randomness outside `util/rng.rs`.
+    Rng,
+    /// D4: counter field missing from `fingerprint()`.
+    FpCoverage,
+    /// D5: CLI flag undocumented in README.md.
+    CliDoc,
+}
+
+impl Rule {
+    /// The annotation key / report tag for this rule.
+    pub fn key(self) -> &'static str {
+        match self {
+            Rule::UnorderedIter => "unordered-iter",
+            Rule::WallClock => "wall-clock",
+            Rule::Rng => "rng",
+            Rule::FpCoverage => "fp-coverage",
+            Rule::CliDoc => "cli-doc",
+        }
+    }
+}
+
+/// One lint violation: file, 1-based line, rule and message.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: Rule,
+    pub message: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.file,
+            self.line,
+            self.rule.key(),
+            self.message
+        )
+    }
+}
+
+/// One physical source line, split into code and comment text. String
+/// literal *contents* are blanked out of `code` (the quotes remain as
+/// token boundaries) and collected into `strings` in order, so rules
+/// never token-match prose and D5 can still read flag-name literals.
+#[derive(Clone, Debug, Default)]
+pub struct SourceLine {
+    pub code: String,
+    pub comment: String,
+    pub strings: Vec<String>,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum St {
+    Code,
+    /// Inside `/* ... */`, with nesting depth.
+    Block(u32),
+    /// Inside a `"..."` literal.
+    Str,
+    /// Inside a raw string literal with this many `#`s.
+    Raw(u8),
+}
+
+pub(crate) fn is_ident_byte(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+fn raw_open(b: &[u8], i: usize) -> Option<u8> {
+    // at b[i] == 'r': matches `r"` or `r#...#"`
+    let mut j = i + 1;
+    let mut hashes = 0u8;
+    while b.get(j) == Some(&b'#') && hashes < u8::MAX {
+        hashes += 1;
+        j += 1;
+    }
+    if b.get(j) == Some(&b'"') {
+        Some(hashes)
+    } else {
+        None
+    }
+}
+
+fn closes_raw(b: &[u8], quote: usize, hashes: u8) -> bool {
+    let mut j = quote + 1;
+    for _ in 0..hashes {
+        if b.get(j) != Some(&b'#') {
+            return false;
+        }
+        j += 1;
+    }
+    true
+}
+
+/// Split Rust source into per-line code/comment/string-literal parts.
+/// Byte-level state machine: line comments, nested block comments,
+/// plain and raw strings, char literals vs. lifetimes. Multi-byte
+/// UTF-8 only ever appears inside comments and strings here, where
+/// fidelity does not matter for token matching.
+pub fn split_source(text: &str) -> Vec<SourceLine> {
+    let mut out = Vec::new();
+    let mut st = St::Code;
+    let mut lit = String::new();
+    for raw in text.lines() {
+        let b = raw.as_bytes();
+        let mut line = SourceLine::default();
+        let mut i = 0usize;
+        while i < b.len() {
+            match st {
+                St::Code => {
+                    let c = b[i];
+                    if c == b'/' && b.get(i + 1) == Some(&b'/') {
+                        line.comment.push_str(&raw[i + 2..]);
+                        i = b.len();
+                    } else if c == b'/' && b.get(i + 1) == Some(&b'*') {
+                        st = St::Block(1);
+                        line.code.push(' ');
+                        i += 2;
+                    } else if c == b'"' {
+                        st = St::Str;
+                        line.code.push('"');
+                        i += 1;
+                    } else if c == b'r'
+                        && (i == 0 || !is_ident_byte(b[i - 1]))
+                        && raw_open(b, i).is_some()
+                    {
+                        let hashes = raw_open(b, i).unwrap_or(0);
+                        st = St::Raw(hashes);
+                        line.code.push('"');
+                        i += 2 + hashes as usize;
+                    } else if c == b'\'' {
+                        // char literal vs. lifetime: a literal closes
+                        // within a couple of bytes, a lifetime does not
+                        if b.get(i + 1) == Some(&b'\\') {
+                            let mut j = i + 2;
+                            while j < b.len() && b[j] != b'\'' {
+                                j += 1;
+                            }
+                            line.code.push_str("' '");
+                            i = j + 1;
+                        } else if b.get(i + 2) == Some(&b'\'') {
+                            line.code.push_str("' '");
+                            i += 3;
+                        } else {
+                            // lifetime marker
+                            line.code.push('\'');
+                            i += 1;
+                        }
+                    } else {
+                        line.code.push(c as char);
+                        i += 1;
+                    }
+                }
+                St::Block(depth) => {
+                    if b[i] == b'*' && b.get(i + 1) == Some(&b'/') {
+                        st = if depth == 1 {
+                            St::Code
+                        } else {
+                            St::Block(depth - 1)
+                        };
+                        i += 2;
+                    } else if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+                        st = St::Block(depth + 1);
+                        i += 2;
+                    } else {
+                        line.comment.push(b[i] as char);
+                        i += 1;
+                    }
+                }
+                St::Str => {
+                    if b[i] == b'\\' {
+                        if let Some(&e) = b.get(i + 1) {
+                            lit.push(e as char);
+                        }
+                        i += 2;
+                    } else if b[i] == b'"' {
+                        line.strings.push(std::mem::take(&mut lit));
+                        line.code.push('"');
+                        st = St::Code;
+                        i += 1;
+                    } else {
+                        lit.push(b[i] as char);
+                        i += 1;
+                    }
+                }
+                St::Raw(hashes) => {
+                    if b[i] == b'"' && closes_raw(b, i, hashes) {
+                        line.strings.push(std::mem::take(&mut lit));
+                        line.code.push('"');
+                        st = St::Code;
+                        i += 1 + hashes as usize;
+                    } else {
+                        lit.push(b[i] as char);
+                        i += 1;
+                    }
+                }
+            }
+        }
+        if st == St::Str || matches!(st, St::Raw(_)) {
+            lit.push('\n'); // literal continues on the next line
+        }
+        out.push(line);
+    }
+    out
+}
+
+/// Iterate the identifier tokens of a code fragment.
+pub(crate) fn idents(code: &str) -> impl Iterator<Item = &str> {
+    code.split(|c: char| !(c.is_ascii_alphanumeric() || c == '_'))
+        .filter(|t| !t.is_empty())
+}
+
+/// Does `code` contain `word` as a whole identifier token?
+pub(crate) fn has_ident(code: &str, word: &str) -> bool {
+    idents(code).any(|t| t == word)
+}
+
+/// First whole-word position of `word` in `code`.
+pub(crate) fn word_pos(code: &str, word: &str) -> Option<usize> {
+    let b = code.as_bytes();
+    let mut from = 0usize;
+    while let Some(p) = code[from..].find(word) {
+        let abs = from + p;
+        from = abs + word.len();
+        let before = abs == 0 || !is_ident_byte(b[abs - 1]);
+        let end = abs + word.len();
+        let after = end >= b.len() || !is_ident_byte(b[end]);
+        if before && after {
+            return Some(abs);
+        }
+    }
+    None
+}
+
+/// The identifier ending immediately before byte `pos` (e.g. the
+/// receiver of a `.method(` call), if any.
+pub(crate) fn ident_before(code: &str, pos: usize) -> Option<&str> {
+    let b = code.as_bytes();
+    let mut start = pos;
+    while start > 0 && is_ident_byte(b[start - 1]) {
+        start -= 1;
+    }
+    if start == pos {
+        None
+    } else {
+        Some(&code[start..pos])
+    }
+}
+
+/// Parse `lint: allow(<key>[, reason])` out of a comment. `None` when
+/// absent; `Some(reason)` (possibly empty — itself a finding) when
+/// present.
+pub(crate) fn allow_reason(comment: &str, key: &str) -> Option<String> {
+    let pat = format!("lint: allow({key}");
+    let pos = comment.find(&pat)?;
+    let rest = &comment[pos + pat.len()..];
+    match rest.as_bytes().first() {
+        Some(b')') => Some(String::new()),
+        Some(b',') => {
+            let body = &rest[1..];
+            let end = body.find(')').unwrap_or(body.len());
+            Some(body[..end].trim().to_string())
+        }
+        _ => None,
+    }
+}
+
+/// Parse `fp: excluded(<reason>)` out of a comment.
+pub(crate) fn fp_excluded_reason(comment: &str) -> Option<String> {
+    let pat = "fp: excluded(";
+    let pos = comment.find(pat)?;
+    let body = &comment[pos + pat.len()..];
+    let end = body.find(')').unwrap_or(body.len());
+    Some(body[..end].trim().to_string())
+}
+
+/// Annotation lookup for the site at `idx`: the line's own trailing
+/// comment, or a comment-only line directly above.
+pub(crate) fn site_annotation(
+    lines: &[SourceLine],
+    idx: usize,
+    parse: impl Fn(&str) -> Option<String>,
+) -> Option<String> {
+    if let Some(r) = parse(&lines[idx].comment) {
+        return Some(r);
+    }
+    if idx > 0 && lines[idx - 1].code.trim().is_empty() {
+        return parse(&lines[idx - 1].comment);
+    }
+    None
+}
+
+/// Push either nothing (annotated with a reason), a missing-reason
+/// finding, or the base finding for the site at `idx`.
+pub(crate) fn report_site(
+    out: &mut Vec<Finding>,
+    lines: &[SourceLine],
+    file: &str,
+    idx: usize,
+    rule: Rule,
+    message: String,
+) {
+    let key = rule.key();
+    let ann = site_annotation(lines, idx, |c| allow_reason(c, key));
+    match ann {
+        Some(reason) if !reason.is_empty() => {}
+        Some(_) => out.push(Finding {
+            file: file.to_string(),
+            line: idx + 1,
+            rule,
+            message: format!(
+                "`lint: allow({key})` needs a reason: \
+                 `allow({key}, <why>)`"
+            ),
+        }),
+        None => out.push(Finding {
+            file: file.to_string(),
+            line: idx + 1,
+            rule,
+            message,
+        }),
+    }
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = fs::read_dir(dir) else {
+        return;
+    };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+fn rel_name(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    rel.to_string_lossy().replace('\\', "/")
+}
+
+/// Lint every `.rs` file under `<root>/src` (D1–D4) plus the CLI/doc
+/// sync rule (D5) against `<root>/src/main.rs` and the repository
+/// README. Findings come back sorted by (file, line, rule) so output
+/// is deterministic and diffable.
+pub fn lint_tree(root: &Path) -> Vec<Finding> {
+    let mut files = Vec::new();
+    collect_rs(&root.join("src"), &mut files);
+    files.sort();
+    let mut findings = Vec::new();
+    for path in &files {
+        let Ok(text) = fs::read_to_string(path) else {
+            continue;
+        };
+        let rel = rel_name(root, path);
+        findings.extend(rules::lint_source(&rel, &text));
+    }
+    findings.extend(rules::lint_cli_docs(root));
+    findings.sort_by(|a, b| {
+        (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule))
+    });
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code_of(text: &str) -> Vec<String> {
+        split_source(text).into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn comments_are_stripped_from_code() {
+        let c = code_of("let x = 1; // HashMap here\n/* for y in z */ ok");
+        assert!(!c[0].contains("HashMap"), "{c:?}");
+        assert!(!c[1].contains("for"), "{c:?}");
+        assert!(c[1].contains("ok"), "{c:?}");
+    }
+
+    #[test]
+    fn block_comments_nest_and_span_lines() {
+        let c = code_of("a /* x /* y */ z */ b\n/* open\nstill */ tail");
+        assert!(c[0].contains('a') && c[0].contains('b'), "{c:?}");
+        assert!(!c[0].contains('z'), "{c:?}");
+        assert!(c[1].is_empty() || c[1].trim().is_empty(), "{c:?}");
+        assert!(c[2].contains("tail"), "{c:?}");
+    }
+
+    #[test]
+    fn string_contents_are_blanked_but_collected() {
+        let lines = split_source("print(\"for x in map.iter()\"); y");
+        assert!(!lines[0].code.contains("iter"), "{:?}", lines[0]);
+        assert!(lines[0].code.contains('y'));
+        assert_eq!(lines[0].strings, vec!["for x in map.iter()"]);
+    }
+
+    #[test]
+    fn raw_strings_and_escapes() {
+        let lines = split_source("let s = r#\"a \"quoted\" b\"#; t");
+        assert_eq!(lines[0].strings, vec!["a \"quoted\" b"]);
+        assert!(lines[0].code.contains('t'));
+        let esc = split_source("let s = \"a\\\"b\"; u");
+        assert_eq!(esc[0].strings, vec!["a\"b"]);
+        assert!(esc[0].code.contains('u'));
+    }
+
+    #[test]
+    fn char_literals_are_not_strings_or_lifetimes() {
+        let lines = split_source("let c = '\"'; let s = \"x\"; f::<'a>()");
+        assert_eq!(lines[0].strings, vec!["x"]);
+        assert!(lines[0].code.contains("f::<'a>()"), "{:?}", lines[0]);
+    }
+
+    #[test]
+    fn ident_matching_is_whole_word() {
+        assert!(has_ident("for x in map { }", "map"));
+        assert!(!has_ident("for x in remap { }", "map"));
+        assert!(!has_ident("for x in map_b { }", "map"));
+        assert_eq!(word_pos("x formula for y", "for"), Some(10));
+    }
+
+    #[test]
+    fn annotation_grammar() {
+        assert_eq!(
+            allow_reason(" lint: allow(unordered-iter, sorted below)", "unordered-iter"),
+            Some("sorted below".to_string())
+        );
+        assert_eq!(
+            allow_reason(" lint: allow(unordered-iter)", "unordered-iter"),
+            Some(String::new())
+        );
+        assert_eq!(allow_reason(" lint: allow(rngx)", "rng"), None);
+        assert_eq!(
+            fp_excluded_reason(" fp: excluded(derived)"),
+            Some("derived".to_string())
+        );
+    }
+}

@@ -1,0 +1,452 @@
+//! The five lint rules (D1–D5). Each is a pure function over the
+//! pre-split [`SourceLine`]s of one file; `lint_cli_docs` (D5) is the
+//! one cross-file rule. See the module docs and DESIGN.md §2.8 for
+//! what each rule protects and how to allowlist a site.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use super::{
+    fp_excluded_reason, has_ident, ident_before, idents, is_ident_byte, report_site,
+    site_annotation, split_source, word_pos, Finding, Rule, SourceLine,
+};
+
+/// Container methods whose call on a hash-ordered receiver observes
+/// iteration order (D1).
+const ITER_METHODS: &[&str] = &[
+    "iter",
+    "iter_mut",
+    "into_iter",
+    "keys",
+    "values",
+    "values_mut",
+    "into_keys",
+    "into_values",
+    "drain",
+    "retain",
+];
+
+/// Ambient-entropy tokens (D3): anything that seeds itself from the
+/// OS or the process makes runs non-reproducible.
+const RNG_DENY: &[&str] = &[
+    "thread_rng",
+    "from_entropy",
+    "OsRng",
+    "StdRng",
+    "SmallRng",
+    "RandomState",
+    "getrandom",
+    "rand_core",
+];
+
+/// Files where wall-clock reads are expected by design (D2): the
+/// bench harness and the figure-generation driver, which time real
+/// work and never feed a simulation.
+const WALL_CLOCK_ALLOWED: &[&str] = &["util/bench.rs", "figures/mod.rs"];
+
+/// Structs whose counter fields the fingerprint must cover (D4).
+const FP_STRUCTS: &[&str] = &["Metrics", "FlowStats", "EngineStats"];
+
+/// Run the per-file rules (D1–D4) over one source file. `file` is the
+/// root-relative path with `/` separators (used for allowlists and in
+/// findings).
+pub fn lint_source(file: &str, text: &str) -> Vec<Finding> {
+    let lines = split_source(text);
+    let mut out = Vec::new();
+    d1_unordered_iter(file, &lines, &mut out);
+    d2_wall_clock(file, &lines, &mut out);
+    d3_rng(file, &lines, &mut out);
+    d4_fingerprint(file, &lines, &mut out);
+    out
+}
+
+/// Does this line declare a binding or field of a hash-ordered type?
+/// Recognizes the `name: ...Hash{Map,Set}<...>` and
+/// `let [mut] name = Hash{Map,Set}::new()` shapes (fields, lets,
+/// struct-literal initializers). Returns the binding name. Function
+/// parameters are out of scope — the declarations that matter for
+/// determinism are fields and locals, and a narrow shape keeps the
+/// false-positive rate at zero.
+fn hash_binding(code: &str) -> Option<String> {
+    if !has_ident(code, "HashMap") && !has_ident(code, "HashSet") {
+        return None;
+    }
+    let mut t = code.trim_start();
+    loop {
+        let mut changed = false;
+        let kws = ["pub(crate)", "pub(super)", "pub", "let", "mut", "static"];
+        for kw in kws {
+            if let Some(rest) = t.strip_prefix(kw) {
+                if rest.starts_with([' ', '\t']) {
+                    t = rest.trim_start();
+                    changed = true;
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    let name_len = t.bytes().take_while(|&c| is_ident_byte(c)).count();
+    if name_len == 0 {
+        return None;
+    }
+    let name = &t[..name_len];
+    let rest = t[name_len..].trim_start();
+    // a real binder is followed by `:` (field/typed let) or `=` —
+    // keywords like `for`/`if` never are, so they filter themselves
+    let binds = (rest.starts_with(':') && !rest.starts_with("::"))
+        || (rest.starts_with('=') && !rest.starts_with("=="));
+    if binds {
+        Some(name.to_string())
+    } else {
+        None
+    }
+}
+
+/// Does this line (or one of the next three, for multi-line
+/// statements) sort the result? A `.sort*` call right after the
+/// iteration counts as "provably sorts before use".
+fn sorts_nearby(lines: &[SourceLine], idx: usize) -> bool {
+    lines[idx..lines.len().min(idx + 4)].iter().any(|l| {
+        l.code.contains(".sort(")
+            || l.code.contains(".sort_by(")
+            || l.code.contains(".sort_by_key(")
+            || l.code.contains(".sort_unstable(")
+            || l.code.contains(".sort_unstable_by(")
+            || l.code.contains(".sort_unstable_by_key(")
+    })
+}
+
+/// The hash-ordered binding this line iterates, if any: either an
+/// `.iter()`-family call whose receiver is a known hash binding, or a
+/// `for ... in <expr>` whose expression mentions one.
+fn iter_site(code: &str, hashed: &BTreeSet<String>) -> Option<String> {
+    for m in ITER_METHODS {
+        let pat = format!(".{m}(");
+        let mut from = 0usize;
+        while let Some(p) = code[from..].find(&pat) {
+            let dot = from + p;
+            from = dot + pat.len();
+            if let Some(recv) = ident_before(code, dot) {
+                if hashed.contains(recv) {
+                    return Some(recv.to_string());
+                }
+            }
+        }
+    }
+    if let Some(fpos) = word_pos(code, "for") {
+        let rest = &code[fpos + 3..];
+        if let Some(inpos) = word_pos(rest, "in") {
+            let expr = &rest[inpos + 2..];
+            let expr = expr.split('{').next().unwrap_or(expr);
+            for id in idents(expr) {
+                if hashed.contains(id) {
+                    return Some(id.to_string());
+                }
+            }
+        }
+    }
+    None
+}
+
+/// D1: unordered iteration over hash containers. Per-file binding
+/// tracking (names are collected only from this file's declarations),
+/// so a `jobs: Vec<_>` in one module is never confused with a
+/// `jobs: HashMap<_, _>` in another.
+fn d1_unordered_iter(file: &str, lines: &[SourceLine], out: &mut Vec<Finding>) {
+    let mut hashed = BTreeSet::new();
+    for l in lines {
+        if let Some(name) = hash_binding(&l.code) {
+            hashed.insert(name);
+        }
+    }
+    if hashed.is_empty() {
+        return;
+    }
+    for (idx, l) in lines.iter().enumerate() {
+        let Some(name) = iter_site(&l.code, &hashed) else {
+            continue;
+        };
+        if sorts_nearby(lines, idx) {
+            continue;
+        }
+        report_site(
+            out,
+            lines,
+            file,
+            idx,
+            Rule::UnorderedIter,
+            format!(
+                "iteration over hash-ordered `{name}` observes the \
+                 process-random hasher order; sort first or annotate \
+                 `// lint: allow(unordered-iter, <reason>)`"
+            ),
+        );
+    }
+}
+
+/// D2: wall-clock containment. Allowlisted harness files may read the
+/// clock freely; a file that defines `fn fingerprint` may never (no
+/// annotation can excuse it); everywhere else needs a reasoned
+/// `allow(wall-clock, ...)`.
+fn d2_wall_clock(file: &str, lines: &[SourceLine], out: &mut Vec<Finding>) {
+    if WALL_CLOCK_ALLOWED.iter().any(|a| file.ends_with(a)) {
+        return;
+    }
+    let defines_fp = lines.iter().any(|l| l.code.contains("fn fingerprint"));
+    for (idx, l) in lines.iter().enumerate() {
+        let instant = has_ident(&l.code, "Instant");
+        if !instant && !has_ident(&l.code, "SystemTime") {
+            continue;
+        }
+        if defines_fp {
+            out.push(Finding {
+                file: file.to_string(),
+                line: idx + 1,
+                rule: Rule::WallClock,
+                message: "wall-clock type in a file that defines \
+                          `fn fingerprint` (not allowlistable)"
+                    .to_string(),
+            });
+            continue;
+        }
+        report_site(
+            out,
+            lines,
+            file,
+            idx,
+            Rule::WallClock,
+            "wall-clock type outside the bench/figure allowlist; \
+             annotate `// lint: allow(wall-clock, <reason>)`"
+                .to_string(),
+        );
+    }
+}
+
+/// D3: RNG discipline. Randomness must come from the seeded
+/// generators in `util/rng.rs`; ambient-entropy tokens and `rand::`
+/// paths are flagged (annotatable, but nothing in-tree should be).
+fn d3_rng(file: &str, lines: &[SourceLine], out: &mut Vec<Finding>) {
+    if file.ends_with("util/rng.rs") {
+        return; // the sanctioned implementation itself
+    }
+    for (idx, l) in lines.iter().enumerate() {
+        let mut hit = RNG_DENY.iter().copied().find(|&t| has_ident(&l.code, t));
+        if hit.is_none() {
+            let rand_path = word_pos(&l.code, "rand")
+                .is_some_and(|p| l.code[p + 4..].starts_with("::"));
+            if rand_path {
+                hit = Some("rand::");
+            }
+        }
+        let Some(token) = hit else {
+            continue;
+        };
+        report_site(
+            out,
+            lines,
+            file,
+            idx,
+            Rule::Rng,
+            format!(
+                "`{token}` bypasses the seeded util/rng.rs generators \
+                 (runs stop being reproducible)"
+            ),
+        );
+    }
+}
+
+/// Field declaration `name: Type` on this line (struct bodies).
+fn field_decl(code: &str) -> Option<(String, String)> {
+    let mut t = code.trim_start();
+    for kw in ["pub(crate)", "pub(super)", "pub"] {
+        if let Some(rest) = t.strip_prefix(kw) {
+            if rest.starts_with([' ', '\t']) {
+                t = rest.trim_start();
+            }
+        }
+    }
+    let name_len = t.bytes().take_while(|&c| is_ident_byte(c)).count();
+    if name_len == 0 {
+        return None;
+    }
+    let name = &t[..name_len];
+    let rest = t[name_len..].trim_start();
+    let ty = rest.strip_prefix(':')?;
+    if ty.starts_with(':') {
+        return None; // `::` path, not a field
+    }
+    let ty = ty.trim().trim_end_matches(',').trim();
+    Some((name.to_string(), ty.to_string()))
+}
+
+/// Is this field type a counter the fingerprint should cover?
+/// Unsigned integers, plus arrays and vectors of them. Floats
+/// (wall-clock measurements) and nested structs are covered by their
+/// own fields/rules.
+fn is_counter_type(ty: &str) -> bool {
+    for base in ["u16", "u32", "u64", "u128", "usize"] {
+        if ty == base
+            || ty.starts_with(&format!("[{base}"))
+            || ty.starts_with(&format!("Vec<{base}"))
+        {
+            return true;
+        }
+    }
+    false
+}
+
+/// Line range (exclusive of the header) of `struct <name> { ... }`.
+fn struct_body(lines: &[SourceLine], name: &str) -> Option<(usize, usize)> {
+    let header = format!("struct {name}");
+    let start = lines.iter().position(|l| {
+        word_pos(&l.code, &header).is_some() && l.code.contains('{')
+    })?;
+    let end = brace_span_end(lines, start)?;
+    Some((start + 1, end))
+}
+
+/// Index of the line that closes the brace block opened on `start`.
+fn brace_span_end(lines: &[SourceLine], start: usize) -> Option<usize> {
+    let mut depth = 0i32;
+    let mut opened = false;
+    for (idx, l) in lines.iter().enumerate().skip(start) {
+        for c in l.code.bytes() {
+            match c {
+                b'{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                b'}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if opened && depth <= 0 {
+            return Some(idx);
+        }
+    }
+    None
+}
+
+/// D4: fingerprint coverage. Only active in a file that defines
+/// `fn fingerprint`: every counter field of the metrics structs must
+/// be mentioned in the fingerprint body or carry
+/// `// fp: excluded(<reason>)`.
+fn d4_fingerprint(file: &str, lines: &[SourceLine], out: &mut Vec<Finding>) {
+    let fp = lines.iter().position(|l| l.code.contains("fn fingerprint"));
+    let Some(fp_start) = fp else {
+        return;
+    };
+    let fp_end = brace_span_end(lines, fp_start).unwrap_or(lines.len() - 1);
+    let mut covered = BTreeSet::new();
+    for l in &lines[fp_start..=fp_end.min(lines.len() - 1)] {
+        for id in idents(&l.code) {
+            covered.insert(id.to_string());
+        }
+    }
+    for sname in FP_STRUCTS {
+        let Some((body_start, body_end)) = struct_body(lines, sname) else {
+            continue;
+        };
+        for idx in body_start..body_end {
+            let Some((fname, ty)) = field_decl(&lines[idx].code) else {
+                continue;
+            };
+            if !is_counter_type(&ty) || covered.contains(&fname) {
+                continue;
+            }
+            let ann = site_annotation(lines, idx, fp_excluded_reason);
+            match ann {
+                Some(reason) if !reason.is_empty() => {}
+                Some(_) => out.push(Finding {
+                    file: file.to_string(),
+                    line: idx + 1,
+                    rule: Rule::FpCoverage,
+                    message: format!(
+                        "`fp: excluded` on `{sname}::{fname}` needs a \
+                         reason: `fp: excluded(<why>)`"
+                    ),
+                }),
+                None => out.push(Finding {
+                    file: file.to_string(),
+                    line: idx + 1,
+                    rule: Rule::FpCoverage,
+                    message: format!(
+                        "counter `{sname}::{fname}` is missing from \
+                         `fingerprint()`; mix it or annotate \
+                         `// fp: excluded(<reason>)`"
+                    ),
+                }),
+            }
+        }
+    }
+}
+
+/// D5: CLI/doc sync. Every flag literal in `main.rs`'s known-flag
+/// list must appear as `--flag` in the repository README.
+pub fn lint_cli_docs(root: &Path) -> Vec<Finding> {
+    let main_path = root.join("src/main.rs");
+    let Ok(main_text) = std::fs::read_to_string(&main_path) else {
+        return Vec::new(); // no CLI in this tree (fixture trees)
+    };
+    let readme = std::fs::read_to_string(root.join("README.md"))
+        .or_else(|_| std::fs::read_to_string(root.join("../README.md")));
+    let lines = split_source(&main_text);
+    let parse = lines.iter().position(|l| l.code.contains("Args::parse"));
+    let Some(start) = parse else {
+        return Vec::new();
+    };
+    let end = paren_span_end(&lines, start).unwrap_or(start);
+    let mut out = Vec::new();
+    let Ok(readme) = readme else {
+        out.push(Finding {
+            file: "src/main.rs".to_string(),
+            line: start + 1,
+            rule: Rule::CliDoc,
+            message: "README.md not found next to the crate; cannot \
+                      check CLI flag documentation"
+                .to_string(),
+        });
+        return out;
+    };
+    for (idx, l) in lines.iter().enumerate().take(end + 1).skip(start) {
+        for flag in &l.strings {
+            if !readme.contains(&format!("--{flag}")) {
+                out.push(Finding {
+                    file: "src/main.rs".to_string(),
+                    line: idx + 1,
+                    rule: Rule::CliDoc,
+                    message: format!(
+                        "flag `--{flag}` is in the known-flag list but \
+                         undocumented in README.md"
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Index of the line that closes the parenthesis block opened on
+/// `start` (the `Args::parse(...)` call spans several lines).
+fn paren_span_end(lines: &[SourceLine], start: usize) -> Option<usize> {
+    let mut depth = 0i32;
+    let mut opened = false;
+    for (idx, l) in lines.iter().enumerate().skip(start) {
+        for c in l.code.bytes() {
+            match c {
+                b'(' => {
+                    depth += 1;
+                    opened = true;
+                }
+                b')' => depth -= 1,
+                _ => {}
+            }
+        }
+        if opened && depth <= 0 {
+            return Some(idx);
+        }
+    }
+    None
+}

@@ -76,6 +76,7 @@ impl LbState {
         }
         self.since_sweep = 0;
         let cutoff = FLOWLET_EVICT_GAPS * gap_ps;
+        // lint: allow(unordered-iter, pure idle-cutoff predicate; no per-entry side effects)
         self.flowlets
             .retain(|_, &mut (_, last)| now.saturating_sub(last) <= cutoff);
     }

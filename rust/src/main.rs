@@ -5,6 +5,7 @@
 //!   train    data-parallel training with simulated gradient allreduce
 //!   mem      print the Section 3.2.2 switch-memory model
 //!   info     artifact manifest summary
+//!   lint     determinism/ownership static analysis over rust/src
 //!
 //! Figure regeneration lives in the `figures` binary.
 
@@ -43,11 +44,12 @@ USAGE:
                [--faults loss:P,flap:A:B:DOWN_US:UP_US,
                          fail:SW:AT_US[:REC_US],straggler:H:FACTOR]
                [--faults-json FILE]
-               [--trace[=CADENCE_US]] [--trace-dir DIR]
+               [--trace[=CADENCE_US]] [--trace-dir DIR] [--paranoid]
   canary train [--preset tiny|base] [--workers N] [--steps N] [--lr F]
                [--algo ...] [--comm-every N] [--seed S]
   canary mem   [--timeout-us T] [--diameter D]
   canary info
+  canary lint  [CRATE_DIR]   (exit 1 on unannotated findings)
 ";
 
 fn parse_algo(s: &str) -> Result<Algo, String> {
@@ -297,7 +299,8 @@ fn cmd_run(args: &Args) -> Result<()> {
     let mut sim = SimConfig::default()
         .with_timeout(timeout_us * US)
         .with_window(window)
-        .with_values(values);
+        .with_values(values)
+        .with_paranoid(args.flag("paranoid"));
     if retrans_us > 0 {
         sim = sim.with_retrans(retrans_us * US, true);
     }
@@ -518,6 +521,30 @@ fn cmd_info() -> Result<()> {
     Ok(())
 }
 
+/// `canary lint [CRATE_DIR]` — run the determinism/ownership static
+/// analysis (crate::lint, DESIGN.md §2.8) over `CRATE_DIR/src`
+/// (default: this crate's own source tree). Exits non-zero when any
+/// unannotated finding remains, so CI can gate on it.
+fn cmd_lint(args: &Args) -> Result<()> {
+    let root = match args.positional.get(1) {
+        Some(dir) => std::path::PathBuf::from(dir),
+        None => std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")),
+    };
+    let findings = canary::lint::lint_tree(&root);
+    if findings.is_empty() {
+        println!(
+            "lint: clean — D1 unordered-iter, D2 wall-clock, D3 rng, \
+             D4 fp-coverage, D5 cli-doc hold over {}",
+            root.join("src").display()
+        );
+        return Ok(());
+    }
+    for f in &findings {
+        println!("{f}");
+    }
+    Err(format!("lint: {} finding(s)", findings.len()).into())
+}
+
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(
@@ -529,7 +556,7 @@ fn main() -> Result<()> {
             "topo", "tiers", "oversub", "topo-json", "values", "preset",
             "workers", "steps", "lr", "comm-every", "diameter", "window",
             "debug-links", "fingerprint", "faults", "faults-json",
-            "retrans-us", "trace", "trace-dir",
+            "retrans-us", "trace", "trace-dir", "paranoid",
         ],
     )?;
     match args.positional.first().map(|s| s.as_str()) {
@@ -537,6 +564,7 @@ fn main() -> Result<()> {
         Some("train") => cmd_train(&args),
         Some("mem") => cmd_mem(&args),
         Some("info") => cmd_info(),
+        Some("lint") => cmd_lint(&args),
         _ => {
             print!("{USAGE}");
             Ok(())

@@ -99,6 +99,15 @@ impl FlowStats {
         self.live.len()
     }
 
+    /// Ids of in-flight flows, sorted so any report or export of
+    /// live-flow state is byte-stable across processes (the backing
+    /// map is hash-ordered).
+    pub fn live_flow_ids(&self) -> Vec<u64> {
+        let mut ids: Vec<u64> = self.live.keys().copied().collect();
+        ids.sort_unstable();
+        ids
+    }
+
     /// Completed / started (0 when no flow ever started).
     pub fn completion_fraction(&self) -> f64 {
         if self.started == 0 {
@@ -230,6 +239,7 @@ pub struct Metrics {
     /// High-water mark of live descriptors over all switches.
     pub descriptor_high_water: u64,
     /// Currently live descriptors (maintained by the dataplane).
+    // fp: excluded(gauge: always descriptors_allocated - descriptors_freed, both already mixed)
     pub descriptors_live: u64,
     /// Sum over descriptors of (dealloc - alloc) time, for mean residency.
     pub descriptor_residency_ps: u64,

@@ -204,6 +204,24 @@ impl EventQueue {
         self.len == 0
     }
 
+    /// Visit every pending event across all three tiers (current
+    /// epoch, wheel buckets, overflow) in arbitrary order. Read-only;
+    /// used by the end-of-run conservation audit
+    /// (`sim::invariants`), never on the hot path.
+    pub fn for_each_pending(&self, mut f: impl FnMut(&Event)) {
+        for e in &self.current {
+            f(&e.event);
+        }
+        for bucket in &self.wheel {
+            for e in bucket {
+                f(&e.event);
+            }
+        }
+        for e in &self.overflow {
+            f(&e.event);
+        }
+    }
+
     #[inline]
     fn bucket_push(&mut self, slot: u64, entry: HeapEntry) {
         let b = (slot & WHEEL_MASK) as usize;

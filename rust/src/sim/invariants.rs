@@ -1,0 +1,204 @@
+//! End-of-run conservation audit (DESIGN.md §2.8) — the runtime half
+//! of the `canary lint` discipline pass.
+//!
+//! [`audit`] recomputes, from scratch, every piece of state the
+//! simulator otherwise maintains incrementally, and cross-checks the
+//! two: per-link byte accounting against the actual FIFO contents,
+//! PFC pause refcounts against the pausing links, the packet-arena
+//! ownership contract (every live id referenced exactly once, by a
+//! link FIFO or an in-flight `Arrive` event), and the descriptor
+//! ledger against the switch tables. On a fault-free drained run it
+//! additionally demands that everything emptied.
+//!
+//! [`enforce`] runs at the end of every `Network::run`/`run_all`
+//! segment in debug builds, and in release builds when
+//! `SimConfig::paranoid` is set (`--paranoid` on the CLI). The audit
+//! is read-only — no RNG draws, no event scheduling — so a paranoid
+//! run fingerprints identically to a normal one.
+
+use std::collections::HashSet;
+
+use super::arena::PacketId;
+use super::event::Event;
+use super::network::{Network, NodeBody};
+
+/// Run every conservation check. `Ok(())` or the full list of
+/// violations (all checks run; nothing short-circuits, so a failure
+/// report localizes the bug as tightly as possible).
+pub fn audit(net: &Network) -> Result<(), Vec<String>> {
+    let mut v: Vec<String> = Vec::new();
+
+    // 1. Per-link byte accounting, recomputed from the FIFO itself.
+    for (li, link) in net.links.iter().enumerate() {
+        let mut by_class = [0u64; 2];
+        for q in &link.queue {
+            by_class[q.class as usize] += q.bytes as u64;
+        }
+        let total = by_class[0] + by_class[1];
+        if total != link.queued_bytes {
+            v.push(format!(
+                "link {li}: queued_bytes {} != {total} recomputed \
+                 from the FIFO",
+                link.queued_bytes
+            ));
+        }
+        if by_class != link.class_bytes {
+            v.push(format!(
+                "link {li}: class_bytes {:?} != recomputed {by_class:?}",
+                link.class_bytes
+            ));
+        }
+        if link.busy && link.queue.is_empty() {
+            v.push(format!("link {li}: busy with an empty FIFO"));
+        }
+        if link.alive != (link.down_refs == 0) {
+            v.push(format!(
+                "link {li}: alive={} inconsistent with down_refs={}",
+                link.alive, link.down_refs
+            ));
+        }
+    }
+
+    // 2. PFC pause refcounts: node_paused[n] must equal the number of
+    // currently-pausing output links of n.
+    for (n, &paused) in net.node_paused.iter().enumerate() {
+        let actual = net
+            .links
+            .iter()
+            .filter(|l| l.from as usize == n && l.pausing)
+            .count() as u32;
+        if paused != actual {
+            v.push(format!(
+                "node {n}: node_paused={paused} but {actual} output \
+                 links are pausing"
+            ));
+        }
+    }
+
+    // 3. Arena ownership: every live packet id is held exactly once,
+    // by a link FIFO entry or a pending Arrive event.
+    let mut seen: HashSet<PacketId> = HashSet::new();
+    let mut refs: u32 = 0;
+    let mut dups: u32 = 0;
+    let mut stale: u32 = 0;
+    {
+        let mut note = |id: PacketId| {
+            refs += 1;
+            if !seen.insert(id) {
+                dups += 1;
+            }
+            if net.arena.get(id).is_none() {
+                stale += 1;
+            }
+        };
+        for link in &net.links {
+            for q in &link.queue {
+                note(q.id);
+            }
+        }
+        net.queue.for_each_pending(|ev| {
+            if let Event::Arrive { packet, .. } = ev {
+                note(*packet);
+            }
+        });
+    }
+    if dups > 0 {
+        v.push(format!("arena: {dups} packet id(s) referenced twice"));
+    }
+    if stale > 0 {
+        v.push(format!(
+            "arena: {stale} stale packet id(s) still referenced \
+             (freed while queued)"
+        ));
+    }
+    if refs != net.arena.live() {
+        v.push(format!(
+            "arena: {} live slot(s) but {refs} reference(s) in FIFOs \
+             and pending events (leak or double-free)",
+            net.arena.live()
+        ));
+    }
+
+    // 4. Descriptor ledger. The live gauge must always equal
+    // allocated - freed; the switch tables must account for every
+    // live descriptor unless a switch failure cleared soft state
+    // without going through the metric hooks (clear_soft_state).
+    let m = &net.metrics;
+    if m.descriptors_freed > m.descriptors_allocated {
+        v.push(format!(
+            "descriptors: freed {} > allocated {}",
+            m.descriptors_freed, m.descriptors_allocated
+        ));
+    }
+    let balance = m.descriptors_allocated.saturating_sub(m.descriptors_freed);
+    if m.descriptors_live != balance {
+        v.push(format!(
+            "descriptors: live gauge {} != allocated - freed = {balance}",
+            m.descriptors_live
+        ));
+    }
+    if m.switch_failures == 0 {
+        let mut table_live: u64 = 0;
+        for node in &net.nodes {
+            if let NodeBody::Switch(sw) = &node.body {
+                table_live += sw.canary.live_descriptors() as u64;
+                table_live += sw.static_tree.inflight.len() as u64;
+            }
+        }
+        if table_live != m.descriptors_live {
+            v.push(format!(
+                "descriptors: {table_live} resident in switch tables \
+                 but live gauge says {}",
+                m.descriptors_live
+            ));
+        }
+    }
+
+    // 5. A fault-free run that drained its event queue with every
+    // allreduce finished must have emptied everything: stranded
+    // descriptors or live packets here are leaks, full stop. (Faulted
+    // runs legitimately strand descriptors — a lost broadcast leaves
+    // table entries behind by design — so they are exempt.)
+    let clean = m.switch_failures == 0
+        && m.link_flaps == 0
+        && m.drops_injected == 0
+        && m.drops_link_down == 0
+        && m.jobs_stalled == 0;
+    let drained = net.queue.is_empty()
+        && !net.jobs.is_empty()
+        && net.all_reduce_jobs_done();
+    if clean && drained {
+        if net.arena.live() != 0 {
+            v.push(format!(
+                "drained clean run: {} packet(s) still live in the \
+                 arena",
+                net.arena.live()
+            ));
+        }
+        if m.descriptors_live != 0 {
+            v.push(format!(
+                "drained clean run: {} descriptor(s) still live",
+                m.descriptors_live
+            ));
+        }
+    }
+
+    if v.is_empty() {
+        Ok(())
+    } else {
+        Err(v)
+    }
+}
+
+/// Panic with the full violation list if [`audit`] fails. Called at
+/// the end of every run segment in debug builds and under
+/// `--paranoid`.
+pub fn enforce(net: &Network) {
+    if let Err(violations) = audit(net) {
+        panic!(
+            "conservation audit failed, {} violation(s):\n  {}",
+            violations.len(),
+            violations.join("\n  ")
+        );
+    }
+}

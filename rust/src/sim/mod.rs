@@ -8,6 +8,7 @@
 
 pub mod arena;
 pub mod event;
+pub mod invariants;
 pub mod network;
 pub mod packet;
 

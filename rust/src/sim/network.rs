@@ -63,22 +63,23 @@ pub struct Link {
     /// per port; classes share it proportionally to their arrivals).
     /// Entries carry the arena id plus the two fields the port logic
     /// reads per packet (size, class), so serving the queue never
-    /// chases the arena.
-    queue: VecDeque<QueuedPkt>,
+    /// chases the arena. `pub(crate)` (like the accounting fields
+    /// below) so `sim::invariants` can recompute state from scratch.
+    pub(crate) queue: VecDeque<QueuedPkt>,
     /// Per-class byte accounting (policing, PFC, diagnostics).
-    class_bytes: [u64; 2],
+    pub(crate) class_bytes: [u64; 2],
     /// True while this link's class-0 backlog exceeds the pause
     /// watermark — it then contributes to pausing its sender node's
     /// inputs (PFC-style lossless backpressure; DESIGN.md).
-    pausing: bool,
-    busy: bool,
+    pub(crate) pausing: bool,
+    pub(crate) busy: bool,
     /// Links go down when their endpoints fail or a scheduled flap
     /// hits (fault injection). Kept in sync with `down_refs` so every
     /// read site stays a plain flag test.
     pub alive: bool,
     /// Count of active down-causes (overlapping flap windows and
     /// switch-failure intervals stack): the link is alive iff zero.
-    down_refs: u32,
+    pub(crate) down_refs: u32,
     // --- metrics ---
     pub busy_ps: u64,
     pub bytes_tx: u64,
@@ -88,10 +89,10 @@ pub struct Link {
 /// One port-FIFO entry: the arena id plus the size/class the port
 /// logic needs on every serve.
 #[derive(Clone, Copy, Debug)]
-struct QueuedPkt {
-    id: PacketId,
-    bytes: u32,
-    class: u8,
+pub(crate) struct QueuedPkt {
+    pub(crate) id: PacketId,
+    pub(crate) bytes: u32,
+    pub(crate) class: u8,
 }
 
 #[inline]
@@ -577,6 +578,7 @@ impl Network {
     /// Run until all allreduce jobs complete, the event queue drains, or
     /// `max_time` is reached. Returns the end time.
     pub fn run(&mut self, max_time: Time) -> Time {
+        // lint: allow(wall-clock, engine.wall_secs timer; measurement-only, never fed back)
         let t0 = std::time::Instant::now();
         while let Some((t, ev)) = self.queue.pop() {
             if t > max_time {
@@ -591,12 +593,14 @@ impl Network {
             }
         }
         self.note_engine_stats(t0.elapsed().as_secs_f64());
+        self.maybe_audit();
         self.now
     }
 
     /// Run every event up to `max_time` without the early job-completion
     /// exit (used by pure-traffic tests).
     pub fn run_all(&mut self, max_time: Time) -> Time {
+        // lint: allow(wall-clock, engine.wall_secs timer; measurement-only, never fed back)
         let t0 = std::time::Instant::now();
         while let Some((t, ev)) = self.queue.pop() {
             if t > max_time {
@@ -607,7 +611,17 @@ impl Network {
             self.dispatch(t, ev);
         }
         self.note_engine_stats(t0.elapsed().as_secs_f64());
+        self.maybe_audit();
         self.now
+    }
+
+    /// End-of-segment conservation audit: always in debug builds,
+    /// opt-in via `--paranoid` in release. Read-only (no RNG draws,
+    /// no scheduling), so it cannot perturb the run fingerprint.
+    fn maybe_audit(&self) {
+        if cfg!(debug_assertions) || self.cfg.paranoid {
+            super::invariants::enforce(self);
+        }
     }
 
     /// Fold this run segment's throughput numbers into the metrics

@@ -430,6 +430,7 @@ fn on_data(me: NodeId, th: &mut TrafficHost, ctx: &mut Ctx, pkt: Packet) {
     if th.since_sink_sweep >= transport::SINK_SWEEP_EVERY {
         th.since_sink_sweep = 0;
         let horizon = transport::SINK_EVICT_RTOS * ctx.cfg.transport_rto_ps;
+        // lint: allow(unordered-iter, pure idle-cutoff predicate; no per-entry side effects)
         th.sinks
             .retain(|_, f| now.saturating_sub(f.last_seen_ps) <= horizon);
     }

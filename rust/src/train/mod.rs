@@ -203,6 +203,7 @@ impl Trainer {
     pub fn train(&mut self) -> Result<Vec<StepLog>> {
         let mut logs = Vec::with_capacity(self.cfg.steps);
         for step in 0..self.cfg.steps {
+            // lint: allow(wall-clock, step wall-time for logs only; never fed back into the sim)
             let t0 = std::time::Instant::now();
             let (loss, qsum) = self.step_compute()?;
             let comm_ps = if self.cfg.comm_every > 0

@@ -1,0 +1,287 @@
+//! The lint pass linting itself (DESIGN.md §2.8): fixture snippets
+//! with seeded D1–D5 violations that must be flagged, the annotation
+//! grammar (a reasoned `allow` suppresses, a bare one is a finding),
+//! the clean-tree pin (`canary lint` over this crate reports nothing),
+//! and the runtime half — the conservation audit passes on a clean run
+//! and fires on an injected arena leak / byte-accounting skew.
+
+use std::path::Path;
+
+use canary::collectives::{runner, Algo};
+use canary::config::FatTreeConfig;
+use canary::lint::rules::{lint_cli_docs, lint_source};
+use canary::lint::{lint_tree, Rule};
+use canary::sim::invariants::audit;
+use canary::sim::{Packet, PacketKind};
+use canary::workload::{Experiment, JobBuilder, ScenarioBuilder};
+
+fn rules_of(file: &str, text: &str) -> Vec<Rule> {
+    lint_source(file, text).into_iter().map(|f| f.rule).collect()
+}
+
+// ------------------------------------------------- D1 unordered-iter
+
+const D1_METHOD: &str = r#"
+struct S {
+    jobs: HashMap<u64, u32>,
+}
+fn f(s: &S) {
+    for (k, v) in s.jobs.iter() {
+        drop((k, v));
+    }
+}
+"#;
+
+#[test]
+fn d1_flags_iter_over_a_hash_map_field() {
+    assert_eq!(rules_of("x.rs", D1_METHOD), vec![Rule::UnorderedIter]);
+}
+
+const D1_FOR: &str = r#"
+fn f() {
+    let table: HashSet<u32> = HashSet::new();
+    for k in table {
+        drop(k);
+    }
+}
+"#;
+
+#[test]
+fn d1_flags_a_for_loop_over_a_hash_set_binding() {
+    assert_eq!(rules_of("x.rs", D1_FOR), vec![Rule::UnorderedIter]);
+}
+
+const D1_SORTED: &str = r#"
+fn f(jobs: &S) {
+    let live: HashMap<u64, u32> = HashMap::new();
+    let mut v: Vec<u64> = live.keys().copied().collect();
+    v.sort_unstable();
+}
+"#;
+
+#[test]
+fn d1_accepts_a_site_that_provably_sorts() {
+    assert_eq!(rules_of("x.rs", D1_SORTED), vec![]);
+}
+
+const D1_ALLOWED: &str = r#"
+struct S {
+    jobs: HashMap<u64, u32>,
+}
+fn f(s: &mut S) {
+    // lint: allow(unordered-iter, pure predicate; no side effects)
+    s.jobs.retain(|_, v| *v > 0);
+}
+"#;
+
+#[test]
+fn d1_accepts_a_reasoned_allow_annotation() {
+    assert_eq!(rules_of("x.rs", D1_ALLOWED), vec![]);
+}
+
+const D1_BARE_ALLOW: &str = r#"
+struct S {
+    jobs: HashMap<u64, u32>,
+}
+fn f(s: &mut S) {
+    s.jobs.retain(|_, v| *v > 0); // lint: allow(unordered-iter)
+}
+"#;
+
+#[test]
+fn d1_rejects_an_allow_annotation_without_a_reason() {
+    let findings = lint_source("x.rs", D1_BARE_ALLOW);
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert!(findings[0].message.contains("needs a reason"), "{:?}", findings[0]);
+}
+
+const D1_VEC: &str = r#"
+fn f() {
+    let jobs: Vec<u32> = Vec::new();
+    for j in jobs.iter() {
+        drop(j);
+    }
+}
+"#;
+
+#[test]
+fn d1_ignores_iteration_over_ordered_containers() {
+    assert_eq!(rules_of("x.rs", D1_VEC), vec![]);
+}
+
+// --------------------------------------------------- D2 wall-clock
+
+const D2_BAD: &str = r#"
+fn f() -> std::time::Instant {
+    std::time::Instant::now()
+}
+"#;
+
+#[test]
+fn d2_flags_wall_clock_outside_the_allowlist() {
+    assert_eq!(rules_of("x.rs", D2_BAD), vec![Rule::WallClock; 2]);
+}
+
+#[test]
+fn d2_accepts_the_bench_harness() {
+    assert_eq!(rules_of("util/bench.rs", D2_BAD), vec![]);
+}
+
+const D2_FP: &str = r#"
+fn fingerprint(t: std::time::SystemTime) -> u64 {
+    // lint: allow(wall-clock, trying to excuse the inexcusable)
+    0
+}
+"#;
+
+#[test]
+fn d2_never_excuses_wall_clock_in_a_fingerprint_file() {
+    assert_eq!(rules_of("x.rs", D2_FP), vec![Rule::WallClock]);
+}
+
+// ---------------------------------------------------------- D3 rng
+
+const D3_BAD: &str = r#"
+fn f() -> u64 {
+    let mut r = rand::thread_rng();
+    r.gen()
+}
+"#;
+
+#[test]
+fn d3_flags_ambient_entropy() {
+    assert_eq!(rules_of("x.rs", D3_BAD), vec![Rule::Rng]);
+}
+
+#[test]
+fn d3_exempts_the_sanctioned_rng_module() {
+    assert_eq!(rules_of("util/rng.rs", D3_BAD), vec![]);
+}
+
+// -------------------------------------------------- D4 fp-coverage
+
+const D4_MISSING: &str = r#"
+pub struct Metrics {
+    pub covered: u64,
+    pub escaped: u64,
+}
+impl Metrics {
+    pub fn fingerprint(&self) -> u64 {
+        self.covered
+    }
+}
+"#;
+
+#[test]
+fn d4_flags_a_counter_missing_from_the_digest() {
+    let findings = lint_source("metrics.rs", D4_MISSING);
+    assert_eq!(
+        findings.iter().map(|f| f.rule).collect::<Vec<_>>(),
+        vec![Rule::FpCoverage],
+        "{findings:?}"
+    );
+    assert!(findings[0].message.contains("escaped"), "{:?}", findings[0]);
+}
+
+const D4_EXCLUDED: &str = r#"
+pub struct Metrics {
+    pub covered: u64,
+    // fp: excluded(derived gauge, both inputs already mixed)
+    pub escaped: u64,
+}
+impl Metrics {
+    pub fn fingerprint(&self) -> u64 {
+        self.covered
+    }
+}
+"#;
+
+#[test]
+fn d4_accepts_a_reasoned_exclusion() {
+    assert_eq!(rules_of("metrics.rs", D4_EXCLUDED), vec![]);
+}
+
+#[test]
+fn d4_is_inert_in_files_without_a_fingerprint() {
+    let no_fp = "pub struct Metrics {\n    pub escaped: u64,\n}\n";
+    assert_eq!(rules_of("other.rs", no_fp), vec![]);
+}
+
+// ------------------------------------------------------ D5 cli-doc
+
+#[test]
+fn d5_flags_an_undocumented_flag() {
+    let root = Path::new(env!("CARGO_TARGET_TMPDIR")).join("lint_d5_fixture");
+    let src = root.join("src");
+    std::fs::create_dir_all(&src).unwrap();
+    std::fs::write(
+        src.join("main.rs"),
+        "fn main() {\n    let a = Args::parse(&argv, &[\"documented\", \"missing\"]);\n}\n",
+    )
+    .unwrap();
+    std::fs::write(root.join("README.md"), "Pass `--documented` to do things.\n").unwrap();
+    let findings = lint_cli_docs(&root);
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].rule, Rule::CliDoc);
+    assert!(findings[0].message.contains("--missing"), "{:?}", findings[0]);
+}
+
+// ------------------------------------------------- the clean-tree pin
+
+/// `canary lint` over this crate's own source tree reports nothing:
+/// every surviving hash-iteration or wall-clock site carries a
+/// reasoned annotation, every counter is in the digest or excluded
+/// with a reason, every CLI flag is documented. New violations fail
+/// here (and in the CI lint job) before they can fail a fingerprint.
+#[test]
+fn the_tree_is_clean() {
+    let findings = lint_tree(Path::new(env!("CARGO_MANIFEST_DIR")));
+    let listing: Vec<String> = findings.iter().map(|f| f.to_string()).collect();
+    assert!(listing.is_empty(), "lint findings:\n{}", listing.join("\n"));
+}
+
+// ------------------------------------------- the conservation audit
+
+fn clean_run() -> Experiment {
+    let sc = ScenarioBuilder::new(FatTreeConfig::tiny())
+        .job(JobBuilder::new(Algo::Canary).hosts(4).data_bytes(16 * 1024));
+    let mut exp = sc.build(42);
+    runner::run_to_completion(&mut exp.net, u64::MAX);
+    exp
+}
+
+#[test]
+fn audit_passes_on_a_clean_drained_run() {
+    let exp = clean_run();
+    assert_eq!(audit(&exp.net), Ok(()));
+}
+
+#[test]
+fn audit_fires_on_an_injected_arena_leak() {
+    let mut exp = clean_run();
+    exp.net.arena.alloc(Packet::data(PacketKind::CanaryReduce, 0, 1));
+    let violations = audit(&exp.net).unwrap_err();
+    assert!(violations.iter().any(|v| v.contains("arena")), "leak not caught: {violations:?}");
+}
+
+#[test]
+fn audit_fires_on_byte_accounting_skew() {
+    let mut exp = clean_run();
+    exp.net.links[0].queued_bytes += 64;
+    let violations = audit(&exp.net).unwrap_err();
+    assert!(
+        violations.iter().any(|v| v.contains("queued_bytes")),
+        "skew not caught: {violations:?}"
+    );
+}
+
+#[test]
+fn audit_fires_on_a_descriptor_gauge_skew() {
+    let mut exp = clean_run();
+    exp.net.metrics.descriptors_live += 1;
+    let violations = audit(&exp.net).unwrap_err();
+    assert!(
+        violations.iter().any(|v| v.contains("descriptors")),
+        "gauge skew not caught: {violations:?}"
+    );
+}
