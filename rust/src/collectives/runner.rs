@@ -78,6 +78,10 @@ pub(crate) fn install_job(
         None,
         spec.participants.len() as u64,
     );
+    // flight recorder: seed-derived per-job block selection (no-op when
+    // tracing is off or trace_blocks == 0)
+    net.tracer
+        .register_job(net.cfg.seed, spec.tenant, spec.total_blocks());
     match spec.algo {
         Algo::Canary => install_canary_job(net, spec),
         Algo::StaticTree { .. } => install_static_job(net, ft, spec),

@@ -6,7 +6,8 @@
 //! ```text
 //! figures all            [--scale full|half|ci] [--seeds N] [--out DIR]
 //! figures fig2|fig6|fig7a|fig7b|fig8|fig9|fig10a|fig10b|fig11|mem|clos3
-//!         |traffic|transport|placement|scale|churn|trace|ablation ...
+//!         |traffic|transport|placement|scale|churn|trace|critical-path
+//!         |ablation ...
 //! ```
 //!
 //! `full` reproduces the paper's parameters (1024 hosts, 4 MiB, 5 seeds —
@@ -1250,6 +1251,118 @@ pub fn trace_cell(o: &Opts) -> Series {
     finish(s, o)
 }
 
+/// Critical-path sweep (flight recorder, DESIGN.md §2.9): latency
+/// attribution for ring/static/canary on the 2- and 3-tier fabrics,
+/// with and without incast cross traffic. Each cell traces 4
+/// seed-selected blocks, reconstructs their critical paths, and
+/// reports the mean end-to-end latency plus stacked component
+/// percentages — where a slow block's time went: queueing,
+/// serialization, propagation, aggregation wait, or timeout penalty
+/// (the last is Canary's congestion-avoidance price; it should buy
+/// back queueing under incast).
+pub fn critical_path(o: &Opts) -> Series {
+    let mut s = Series::new(
+        "critical_path_components",
+        &[
+            "topo",
+            "algo",
+            "cross_traffic",
+            "paths",
+            "mean_e2e_us",
+            "queue_pct",
+            "ser_pct",
+            "prop_pct",
+            "agg_wait_pct",
+            "timeout_pct",
+        ],
+    );
+    let fan_in = match o.scale {
+        Scale::Ci => 8,
+        _ => 32,
+    };
+    struct Cell {
+        topo_name: &'static str,
+        topo: ClosConfig,
+        algo: Algo,
+        cross: bool,
+    }
+    let mut cells = Vec::new();
+    for (topo_name, topo) in
+        [("clos2", o.scale.topo()), ("clos3", o.scale.topo3())]
+    {
+        let trees: Vec<u8> = [1u8]
+            .into_iter()
+            .filter(|&n| n as u32 <= topo.n_spine())
+            .collect();
+        for algo in algo_list(true, &trees) {
+            for cross in [false, true] {
+                cells.push(Cell {
+                    topo_name,
+                    topo,
+                    algo,
+                    cross,
+                });
+            }
+        }
+    }
+
+    let results = par_map(cells.len(), |i| {
+        let c = &cells[i];
+        let hosts = (c.topo.n_hosts() / 2).max(2);
+        let mut sim = SimConfig::default();
+        if matches!(c.algo, Algo::Canary) {
+            // timeouts armed so the penalty component can show up
+            sim = sim.with_timeout(US).with_retrans(200 * US, true);
+        }
+        let sc = ScenarioBuilder::new(c.topo)
+            .sim(sim)
+            .traffic(c.cross.then(|| TrafficSpec::incast(fan_in)))
+            .trace(Some(TraceSpec::default().with_blocks(4)))
+            .job(
+                JobBuilder::new(c.algo)
+                    .hosts(hosts)
+                    .data_bytes(o.scale.scale_sweep_bytes()),
+            );
+        let mut exp = sc.build(7000);
+        runner::run_to_completion(&mut exp.net, u64::MAX);
+        let paths = crate::trace::critical_paths(&exp.net);
+        // [e2e, queue, ser, prop, agg_wait, timeout] summed over paths
+        let mut tot = [0u64; 6];
+        for p in &paths {
+            tot[0] += p.e2e_ps();
+            tot[1] += p.queue_ps;
+            tot[2] += p.ser_ps;
+            tot[3] += p.prop_ps;
+            tot[4] += p.agg_wait_ps;
+            tot[5] += p.timeout_penalty_ps;
+        }
+        (paths.len() as u64, tot)
+    });
+
+    for (c, (n, tot)) in cells.iter().zip(results) {
+        let e2e = tot[0].max(1) as f64;
+        let pct = |x: u64| format!("{:.1}", 100.0 * x as f64 / e2e);
+        let mean_us = if n == 0 {
+            0.0
+        } else {
+            tot[0] as f64 / n as f64 / 1e6
+        };
+        s.push(vec![
+            c.topo_name.to_string(),
+            c.algo.name(),
+            c.cross.to_string(),
+            n.to_string(),
+            format!("{mean_us:.1}"),
+            pct(tot[1]),
+            pct(tot[2]),
+            pct(tot[3]),
+            pct(tot[4]),
+            pct(tot[5]),
+        ]);
+    }
+    finish(s, o)
+}
+
 /// Ablation: Canary goodput under different load balancers (design-choice
 /// bench called out in DESIGN.md §5).
 pub fn ablation_lb(o: &Opts) -> Series {
@@ -1327,6 +1440,7 @@ pub fn main_entry() {
         "scale" => drop(scale(&o)),
         "churn" => drop(churn(&o)),
         "trace" => drop(trace_cell(&o)),
+        "critical-path" => drop(critical_path(&o)),
         "ablation" => drop(ablation_lb(&o)),
         "all" => {
             drop(fig2(&o));
@@ -1346,6 +1460,7 @@ pub fn main_entry() {
             drop(scale(&o));
             drop(churn(&o));
             drop(trace_cell(&o));
+            drop(critical_path(&o));
             drop(ablation_lb(&o));
         }
         other => {
@@ -1353,7 +1468,7 @@ pub fn main_entry() {
                 "unknown figure '{other}' \
                  (fig2|fig6|fig7a|fig7b|fig8|fig9|fig10a|fig10b|fig11|mem\
                  |clos3|traffic|transport|placement|scale|churn|trace\
-                 |ablation|all)"
+                 |critical-path|ablation|all)"
             );
             std::process::exit(2);
         }

@@ -35,6 +35,11 @@ pub struct LeaderBlock {
     pub result: Option<Vec<i32>>,
     /// Last failure-notice time (rate-limits retry rounds).
     pub last_failure: Time,
+    /// When the first *packet* contribution of the current round landed
+    /// — the leader's aggregation wait for the flight recorder (the
+    /// leader's own locally-added share is deliberately excluded so the
+    /// critical-path walk descends into the reduce DAG).
+    pub first_contrib_ps: Option<Time>,
 }
 
 /// Canary protocol state for one participating host.
@@ -246,6 +251,9 @@ fn leader_on_contribution(
     if round != lb.round || lb.complete {
         return; // stale round, or late straggler after completion
     }
+    if lb.first_contrib_ps.is_none() {
+        lb.first_contrib_ps = Some(ctx.now);
+    }
     lb.counter += pkt.counter;
     crate::switch::alu::fold_payload(&mut lb.acc, pkt.payload);
     if let Some((sw, port)) = pkt.collision {
@@ -289,7 +297,20 @@ fn leader_check_complete(
     let mut restores: Vec<(NodeId, u64)> =
         lb.restore.iter().map(|(&k, &v)| (k, v)).collect();
     restores.sort_unstable_by_key(|&(sw, _)| sw);
+    let first_contrib = lb.first_contrib_ps;
     let wire_id = ch.wire_id(idx);
+    // flight recorder: leader residency from the first packet
+    // contribution until completion is this block's final agg wait
+    if let Some(t0) = first_contrib {
+        ctx.tracer.wait(crate::trace::WaitRecord {
+            tenant,
+            block: wire_id,
+            node: me,
+            t_start: t0,
+            t_end: ctx.now,
+            via_timeout: false,
+        });
+    }
     let bcast_wire = if stays { 64 } else { wire };
     let bcast_payload = if stays { None } else { result.as_ref() };
 
@@ -395,6 +416,7 @@ fn leader_on_retrans_req(
     lb.acc = None;
     lb.own_added = false;
     lb.restore.clear();
+    lb.first_contrib_ps = None;
     let round = lb.round;
     ch.round[orig as usize] = round;
     ctx.metrics.failures += 1;

@@ -44,7 +44,8 @@ USAGE:
                [--faults loss:P,flap:A:B:DOWN_US:UP_US,
                          fail:SW:AT_US[:REC_US],straggler:H:FACTOR]
                [--faults-json FILE]
-               [--trace[=CADENCE_US]] [--trace-dir DIR] [--paranoid]
+               [--trace[=CADENCE_US]] [--trace-blocks N] [--trace-dir DIR]
+               [--paranoid]
   canary train [--preset tiny|base] [--workers N] [--steps N] [--lr F]
                [--algo ...] [--comm-every N] [--seed S]
   canary mem   [--timeout-us T] [--diameter D]
@@ -221,12 +222,14 @@ fn resolve_traffic(args: &Args) -> Result<Option<TrafficSpec>> {
     Ok(spec)
 }
 
-/// `--trace` / `--trace=CADENCE_US` into an optional telemetry spec
-/// (absent flag = tracing off = zero-footprint).
+/// `--trace` / `--trace=CADENCE_US` / `--trace-blocks N` into an
+/// optional telemetry spec (absent flags = tracing off =
+/// zero-footprint). `--trace-blocks N` arms the flight recorder on N
+/// seed-selected blocks per job and implies `--trace`.
 fn resolve_trace(args: &Args) -> Result<Option<TraceSpec>> {
-    match args.get("trace") {
-        None => Ok(None),
-        Some("true") => Ok(Some(TraceSpec::default())),
+    let spec = match args.get("trace") {
+        None => None,
+        Some("true") => Some(TraceSpec::default()),
         Some(v) => {
             let us: u64 = v
                 .parse()
@@ -234,7 +237,18 @@ fn resolve_trace(args: &Args) -> Result<Option<TraceSpec>> {
             if us == 0 {
                 return Err("--trace cadence must be >= 1 µs".into());
             }
-            Ok(Some(TraceSpec::default().with_cadence(us * US)))
+            Some(TraceSpec::default().with_cadence(us * US))
+        }
+    };
+    match args.get("trace-blocks") {
+        None => Ok(spec),
+        Some(v) => {
+            let n: u32 = v
+                .parse()
+                .map_err(|_| format!("bad --trace-blocks '{v}'"))?;
+            Ok(Some(
+                spec.unwrap_or_default().with_blocks(n),
+            ))
         }
     }
 }
@@ -431,6 +445,18 @@ fn cmd_run(args: &Args) -> Result<()> {
             exp.net.tracer.spans().len(),
             exp.net.tracer.tree_records().len(),
         );
+        let blocks = canary::trace::critical_paths(&exp.net);
+        if !blocks.is_empty() {
+            let (hop_drops, wait_drops) = exp.net.tracer.flight_dropped();
+            println!(
+                "flight recorder: {} hops, {} waits, {} critical paths \
+                 (dropped: {hop_drops} hops, {wait_drops} waits)",
+                exp.net.tracer.hops().len(),
+                exp.net.tracer.waits().len(),
+                blocks.len(),
+            );
+            canary::report::critical_path_breakdown(&blocks).print();
+        }
         for p in paths {
             println!("  wrote {p}");
         }
@@ -556,7 +582,7 @@ fn main() -> Result<()> {
             "topo", "tiers", "oversub", "topo-json", "values", "preset",
             "workers", "steps", "lr", "comm-every", "diameter", "window",
             "debug-links", "fingerprint", "faults", "faults-json",
-            "retrans-us", "trace", "trace-dir", "paranoid",
+            "retrans-us", "trace", "trace-blocks", "trace-dir", "paranoid",
         ],
     )?;
     match args.positional.first().map(|s| s.as_str()) {

@@ -169,6 +169,41 @@ pub fn fault_summary(m: &crate::metrics::Metrics) -> String {
     )
 }
 
+/// Per-component latency breakdown of the flight recorder's critical
+/// paths (one row per traced block): where the block's end-to-end time
+/// went, as percentages of serialization / queueing / propagation /
+/// aggregation wait / timeout penalty. The components tile the path
+/// exactly (trace-module invariant), so the percentage columns sum to
+/// 100 up to rounding.
+pub fn critical_path_breakdown(
+    paths: &[crate::trace::BlockPath],
+) -> Series {
+    let mut s = Series::new(
+        "critical_path_breakdown",
+        &[
+            "tenant", "block", "e2e_us", "queue_pct", "ser_pct",
+            "prop_pct", "agg_wait_pct", "timeout_pct", "hops", "waits",
+        ],
+    );
+    for p in paths {
+        let e2e = p.e2e_ps().max(1) as f64;
+        let pct = |c: u64| format!("{:.1}", 100.0 * c as f64 / e2e);
+        s.push(vec![
+            p.tenant.to_string(),
+            p.block.to_string(),
+            format!("{:.3}", p.e2e_ps() as f64 / 1e6),
+            pct(p.queue_ps),
+            pct(p.ser_ps),
+            pct(p.prop_ps),
+            pct(p.agg_wait_ps),
+            pct(p.timeout_penalty_ps),
+            p.n_hops.to_string(),
+            p.n_waits.to_string(),
+        ]);
+    }
+    s
+}
+
 /// Did any fault machinery engage this run? (Gates printing the
 /// [`fault_summary`] line so clean runs stay visually unchanged.)
 pub fn fault_activity(m: &crate::metrics::Metrics) -> bool {
@@ -309,5 +344,36 @@ mod tests {
     fn arity_checked() {
         let mut s = Series::new("x", &["a", "b"]);
         s.push(vec!["1".into()]);
+    }
+
+    #[test]
+    fn critical_path_breakdown_percentages_tile() {
+        let p = crate::trace::BlockPath {
+            tenant: 0,
+            block: 7,
+            t_start: 0,
+            t_end: 1_000_000,
+            queue_ps: 100_000,
+            ser_ps: 200_000,
+            prop_ps: 200_000,
+            agg_wait_ps: 250_000,
+            timeout_penalty_ps: 250_000,
+            n_hops: 3,
+            n_waits: 2,
+            steps: vec![],
+        };
+        let s = critical_path_breakdown(&[p]);
+        assert_eq!(s.rows.len(), 1);
+        let row = &s.rows[0];
+        assert_eq!(row[0], "0");
+        assert_eq!(row[1], "7");
+        assert_eq!(row[2], "1.000"); // 1 µs
+        assert_eq!(row[3], "10.0");
+        assert_eq!(row[4], "20.0");
+        assert_eq!(row[5], "20.0");
+        assert_eq!(row[6], "25.0");
+        assert_eq!(row[7], "25.0");
+        let total: f64 = (3..8).map(|i| row[i].parse::<f64>().unwrap()).sum();
+        assert!((total - 100.0).abs() < 1e-9, "{total}");
     }
 }

@@ -93,6 +93,9 @@ pub(crate) struct QueuedPkt {
     pub(crate) id: PacketId,
     pub(crate) bytes: u32,
     pub(crate) class: u8,
+    /// When the packet joined this port FIFO — feeds the flight
+    /// recorder's queueing-delay split; never read on the hot path.
+    pub(crate) enq_ps: Time,
 }
 
 #[inline]
@@ -401,6 +404,7 @@ fn enqueue_on_link(
         id,
         bytes: packet.wire_bytes,
         class: class as u8,
+        enq_ps: now,
     };
     link.queued_bytes += size;
     link.class_bytes[class] += size;
@@ -745,6 +749,30 @@ impl Network {
                     packet: entry.id,
                 },
             );
+            // flight recorder: log the finished hop. TxDone fires at
+            // txstart + serialization, so queueing is recovered as
+            // (now - ser) - enq; the delivery time t_enq + queue + ser
+            // + prop equals the Arrive timestamp exactly. A single
+            // branch when tracing is off.
+            if self.tracer.enabled() {
+                let link = &self.links[link_id];
+                if let Some(p) = self.arena.get(entry.id) {
+                    let ser = entry.bytes as u64 * link.ps_per_byte;
+                    self.tracer.hop(crate::trace::HopRecord {
+                        tenant: p.tenant,
+                        block: p.block,
+                        kind: p.kind,
+                        link: link_id as u32,
+                        from: link.from,
+                        to: link.to,
+                        t_enq: entry.enq_ps,
+                        queue_ps: (self.now - ser)
+                            .saturating_sub(entry.enq_ps),
+                        ser_ps: ser,
+                        prop_ps: link.latency_ps,
+                    });
+                }
+            }
         } else {
             self.metrics.drops_link_down += 1;
             self.arena.free(entry.id);

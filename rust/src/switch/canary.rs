@@ -219,6 +219,16 @@ fn forward_partial(
         via_timeout,
         latency_ps: ctx.now - d.alloc_time,
     });
+    // flight recorder: descriptor residency is the aggregation wait of
+    // this block at this switch (timeout penalty when forced)
+    ctx.tracer.wait(crate::trace::WaitRecord {
+        tenant: d.tenant,
+        block: d.block,
+        node: sw.id,
+        t_start: d.alloc_time,
+        t_end: ctx.now,
+        via_timeout,
+    });
     let mut pkt = Packet::data(PacketKind::CanaryReduce, sw.id, d.leader);
     pkt.tenant = d.tenant;
     pkt.block = d.block;

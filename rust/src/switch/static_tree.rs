@@ -10,7 +10,7 @@
 use std::collections::HashMap;
 
 use crate::sim::packet::{Packet, PacketKind, Payload};
-use crate::sim::{Ctx, PacketId};
+use crate::sim::{Ctx, PacketId, Time};
 
 use super::alu;
 use super::SwitchState;
@@ -57,6 +57,9 @@ pub struct Agg {
     pub count: u32,
     pub counter: u32,
     pub acc: Option<Vec<i32>>,
+    /// When the slot was allocated (first contribution) — feeds the
+    /// flight recorder's aggregation-wait split; never read otherwise.
+    pub alloc_ps: Time,
 }
 
 impl StaticState {
@@ -83,12 +86,14 @@ pub fn on_reduce(sw: &mut SwitchState, ctx: &mut Ctx, pid: PacketId) {
     } = role;
 
     let key = pkt.block_key();
+    let now = ctx.now;
     let agg = sw.static_tree.inflight.entry(key).or_insert_with(|| {
         ctx.metrics.on_descriptor_alloc();
         Agg {
             count: 0,
             counter: 0,
             acc: None,
+            alloc_ps: now,
         }
     });
     agg.count += 1;
@@ -104,6 +109,16 @@ pub fn on_reduce(sw: &mut SwitchState, ctx: &mut Ctx, pid: PacketId) {
     // complete at this level
     let agg = sw.static_tree.inflight.remove(&key).unwrap();
     ctx.metrics.on_descriptor_free(0);
+    // flight recorder: slot residency is this block's aggregation wait
+    // at this tree level (static trees never time out)
+    ctx.tracer.wait(crate::trace::WaitRecord {
+        tenant: pkt.tenant,
+        block: pkt.block,
+        node: sw.id,
+        t_start: agg.alloc_ps,
+        t_end: ctx.now,
+        via_timeout: false,
+    });
     match parent_port {
         Some(parent) => {
             // one partial up the fixed tree edge toward the root

@@ -1,9 +1,10 @@
 //! Run-time telemetry: time-series sampling, per-job lifecycle spans,
-//! and dynamic aggregation-tree capture (DESIGN.md §2.7).
+//! dynamic aggregation-tree capture, and the per-block causal profiler
+//! (DESIGN.md §2.7, §2.9).
 //!
 //! The [`Tracer`] is owned by the [`Network`] and threaded through
 //! `Ctx`, so every layer (switch dataplane, host engines, the
-//! collective runner) can emit records without extra plumbing. Three
+//! collective runner) can emit records without extra plumbing. Four
 //! collectors live behind one `Option` box:
 //!
 //! 1. **Sampler** — on a configurable cadence the engine snapshots
@@ -16,19 +17,30 @@
 //!    which switch, which ports contributed, expected vs actual
 //!    fan-in, and whether the timeout (rather than fan-in
 //!    completion) fired it. This is the realized dynamic tree.
+//! 4. **Flight recorder** — a per-packet hop log for a deterministic
+//!    per-job sample of blocks (`TraceSpec::trace_blocks`), splitting
+//!    every hop into queueing / serialization / propagation, plus
+//!    aggregation-wait records for the time a block sat in a Canary
+//!    descriptor, a static-tree slot, or at the leader before moving
+//!    on. [`critical_paths`] reconstructs each traced block's
+//!    max-latency contributor chain from these logs.
 //!
 //! **Zero-footprint when off.** A disabled tracer is a `None` box:
 //! every hook is a single branch, no RNG is drawn, no event is
 //! scheduled, and no metric moves — seeded fingerprints are
 //! bit-identical with tracing on or off (pinned in `tests/trace.rs`).
 //! The sampler event itself is dispatched *outside* the
-//! `events_processed` counter for the same reason.
+//! `events_processed` counter for the same reason. Block sampling
+//! draws from a dedicated `util/rng` stream derived from the run seed,
+//! never from the simulation RNG.
 
 use std::collections::{BTreeMap, VecDeque};
 
 use crate::report::Series;
-use crate::sim::{Link, Network, Time, US};
+use crate::sim::packet::PacketKind;
+use crate::sim::{Link, Network, NodeBody, Time, US};
 use crate::util::json::{obj, Value};
+use crate::util::rng::{splitmix64, Rng};
 use crate::util::stats::Histogram;
 
 /// Recorder configuration: cadence plus per-collector capacity caps
@@ -44,6 +56,13 @@ pub struct TraceSpec {
     pub max_spans: usize,
     /// Tree-record log cap; further records are counted as dropped.
     pub max_tree_records: usize,
+    /// Flight recorder: blocks sampled per job (0 = hop logging off;
+    /// selection is seed-derived, see [`Tracer::register_job`]).
+    pub trace_blocks: u32,
+    /// Hop-log cap; further hops are counted as dropped.
+    pub max_hops: usize,
+    /// Wait-record cap; further waits are counted as dropped.
+    pub max_waits: usize,
 }
 
 impl Default for TraceSpec {
@@ -53,6 +72,9 @@ impl Default for TraceSpec {
             ring_capacity: 4096,
             max_spans: 65_536,
             max_tree_records: 65_536,
+            trace_blocks: 0,
+            max_hops: 131_072,
+            max_waits: 16_384,
         }
     }
 }
@@ -61,6 +83,13 @@ impl TraceSpec {
     /// Builder: override the sampler cadence (picoseconds).
     pub fn with_cadence(mut self, ps: Time) -> TraceSpec {
         self.cadence_ps = ps.max(1);
+        self
+    }
+
+    /// Builder: sample `n` blocks per job into the flight recorder
+    /// (0 keeps hop logging off; the other collectors are unaffected).
+    pub fn with_blocks(mut self, n: u32) -> TraceSpec {
+        self.trace_blocks = n;
         self
     }
 }
@@ -181,6 +210,58 @@ impl TreeRecord {
     }
 }
 
+/// One link hop of a traced block's packet, recorded when the packet
+/// leaves the transmitter. The ps-exact decomposition holds by
+/// construction: the packet was enqueued at `t_enq`, waited
+/// `queue_ps` for the port, serialized for `ser_ps` and propagated
+/// for `prop_ps`, so it is delivered at
+/// `t_enq + queue_ps + ser_ps + prop_ps` exactly.
+#[derive(Clone, Copy, Debug)]
+pub struct HopRecord {
+    pub tenant: u16,
+    /// Wire block id (unique per retry round).
+    pub block: u32,
+    pub kind: PacketKind,
+    pub link: u32,
+    pub from: u32,
+    pub to: u32,
+    /// Enqueue time on the port FIFO.
+    pub t_enq: Time,
+    pub queue_ps: Time,
+    pub ser_ps: Time,
+    pub prop_ps: Time,
+}
+
+impl HopRecord {
+    /// Delivery time at `to`.
+    pub fn t_deliver(&self) -> Time {
+        self.t_enq + self.queue_ps + self.ser_ps + self.prop_ps
+    }
+}
+
+/// Time a traced block sat resident at a node before moving on: in a
+/// Canary descriptor or static-tree slot before the upstream forward,
+/// or at the leader between its first packet contribution and the
+/// broadcast. `via_timeout` marks residency ended by the aggregation
+/// timeout — the timeout penalty of the paper's best-effort forwards.
+#[derive(Clone, Copy, Debug)]
+pub struct WaitRecord {
+    pub tenant: u16,
+    /// Wire block id.
+    pub block: u32,
+    pub node: u32,
+    pub t_start: Time,
+    pub t_end: Time,
+    pub via_timeout: bool,
+}
+
+/// Seed-derived per-job block selection for the flight recorder.
+#[derive(Debug)]
+struct TracedJob {
+    total_blocks: u32,
+    sel: Vec<bool>,
+}
+
 /// Live collector state; exists only while tracing is enabled.
 #[derive(Debug)]
 struct TraceState {
@@ -191,6 +272,12 @@ struct TraceState {
     spans_dropped: u64,
     trees: Vec<TreeRecord>,
     trees_dropped: u64,
+    hops: Vec<HopRecord>,
+    hops_dropped: u64,
+    waits: Vec<WaitRecord>,
+    waits_dropped: u64,
+    /// Per-tenant sampled-block selection.
+    traced: BTreeMap<u16, TracedJob>,
     /// `busy_ps` per link at the previous tick (utilization deltas).
     prev_busy: Vec<u64>,
     prev_t: Time,
@@ -220,6 +307,11 @@ impl Tracer {
                 spans_dropped: 0,
                 trees: Vec::new(),
                 trees_dropped: 0,
+                hops: Vec::new(),
+                hops_dropped: 0,
+                waits: Vec::new(),
+                waits_dropped: 0,
+                traced: BTreeMap::new(),
                 prev_busy: Vec::new(),
                 prev_t: 0,
             })),
@@ -321,6 +413,72 @@ impl Tracer {
         s.trees.push(rec);
     }
 
+    /// Choose which of `tenant`'s blocks the flight recorder follows.
+    /// Called once per job at installation. The selection is drawn from
+    /// a dedicated stream derived from the run seed and the tenant id —
+    /// never from the simulation RNG — so a traced run's packet
+    /// schedule (and fingerprint) is bit-identical to an untraced one,
+    /// and the same seed always samples the same blocks.
+    pub fn register_job(&mut self, seed: u64, tenant: u16, total_blocks: u32) {
+        let Some(s) = self.state.as_mut() else { return };
+        if s.spec.trace_blocks == 0 || total_blocks == 0 {
+            return;
+        }
+        let mut mix = seed ^ ((tenant as u64) << 32) ^ 0xF11C_97B1_0E57_C0DE;
+        let mut rng = Rng::new(splitmix64(&mut mix));
+        let k = (s.spec.trace_blocks as usize).min(total_blocks as usize);
+        let mut sel = vec![false; total_blocks as usize];
+        for i in rng.sample_indices(total_blocks as usize, k) {
+            sel[i] = true;
+        }
+        s.traced.insert(tenant, TracedJob { total_blocks, sel });
+    }
+
+    /// Is `wire_block` of `tenant` being followed? Retry rounds reuse
+    /// the original index modulo `total_blocks`, so a traced block
+    /// stays traced across rounds.
+    #[inline]
+    pub fn is_traced(&self, tenant: u16, wire_block: u32) -> bool {
+        let Some(s) = self.state.as_ref() else { return false };
+        match s.traced.get(&tenant) {
+            Some(j) => j.sel[(wire_block % j.total_blocks) as usize],
+            None => false,
+        }
+    }
+
+    /// Record one link hop (flight recorder). Packets of untraced
+    /// blocks — and everything when tracing is off — fall out on the
+    /// first branches.
+    #[inline]
+    pub fn hop(&mut self, rec: HopRecord) {
+        let Some(s) = self.state.as_mut() else { return };
+        let Some(j) = s.traced.get(&rec.tenant) else { return };
+        if !j.sel[(rec.block % j.total_blocks) as usize] {
+            return;
+        }
+        if s.hops.len() >= s.spec.max_hops {
+            s.hops_dropped += 1;
+            return;
+        }
+        s.hops.push(rec);
+    }
+
+    /// Record an aggregation-wait (flight recorder; same filtering as
+    /// [`Tracer::hop`]).
+    #[inline]
+    pub fn wait(&mut self, rec: WaitRecord) {
+        let Some(s) = self.state.as_mut() else { return };
+        let Some(j) = s.traced.get(&rec.tenant) else { return };
+        if !j.sel[(rec.block % j.total_blocks) as usize] {
+            return;
+        }
+        if s.waits.len() >= s.spec.max_waits {
+            s.waits_dropped += 1;
+            return;
+        }
+        s.waits.push(rec);
+    }
+
     // --- read side (all empty/zero when disabled) ---
 
     pub fn n_samples(&self) -> usize {
@@ -345,11 +503,32 @@ impl Tracer {
         }
     }
 
+    pub fn hops(&self) -> &[HopRecord] {
+        match &self.state {
+            Some(s) => &s.hops,
+            None => &[],
+        }
+    }
+
+    pub fn waits(&self) -> &[WaitRecord] {
+        match &self.state {
+            Some(s) => &s.waits,
+            None => &[],
+        }
+    }
+
     /// (samples evicted, spans dropped, tree records dropped).
     pub fn dropped(&self) -> (u64, u64, u64) {
         self.state.as_ref().map_or((0, 0, 0), |s| {
             (s.samples_evicted, s.spans_dropped, s.trees_dropped)
         })
+    }
+
+    /// Flight-recorder overflow counters: (hops dropped, waits dropped).
+    pub fn flight_dropped(&self) -> (u64, u64) {
+        self.state
+            .as_ref()
+            .map_or((0, 0), |s| (s.hops_dropped, s.waits_dropped))
     }
 }
 
@@ -361,11 +540,237 @@ fn ports_of(children: u64) -> Vec<Value> {
         .collect()
 }
 
-/// Write the three trace artifacts (`trace_timeline.csv`,
-/// `trace_spans.csv`, `trace_trees.json`) under `dir` and return the
-/// written paths. The timeline carries one global gauge row per tick
+/// Short wire-kind label for path steps.
+fn kind_label(k: PacketKind) -> &'static str {
+    match k {
+        PacketKind::CanaryReduce => "canary_reduce",
+        PacketKind::CanaryBroadcast => "canary_broadcast",
+        PacketKind::CanaryRestore => "canary_restore",
+        PacketKind::CanaryRetransData => "canary_retrans_data",
+        PacketKind::CanaryRetransReq => "canary_retrans_req",
+        PacketKind::CanaryFailure => "canary_failure",
+        PacketKind::CanaryDirect => "canary_direct",
+        PacketKind::StaticReduce => "static_reduce",
+        PacketKind::StaticBroadcast => "static_broadcast",
+        PacketKind::Ring => "ring",
+        PacketKind::Background => "background",
+        PacketKind::TransportAck => "transport_ack",
+        PacketKind::TransportCnp => "transport_cnp",
+    }
+}
+
+/// One step of a reconstructed critical path: a link hop (`from != to`
+/// unless the fabric loops) or an aggregation wait (`from == to`,
+/// labelled `agg_wait` / `timeout_wait`). Exactly one component group
+/// is nonzero per step, and the step covers `[t_start, t_end]`
+/// contiguously with its neighbours.
+#[derive(Clone, Debug)]
+pub struct PathStep {
+    pub from: u32,
+    pub to: u32,
+    pub t_start: Time,
+    pub t_end: Time,
+    pub label: &'static str,
+    pub queue_ps: Time,
+    pub ser_ps: Time,
+    pub prop_ps: Time,
+    pub agg_wait_ps: Time,
+    pub timeout_penalty_ps: Time,
+}
+
+/// The critical path of one traced block: the max-latency contributor
+/// chain from the first host send on the chain through every
+/// aggregation point to the last result delivery. Because the steps
+/// tile `[t_start, t_end]` with no gaps, the five components sum to
+/// the end-to-end latency ps-exactly ([`BlockPath::e2e_ps`] ==
+/// [`BlockPath::components_ps`]; pinned in `tests/trace.rs`).
+#[derive(Clone, Debug)]
+pub struct BlockPath {
+    pub tenant: u16,
+    /// Wire block id.
+    pub block: u32,
+    pub t_start: Time,
+    pub t_end: Time,
+    pub queue_ps: Time,
+    pub ser_ps: Time,
+    pub prop_ps: Time,
+    pub agg_wait_ps: Time,
+    pub timeout_penalty_ps: Time,
+    pub n_hops: u32,
+    pub n_waits: u32,
+    pub steps: Vec<PathStep>,
+}
+
+impl BlockPath {
+    /// Measured end-to-end latency of the chain.
+    pub fn e2e_ps(&self) -> Time {
+        self.t_end - self.t_start
+    }
+
+    /// Sum of the five attributed components.
+    pub fn components_ps(&self) -> Time {
+        self.queue_ps
+            + self.ser_ps
+            + self.prop_ps
+            + self.agg_wait_ps
+            + self.timeout_penalty_ps
+    }
+}
+
+/// Reconstruct per-block critical paths from hop and wait logs.
+///
+/// Per (tenant, wire-block) group: anchor on the *last* delivery of a
+/// result-carrying packet into a host (broadcast or retransmitted
+/// data; any-kind fallback covers the ring, whose every hop is
+/// host-to-host data), then walk causally backwards. A hop's enqueue
+/// at `(node, t)` is explained by either a wait record ending at
+/// exactly `(node, t)` — whose start is the delivery of the *earliest*
+/// contributor, the packet that sat resident — or by the hop delivered
+/// at exactly `(node, t)` (same-instant forwarding). Chaining through
+/// the earliest contributor is what makes the chain the *max-latency*
+/// one: at a timed-out Canary descriptor the attributed slack is the
+/// full aggregation timeout, at a static slot it is the whole
+/// residency. The walk ends at a send with no recorded cause — the
+/// chain's first host injection.
+pub fn reconstruct_paths(
+    hops: &[HopRecord],
+    waits: &[WaitRecord],
+    is_host: impl Fn(u32) -> bool,
+) -> Vec<BlockPath> {
+    let mut groups: BTreeMap<(u16, u32), (Vec<usize>, Vec<usize>)> =
+        BTreeMap::new();
+    for (i, h) in hops.iter().enumerate() {
+        groups.entry((h.tenant, h.block)).or_default().0.push(i);
+    }
+    for (i, w) in waits.iter().enumerate() {
+        groups.entry((w.tenant, w.block)).or_default().1.push(i);
+    }
+    let mut out = Vec::new();
+    for ((tenant, block), (his, wis)) in groups {
+        if his.is_empty() {
+            continue; // waits alone give no deliverable chain
+        }
+        let anchor = his
+            .iter()
+            .filter(|&&hi| {
+                let h = &hops[hi];
+                is_host(h.to)
+                    && matches!(
+                        h.kind,
+                        PacketKind::CanaryBroadcast
+                            | PacketKind::CanaryRetransData
+                            | PacketKind::StaticBroadcast
+                    )
+            })
+            .max_by_key(|&&hi| hops[hi].t_deliver())
+            .or_else(|| his.iter().max_by_key(|&&hi| hops[hi].t_deliver()));
+        let Some(&anchor) = anchor else { continue };
+
+        let mut cur = anchor;
+        let t_end = hops[cur].t_deliver();
+        let mut rsteps: Vec<PathStep> = Vec::new();
+        // hop durations are strictly positive, so the cursor time
+        // strictly decreases; the guard only bounds degenerate logs
+        let mut guard = his.len() + wis.len() + 4;
+        let t_start = loop {
+            let h = &hops[cur];
+            rsteps.push(PathStep {
+                from: h.from,
+                to: h.to,
+                t_start: h.t_enq,
+                t_end: h.t_deliver(),
+                label: kind_label(h.kind),
+                queue_ps: h.queue_ps,
+                ser_ps: h.ser_ps,
+                prop_ps: h.prop_ps,
+                agg_wait_ps: 0,
+                timeout_penalty_ps: 0,
+            });
+            let mut t = h.t_enq;
+            let node = h.from;
+            guard -= 1;
+            if guard == 0 {
+                break t;
+            }
+            if let Some(&wi) = wis
+                .iter()
+                .find(|&&wi| waits[wi].node == node && waits[wi].t_end == t)
+            {
+                let w = &waits[wi];
+                let slack = w.t_end - w.t_start;
+                let to = w.via_timeout;
+                rsteps.push(PathStep {
+                    from: node,
+                    to: node,
+                    t_start: w.t_start,
+                    t_end: w.t_end,
+                    label: if to { "timeout_wait" } else { "agg_wait" },
+                    queue_ps: 0,
+                    ser_ps: 0,
+                    prop_ps: 0,
+                    agg_wait_ps: if to { 0 } else { slack },
+                    timeout_penalty_ps: if to { slack } else { 0 },
+                });
+                t = w.t_start;
+            }
+            match his
+                .iter()
+                .find(|&&hi| hops[hi].to == node && hops[hi].t_deliver() == t)
+            {
+                Some(&hi) => cur = hi,
+                None => break t,
+            }
+        };
+        rsteps.reverse();
+        let mut p = BlockPath {
+            tenant,
+            block,
+            t_start,
+            t_end,
+            queue_ps: 0,
+            ser_ps: 0,
+            prop_ps: 0,
+            agg_wait_ps: 0,
+            timeout_penalty_ps: 0,
+            n_hops: 0,
+            n_waits: 0,
+            steps: Vec::new(),
+        };
+        for st in &rsteps {
+            p.queue_ps += st.queue_ps;
+            p.ser_ps += st.ser_ps;
+            p.prop_ps += st.prop_ps;
+            p.agg_wait_ps += st.agg_wait_ps;
+            p.timeout_penalty_ps += st.timeout_penalty_ps;
+            if st.label == "agg_wait" || st.label == "timeout_wait" {
+                p.n_waits += 1;
+            } else {
+                p.n_hops += 1;
+            }
+        }
+        p.steps = rsteps;
+        out.push(p);
+    }
+    out
+}
+
+/// Critical paths of every traced block in `net` (empty when the
+/// flight recorder was off or sampled nothing).
+pub fn critical_paths(net: &Network) -> Vec<BlockPath> {
+    reconstruct_paths(net.tracer.hops(), net.tracer.waits(), |n| {
+        matches!(net.nodes[n as usize].body, NodeBody::Host(_))
+    })
+}
+
+/// Write the four trace artifacts (`trace_timeline.csv`,
+/// `trace_spans.csv`, `trace_trees.json`,
+/// `trace_critical_paths.json`) under `dir` and return the written
+/// paths. The timeline carries one global gauge row per tick
 /// (`link == -1`) plus one row per active link, so the file is
-/// non-empty whenever the sampler ran at all.
+/// non-empty whenever the sampler ran at all; the global row also
+/// surfaces the sampler ring's eviction count (`samples_dropped`), so
+/// an overflowing ring is visible instead of silently shedding the
+/// oldest ticks.
 pub fn export(net: &Network, dir: &str) -> std::io::Result<Vec<String>> {
     let tr = &net.tracer;
     let mut paths = Vec::new();
@@ -385,8 +790,10 @@ pub fn export(net: &Network, dir: &str) -> std::io::Result<Vec<String>> {
             "arena_live",
             "live_desc",
             "ecn_marks",
+            "samples_dropped",
         ],
     );
+    let (samples_dropped, _, _) = tr.dropped();
     for s in tr.samples() {
         let t_us = s.t_ps as f64 / US as f64;
         let total_q: u64 = s.links.iter().map(|l| l.queued_bytes).sum();
@@ -404,6 +811,7 @@ pub fn export(net: &Network, dir: &str) -> std::io::Result<Vec<String>> {
             &s.arena_live,
             &s.live_descriptors,
             &s.ecn_marks,
+            &samples_dropped,
         ]);
         for l in &s.links {
             let (from, to) = {
@@ -420,6 +828,7 @@ pub fn export(net: &Network, dir: &str) -> std::io::Result<Vec<String>> {
                 &format!("{:.1}", 100.0 * l.util),
                 &l.drops,
                 &(l.alive as u8),
+                &"",
                 &"",
                 &"",
                 &"",
@@ -445,7 +854,76 @@ pub fn export(net: &Network, dir: &str) -> std::io::Result<Vec<String>> {
     paths.push(spans.write_csv(dir)?);
 
     paths.push(export_trees(net, dir)?);
+    paths.push(export_critical_paths(net, dir)?);
     Ok(paths)
+}
+
+/// `trace_critical_paths.json`: one reconstructed critical path per
+/// traced block plus the flight-recorder volume/overflow counters.
+/// Every numeric field is an integer picosecond count — no float
+/// formatting — so identical runs serialize byte-identically (pinned
+/// in `tests/trace.rs`).
+fn export_critical_paths(net: &Network, dir: &str) -> std::io::Result<String> {
+    let block_paths = critical_paths(net);
+    let tr = &net.tracer;
+    let (hops_dropped, waits_dropped) = tr.flight_dropped();
+    let path_vals: Vec<Value> = block_paths
+        .iter()
+        .map(|p| {
+            let steps: Vec<Value> = p
+                .steps
+                .iter()
+                .map(|s| {
+                    obj(vec![
+                        ("from", Value::Int(s.from as i64)),
+                        ("to", Value::Int(s.to as i64)),
+                        ("t_start_ps", Value::Int(s.t_start as i64)),
+                        ("t_end_ps", Value::Int(s.t_end as i64)),
+                        ("kind", Value::Str(s.label.into())),
+                        ("queue_ps", Value::Int(s.queue_ps as i64)),
+                        ("ser_ps", Value::Int(s.ser_ps as i64)),
+                        ("prop_ps", Value::Int(s.prop_ps as i64)),
+                        ("agg_wait_ps", Value::Int(s.agg_wait_ps as i64)),
+                        (
+                            "timeout_penalty_ps",
+                            Value::Int(s.timeout_penalty_ps as i64),
+                        ),
+                    ])
+                })
+                .collect();
+            obj(vec![
+                ("tenant", Value::Int(p.tenant as i64)),
+                ("block", Value::Int(p.block as i64)),
+                ("t_start_ps", Value::Int(p.t_start as i64)),
+                ("t_end_ps", Value::Int(p.t_end as i64)),
+                ("e2e_ps", Value::Int(p.e2e_ps() as i64)),
+                ("total_ps", Value::Int(p.components_ps() as i64)),
+                ("queueing_ps", Value::Int(p.queue_ps as i64)),
+                ("serialization_ps", Value::Int(p.ser_ps as i64)),
+                ("propagation_ps", Value::Int(p.prop_ps as i64)),
+                ("agg_wait_ps", Value::Int(p.agg_wait_ps as i64)),
+                (
+                    "timeout_penalty_ps",
+                    Value::Int(p.timeout_penalty_ps as i64),
+                ),
+                ("hops", Value::Int(p.n_hops as i64)),
+                ("waits", Value::Int(p.n_waits as i64)),
+                ("steps", Value::Array(steps)),
+            ])
+        })
+        .collect();
+    let doc = obj(vec![
+        ("blocks_traced", Value::Int(block_paths.len() as i64)),
+        ("hops_recorded", Value::Int(tr.hops().len() as i64)),
+        ("hops_dropped", Value::Int(hops_dropped as i64)),
+        ("waits_recorded", Value::Int(tr.waits().len() as i64)),
+        ("waits_dropped", Value::Int(waits_dropped as i64)),
+        ("paths", Value::Array(path_vals)),
+    ]);
+    std::fs::create_dir_all(dir)?;
+    let path = std::path::Path::new(dir).join("trace_critical_paths.json");
+    std::fs::write(&path, doc.to_json())?;
+    Ok(path.to_string_lossy().to_string())
 }
 
 /// `trace_trees.json`: per-(tenant, block) realized-tree forwards, a
@@ -614,5 +1092,125 @@ mod tests {
             .map(|v| v.as_i64().unwrap())
             .collect();
         assert_eq!(ports, vec![0, 5, 7]);
+    }
+
+    fn hop(
+        tenant: u16,
+        block: u32,
+        kind: PacketKind,
+        from: u32,
+        to: u32,
+        t_enq: Time,
+        queue: Time,
+        ser: Time,
+        prop: Time,
+    ) -> HopRecord {
+        HopRecord {
+            tenant,
+            block,
+            kind,
+            link: 0,
+            from,
+            to,
+            t_enq,
+            queue_ps: queue,
+            ser_ps: ser,
+            prop_ps: prop,
+        }
+    }
+
+    #[test]
+    fn block_sampling_is_seeded_and_bounded() {
+        let mk = || {
+            let mut t = Tracer::on(TraceSpec::default().with_blocks(3));
+            t.register_job(42, 1, 10);
+            t
+        };
+        let (a, b) = (mk(), mk());
+        let sel: Vec<bool> = (0..10).map(|i| a.is_traced(1, i)).collect();
+        assert_eq!(sel.iter().filter(|&&s| s).count(), 3);
+        for i in 0..10 {
+            assert_eq!(a.is_traced(1, i), b.is_traced(1, i));
+            // retry rounds reuse the selection modulo total_blocks
+            assert_eq!(a.is_traced(1, i), a.is_traced(1, i + 10));
+        }
+        // unregistered tenants are never traced
+        assert!(!a.is_traced(2, 0));
+    }
+
+    #[test]
+    fn hop_and_wait_filter_untraced_and_count_drops() {
+        let spec = TraceSpec::default().with_blocks(1);
+        let mut t = Tracer::on(TraceSpec {
+            max_hops: 1,
+            max_waits: 1,
+            ..spec
+        });
+        t.register_job(7, 0, 1); // the single block is traced
+        for i in 0..3u64 {
+            t.hop(hop(0, 0, PacketKind::Ring, 0, 1, i, 0, 1, 1));
+            t.wait(WaitRecord {
+                tenant: 0,
+                block: 0,
+                node: 1,
+                t_start: i,
+                t_end: i + 1,
+                via_timeout: false,
+            });
+            // unregistered tenant: silently filtered, not a drop
+            t.hop(hop(9, 0, PacketKind::Ring, 0, 1, i, 0, 1, 1));
+        }
+        assert_eq!(t.hops().len(), 1);
+        assert_eq!(t.waits().len(), 1);
+        assert_eq!(t.flight_dropped(), (2, 2));
+        // PR 7 collectors untouched
+        assert_eq!(t.dropped(), (0, 0, 0));
+    }
+
+    #[test]
+    fn reconstruct_attributes_components_exactly() {
+        // host 0 -> switch 1 (timed-out descriptor) -> leader host 2
+        // (aggregation wait) -> broadcast back to host 0
+        let hops = vec![
+            hop(0, 5, PacketKind::CanaryReduce, 0, 1, 0, 10, 20, 30),
+            hop(0, 5, PacketKind::CanaryReduce, 1, 2, 1060, 0, 20, 30),
+            hop(0, 5, PacketKind::CanaryBroadcast, 2, 0, 1200, 5, 20, 30),
+            // a second contributor that is NOT on the critical chain
+            hop(0, 5, PacketKind::CanaryReduce, 3, 1, 500, 0, 20, 30),
+        ];
+        let waits = vec![
+            WaitRecord {
+                tenant: 0,
+                block: 5,
+                node: 1,
+                t_start: 60,
+                t_end: 1060,
+                via_timeout: true,
+            },
+            WaitRecord {
+                tenant: 0,
+                block: 5,
+                node: 2,
+                t_start: 1110,
+                t_end: 1200,
+                via_timeout: false,
+            },
+        ];
+        let paths =
+            reconstruct_paths(&hops, &waits, |n| n == 0 || n == 2);
+        assert_eq!(paths.len(), 1);
+        let p = &paths[0];
+        assert_eq!((p.tenant, p.block), (0, 5));
+        assert_eq!((p.t_start, p.t_end), (0, 1255));
+        assert_eq!(p.timeout_penalty_ps, 1000);
+        assert_eq!(p.agg_wait_ps, 90);
+        assert_eq!(p.queue_ps, 15);
+        assert_eq!(p.ser_ps, 60);
+        assert_eq!(p.prop_ps, 90);
+        assert_eq!(p.n_hops, 3);
+        assert_eq!(p.n_waits, 2);
+        assert_eq!(p.steps.len(), 5);
+        // the headline invariant: components tile the e2e latency
+        assert_eq!(p.components_ps(), p.e2e_ps());
     }
 }

@@ -1,9 +1,11 @@
-//! Telemetry recorder (DESIGN.md §2.7): the three collectors — the
-//! time-series sampler, the job lifecycle spans, and the realized
-//! dynamic-tree capture — observed end to end on a churny Canary run,
-//! plus the zero-footprint contract: with tracing off (and even with
-//! it on) the seeded fingerprint is bit-identical, because sampler
-//! ticks live outside `events_processed` and never advance the clock.
+//! Telemetry recorder (DESIGN.md §2.7/§2.9): the four collectors — the
+//! time-series sampler, the job lifecycle spans, the realized
+//! dynamic-tree capture, and the per-block flight recorder — observed
+//! end to end on a churny Canary run, plus the zero-footprint
+//! contract: with tracing off (and even with it on) the seeded
+//! fingerprint is bit-identical, because sampler ticks live outside
+//! `events_processed` and never advance the clock, and the flight
+//! recorder only ever observes state the simulation already computed.
 
 mod common;
 
@@ -58,6 +60,19 @@ fn tracing_is_zero_footprint_on_the_seeded_fingerprint() {
         BOUND,
     );
     assert_eq!(off, fast, "sampler cadence leaked into the simulation");
+    // ... and so is the flight recorder, at any --trace-blocks setting
+    for blocks in [1, 3, 1000] {
+        let fr = fingerprint_bounded(
+            &churny()
+                .trace(Some(TraceSpec::default().with_blocks(blocks))),
+            42,
+            BOUND,
+        );
+        assert_eq!(
+            off, fr,
+            "--trace-blocks={blocks} perturbed the simulation fingerprint"
+        );
+    }
 }
 
 // ---------------------------------------------- collectors, end to end
@@ -131,19 +146,23 @@ fn traced_churn_run_feeds_all_three_collectors() {
 
 // ------------------------------------------------------------- exports
 
-/// `trace::export` writes the three artifacts, non-empty and
-/// parseable: the timeline CSV with its pinned header, the span CSV,
-/// and the realized-tree JSON (round-tripped through `util::json`).
+/// `trace::export` writes the four artifacts, non-empty and
+/// parseable: the timeline CSV with its pinned header (now carrying
+/// the `samples_dropped` gauge), the span CSV, the realized-tree JSON,
+/// and the flight recorder's critical-path JSON (both round-tripped
+/// through `util::json`).
 #[test]
-fn export_writes_three_parseable_artifacts() {
-    let mut exp = churny().trace(Some(TraceSpec::default())).build(77);
+fn export_writes_four_parseable_artifacts() {
+    let mut exp = churny()
+        .trace(Some(TraceSpec::default().with_blocks(3)))
+        .build(77);
     runner::run_to_completion(&mut exp.net, BOUND);
 
     let dir = std::env::temp_dir()
         .join(format!("canary_trace_test_{}", std::process::id()));
     let dir = dir.to_str().unwrap().to_string();
     let paths = canary::trace::export(&exp.net, &dir).unwrap();
-    assert_eq!(paths.len(), 3, "expected exactly three artifacts");
+    assert_eq!(paths.len(), 4, "expected exactly four artifacts");
 
     let timeline = std::fs::read_to_string(format!(
         "{dir}/trace_timeline.csv"
@@ -153,7 +172,7 @@ fn export_writes_three_parseable_artifacts() {
     assert_eq!(
         lines.next().unwrap(),
         "t_us,link,from,to,queued_bytes,class0_bytes,util_pct,drops,\
-         alive,arena_live,live_desc,ecn_marks",
+         alive,arena_live,live_desc,ecn_marks,samples_dropped",
         "timeline header drifted"
     );
     assert!(lines.next().is_some(), "timeline has no data rows");
@@ -172,5 +191,99 @@ fn export_writes_three_parseable_artifacts() {
     };
     assert!(n > 0, "tree export saw no forwards");
 
+    let crit = std::fs::read_to_string(format!(
+        "{dir}/trace_critical_paths.json"
+    ))
+    .unwrap();
+    let v =
+        json::parse(&crit).expect("trace_critical_paths.json is not JSON");
+    let n = match v.get("blocks_traced") {
+        Some(json::Value::Int(n)) => *n,
+        other => panic!("blocks_traced missing/mistyped: {other:?}"),
+    };
+    assert!(n > 0, "critical-path export traced no blocks");
+
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ----------------------------------------------------- flight recorder
+
+/// The profiler's headline invariant (DESIGN.md §2.9): for every traced
+/// block, the critical path's components — queueing + serialization +
+/// propagation + aggregation wait + timeout penalty — tile its
+/// end-to-end latency ps-exactly. Checked on the seeded churny run,
+/// where timeout penalties actually occur.
+#[test]
+fn critical_path_components_tile_end_to_end_latency() {
+    let mut exp = churny()
+        .trace(Some(TraceSpec::default().with_blocks(3)))
+        .build(77);
+    let res = runner::run_to_completion(&mut exp.net, BOUND);
+    assert!(res[0].completed, "traced churn run did not complete");
+
+    assert!(
+        !exp.net.tracer.hops().is_empty(),
+        "flight recorder logged no hops"
+    );
+    let paths = canary::trace::critical_paths(&exp.net);
+    assert!(!paths.is_empty(), "no critical paths reconstructed");
+    for p in &paths {
+        assert!(p.t_end > p.t_start, "degenerate path for block {}", p.block);
+        assert_eq!(
+            p.components_ps(),
+            p.e2e_ps(),
+            "components do not tile block {} (tenant {}): \
+             q {} + ser {} + prop {} + wait {} + timeout {} != {}",
+            p.block,
+            p.tenant,
+            p.queue_ps,
+            p.ser_ps,
+            p.prop_ps,
+            p.agg_wait_ps,
+            p.timeout_penalty_ps,
+            p.e2e_ps()
+        );
+        // steps are contiguous in time, newest-first reversed to
+        // oldest-first
+        for w in p.steps.windows(2) {
+            assert_eq!(
+                w[0].t_end, w[1].t_start,
+                "gap in critical path of block {}",
+                p.block
+            );
+        }
+    }
+    // the churny scenario fires timeouts; at least one traced path
+    // should attribute some latency to them
+    assert!(
+        paths.iter().any(|p| p.timeout_penalty_ps > 0),
+        "no traced path carries a timeout penalty on the churny run"
+    );
+}
+
+/// Sampling determinism contract: two identical traced runs emit
+/// byte-identical `trace_critical_paths.json` — block selection is
+/// seed-derived and the export path is fully ordered.
+#[test]
+fn identical_traced_runs_emit_byte_identical_critical_paths() {
+    let run = |tag: &str| {
+        let mut exp = churny()
+            .trace(Some(TraceSpec::default().with_blocks(3)))
+            .build(123);
+        runner::run_to_completion(&mut exp.net, BOUND);
+        let dir = std::env::temp_dir().join(format!(
+            "canary_trace_det_{}_{tag}",
+            std::process::id()
+        ));
+        let dir = dir.to_str().unwrap().to_string();
+        canary::trace::export(&exp.net, &dir).unwrap();
+        let bytes =
+            std::fs::read(format!("{dir}/trace_critical_paths.json"))
+                .unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+        bytes
+    };
+    let (a, b) = (run("a"), run("b"));
+    assert!(!a.is_empty(), "critical-path artifact is empty");
+    assert_eq!(a, b, "identical traced runs produced different artifacts");
 }

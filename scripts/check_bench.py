@@ -3,6 +3,7 @@
 
 Usage:
     python3 scripts/check_bench.py CURRENT.json BASELINE.json
+    python3 scripts/check_bench.py --write-baseline CURRENT.json OUT.json
 
 CURRENT.json is the `BENCH_scale.json` a fresh `figures scale --scale
 ci` (or `cargo bench --bench paper_figures`) just wrote; BASELINE.json
@@ -19,8 +20,14 @@ unnoticed for several PRs) — record a real measurement to arm it.
 Updating (or first recording) the baseline
 ------------------------------------------
     cargo run --release --bin figures -- scale --scale ci --out results
-    cp results/BENCH_scale.json scripts/bench_baselines/BENCH_scale.json
+    python3 scripts/check_bench.py --write-baseline \
+        results/BENCH_scale.json scripts/bench_baselines/BENCH_scale.json
     git add scripts/bench_baselines/BENCH_scale.json   # commit with the PR
+
+`--write-baseline` validates the run (positive events/sec) and emits a
+filled baseline that passes the gate against its own source; the CI
+bench job uploads one as the `bench-proposed-baseline` artifact on
+every run, so arming the gate is download-copy-commit.
 
 Record the before/after numbers in EXPERIMENTS.md §Scale alongside the
 refresh. Baselines are machine-dependent: refresh them from a CI run's
@@ -74,11 +81,8 @@ def load(path):
         sys.exit(f"check_bench: {path} is not valid JSON: {e}")
 
 
-def main():
-    if len(sys.argv) != 3:
-        sys.exit(__doc__)
-    current_path, baseline_path = sys.argv[1], sys.argv[2]
-
+def load_current(current_path):
+    """Load and validate a fresh run's results; returns (doc, eps)."""
     current = load(current_path)
     if current is None:
         sys.exit(f"check_bench: current results {current_path} not found "
@@ -87,6 +91,45 @@ def main():
     if not isinstance(cur, (int, float)) or cur <= 0:
         sys.exit(f"check_bench: {current_path} has no positive "
                  f"events_per_sec (got {cur!r})")
+    return current, cur
+
+
+def write_baseline(current_path, out_path):
+    """Emit a filled baseline from a validated run's output.
+
+    The emitted file passes gate() against its own source by
+    construction (ratio exactly 1.0); committing it to
+    scripts/bench_baselines/ arms the regression gate.
+    """
+    current, cur = load_current(current_path)
+    baseline = {
+        "_note": ("Baseline emitted by check_bench.py --write-baseline "
+                  "from a measured run. Refresh from a CI run's uploaded "
+                  "bench artifact, not a laptop — see "
+                  "scripts/check_bench.py's header."),
+        "bench": current.get("bench", "scale_weak_sweep"),
+        "scale": current.get("scale", "?"),
+        "headline_cell": current.get("headline_cell", "?"),
+        "headline_events": current.get("headline_events"),
+        "events_per_sec": cur,
+    }
+    with open(out_path, "w") as f:
+        json.dump(baseline, f, indent=2)
+        f.write("\n")
+    print(f"check_bench: wrote baseline {out_path} "
+          f"({cur / 1e6:.2f} M events/s, cell "
+          f"{baseline['headline_cell']})")
+
+
+def main():
+    argv = sys.argv[1:]
+    if len(argv) == 3 and argv[0] == "--write-baseline":
+        return write_baseline(argv[1], argv[2])
+    if len(argv) != 2:
+        sys.exit(__doc__)
+    current_path, baseline_path = argv
+
+    current, cur = load_current(current_path)
 
     baseline = load(baseline_path)
     if baseline is None:

@@ -5,13 +5,14 @@ Usage:
     python3 scripts/plot_trace.py [--dir results/trace] [--links N]
     python3 scripts/plot_trace.py --check
 
-Reads the three files a traced run exports (``--trace`` on the main
+Reads the four files a traced run exports (``--trace`` on the main
 binary, or ``figures trace``):
 
 * ``trace_timeline.csv`` — sampler ticks: per-link queue depth and
   utilization plus global gauges (live arena packets, live switch
-  descriptors, cumulative ECN marks). Rendered as one sparkline per
-  busiest link and one per global gauge.
+  descriptors, cumulative ECN marks, sampler-ring evictions). Rendered
+  as one sparkline per busiest link and one per global gauge; a
+  nonzero ``samples_dropped`` count is called out explicitly.
 * ``trace_spans.csv`` — job lifecycle spans (install → kick → sends →
   aggregated → broadcast → host_done → complete/stalled, plus
   recovery markers). Rendered as a time-ordered table.
@@ -19,6 +20,12 @@ binary, or ``figures trace``):
   switch aggregation forward (contributing ports, expected vs actual
   fan-in, timeout flag). Rendered as a fan-in histogram and a
   per-block forward list.
+* ``trace_critical_paths.json`` — flight-recorder critical paths
+  (``--trace-blocks N``): per traced block, where its end-to-end
+  latency went — queueing, serialization, propagation, aggregation
+  wait, timeout penalty. Rendered as one stacked component bar per
+  block. Absent on runs without ``--trace-blocks``; handled as
+  optional.
 
 Stdlib only (csv/json/argparse) — no matplotlib, runs anywhere CI
 does. ``--check`` runs the internal self-tests on synthetic data and
@@ -53,7 +60,7 @@ def spark(values, width=60):
 
 def load_timeline(path):
     """Split the timeline into global-gauge rows and per-link rows."""
-    gauges = []  # (t_us, arena_live, live_desc, ecn_marks)
+    gauges = []  # (t_us, arena_live, live_desc, ecn_marks, samples_dropped)
     links = {}  # link id -> list of (t_us, queued_bytes, util_pct)
     with open(path, newline="") as f:
         for row in csv.DictReader(f):
@@ -65,6 +72,8 @@ def load_timeline(path):
                         int(row["arena_live"]),
                         int(row["live_desc"]),
                         int(row["ecn_marks"]),
+                        # absent in pre-flight-recorder exports
+                        int(row.get("samples_dropped") or 0),
                     )
                 )
             else:
@@ -81,6 +90,12 @@ def render_timeline(gauges, links, top_n):
         out.append(
             f"timeline: {len(gauges)} ticks, {t0:.1f} .. {t1:.1f} us"
         )
+        dropped = gauges[-1][4]
+        if dropped:
+            out.append(
+                f"  WARNING: sampler ring overflowed — {dropped} oldest "
+                "ticks dropped (raise the ring cap or the cadence)"
+            )
         for label, i in (("arena_live", 1), ("live_desc", 2), ("ecn", 3)):
             vals = [float(g[i]) for g in gauges]
             out.append(
@@ -165,6 +180,59 @@ def render_trees(path):
     return "\n".join(out)
 
 
+CP_COMPONENTS = (
+    ("q", "queueing_ps"),
+    ("s", "serialization_ps"),
+    ("p", "propagation_ps"),
+    ("w", "agg_wait_ps"),
+    ("T", "timeout_penalty_ps"),
+)
+
+
+def render_critical_paths(path, bar_width=40):
+    """Stacked per-component latency bars, one per traced block."""
+    with open(path) as f:
+        t = json.load(f)
+    out = [
+        "critical paths: {} blocks traced "
+        "({} hops, {} waits recorded; {} hops, {} waits dropped)".format(
+            t["blocks_traced"],
+            t["hops_recorded"],
+            t["waits_recorded"],
+            t["hops_dropped"],
+            t["waits_dropped"],
+        )
+    ]
+    for p in t.get("paths", []):
+        e2e = max(p["e2e_ps"], 1)
+        bar = "".join(
+            ch * round(bar_width * p[key] / e2e)
+            for ch, key in CP_COMPONENTS
+        )[:bar_width]
+        pcts = "  ".join(
+            "{} {:.0f}%".format(ch, 100.0 * p[key] / e2e)
+            for ch, key in CP_COMPONENTS
+        )
+        out.append(
+            "  t{}/b{:<5} {:>9.1f} us  {:>3} hops "
+            "|{:<{w}}| {}".format(
+                p["tenant"],
+                p["block"],
+                p["e2e_ps"] / 1e6,
+                p["hops"],
+                bar,
+                pcts,
+                w=bar_width,
+            )
+        )
+    if t.get("paths"):
+        out.append(
+            "  legend: q queueing  s serialization  p propagation  "
+            "w aggregation wait  T timeout penalty"
+        )
+    return "\n".join(out)
+
+
 def main(argv):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--dir", default="results/trace")
@@ -192,6 +260,15 @@ def main(argv):
     print(render_spans(spans))
     print()
     print(render_trees(trees))
+    crit = os.path.join(args.dir, "trace_critical_paths.json")
+    if os.path.exists(crit):
+        print()
+        print(render_critical_paths(crit))
+    else:
+        print(
+            "\n(no trace_critical_paths.json — run with --trace-blocks N "
+            "to arm the flight recorder)"
+        )
     return 0
 
 
@@ -199,7 +276,7 @@ def main(argv):
 
 TIMELINE_HEADER = (
     "t_us,link,from,to,queued_bytes,class0_bytes,util_pct,drops,"
-    "alive,arena_live,live_desc,ecn_marks"
+    "alive,arena_live,live_desc,ecn_marks,samples_dropped"
 )
 
 
@@ -224,15 +301,31 @@ def self_test():
         tpath = os.path.join(d, "trace_timeline.csv")
         with open(tpath, "w") as f:
             f.write(TIMELINE_HEADER + "\n")
-            f.write("0.0,-1,-1,-1,128,128,,,,3,2,0\n")
-            f.write("0.0,4,0,8,128,128,55.0,0,true,,,\n")
-            f.write("1.0,-1,-1,-1,0,0,,,,1,0,2\n")
+            f.write("0.0,-1,-1,-1,128,128,,,,3,2,0,7\n")
+            f.write("0.0,4,0,8,128,128,55.0,0,true,,,,\n")
+            f.write("1.0,-1,-1,-1,0,0,,,,1,0,2,7\n")
         gauges, links = load_timeline(tpath)
         check("gauge rows parsed", len(gauges) == 2)
         check("gauge ecn cumulative", gauges[-1][3] == 2)
+        check("gauge samples_dropped", gauges[-1][4] == 7)
         check("link rows parsed", list(links) == [4])
         rendered = render_timeline(gauges, links, 8)
         check("timeline mentions link", "link    4" in rendered)
+        check(
+            "overflow warned", "7 oldest ticks dropped" in rendered
+        )
+
+        # pre-flight-recorder exports lack the samples_dropped column
+        old = os.path.join(d, "trace_timeline_old.csv")
+        with open(old, "w") as f:
+            f.write(TIMELINE_HEADER.rsplit(",", 1)[0] + "\n")
+            f.write("0.0,-1,-1,-1,128,128,,,,3,2,0\n")
+        og, _ = load_timeline(old)
+        check("legacy timeline parses", og[-1][4] == 0)
+        check(
+            "no spurious warning",
+            "dropped" not in render_timeline(og, {}, 8),
+        )
 
         spath = os.path.join(d, "trace_spans.csv")
         with open(spath, "w") as f:
@@ -286,6 +379,43 @@ def self_test():
         check("tree totals", "2 forwards (1 via timeout" in trendered)
         check("tree partial listed", "1/2 ports [0]" in trendered)
         check("tree timeout tagged", "(timeout)" in trendered)
+
+        cpath = os.path.join(d, "trace_critical_paths.json")
+        with open(cpath, "w") as f:
+            json.dump(
+                {
+                    "blocks_traced": 1,
+                    "hops_recorded": 3,
+                    "hops_dropped": 0,
+                    "waits_recorded": 2,
+                    "waits_dropped": 0,
+                    "paths": [
+                        {
+                            "tenant": 0,
+                            "block": 5,
+                            "t_start_ps": 0,
+                            "t_end_ps": 1255,
+                            "e2e_ps": 1255,
+                            "total_ps": 1255,
+                            "queueing_ps": 15,
+                            "serialization_ps": 60,
+                            "propagation_ps": 90,
+                            "agg_wait_ps": 90,
+                            "timeout_penalty_ps": 1000,
+                            "hops": 3,
+                            "waits": 2,
+                            "steps": [],
+                        }
+                    ],
+                },
+                f,
+            )
+        crendered = render_critical_paths(cpath)
+        check("cp totals", "1 blocks traced" in crendered)
+        check("cp block listed", "t0/b5" in crendered)
+        check("cp timeout dominates", "T 80%" in crendered)
+        check("cp bar stacked", "T" * 20 in crendered)
+        check("cp legend", "timeout penalty" in crendered)
 
     if failures:
         print("FAIL: " + ", ".join(failures), file=sys.stderr)

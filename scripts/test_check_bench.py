@@ -149,5 +149,65 @@ class MainExitCodes(unittest.TestCase):
         self.assertIn("not valid JSON", r.stderr)
 
 
+class WriteBaseline(unittest.TestCase):
+    """--write-baseline: emit a filled baseline from a run's output."""
+
+    # reuse the temp-dir fixture and helpers without inheriting (and
+    # re-running) the gate-mode test methods
+    setUp = MainExitCodes.setUp
+    tearDown = MainExitCodes.tearDown
+    _write = MainExitCodes._write
+    _run = MainExitCodes._run
+    _current = MainExitCodes._current
+
+    def _run_write(self, cur_path, out_path):
+        return subprocess.run(
+            [sys.executable, SCRIPT, "--write-baseline", cur_path,
+             out_path],
+            capture_output=True,
+            text=True,
+        )
+
+    def test_round_trip_arms_the_gate(self):
+        cur = self._write("cur.json", self._current(1.5e6))
+        out = os.path.join(self.dir.name, "proposed.json")
+        r = self._run_write(cur, out)
+        self.assertEqual(r.returncode, 0, r.stderr)
+        self.assertIn("wrote baseline", r.stdout)
+        with open(out) as f:
+            baseline = json.load(f)
+        # the emitted file is a complete, armed baseline ...
+        self.assertEqual(baseline["events_per_sec"], 1.5e6)
+        self.assertEqual(
+            baseline["headline_cell"], "canary_4096hosts_3tier_cross"
+        )
+        self.assertEqual(baseline["headline_events"], 123456)
+        # ... that passes the gate against its own source
+        self.assertEqual(
+            check_bench.gate(1.5e6, baseline["events_per_sec"]),
+            ("pass", 1.0),
+        )
+        r2 = self._run(cur, out)
+        self.assertEqual(r2.returncode, 0, r2.stderr)
+        self.assertIn("PASS", r2.stdout)
+
+    def test_null_current_refused(self):
+        cur = self._write("cur.json", self._current(None))
+        out = os.path.join(self.dir.name, "proposed.json")
+        r = self._run_write(cur, out)
+        self.assertNotEqual(r.returncode, 0)
+        self.assertIn("positive", r.stderr)
+        self.assertFalse(os.path.exists(out))
+
+    def test_missing_current_refused(self):
+        out = os.path.join(self.dir.name, "proposed.json")
+        r = self._run_write(
+            os.path.join(self.dir.name, "nope.json"), out
+        )
+        self.assertNotEqual(r.returncode, 0)
+        self.assertIn("not found", r.stderr)
+        self.assertFalse(os.path.exists(out))
+
+
 if __name__ == "__main__":
     unittest.main(verbosity=2)
