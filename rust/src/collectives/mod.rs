@@ -234,6 +234,9 @@ impl JobSpec {
 }
 
 /// Mutable job progress, updated by host protocol engines via `Ctx`.
+/// `Clone` so the sharded engine (`sim/shard.rs`) can replicate the job
+/// table into every shard and merge the rank-disjoint progress back.
+#[derive(Clone)]
 pub struct JobRuntime {
     pub spec: JobSpec,
     pub start: Time,
@@ -287,6 +290,40 @@ impl JobRuntime {
         if self.spec.record_results {
             self.results.insert((rank, block), lanes.to_vec());
         }
+    }
+
+    /// Fold one shard's copy of this job into `self` (sharded-engine
+    /// merge). Each rank runs on exactly one shard, so the per-rank
+    /// finish slots are disjoint across copies; `hosts_finished` and
+    /// `finish` are recomputed from the union with the same completion
+    /// rule as [`JobRuntime::host_finished`] — which makes the merged
+    /// table identical to what a serial run would have produced.
+    pub fn merge_from(&mut self, other: &JobRuntime) {
+        for (slot, o) in
+            self.per_host_finish.iter_mut().zip(&other.per_host_finish)
+        {
+            if slot.is_none() {
+                *slot = *o;
+            }
+        }
+        // lint: allow(unordered-iter, extend of rank-keyed results; read back by key, never iterated for output)
+        self.results
+            .extend(other.results.iter().map(|(k, v)| (*k, v.clone())));
+        self.hosts_finished =
+            self.per_host_finish.iter().filter(|s| s.is_some()).count()
+                as u32;
+        self.finish = match self.spec.collective.completion_rank() {
+            Some(root) => self.per_host_finish[root as usize],
+            None => {
+                if self.hosts_finished
+                    == self.spec.participants.len() as u32
+                {
+                    self.per_host_finish.iter().flatten().copied().max()
+                } else {
+                    None
+                }
+            }
+        };
     }
 
     /// Completion time (ps), if finished.

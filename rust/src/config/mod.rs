@@ -69,6 +69,14 @@ pub struct SimConfig {
     /// always audit. The audit is read-only, so this cannot change a
     /// run's fingerprint — only whether accounting bugs abort it.
     pub paranoid: bool,
+    /// Space-parallel shard count for the bounded-window PDES engine
+    /// (`sim/shard.rs`). `0` (default) selects the serial engine;
+    /// `--shards 1` runs the sharded machinery with one worker and is
+    /// pinned bit-identical to serial; `N > 1` partitions the fabric by
+    /// pod/leaf group across `N` worker threads (deterministic for any
+    /// fixed `N` — and fingerprint-identical to serial, see
+    /// DESIGN.md §2.10).
+    pub shards: u32,
     /// Master seed; every stochastic choice derives from it.
     pub seed: u64,
 }
@@ -107,6 +115,7 @@ impl Default for SimConfig {
             // sink either way.
             transport_rto_ps: 200 * US,
             paranoid: false,
+            shards: 0,
             seed: 0xCA11A8,
         }
     }
@@ -139,6 +148,12 @@ impl SimConfig {
 
     pub fn with_paranoid(mut self, on: bool) -> Self {
         self.paranoid = on;
+        self
+    }
+
+    /// Select the space-parallel engine with `n` shards (0 = serial).
+    pub fn with_shards(mut self, n: u32) -> Self {
+        self.shards = n;
         self
     }
 
@@ -320,6 +335,20 @@ impl ClosConfig {
     /// multi-tier fabrics.
     pub fn huge3() -> Self {
         ClosConfig::three_tier(16, 16, 16, 8, 8)
+    }
+
+    /// 32768 hosts on a 3-tier pod fabric (32 pods x 32 ToRs x 32
+    /// hosts; 2:1 oversubscribed at the ToR tier, 4:1 at aggregation)
+    /// — the first sharded-engine rung of `figures scale`, an order of
+    /// magnitude past `huge3`.
+    pub fn giant3() -> Self {
+        ClosConfig::three_tier(32, 32, 32, 16, 8)
+    }
+
+    /// 131072 hosts on a 4-tier fabric (the 128k rung; serial runs at
+    /// this scale are impractical — it exists for the sharded engine).
+    pub fn colossal4() -> Self {
+        ClosConfig::custom(&[16, 16, 16, 32], &[1, 8, 8, 8])
     }
 
     /// Rescale the uplink radixes so every switch tier below the top is
@@ -531,6 +560,26 @@ mod tests {
         assert_eq!(t.down[0], 2 * t.up[1]);
         assert_eq!(t.down[1], 2 * t.up[2]);
         assert!(t.n_spine() >= 4, "static4 needs 4 distinct roots");
+    }
+
+    #[test]
+    fn giant3_and_colossal4_counts() {
+        let t = ClosConfig::giant3();
+        assert_eq!(t.n_hosts(), 32_768);
+        assert!(t.validate().is_ok());
+        assert_eq!(t.n_leaf(), 1024); // 32 pods x 32 ToRs
+        assert_eq!(t.down[0], 2 * t.up[1]); // 2:1 at the ToR tier
+        let c = ClosConfig::colossal4();
+        assert_eq!(c.tiers, 4);
+        assert_eq!(c.n_hosts(), 131_072);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn shards_builder() {
+        let c = SimConfig::default();
+        assert_eq!(c.shards, 0, "serial engine is the default");
+        assert_eq!(c.with_shards(4).shards, 4);
     }
 
     #[test]

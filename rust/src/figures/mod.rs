@@ -871,6 +871,7 @@ pub fn scale(o: &Opts) -> Series {
             "tiers",
             "algo",
             "cross",
+            "shards",
             "events",
             "events_per_sec_m",
             "peak_live_pkts",
@@ -943,6 +944,7 @@ pub fn scale(o: &Opts) -> Series {
             c.topo.tiers.to_string(),
             c.algo.name(),
             c.cross.to_string(),
+            "0".into(), // serial engine (cfg.shards == 0)
             engine.events.to_string(),
             format!("{:.2}", engine.events_per_sec() / 1e6),
             engine.peak_live_packets.to_string(),
@@ -958,6 +960,7 @@ pub fn scale(o: &Opts) -> Series {
             ("tiers", Value::Int(c.topo.tiers as i64)),
             ("algo", Value::Str(c.algo.name())),
             ("cross", Value::Bool(c.cross)),
+            ("shards", Value::Int(0)),
             ("events", Value::Int(engine.events as i64)),
             ("events_per_sec", Value::Float(engine.events_per_sec())),
             (
@@ -966,6 +969,81 @@ pub fn scale(o: &Opts) -> Series {
             ),
             ("arena_slots", Value::Int(engine.arena_slots as i64)),
         ]));
+    }
+
+    // sharded-engine rungs: >=32k-host fabrics swept across a shards
+    // axis (DESIGN.md §2.10). These run one at a time — never under
+    // par_map — because each sharded run owns the machine's cores;
+    // timing them concurrently would measure scheduler contention,
+    // not the engine. `shards == 0` rows above are the serial engine;
+    // the `shards == 1` rung here exercises the PDES split/merge path
+    // with one worker (bit-identical fingerprint to serial, pinned by
+    // tests/pdes.rs) so the two columns are directly comparable.
+    let shard_shapes: Vec<ClosConfig> = match o.scale {
+        // 32768 hosts (3-tier) always; the 131072-host 4-tier fabric
+        // only at full scale, where minutes of wall time are expected
+        Scale::Full => {
+            vec![ClosConfig::giant3(), ClosConfig::colossal4()]
+        }
+        _ => vec![ClosConfig::giant3()],
+    };
+    let shard_axis: &[u32] = match o.scale {
+        Scale::Full => &[1, 2, 4, 8],
+        Scale::Half | Scale::Ci => &[1, 4],
+    };
+    // per-host payload shrinks with scale so the CI cell stays a
+    // smoke test (one block per host) while full remains a real bench
+    let shard_bytes: u64 = match o.scale {
+        Scale::Full => 64 << 10,
+        Scale::Half => 16 << 10,
+        Scale::Ci => 1 << 10,
+    };
+    for &topo in &shard_shapes {
+        for &n_shards in shard_axis {
+            let sc = ScenarioBuilder::new(topo)
+                .sim(SimConfig::default().with_shards(n_shards))
+                .job(
+                    JobBuilder::new(Algo::Canary)
+                        .hosts((topo.n_hosts() / 2).max(2))
+                        .data_bytes(shard_bytes),
+                );
+            let mut exp = sc.build(6000);
+            let r = runner::run_to_completion(&mut exp.net, u64::MAX);
+            let engine = exp.net.metrics.engine.clone();
+            s.push(vec![
+                topo.n_hosts().to_string(),
+                topo.tiers.to_string(),
+                Algo::Canary.name(),
+                "false".into(),
+                n_shards.to_string(),
+                engine.events.to_string(),
+                format!("{:.2}", engine.events_per_sec() / 1e6),
+                engine.peak_live_packets.to_string(),
+                engine.arena_slots.to_string(),
+                format!(
+                    "{:.1}",
+                    r[0].runtime_ps.map(ps_to_us).unwrap_or(f64::NAN)
+                ),
+                format!("{:.1}", r[0].goodput_gbps.unwrap_or(0.0)),
+            ]);
+            cell_values.push(obj(vec![
+                ("hosts", Value::Int(topo.n_hosts() as i64)),
+                ("tiers", Value::Int(topo.tiers as i64)),
+                ("algo", Value::Str(Algo::Canary.name())),
+                ("cross", Value::Bool(false)),
+                ("shards", Value::Int(n_shards as i64)),
+                ("events", Value::Int(engine.events as i64)),
+                (
+                    "events_per_sec",
+                    Value::Float(engine.events_per_sec()),
+                ),
+                (
+                    "peak_live_pkts",
+                    Value::Int(engine.peak_live_packets as i64),
+                ),
+                ("arena_slots", Value::Int(engine.arena_slots as i64)),
+            ]));
+        }
     }
 
     // headline: the biggest Canary cell under cross traffic, re-run

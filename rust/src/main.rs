@@ -39,7 +39,8 @@ USAGE:
                [--transport none|dcqcn|swift] [--ecn-kmin B] [--ecn-kmax B]
                [--timeout-us T] [--retrans-us T]
                [--lb adaptive|ecmp|minqueue|flowlet]
-               [--topo paper|small|tiny[3]] [--tiers 2|3] [--oversub A:B]
+               [--topo paper|small|tiny[3]|huge3|giant3|colossal4]
+               [--tiers 2|3] [--oversub A:B] [--shards N]
                [--topo-json FILE] [--values] [--fingerprint]
                [--faults loss:P,flap:A:B:DOWN_US:UP_US,
                          fail:SW:AT_US[:REC_US],straggler:H:FACTOR]
@@ -77,9 +78,13 @@ fn parse_topo(s: &str, tiers: u8) -> Result<ClosConfig, String> {
         ("paper", 3) | ("paper3", _) => Ok(ClosConfig::paper3()),
         ("small", 3) | ("small3", _) => Ok(ClosConfig::small3()),
         ("tiny", 3) | ("tiny3", _) => Ok(ClosConfig::tiny3()),
+        ("huge", 3) | ("huge3", _) => Ok(ClosConfig::huge3()),
+        ("giant", 3) | ("giant3", _) => Ok(ClosConfig::giant3()),
+        ("colossal", 4) | ("colossal4", _) => Ok(ClosConfig::colossal4()),
         _ => Err(format!(
             "unknown topo '{s}' at {tiers} tiers \
-             (paper|small|tiny|paper3|small3|tiny3; --tiers 2|3)"
+             (paper|small|tiny|paper3|small3|tiny3|huge3|giant3|\
+             colossal4; --tiers 2|3)"
         )),
     }
 }
@@ -310,9 +315,20 @@ fn cmd_run(args: &Args) -> Result<()> {
     let values = args.flag("values");
 
     let window: u32 = args.get_parse("window", 0)?;
+    // 0 = serial engine (default); N >= 1 = sharded PDES engine with N
+    // space-partitioned workers (DESIGN.md §2.10). --shards 1 is
+    // fingerprint-identical to serial; any fixed N is deterministic.
+    let shards: u32 = args.get_parse("shards", 0)?;
+    if shards > 256 {
+        return Err(format!(
+            "--shards {shards} is out of range (max 256)"
+        )
+        .into());
+    }
     let mut sim = SimConfig::default()
         .with_timeout(timeout_us * US)
         .with_window(window)
+        .with_shards(shards)
         .with_values(values)
         .with_paranoid(args.flag("paranoid"));
     if retrans_us > 0 {
@@ -583,6 +599,7 @@ fn main() -> Result<()> {
             "workers", "steps", "lr", "comm-every", "diameter", "window",
             "debug-links", "fingerprint", "faults", "faults-json",
             "retrans-us", "trace", "trace-blocks", "trace-dir", "paranoid",
+            "shards",
         ],
     )?;
     match args.positional.first().map(|s| s.as_str()) {

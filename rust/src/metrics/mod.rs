@@ -32,8 +32,17 @@ pub struct FlowStats {
     /// Application bytes delivered to sinks, first copies only
     /// (goodput; duplicates land in `dup_bytes`).
     pub delivered_bytes: u64,
-    /// Completion time of every finished flow, in event order.
+    /// Completion time of every finished flow, in completion order on
+    /// the owning shard (shard-concatenated after a sharded run — only
+    /// percentiles are read from it, which are order-free).
+    // fp: excluded(sample order is engine-layout-dependent; the multiset is fingerprinted via fct_digest)
     pub fct_ps: Vec<Time>,
+    /// Commutative digest over the (flow, fct) multiset: each
+    /// completion adds a hash of the pair, so the digest is identical
+    /// for any completion order — the property that lets serial and
+    /// sharded runs fingerprint identically while still pinning every
+    /// individual flow-completion time.
+    pub fct_digest: u64,
     // --- reactive-transport accounting (`crate::transport`) ---
     /// CE-marked data packets accepted at sinks.
     pub ecn_delivered: u64,
@@ -68,8 +77,24 @@ impl FlowStats {
         expected_pkts: u32,
         bytes: u64,
     ) {
+        self.on_offer(bytes);
+        self.register(flow, born, expected_pkts);
+    }
+
+    /// Sender half of [`FlowStats::on_start`]: offered-load accounting
+    /// only. Split out for the sharded engine, where the sender and the
+    /// sink of a flow may live on different shards ([`Ctx::flow_start`]
+    /// books the offer locally and hands the registration off).
+    ///
+    /// [`Ctx::flow_start`]: crate::sim::Ctx::flow_start
+    pub fn on_offer(&mut self, bytes: u64) {
         self.started += 1;
         self.offered_bytes += bytes;
+    }
+
+    /// Sink half of [`FlowStats::on_start`]: make the flow live so its
+    /// deliveries are tracked toward an FCT.
+    pub fn register(&mut self, flow: u64, born: Time, expected_pkts: u32) {
         self.live.insert(
             flow,
             LiveFlow {
@@ -89,8 +114,40 @@ impl FlowStats {
                 let born = f.born;
                 self.live.remove(&flow);
                 self.completed += 1;
-                self.fct_ps.push(now.saturating_sub(born));
+                let fct = now.saturating_sub(born);
+                self.fct_ps.push(fct);
+                let mut s = fct ^ flow.rotate_left(17);
+                self.fct_digest = self
+                    .fct_digest
+                    .wrapping_add(crate::util::rng::splitmix64(&mut s));
             }
+        }
+    }
+
+    /// Fold one shard's flow accounting into `self` (sharded-engine
+    /// merge): counters add, FCT samples concatenate in shard order
+    /// (percentile-safe — only the digest is fingerprinted), and the
+    /// still-live maps union (a flow is tracked by exactly one sink, so
+    /// the key sets are disjoint).
+    pub fn merge(&mut self, other: &FlowStats) {
+        self.started += other.started;
+        self.completed += other.completed;
+        self.offered_bytes += other.offered_bytes;
+        self.delivered_bytes += other.delivered_bytes;
+        self.fct_ps.extend_from_slice(&other.fct_ps);
+        self.fct_digest = self.fct_digest.wrapping_add(other.fct_digest);
+        self.ecn_delivered += other.ecn_delivered;
+        self.cnps_sent += other.cnps_sent;
+        self.cnps_received += other.cnps_received;
+        self.acks_received += other.acks_received;
+        self.retrans_pkts += other.retrans_pkts;
+        self.dup_pkts += other.dup_pkts;
+        self.dup_bytes += other.dup_bytes;
+        self.rto_fired += other.rto_fired;
+        self.abandoned += other.abandoned;
+        // lint: allow(unordered-iter, disjoint-key map union; insertion order never observed)
+        for (k, v) in &other.live {
+            self.live.insert(*k, v.clone());
         }
     }
 
@@ -161,11 +218,16 @@ pub struct EngineStats {
     /// Wall-clock seconds spent in the dispatch loop (accumulated over
     /// `run`/`run_all` segments).
     pub wall_secs: f64,
-    /// Peak simultaneously-live packets in the arena.
+    /// Peak simultaneously-live packets in the arena. After a sharded
+    /// run: sum of per-shard peaks (an upper bound on the serial peak —
+    /// the shard peaks need not coincide in time).
+    // fp: excluded(capacity gauge depends on the engine layout: per-shard peaks sum to an overestimate)
     pub peak_live_packets: u64,
     /// Arena slab size — equals the peak, since freed slots recycle.
+    // fp: excluded(capacity gauge depends on the engine layout, like peak_live_packets)
     pub arena_slots: u64,
     /// Packet allocations served (slab growth + free-list reuse).
+    // fp: excluded(cross-shard handoffs re-allocate on the owner shard, inflating the count vs serial)
     pub arena_allocs: u64,
 }
 
@@ -236,7 +298,9 @@ pub struct Metrics {
     /// at the end of a clean run).
     pub descriptors_allocated: u64,
     pub descriptors_freed: u64,
-    /// High-water mark of live descriptors over all switches.
+    /// High-water mark of live descriptors over all switches. After a
+    /// sharded run: sum of per-shard high-water marks (upper bound).
+    // fp: excluded(capacity gauge depends on the engine layout: per-shard peaks sum to an overestimate)
     pub descriptor_high_water: u64,
     /// Currently live descriptors (maintained by the dataplane).
     // fp: excluded(gauge: always descriptors_allocated - descriptors_freed, both already mixed)
@@ -277,14 +341,57 @@ impl Metrics {
         self.descriptor_residency_ps += residency;
     }
 
+    /// Fold one shard's counters into `self` (sharded-engine merge).
+    /// Every counter is owner-attributed — a delivery, drop, mark or
+    /// descriptor op happens on exactly one shard — so plain sums
+    /// reproduce the serial totals. High-water gauges sum to an upper
+    /// bound (documented on the fields, excluded from the
+    /// fingerprint). `engine` is deliberately untouched: the sharded
+    /// engine fills it in once, from its own coordinator clock and the
+    /// per-shard arenas (`sim/shard.rs`).
+    pub fn merge(&mut self, other: &Metrics) {
+        self.pkts_delivered += other.pkts_delivered;
+        for (a, b) in
+            self.pkts_by_kind.iter_mut().zip(&other.pkts_by_kind)
+        {
+            *a += b;
+        }
+        self.drops_overflow += other.drops_overflow;
+        self.ecn_marks += other.ecn_marks;
+        self.drops_link_down += other.drops_link_down;
+        self.drops_injected += other.drops_injected;
+        self.stragglers += other.stragglers;
+        self.collisions += other.collisions;
+        self.restorations += other.restorations;
+        self.retrans_requests += other.retrans_requests;
+        self.failures += other.failures;
+        self.fallbacks += other.fallbacks;
+        self.switch_failures += other.switch_failures;
+        self.switch_recoveries += other.switch_recoveries;
+        self.link_flaps += other.link_flaps;
+        self.link_recoveries += other.link_recoveries;
+        self.straggler_slowdowns += other.straggler_slowdowns;
+        self.partial_aggregates += other.partial_aggregates;
+        self.jobs_completed += other.jobs_completed;
+        self.jobs_stalled += other.jobs_stalled;
+        self.descriptors_allocated += other.descriptors_allocated;
+        self.descriptors_freed += other.descriptors_freed;
+        self.descriptor_high_water += other.descriptor_high_water;
+        self.descriptors_live += other.descriptors_live;
+        self.descriptor_residency_ps += other.descriptor_residency_ps;
+        self.flows.merge(&other.flows);
+    }
+
     /// One 64-bit digest of everything a run's outcome hangs on: event
     /// and delivery counts, every drop/protocol counter, the flow
-    /// lifecycle totals and each recorded FCT sample, plus the
-    /// deterministic arena peaks. Two seeded runs of the same scenario
-    /// must produce the same fingerprint bit for bit — the CI
-    /// `determinism` job and `tests/scheduler.rs` pin exactly this
-    /// (`--fingerprint` on the CLI prints it). Wall-clock fields are
-    /// excluded by construction.
+    /// lifecycle totals and the commutative FCT digest. Two seeded
+    /// runs of the same scenario must produce the same fingerprint bit
+    /// for bit — at *any* shard count, which is why every mixed
+    /// quantity is owner-attributed (sums over shards) and
+    /// engine-layout gauges (arena peaks, high-water marks,
+    /// wall-clock) are excluded — see the `fp: excluded` field
+    /// annotations. The CI `determinism` job and `tests/pdes.rs` pin
+    /// exactly this (`--fingerprint` on the CLI prints it).
     pub fn fingerprint(&self, now: Time, events: u64) -> u64 {
         let mut h: u64 = 0x9E37_79B9_7F4A_7C15;
         let mut mix = |x: u64| {
@@ -317,7 +424,6 @@ impl Metrics {
         mix(self.jobs_stalled);
         mix(self.descriptors_allocated);
         mix(self.descriptors_freed);
-        mix(self.descriptor_high_water);
         mix(self.descriptor_residency_ps);
         let f = &self.flows;
         mix(f.started);
@@ -333,12 +439,7 @@ impl Metrics {
         mix(f.dup_bytes);
         mix(f.rto_fired);
         mix(f.abandoned);
-        for &fct in &f.fct_ps {
-            mix(fct);
-        }
-        mix(self.engine.peak_live_packets);
-        mix(self.engine.arena_slots);
-        mix(self.engine.arena_allocs);
+        mix(f.fct_digest);
         h
     }
 }
@@ -456,13 +557,100 @@ mod tests {
         assert_eq!(a.fingerprint(99, 5), b.fingerprint(99, 5));
         b.pkts_delivered += 1;
         assert_ne!(a.fingerprint(99, 5), b.fingerprint(99, 5));
-        // order of FCT samples matters, not just their multiset
+        // the raw FCT sample *vector* is layout-dependent (shard
+        // concatenation order) and must not feed the digest — the
+        // multiset is pinned through fct_digest instead
         let mut c = a.clone();
         c.flows.fct_ps = vec![1, 3, 2];
+        assert_eq!(a.fingerprint(99, 5), c.fingerprint(99, 5));
+        c.flows.fct_digest = c.flows.fct_digest.wrapping_add(1);
         assert_ne!(a.fingerprint(99, 5), c.fingerprint(99, 5));
         // now and event count feed the digest too
         assert_ne!(a.fingerprint(99, 5), a.fingerprint(100, 5));
         assert_ne!(a.fingerprint(99, 5), a.fingerprint(99, 6));
+    }
+
+    #[test]
+    fn fct_digest_is_commutative_and_sensitive() {
+        // two flows completing in either order: same digest
+        let run = |order: [(u64, Time); 2]| {
+            let mut f = FlowStats::default();
+            f.on_start(1, 100, 1, 10);
+            f.on_start(2, 100, 1, 10);
+            for (flow, at) in order {
+                f.on_delivery(flow, at, 10);
+            }
+            f.fct_digest
+        };
+        assert_eq!(run([(1, 400), (2, 900)]), run([(2, 900), (1, 400)]));
+        // a different completion time for the same flow: different digest
+        assert_ne!(run([(1, 400), (2, 900)]), run([(1, 401), (2, 900)]));
+        // the same FCT on a different flow id: different digest
+        let mut f = FlowStats::default();
+        f.on_start(3, 100, 1, 10);
+        f.on_start(4, 100, 1, 10);
+        f.on_delivery(3, 400, 10);
+        let mut g = FlowStats::default();
+        g.on_start(3, 100, 1, 10);
+        g.on_start(4, 100, 1, 10);
+        g.on_delivery(4, 400, 10);
+        assert_ne!(f.fct_digest, g.fct_digest);
+    }
+
+    #[test]
+    fn split_flow_start_halves_compose_and_merge() {
+        // on_offer + register on separate stats (the cross-shard path)
+        // must sum/merge to exactly what one on_start produces
+        let mut serial = FlowStats::default();
+        serial.on_start(7, 50, 2, 4096);
+        serial.on_delivery(7, 300, 2048);
+        serial.on_delivery(7, 700, 2048);
+
+        let mut sender = FlowStats::default();
+        sender.on_offer(4096);
+        let mut sink = FlowStats::default();
+        sink.register(7, 50, 2);
+        sink.on_delivery(7, 300, 2048);
+        sink.on_delivery(7, 700, 2048);
+        let mut merged = FlowStats::default();
+        merged.merge(&sender);
+        merged.merge(&sink);
+        assert_eq!(merged.started, serial.started);
+        assert_eq!(merged.offered_bytes, serial.offered_bytes);
+        assert_eq!(merged.completed, serial.completed);
+        assert_eq!(merged.delivered_bytes, serial.delivered_bytes);
+        assert_eq!(merged.fct_ps, serial.fct_ps);
+        assert_eq!(merged.fct_digest, serial.fct_digest);
+        assert_eq!(merged.live_count(), 0);
+    }
+
+    #[test]
+    fn metrics_merge_sums_owner_attributed_counters() {
+        let mut a = Metrics::default();
+        a.on_delivery(PacketKind::CanaryReduce);
+        a.on_descriptor_alloc();
+        a.on_descriptor_free(40);
+        a.link_flaps = 1;
+        let mut b = Metrics::default();
+        b.on_delivery(PacketKind::Background);
+        b.on_delivery(PacketKind::CanaryReduce);
+        b.drops_overflow = 3;
+        let mut m = Metrics::default();
+        m.merge(&a);
+        m.merge(&b);
+        assert_eq!(m.pkts_delivered, 3);
+        assert_eq!(m.pkts_of_kind(PacketKind::CanaryReduce), 2);
+        assert_eq!(m.pkts_of_kind(PacketKind::Background), 1);
+        assert_eq!(m.drops_overflow, 3);
+        assert_eq!(m.link_flaps, 1);
+        assert_eq!(m.descriptors_allocated, 1);
+        assert_eq!(m.descriptors_freed, 1);
+        assert_eq!(m.descriptor_residency_ps, 40);
+        // merge order must not matter for the fingerprint
+        let mut n = Metrics::default();
+        n.merge(&b);
+        n.merge(&a);
+        assert_eq!(m.fingerprint(9, 9), n.fingerprint(9, 9));
     }
 
     #[test]

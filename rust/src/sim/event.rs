@@ -36,6 +36,42 @@ use std::collections::BinaryHeap;
 use super::arena::PacketId;
 use super::Time;
 
+/// Actor id of setup-time pushes (job kicks, fault timeline, trace
+/// sampler): the plain [`EventQueue::push`] path. Sorts *after* every
+/// node/link actor at the same timestamp and can never collide with
+/// one (node ids stay below `1 << 31`; link actors carry
+/// [`ACTOR_LINK_BIT`]).
+pub const ACTOR_SETUP: u32 = 0xFFFF_FFFF;
+
+/// High bit distinguishing link actors from node actors in an event
+/// key, so a link and a node with the same index never collide.
+pub const ACTOR_LINK_BIT: u32 = 0x8000_0000;
+
+/// Canonical key of a runtime event: `time(64) | actor(32) | seq(32)`.
+///
+/// The sharded engine (sim/shard.rs) relies on every runtime event
+/// being keyed by its *owner* — the node or directed link whose
+/// per-actor counter stamps `seq` — so the key of any given event is
+/// identical no matter which shard computes it, and merging per-shard
+/// streams by key reproduces the serial engine's dispatch order
+/// exactly (DESIGN.md §2.10).
+#[inline]
+pub fn event_key(time: Time, actor: u32, seq: u32) -> u128 {
+    ((time as u128) << 64) | ((actor as u128) << 32) | seq as u128
+}
+
+/// Key of an event owned by directed link `link`.
+#[inline]
+pub fn link_key(time: Time, link: usize, seq: u32) -> u128 {
+    event_key(time, ACTOR_LINK_BIT | link as u32, seq)
+}
+
+/// Key of an event owned by node `node`.
+#[inline]
+pub fn node_key(time: Time, node: u32, seq: u32) -> u128 {
+    event_key(time, node, seq)
+}
+
 /// Wheel slot width: `2^16` ps = 65.536 ns.
 const SLOT_SHIFT: u32 = 16;
 /// Wheel width in slots (must be a power of two): 4096 slots ≈ 268 µs
@@ -64,11 +100,13 @@ pub enum Event {
     /// Scheduled switch recovery: the links come back; the soft state
     /// stays lost (leaders re-reduce, Section 3.3 loss equivalence).
     Recover { node: u32 },
-    /// Scheduled link-down edge of a flap: both directed links between
-    /// `a` and `b` die, dropping their queues.
-    LinkDown { a: u32, b: u32 },
-    /// Scheduled link-up edge of a flap.
-    LinkUp { a: u32, b: u32 },
+    /// Scheduled down edge for one *directed* link (fault timeline,
+    /// pre-resolved at kick time so each event is owned by exactly one
+    /// shard). `count` is set on one directed link per flap pair so the
+    /// flap metrics keep their per-pair semantics.
+    LinkDownOne { link: usize, count: bool },
+    /// Scheduled up edge for one directed link.
+    LinkUpOne { link: usize, count: bool },
     /// Generic job kick-off (start a host's injection loop).
     JobWake { node: u32, job: u32 },
     /// Telemetry sampler tick (`trace/`). Scheduled only while tracing
@@ -157,12 +195,19 @@ impl EventQueue {
     pub fn push(&mut self, time: Time, event: Event) {
         let seq = self.next_seq;
         self.next_seq += 1;
-        let entry = HeapEntry {
-            key: ((time as u128) << 64) | seq as u128,
-            event,
-        };
+        // a queue-lifetime counter cannot reach 2^32 setup pushes; the
+        // truncation keeps insertion-order tie-breaks exact
+        debug_assert!(seq <= u32::MAX as u64);
+        self.push_keyed(event_key(time, ACTOR_SETUP, seq as u32), event);
+    }
+
+    /// Push with a caller-computed canonical key ([`event_key`]). The
+    /// runtime paths (timers, TxDone/Arrive) key events by their owning
+    /// node or link so the sharded engine reproduces serial order.
+    pub fn push_keyed(&mut self, key: u128, event: Event) {
+        let entry = HeapEntry { key, event };
         self.len += 1;
-        let slot = time >> SLOT_SHIFT;
+        let slot = entry.slot();
         if slot <= self.cur_slot {
             // the live slot (or, defensively, the past): straight into
             // the ordered heap so it pops before everything later
@@ -194,6 +239,85 @@ impl EventQueue {
                 return None;
             }
         }
+    }
+
+    /// Pop the earliest event strictly before `bound`, leaving later
+    /// events untouched. The bounded-window engine processes one
+    /// lookahead cell at a time with this; `pop()` is `pop_before(MAX)`.
+    pub fn pop_before(&mut self, bound: Time) -> Option<(Time, Event)> {
+        loop {
+            if let Some(top) = self.current.peek() {
+                let t = (top.key >> 64) as Time;
+                if t >= bound {
+                    // every wheel/overflow entry is in a later slot
+                    // than `current`'s, hence also >= bound
+                    return None;
+                }
+                let e = self.current.pop().unwrap();
+                self.len -= 1;
+                return Some((t, e.event));
+            }
+            // `current` is dry: advance only while the next populated
+            // slot *starts* before the bound (its entries may still
+            // individually be at/after it — the peek above filters)
+            let slot = if self.wheel_len > 0 {
+                self.next_wheel_slot()
+            } else if let Some(top) = self.overflow.peek() {
+                top.slot()
+            } else {
+                return None;
+            };
+            if (slot << SLOT_SHIFT) >= bound {
+                return None;
+            }
+            self.advance_to(slot);
+        }
+    }
+
+    /// Timestamp of the earliest pending event without popping it.
+    pub fn next_time(&self) -> Option<Time> {
+        if let Some(top) = self.current.peek() {
+            return Some((top.key >> 64) as Time);
+        }
+        if self.wheel_len > 0 {
+            // the next populated slot precedes every other wheel slot
+            // and the whole overflow heap; min inside it is global min
+            let slot = self.next_wheel_slot();
+            let b = (slot & WHEEL_MASK) as usize;
+            return self.wheel[b].iter().map(|e| (e.key >> 64) as Time).min();
+        }
+        self.overflow.peek().map(|top| (top.key >> 64) as Time)
+    }
+
+    /// Remove and return every pending entry with its key, in
+    /// arbitrary order (the caller re-pushes by key). Used when
+    /// merging per-shard queues back into one engine.
+    pub fn drain_entries(&mut self) -> Vec<(u128, Event)> {
+        let mut out = Vec::with_capacity(self.len);
+        out.extend(self.current.drain().map(|e| (e.key, e.event)));
+        for bucket in &mut self.wheel {
+            out.extend(bucket.drain(..).map(|e| (e.key, e.event)));
+        }
+        for w in &mut self.occupied {
+            *w = 0;
+        }
+        self.wheel_len = 0;
+        out.extend(self.overflow.drain().map(|e| (e.key, e.event)));
+        self.len = 0;
+        out
+    }
+
+    /// Raw setup-push counter (see [`EventQueue::set_next_seq`]).
+    pub fn next_seq(&self) -> u64 {
+        self.next_seq
+    }
+
+    /// Seed the setup-push counter. A freshly split shard queue starts
+    /// where the global queue's counter stopped so replicated setup
+    /// entries (the trace sampler tick) keep their original keys and
+    /// later plain pushes cannot collide with them.
+    pub fn set_next_seq(&mut self, seq: u64) {
+        self.next_seq = seq;
     }
 
     pub fn len(&self) -> usize {
@@ -376,6 +500,71 @@ mod tests {
         })
         .collect();
         assert_eq!(order, vec![1, 3, 2]);
+    }
+
+    /// `pop_before` stops exactly at the bound and leaves later
+    /// entries poppable, across all three storage tiers.
+    #[test]
+    fn pop_before_respects_the_bound() {
+        let mut q = EventQueue::new();
+        let horizon = WHEEL_SLOTS << SLOT_SHIFT;
+        let times = [3, 40, 1 << SLOT_SHIFT, horizon + 9];
+        for (i, &t) in times.iter().enumerate() {
+            q.push(t, Event::TxDone { link: i });
+        }
+        assert_eq!(q.next_time(), Some(3));
+        let mut before: Vec<Time> =
+            std::iter::from_fn(|| q.pop_before(41).map(|(t, _)| t)).collect();
+        assert_eq!(before, vec![3, 40]);
+        assert_eq!(q.next_time(), Some(1 << SLOT_SHIFT));
+        // a fresh push below the bound is still caught by a later call
+        q.push(40, Event::TxDone { link: 9 });
+        before = std::iter::from_fn(|| q.pop_before(41).map(|(t, _)| t))
+            .collect();
+        assert_eq!(before, vec![40]);
+        let rest: Vec<Time> =
+            std::iter::from_fn(|| q.pop().map(|(t, _)| t)).collect();
+        assert_eq!(rest, vec![1 << SLOT_SHIFT, horizon + 9]);
+    }
+
+    /// Keyed pushes interleave with plain pushes in key order: at equal
+    /// times, node/link actors precede the setup actor.
+    #[test]
+    fn keyed_pushes_order_by_actor_then_seq() {
+        let mut q = EventQueue::new();
+        q.push(7, Event::TxDone { link: 100 }); // ACTOR_SETUP
+        q.push_keyed(link_key(7, 2, 0), Event::TxDone { link: 2 });
+        q.push_keyed(node_key(7, 5, 1), Event::TxDone { link: 51 });
+        q.push_keyed(node_key(7, 5, 0), Event::TxDone { link: 50 });
+        let order: Vec<usize> = std::iter::from_fn(|| {
+            q.pop().map(|(_, e)| match e {
+                Event::TxDone { link } => link,
+                _ => unreachable!(),
+            })
+        })
+        .collect();
+        // node 5 (seq 0 then 1), link 2 (bit 31 set), setup last
+        assert_eq!(order, vec![50, 51, 2, 100]);
+    }
+
+    /// `drain_entries` + `push_keyed` round-trips the full pending set.
+    #[test]
+    fn drain_entries_round_trips() {
+        let mut q = EventQueue::new();
+        let horizon = WHEEL_SLOTS << SLOT_SHIFT;
+        let times = [5, 1 << SLOT_SHIFT, horizon * 3 + 1];
+        for (i, &t) in times.iter().enumerate() {
+            q.push(t, Event::TxDone { link: i });
+        }
+        let entries = q.drain_entries();
+        assert!(q.is_empty());
+        let mut q2 = EventQueue::new();
+        for (key, ev) in entries {
+            q2.push_keyed(key, ev);
+        }
+        let popped: Vec<Time> =
+            std::iter::from_fn(|| q2.pop().map(|(t, _)| t)).collect();
+        assert_eq!(popped, times);
     }
 
     /// Overflow entries migrate into the window as the clock slides,

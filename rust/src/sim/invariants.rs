@@ -158,13 +158,18 @@ pub fn audit(net: &Network) -> Result<(), Vec<String>> {
     // allreduce finished must have emptied everything: stranded
     // descriptors or live packets here are leaks, full stop. (Faulted
     // runs legitimately strand descriptors — a lost broadcast leaves
-    // table entries behind by design — so they are exempt.)
+    // table entries behind by design — so they are exempt. So is a
+    // single shard of a space-parallel run: its local queue can drain
+    // while packets it still hosts are waiting on traffic from other
+    // shards — the merged network passes through here afterwards with
+    // `shard == None` and gets the full check.)
     let clean = m.switch_failures == 0
         && m.link_flaps == 0
         && m.drops_injected == 0
         && m.drops_link_down == 0
         && m.jobs_stalled == 0;
-    let drained = net.queue.is_empty()
+    let drained = net.shard.is_none()
+        && net.queue.is_empty()
         && !net.jobs.is_empty()
         && net.all_reduce_jobs_done();
     if clean && drained {

@@ -11,6 +11,7 @@ pub mod event;
 pub mod invariants;
 pub mod network;
 pub mod packet;
+pub mod shard;
 
 pub use arena::{PacketArena, PacketId};
 pub use event::{Event, EventQueue};

@@ -23,8 +23,9 @@ use crate::trace::Tracer;
 use crate::util::rng::Rng;
 
 use super::arena::{PacketArena, PacketId};
-use super::event::{Event, EventQueue};
+use super::event::{link_key, node_key, Event, EventQueue};
 use super::packet::{Packet, PacketKind};
+use super::shard::{FlowHandoff, PacketHandoff, ShardRt};
 use super::Time;
 
 /// Node identifier (dense, indexes `Network::nodes`).
@@ -80,6 +81,11 @@ pub struct Link {
     /// Count of active down-causes (overlapping flap windows and
     /// switch-failure intervals stack): the link is alive iff zero.
     pub(crate) down_refs: u32,
+    /// Per-link event sequence counter: TxDone/Arrive events are keyed
+    /// `(time, link-actor, seq)` so their dispatch order is a pure
+    /// function of this link's own history — the property the sharded
+    /// engine needs for shard-count-invariant replay (DESIGN.md §2.10).
+    pub(crate) seq: u32,
     // --- metrics ---
     pub busy_ps: u64,
     pub bytes_tx: u64,
@@ -130,6 +136,7 @@ impl Link {
             busy: false,
             alive: true,
             down_refs: 0,
+            seq: 0,
             busy_ps: 0,
             bytes_tx: 0,
             drops: 0,
@@ -198,6 +205,13 @@ pub struct Node {
     pub ports: Vec<LinkId>,
     /// Links terminating at this node (for backpressure re-kicks).
     pub in_links: Vec<LinkId>,
+    /// Per-node event sequence counter (timers, wakes): keys this
+    /// node's self-scheduled events independently of every other actor.
+    pub(crate) seq: u32,
+    /// Per-node fabric RNG (ECN marking, loss injection): seeded purely
+    /// from `(cfg.seed, id)`, so the draw stream a node sees is the
+    /// same no matter how the fabric is sharded.
+    pub(crate) fab_rng: Rng,
 }
 
 /// Everything a protocol handler may touch while processing one event.
@@ -209,10 +223,16 @@ pub struct Ctx<'a> {
     pub links: &'a mut [Link],
     pub queue: &'a mut EventQueue,
     pub arena: &'a mut PacketArena,
+    /// This node's fabric RNG (see [`Node::fab_rng`]).
     pub rng: &'a mut Rng,
     pub metrics: &'a mut Metrics,
     pub jobs: &'a mut [JobRuntime],
     pub cfg: &'a SimConfig,
+    /// This node's event-key sequence counter (see [`Node::seq`]).
+    pub(crate) actor_seq: &'a mut u32,
+    /// Sharded-engine runtime, when this network is one shard of a
+    /// space-parallel run (`sim/shard.rs`); `None` in the serial engine.
+    pub(crate) shard: Option<&'a mut ShardRt>,
     /// Per-node count of over-watermark output queues (paused inputs).
     pub node_paused: &'a mut [u32],
     /// Straggler factor of this node (1 = nominal). Every delay passed
@@ -280,12 +300,23 @@ impl<'a> Ctx<'a> {
         self.links[self.ports[port as usize]].alive
     }
 
+    /// Next event key owned by this node (self-scheduled events only,
+    /// so the stream is shard-invariant).
+    #[inline]
+    fn node_event_key(&mut self, at: Time) -> u128 {
+        let seq = *self.actor_seq;
+        *self.actor_seq += 1;
+        node_key(at, self.node_id, seq)
+    }
+
     /// Schedule a host timer event. A straggler host's timers are
     /// stretched by its slowdown factor (1 for everyone else, so the
     /// arithmetic is bit-identical in the nominal case).
     pub fn host_timer(&mut self, delay: Time, timer: u64) {
-        self.queue.push(
-            self.now + delay * self.slowdown as Time,
+        let at = self.now + delay * self.slowdown as Time;
+        let key = self.node_event_key(at);
+        self.queue.push_keyed(
+            key,
             Event::HostTimer {
                 node: self.node_id,
                 timer,
@@ -295,8 +326,10 @@ impl<'a> Ctx<'a> {
 
     /// Schedule a canary descriptor timeout.
     pub fn switch_timeout(&mut self, delay: Time, slot: u32, generation: u64) {
-        self.queue.push(
-            self.now + delay,
+        let at = self.now + delay;
+        let key = self.node_event_key(at);
+        self.queue.push_keyed(
+            key,
             Event::SwitchTimeout {
                 node: self.node_id,
                 slot,
@@ -307,13 +340,46 @@ impl<'a> Ctx<'a> {
 
     /// Schedule a wake event for this node (injection loops).
     pub fn wake(&mut self, delay: Time, job: u32) {
-        self.queue.push(
-            self.now + delay,
+        let at = self.now + delay;
+        let key = self.node_event_key(at);
+        self.queue.push_keyed(
+            key,
             Event::JobWake {
                 node: self.node_id,
                 job,
             },
         );
+    }
+
+    /// Announce a new flow: sender-side offered accounting here, sink-
+    /// side FCT registration on the shard that owns `dst` (locally in
+    /// the serial engine). The registration is applied at the next
+    /// window barrier when `dst` is remote — always before the flow's
+    /// first delivery, which is at least one lookahead away.
+    pub fn flow_start(
+        &mut self,
+        dst: NodeId,
+        flow: u64,
+        born: Time,
+        expected_pkts: u32,
+        bytes: u64,
+    ) {
+        self.metrics.flows.on_offer(bytes);
+        let remote = match self.shard.as_deref() {
+            Some(rt) => rt.node_shard[dst as usize] != rt.me,
+            None => false,
+        };
+        if remote {
+            let rt = self.shard.as_deref_mut().unwrap();
+            let d = rt.node_shard[dst as usize] as usize;
+            rt.flow_out[d].push(FlowHandoff {
+                flow,
+                born,
+                expected_pkts,
+            });
+        } else {
+            self.metrics.flows.register(flow, born, expected_pkts);
+        }
     }
 
     /// Occupancy of the queue at `port` (adaptive-routing input).
@@ -445,7 +511,32 @@ fn start_tx(
     let head_bytes = link.queue.front().unwrap().bytes as u64;
     let ser = head_bytes * link.ps_per_byte;
     link.busy_ps += ser;
-    queue.push(now + ser, Event::TxDone { link: link_id });
+    let seq = link.seq;
+    link.seq += 1;
+    queue.push_keyed(
+        link_key(now + ser, link_id, seq),
+        Event::TxDone { link: link_id },
+    );
+}
+
+/// Deterministic per-node fabric RNG (ECN marking, loss injection): a
+/// pure function of the run seed and the node id — never drawn from the
+/// master RNG — so each node's stream is identical under any sharding.
+pub(crate) fn fab_rng_for(seed: u64, id: NodeId) -> Rng {
+    Rng::new(
+        seed ^ 0xFA85_EED0_CA11_A8D7
+            ^ (id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+    )
+}
+
+/// End of the lookahead-grid cell containing `t`: the smallest multiple
+/// of `w` strictly greater than `t`. The grid is anchored at 0, so every
+/// engine — serial or sharded, at any shard count — walks the exact same
+/// sequence of cells; a handoff sent during a cell arrives no earlier
+/// than its end (`arrive = send + latency >= cell_end` because
+/// `latency >= w`), always landing in a strictly later cell.
+pub(crate) fn cell_end(t: Time, w: Time) -> Time {
+    (t / w).saturating_add(1).saturating_mul(w)
 }
 
 /// The simulated network.
@@ -471,6 +562,14 @@ pub struct Network {
     /// Telemetry recorder; `Tracer::off()` unless a `TraceSpec` was
     /// installed (see `workload::ScenarioBuilder::trace`).
     pub tracer: Tracer,
+    /// Per-node space-partition group (pod / leaf group), set by
+    /// `topology::build`; top-tier switches carry `u32::MAX` and are
+    /// spread round-robin. Empty on hand-built networks — the sharded
+    /// engine then degrades to one populated shard (still correct).
+    pub shard_group: Vec<u32>,
+    /// Sharded-engine runtime state; `Some` only while this network is
+    /// one shard of a space-parallel run (`sim/shard.rs`).
+    pub(crate) shard: Option<Box<ShardRt>>,
 }
 
 impl Network {
@@ -491,6 +590,8 @@ impl Network {
             node_paused: Vec::new(),
             host_slowdown: Vec::new(),
             tracer: Tracer::off(),
+            shard_group: Vec::new(),
+            shard: None,
         }
     }
 
@@ -502,6 +603,8 @@ impl Network {
             body,
             ports: Vec::new(),
             in_links: Vec::new(),
+            seq: 0,
+            fab_rng: fab_rng_for(self.cfg.seed, id),
         });
         self.node_paused.push(0);
         self.host_slowdown.push(1);
@@ -549,17 +652,46 @@ impl Network {
         }
         // convert the declarative fault timeline into sim events; an
         // empty timeline schedules nothing (and draws nothing from the
-        // RNG), so it is provably inert (tests/churn.rs)
+        // RNG), so it is provably inert (tests/churn.rs). Node-pair
+        // and switch faults are pre-resolved into per-directed-link
+        // events here, while the whole topology is still in one piece:
+        // each resulting event has a single owning link/node, which is
+        // what lets the sharded engine route it to exactly one shard.
+        // `count` is set on one directed link per flap pair so the
+        // flap/recovery counters keep their per-pair semantics.
         for ev in self.faults.events.clone() {
             match ev {
                 FaultEvent::LinkFlap { a, b, down_at, up_at } => {
-                    self.queue.push(down_at, Event::LinkDown { a, b });
-                    self.queue.push(up_at, Event::LinkUp { a, b });
+                    let ls = self.links_between(a, b);
+                    for (i, &li) in ls.iter().enumerate() {
+                        self.queue.push(
+                            down_at,
+                            Event::LinkDownOne { link: li, count: i == 0 },
+                        );
+                    }
+                    for (i, &li) in ls.iter().enumerate() {
+                        self.queue.push(
+                            up_at,
+                            Event::LinkUpOne { link: li, count: i == 0 },
+                        );
+                    }
                 }
                 FaultEvent::SwitchFail { switch, at, recover_at } => {
                     self.queue.push(at, Event::Fail { node: switch });
+                    for li in self.touching_links(switch) {
+                        self.queue.push(
+                            at,
+                            Event::LinkDownOne { link: li, count: false },
+                        );
+                    }
                     if let Some(r) = recover_at {
                         self.queue.push(r, Event::Recover { node: switch });
+                        for li in self.touching_links(switch) {
+                            self.queue.push(
+                                r,
+                                Event::LinkUpOne { link: li, count: false },
+                            );
+                        }
                     }
                 }
                 FaultEvent::StragglerHost { host, slowdown } => {
@@ -579,40 +711,69 @@ impl Network {
             .all(|j| !j.spec.algo.is_allreduce() || j.finish.is_some())
     }
 
+    /// Conservative PDES lookahead: the minimum propagation delay of
+    /// any link in the fabric. Every cross-link event lands at least
+    /// this far in the future, so a window of width `lookahead()` can
+    /// be processed to completion before any neighbour's output can
+    /// affect it (DESIGN.md §2.10).
+    pub(crate) fn lookahead(&self) -> Time {
+        let w = self
+            .links
+            .iter()
+            .map(|l| l.latency_ps)
+            .min()
+            .unwrap_or(self.cfg.link_latency_ps);
+        assert!(w > 0, "zero link latency breaks the PDES lookahead");
+        w
+    }
+
     /// Run until all allreduce jobs complete, the event queue drains, or
     /// `max_time` is reached. Returns the end time.
     pub fn run(&mut self, max_time: Time) -> Time {
-        // lint: allow(wall-clock, engine.wall_secs timer; measurement-only, never fed back)
-        let t0 = std::time::Instant::now();
-        while let Some((t, ev)) = self.queue.pop() {
-            if t > max_time {
-                // put it back and stop
-                self.queue.push(t, ev);
-                self.now = max_time;
-                break;
-            }
-            self.dispatch(t, ev);
-            if self.all_reduce_jobs_done() && !self.jobs.is_empty() {
-                break;
-            }
+        if self.cfg.shards > 0 {
+            return super::shard::run_sharded(self, max_time, true);
         }
-        self.note_engine_stats(t0.elapsed().as_secs_f64());
-        self.maybe_audit();
-        self.now
+        self.run_serial(max_time, true)
     }
 
     /// Run every event up to `max_time` without the early job-completion
     /// exit (used by pure-traffic tests).
     pub fn run_all(&mut self, max_time: Time) -> Time {
+        if self.cfg.shards > 0 {
+            return super::shard::run_sharded(self, max_time, false);
+        }
+        self.run_serial(max_time, false)
+    }
+
+    /// The single-threaded bounded-window engine. Events are drained
+    /// one lookahead-grid cell `[k*w, (k+1)*w)` at a time, skipping
+    /// straight to the cell holding the next pending event; job
+    /// completion is only checked at cell boundaries. Both rules match
+    /// the sharded engine exactly (same grid anchored at 0, same skip,
+    /// same boundary-only completion), which is what makes `--shards 1`
+    /// bit-identical to this loop and `--shards N` invariant in N.
+    fn run_serial(&mut self, max_time: Time, stop_on_done: bool) -> Time {
         // lint: allow(wall-clock, engine.wall_secs timer; measurement-only, never fed back)
         let t0 = std::time::Instant::now();
-        while let Some((t, ev)) = self.queue.pop() {
-            if t > max_time {
-                self.queue.push(t, ev);
+        let w = self.lookahead();
+        loop {
+            let Some(next) = self.queue.next_time() else {
+                break;
+            };
+            if next > max_time {
                 self.now = max_time;
                 break;
             }
-            self.dispatch(t, ev);
+            let bound = cell_end(next, w).min(max_time.saturating_add(1));
+            while let Some((t, ev)) = self.queue.pop_before(bound) {
+                self.dispatch(t, ev);
+            }
+            if stop_on_done
+                && !self.jobs.is_empty()
+                && self.all_reduce_jobs_done()
+            {
+                break;
+            }
         }
         self.note_engine_stats(t0.elapsed().as_secs_f64());
         self.maybe_audit();
@@ -622,7 +783,7 @@ impl Network {
     /// End-of-segment conservation audit: always in debug builds,
     /// opt-in via `--paranoid` in release. Read-only (no RNG draws,
     /// no scheduling), so it cannot perturb the run fingerprint.
-    fn maybe_audit(&self) {
+    pub(crate) fn maybe_audit(&self) {
         if cfg!(debug_assertions) || self.cfg.paranoid {
             super::invariants::enforce(self);
         }
@@ -641,7 +802,7 @@ impl Network {
         e.arena_allocs = self.arena.allocs();
     }
 
-    fn dispatch(&mut self, time: Time, event: Event) {
+    pub(crate) fn dispatch(&mut self, time: Time, event: Event) {
         // sampler ticks are observational: they mutate nothing the
         // simulation reads, stay outside `events_processed`, and do
         // not advance `now` (a trailing tick after the last real
@@ -679,17 +840,17 @@ impl Network {
             }),
             Event::Fail { node } => self.fail_switch(node),
             Event::Recover { node } => self.recover_switch(node),
-            Event::LinkDown { a, b } => {
-                self.metrics.link_flaps += 1;
-                for li in self.links_between(a, b) {
-                    self.link_take_down(li);
+            Event::LinkDownOne { link, count } => {
+                if count {
+                    self.metrics.link_flaps += 1;
                 }
+                self.link_take_down(link);
             }
-            Event::LinkUp { a, b } => {
-                self.metrics.link_recoveries += 1;
-                for li in self.links_between(a, b) {
-                    self.link_bring_up(li);
+            Event::LinkUpOne { link, count } => {
+                if count {
+                    self.metrics.link_recoveries += 1;
                 }
+                self.link_bring_up(link);
             }
             Event::TraceSample => unreachable!("handled before dispatch"),
         }
@@ -742,18 +903,13 @@ impl Network {
             }
         }
         if alive {
-            self.queue.push(
-                self.now + link.latency_ps,
-                Event::Arrive {
-                    link: link_id,
-                    packet: entry.id,
-                },
-            );
             // flight recorder: log the finished hop. TxDone fires at
             // txstart + serialization, so queueing is recovered as
             // (now - ser) - enq; the delivery time t_enq + queue + ser
             // + prop equals the Arrive timestamp exactly. A single
-            // branch when tracing is off.
+            // branch when tracing is off. Logged *before* the arrival
+            // is scheduled — a cross-shard handoff takes the packet
+            // out of this arena right below.
             if self.tracer.enabled() {
                 let link = &self.links[link_id];
                 if let Some(p) = self.arena.get(entry.id) {
@@ -772,6 +928,43 @@ impl Network {
                         prop_ps: link.latency_ps,
                     });
                 }
+            }
+            // the Arrive key is computed by the link's *owner* as a
+            // pure function of the link's own history — identical no
+            // matter which shard (if any) the destination lives on
+            let (key, dst) = {
+                let link = &mut self.links[link_id];
+                let seq = link.seq;
+                link.seq += 1;
+                let at = self.now + link.latency_ps;
+                (link_key(at, link_id, seq), link.to)
+            };
+            let remote = self
+                .shard
+                .as_ref()
+                .is_some_and(|rt| rt.node_shard[dst as usize] != rt.me);
+            if remote {
+                // cross-shard handoff: move the payload out of this
+                // shard's arena; the owner shard re-allocates it and
+                // schedules the Arrive under the same canonical key at
+                // the next window barrier (always before `at` — the
+                // propagation delay is at least one lookahead)
+                let pkt = self.arena.take(entry.id);
+                let rt = self.shard.as_mut().expect("remote implies shard");
+                let d = rt.node_shard[dst as usize] as usize;
+                rt.pkt_out[d].push(PacketHandoff {
+                    key,
+                    link: link_id,
+                    pkt,
+                });
+            } else {
+                self.queue.push_keyed(
+                    key,
+                    Event::Arrive {
+                        link: link_id,
+                        packet: entry.id,
+                    },
+                );
             }
         } else {
             self.metrics.drops_link_down += 1;
@@ -824,10 +1017,14 @@ impl Network {
             .kind;
         // random loss injection on reduction traffic (fault tolerance
         // runs); droppable background/transport frames already have
-        // their own loss story (the class-1 policer + RTO recovery)
+        // their own loss story (the class-1 policer + RTO recovery).
+        // Drawn from the *destination node's* fabric RNG so the loss
+        // pattern a node sees is shard-invariant.
         if self.faults.loss_prob > 0.0
             && !kind.droppable()
-            && self.rng.chance(self.faults.loss_prob)
+            && self.nodes[to as usize]
+                .fab_rng
+                .chance(self.faults.loss_prob)
         {
             self.metrics.drops_injected += 1;
             self.arena.free(id);
@@ -858,7 +1055,6 @@ impl Network {
             links,
             queue,
             arena,
-            rng,
             metrics,
             jobs,
             cfg,
@@ -866,25 +1062,35 @@ impl Network {
             node_paused,
             host_slowdown,
             tracer,
+            shard,
             ..
         } = self;
         let n = &mut nodes[node as usize];
+        let Node {
+            body,
+            ports,
+            seq,
+            fab_rng,
+            ..
+        } = n;
         let mut ctx = Ctx {
             now: *now,
             node_id: node,
-            ports: &n.ports,
+            ports: ports.as_slice(),
             links,
             queue,
             arena,
-            rng,
+            rng: fab_rng,
             metrics,
             jobs,
             cfg,
+            actor_seq: seq,
+            shard: shard.as_deref_mut(),
             node_paused,
             slowdown: host_slowdown[node as usize],
             tracer,
         };
-        f(&mut n.body, &mut ctx);
+        f(body, &mut ctx);
     }
 
     /// Every directed link touching `node` (its out-ports plus the
@@ -985,14 +1191,15 @@ impl Network {
         }
     }
 
-    /// Fault injection: kill a switch — all its links (both directions)
-    /// go down, dropping their queues, and its soft state is lost
-    /// (Section 3.3: treated like packet loss by the protocol).
+    /// Fault injection: kill a switch — its soft state is lost
+    /// (Section 3.3: treated like packet loss by the protocol). The
+    /// take-down of its links rides as separate per-link
+    /// [`Event::LinkDownOne`] events at the same timestamp (scheduled
+    /// by [`Network::kick_jobs`]), so each one has a single owning
+    /// shard; soft-state loss and link death touch disjoint state and
+    /// therefore commute across shards.
     pub fn fail_switch(&mut self, node: NodeId) {
         self.metrics.switch_failures += 1;
-        for li in self.touching_links(node) {
-            self.link_take_down(li);
-        }
         if let NodeBody::Switch(sw) =
             &mut self.nodes[node as usize].body
         {
@@ -1001,14 +1208,13 @@ impl Network {
     }
 
     /// Fault injection: revive a failed switch. Its links come back up
-    /// but the soft state stays lost — in-flight reductions that
-    /// depended on it recover through the protocol (leader timeouts,
-    /// retransmission, re-reduction), not through state restoration.
+    /// (via the paired [`Event::LinkUpOne`] events) but the soft state
+    /// stays lost — in-flight reductions that depended on it recover
+    /// through the protocol (leader timeouts, retransmission,
+    /// re-reduction), not through state restoration.
     pub fn recover_switch(&mut self, node: NodeId) {
         self.metrics.switch_recoveries += 1;
-        for li in self.touching_links(node) {
-            self.link_bring_up(li);
-        }
+        let _ = node;
     }
 
     /// Convenience: total wall-clock utilization of a link over `[0, end]`.

@@ -1,0 +1,743 @@
+//! Space-parallel sharded event engine: conservative bounded-window
+//! PDES over the pod/leaf-group partition (DESIGN.md §2.10).
+//!
+//! The fabric is split by [`Network::shard_group`] (set by
+//! `topology::build`: pods in a 3-tier Clos, leaf groups in the 2-tier
+//! case; top-tier switches are dealt round-robin). Each shard is a
+//! full `Network` whose vectors keep *global* length — remote nodes
+//! and links are cheap stubs — so no id is ever translated. Shards
+//! advance in lockstep over the lookahead grid: the window width is
+//! the minimum link propagation delay ([`Network::lookahead`]), every
+//! window is one grid cell `[k*w, (k+1)*w)` anchored at 0, and a
+//! packet crossing shards inside a cell arrives no earlier than the
+//! cell's end, so handing it over at the barrier never reorders
+//! anything.
+//!
+//! Determinism is by construction, not by luck:
+//!
+//! * every runtime event is keyed `(time, owning actor, per-actor
+//!   seq)` by the node or link that owns it ([`super::event`]), so the
+//!   key of any event is a pure function of that actor's own history —
+//!   identical under any shard count;
+//! * per-node fabric RNG streams (ECN, loss) are pure functions of
+//!   `(seed, node)`, never of the dispatch interleaving;
+//! * the serial engine walks the exact same cell sequence with the
+//!   same boundary-only completion rule, so `--shards 1` is
+//!   bit-identical to it and `--shards N` is invariant in `N`
+//!   (`tests/pdes.rs` and the CI `determinism` job pin both).
+//!
+//! Cross-shard traffic flows through per-(src,dst) ordered outboxes
+//! ([`PacketHandoff`]); the coordinator routes them between windows.
+//! Worker threads are persistent for the whole run (one per shard,
+//! `std::thread::scope`), each processing one `Window` command per
+//! barrier.
+
+use std::collections::BTreeSet;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use crate::trace::Tracer;
+
+use super::event::Event;
+use super::network::{cell_end, Link, Network, Node, NodeBody};
+use super::Time;
+
+/// One packet crossing shards: the owner-computed canonical `Arrive`
+/// key, the (global) link it traveled, and the payload moved out of
+/// the sending shard's arena. The receiving shard re-allocates it and
+/// schedules the arrival under the same key at the next barrier —
+/// always before the arrival time, which sits at least one lookahead
+/// past the sending cell.
+pub(crate) struct PacketHandoff {
+    pub(crate) key: u128,
+    pub(crate) link: usize,
+    pub(crate) pkt: super::packet::Packet,
+}
+
+/// Sink-side flow registration crossing shards (`Ctx::flow_start`):
+/// applied by the owning shard at the next barrier, before the flow's
+/// first delivery can possibly happen.
+pub(crate) struct FlowHandoff {
+    pub(crate) flow: u64,
+    pub(crate) born: Time,
+    pub(crate) expected_pkts: u32,
+}
+
+/// Per-shard runtime state, attached to a `Network` only while it is
+/// one shard of a space-parallel run (`Network::shard`).
+pub(crate) struct ShardRt {
+    /// This shard's index.
+    pub(crate) me: u16,
+    /// Owning shard of every node (shared, read-only).
+    pub(crate) node_shard: Arc<Vec<u16>>,
+    /// Outgoing packet handoffs, one ordered channel per destination
+    /// shard; swapped out and routed at each window barrier.
+    pub(crate) pkt_out: Vec<Vec<PacketHandoff>>,
+    /// Outgoing flow registrations, one channel per destination shard.
+    pub(crate) flow_out: Vec<Vec<FlowHandoff>>,
+}
+
+impl ShardRt {
+    fn new(me: u16, node_shard: Arc<Vec<u16>>, shards: usize) -> ShardRt {
+        ShardRt {
+            me,
+            node_shard,
+            pkt_out: (0..shards).map(|_| Vec::new()).collect(),
+            flow_out: (0..shards).map(|_| Vec::new()).collect(),
+        }
+    }
+}
+
+/// Owning shard of every node. Grouped nodes map contiguously
+/// (`group * shards / groups`), top-tier switches (`u32::MAX`)
+/// round-robin by id. A network without shard-group labels (hand-built
+/// test fabrics) degrades to one populated shard — still correct, just
+/// not parallel.
+fn shard_plan(net: &Network, shards: usize) -> Vec<u16> {
+    let n = net.nodes.len();
+    if shards <= 1 || net.shard_group.len() != n {
+        return vec![0; n];
+    }
+    let Some(&gmax) =
+        net.shard_group.iter().filter(|&&g| g != u32::MAX).max()
+    else {
+        return vec![0; n];
+    };
+    let groups = gmax as u64 + 1;
+    net.shard_group
+        .iter()
+        .enumerate()
+        .map(|(id, &g)| {
+            if g == u32::MAX {
+                (id % shards) as u16
+            } else {
+                ((g as u64 * shards as u64) / groups) as u16
+            }
+        })
+        .collect()
+}
+
+/// The PFC pause locality argument, checked at split time: the only
+/// cross-shard read in the dataplane is `node_paused[link.to]` on an
+/// *up*-link's serve path, and a node pauses its inputs only while one
+/// of its own up-outputs is over-watermark. Every cross-shard up-link
+/// must therefore point at a node with no up-outputs (a top-tier
+/// switch), whose pause count is structurally zero — making the zeroed
+/// remote `node_paused` entries exact, not approximate.
+fn assert_pause_locality(net: &Network, plan: &[u16]) {
+    for l in &net.links {
+        if plan[l.from as usize] == plan[l.to as usize] || l.from >= l.to {
+            continue;
+        }
+        let head_has_up = net.nodes[l.to as usize]
+            .ports
+            .iter()
+            .any(|&o| net.links[o].from < net.links[o].to);
+        assert!(
+            !head_has_up,
+            "cross-shard up-link {}->{} points below the top tier; \
+             the shard plan would make PFC pause state non-local",
+            l.from, l.to
+        );
+    }
+}
+
+/// A stub standing in for a node owned by another shard: correct id,
+/// no ports, no in-links, never dispatched to. Its fabric RNG mirrors
+/// the real node's seeding for uniformity but is never drawn from.
+fn stub_node(id: u32, seed: u64) -> Node {
+    Node {
+        id,
+        body: NodeBody::Host(Box::new(crate::host::HostState::new(
+            id,
+            crate::util::rng::Rng::new(seed ^ id as u64),
+        ))),
+        ports: Vec::new(),
+        in_links: Vec::new(),
+        seq: 0,
+        fab_rng: super::network::fab_rng_for(seed, id),
+    }
+}
+
+/// Commands the coordinator sends to a shard worker.
+enum Cmd {
+    /// Process one grid cell: apply the inbound handoffs, then drain
+    /// every local event strictly before `bound`.
+    Window {
+        bound: Time,
+        pkts: Vec<PacketHandoff>,
+        flows: Vec<FlowHandoff>,
+    },
+    Stop,
+}
+
+/// Per-job progress snapshot a worker reports at each barrier.
+#[derive(Clone, Copy)]
+struct JobReport {
+    finish: Option<Time>,
+    hosts: u32,
+}
+
+/// One worker's barrier report.
+struct Report {
+    shard: usize,
+    next_time: Option<Time>,
+    pkt_out: Vec<Vec<PacketHandoff>>,
+    flow_out: Vec<Vec<FlowHandoff>>,
+    jobs: Vec<JobReport>,
+}
+
+/// Completion-rule facts the coordinator needs per job, captured once
+/// at split time.
+struct JobMeta {
+    allreduce: bool,
+    root: Option<u32>,
+    participants: u32,
+    /// Ranks already finished before the split (each shard's clone
+    /// starts from this count, so the global tally subtracts the
+    /// duplicates).
+    base_hosts: u32,
+    done_at_split: bool,
+}
+
+/// Run `net` space-parallel with `net.cfg.shards` shards. Splits the
+/// network, drives the bounded-window barrier loop on worker threads,
+/// and merges everything back so the caller sees exactly the state a
+/// serial run would have produced. Returns the end time (same contract
+/// as `Network::run`/`run_all`).
+pub(crate) fn run_sharded(
+    net: &mut Network,
+    max_time: Time,
+    stop_on_done: bool,
+) -> Time {
+    // lint: allow(wall-clock, engine.wall_secs timer; measurement-only, never fed back)
+    let t0 = std::time::Instant::now();
+    let w = net.lookahead();
+    let shards = net.cfg.shards.max(1) as usize;
+    let plan = Arc::new(shard_plan(net, shards));
+    assert_pause_locality(net, &plan);
+
+    let seed = net.cfg.seed;
+    let base_now = net.now;
+    let setup_seq = net.queue.next_seq();
+    let jobs_meta: Vec<JobMeta> = net
+        .jobs
+        .iter()
+        .map(|j| JobMeta {
+            allreduce: j.spec.algo.is_allreduce(),
+            root: j.spec.collective.completion_rank(),
+            participants: j.spec.participants.len() as u32,
+            base_hosts: j.hosts_finished,
+            done_at_split: j.finish.is_some(),
+        })
+        .collect();
+
+    // ---- split ----------------------------------------------------
+    let mut shard_nets: Vec<Network> = (0..shards)
+        .map(|s| {
+            let mut sn = Network::new(net.cfg.clone());
+            sn.now = base_now;
+            sn.jobs = net.jobs.clone();
+            sn.faults = net.faults.clone();
+            sn.host_slowdown = net.host_slowdown.clone();
+            sn.tracer = net.tracer.fork_for_shard();
+            sn.queue.set_next_seq(setup_seq);
+            sn.shard =
+                Some(Box::new(ShardRt::new(s as u16, plan.clone(), shards)));
+            sn
+        })
+        .collect();
+
+    // route every pending event to its owner (link endpoints are still
+    // in place — the links move below). Arrive payloads migrate to the
+    // destination shard's arena; TraceSample ticks replicate to every
+    // shard under their original key so the samplers stay in lockstep.
+    for (key, ev) in net.queue.drain_entries() {
+        match ev {
+            Event::Arrive { link, packet } => {
+                let d = plan[net.links[link].to as usize] as usize;
+                let pkt = net.arena.take(packet);
+                let id = shard_nets[d].arena.alloc(pkt);
+                shard_nets[d]
+                    .queue
+                    .push_keyed(key, Event::Arrive { link, packet: id });
+            }
+            Event::TxDone { link } => {
+                let s = plan[net.links[link].from as usize] as usize;
+                shard_nets[s].queue.push_keyed(key, Event::TxDone { link });
+            }
+            Event::LinkDownOne { link, count } => {
+                let s = plan[net.links[link].from as usize] as usize;
+                shard_nets[s]
+                    .queue
+                    .push_keyed(key, Event::LinkDownOne { link, count });
+            }
+            Event::LinkUpOne { link, count } => {
+                let s = plan[net.links[link].from as usize] as usize;
+                shard_nets[s]
+                    .queue
+                    .push_keyed(key, Event::LinkUpOne { link, count });
+            }
+            Event::SwitchTimeout { node, slot, generation } => {
+                shard_nets[plan[node as usize] as usize].queue.push_keyed(
+                    key,
+                    Event::SwitchTimeout { node, slot, generation },
+                );
+            }
+            Event::HostTimer { node, timer } => {
+                shard_nets[plan[node as usize] as usize]
+                    .queue
+                    .push_keyed(key, Event::HostTimer { node, timer });
+            }
+            Event::JobWake { node, job } => {
+                shard_nets[plan[node as usize] as usize]
+                    .queue
+                    .push_keyed(key, Event::JobWake { node, job });
+            }
+            Event::Fail { node } => {
+                shard_nets[plan[node as usize] as usize]
+                    .queue
+                    .push_keyed(key, Event::Fail { node });
+            }
+            Event::Recover { node } => {
+                shard_nets[plan[node as usize] as usize]
+                    .queue
+                    .push_keyed(key, Event::Recover { node });
+            }
+            Event::TraceSample => {
+                for sn in shard_nets.iter_mut() {
+                    sn.queue.push_keyed(key, Event::TraceSample);
+                }
+            }
+        }
+    }
+
+    // distribute links (real to the owner — FIFO payloads migrate into
+    // its arena — stubs elsewhere) and nodes, in id order so every
+    // shard's vectors stay globally indexed
+    for (li, mut link) in std::mem::take(&mut net.links).into_iter().enumerate()
+    {
+        let owner = plan[link.from as usize] as usize;
+        for (s, sn) in shard_nets.iter_mut().enumerate() {
+            if s == owner {
+                continue;
+            }
+            sn.links.push(Link::new(
+                link.from,
+                link.from_port,
+                link.to,
+                link.to_port,
+                &net.cfg,
+            ));
+            debug_assert_eq!(sn.links.len() - 1, li);
+        }
+        for q in link.queue.iter_mut() {
+            let pkt = net.arena.take(q.id);
+            q.id = shard_nets[owner].arena.alloc(pkt);
+        }
+        shard_nets[owner].links.insert(li, link);
+    }
+    assert_eq!(
+        net.arena.live(),
+        0,
+        "split left packets behind in the master arena"
+    );
+    let master_paused = std::mem::take(&mut net.node_paused);
+    for (id, node) in std::mem::take(&mut net.nodes).into_iter().enumerate() {
+        let owner = plan[id] as usize;
+        let mut slot = Some(node);
+        for (s, sn) in shard_nets.iter_mut().enumerate() {
+            if s == owner {
+                sn.nodes.push(slot.take().unwrap());
+                // a node's pause count is driven by its own up-outputs,
+                // which the owner also owns; remote copies are zero by
+                // the locality argument checked above
+                sn.node_paused.push(master_paused[id]);
+            } else {
+                sn.nodes.push(stub_node(id as u32, seed));
+                sn.node_paused.push(0);
+            }
+        }
+    }
+
+    // ---- barrier loop ---------------------------------------------
+    let mut next_times: Vec<Option<Time>> =
+        shard_nets.iter().map(|sn| sn.queue.next_time()).collect();
+    let mut inbox_pkts: Vec<Vec<PacketHandoff>> =
+        (0..shards).map(|_| Vec::new()).collect();
+    let mut inbox_flows: Vec<Vec<FlowHandoff>> =
+        (0..shards).map(|_| Vec::new()).collect();
+    let mut shard_jobs: Vec<Vec<JobReport>> = (0..shards)
+        .map(|_| {
+            net.jobs
+                .iter()
+                .map(|j| JobReport {
+                    finish: j.finish,
+                    hosts: j.hosts_finished,
+                })
+                .collect()
+        })
+        .collect();
+    let mut final_now: Option<Time> = None;
+
+    let mut done_nets: Vec<Option<Network>> =
+        (0..shards).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let (rep_tx, rep_rx) = mpsc::channel::<Report>();
+        let (fin_tx, fin_rx) = mpsc::channel::<(usize, Network)>();
+        let mut cmd_txs: Vec<mpsc::Sender<Cmd>> = Vec::with_capacity(shards);
+        for (s, mut sn) in shard_nets.drain(..).enumerate() {
+            let (tx, rx) = mpsc::channel::<Cmd>();
+            cmd_txs.push(tx);
+            let rep = rep_tx.clone();
+            let fin = fin_tx.clone();
+            scope.spawn(move || {
+                while let Ok(cmd) = rx.recv() {
+                    let Cmd::Window { bound, pkts, flows } = cmd else {
+                        break;
+                    };
+                    // inbound registrations land before any event of
+                    // this window — the flow's first delivery is at
+                    // least one full lookahead after its start
+                    for f in flows {
+                        sn.metrics.flows.register(f.flow, f.born, f.expected_pkts);
+                    }
+                    for h in pkts {
+                        // conservative-lookahead causality: a handoff
+                        // sent at t crossed a link with latency >= w,
+                        // so it arrives at or after the sending cell's
+                        // end — never in this shard's past
+                        debug_assert!(
+                            (h.key >> 64) as Time >= sn.now,
+                            "causality violated: handoff at t={} behind \
+                             shard clock {}",
+                            (h.key >> 64) as Time,
+                            sn.now,
+                        );
+                        let id = sn.arena.alloc(h.pkt);
+                        sn.queue.push_keyed(
+                            h.key,
+                            Event::Arrive { link: h.link, packet: id },
+                        );
+                    }
+                    while let Some((t, ev)) = sn.queue.pop_before(bound) {
+                        sn.dispatch(t, ev);
+                    }
+                    let rt = sn.shard.as_mut().expect("worker net is a shard");
+                    let pkt_out =
+                        rt.pkt_out.iter_mut().map(std::mem::take).collect();
+                    let flow_out =
+                        rt.flow_out.iter_mut().map(std::mem::take).collect();
+                    let jobs = sn
+                        .jobs
+                        .iter()
+                        .map(|j| JobReport {
+                            finish: j.finish,
+                            hosts: j.hosts_finished,
+                        })
+                        .collect();
+                    let _ = rep.send(Report {
+                        shard: s,
+                        next_time: sn.queue.next_time(),
+                        pkt_out,
+                        flow_out,
+                        jobs,
+                    });
+                }
+                // per-shard audit (check 5 knows a shard's local queue
+                // may legitimately be non-drained/non-empty)
+                sn.maybe_audit();
+                let _ = fin.send((s, sn));
+            });
+        }
+        drop(rep_tx);
+        drop(fin_tx);
+
+        loop {
+            // the earliest pending work anywhere: shard-local events
+            // plus handoffs not yet delivered (their event time is the
+            // key's upper 64 bits)
+            let mut global_next: Option<Time> =
+                next_times.iter().flatten().copied().min();
+            for v in &inbox_pkts {
+                for h in v {
+                    let t = (h.key >> 64) as Time;
+                    global_next =
+                        Some(global_next.map_or(t, |g| g.min(t)));
+                }
+            }
+            let Some(next) = global_next else {
+                break; // drained (pending flow registrations merge below)
+            };
+            if next > max_time {
+                final_now = Some(max_time);
+                break;
+            }
+            let bound = cell_end(next, w).min(max_time.saturating_add(1));
+            for (s, tx) in cmd_txs.iter().enumerate() {
+                tx.send(Cmd::Window {
+                    bound,
+                    pkts: std::mem::take(&mut inbox_pkts[s]),
+                    flows: std::mem::take(&mut inbox_flows[s]),
+                })
+                .expect("shard worker died mid-run");
+            }
+            for _ in 0..shards {
+                let r = rep_rx.recv().expect("shard worker died mid-run");
+                next_times[r.shard] = r.next_time;
+                for (d, v) in r.pkt_out.into_iter().enumerate() {
+                    inbox_pkts[d].extend(v);
+                }
+                for (d, v) in r.flow_out.into_iter().enumerate() {
+                    inbox_flows[d].extend(v);
+                }
+                shard_jobs[r.shard] = r.jobs;
+            }
+            // job completion is checked only at cell boundaries — the
+            // serial engine applies the identical rule, which is what
+            // keeps the stop decision shard-count-invariant
+            if stop_on_done
+                && !jobs_meta.is_empty()
+                && jobs_meta.iter().enumerate().all(|(j, m)| {
+                    if !m.allreduce || m.done_at_split {
+                        return true;
+                    }
+                    if shard_jobs.iter().any(|sj| sj[j].finish.is_some()) {
+                        return true;
+                    }
+                    if m.root.is_some() {
+                        return false;
+                    }
+                    // each rank finishes on exactly one shard; every
+                    // clone started from base_hosts, so subtract the
+                    // duplicated baseline
+                    let total: u32 = shard_jobs
+                        .iter()
+                        .map(|sj| sj[j].hosts - m.base_hosts)
+                        .sum::<u32>()
+                        + m.base_hosts;
+                    total == m.participants
+                })
+            {
+                break;
+            }
+        }
+        for tx in &cmd_txs {
+            let _ = tx.send(Cmd::Stop);
+        }
+        for _ in 0..shards {
+            let (s, sn) = fin_rx.recv().expect("shard worker lost at stop");
+            done_nets[s] = Some(sn);
+        }
+    });
+
+    // ---- merge -----------------------------------------------------
+    let n_nodes = plan.len();
+    let mut merged_nodes: Vec<Option<Node>> =
+        (0..n_nodes).map(|_| None).collect();
+    let mut merged_links: Vec<Option<Link>> = Vec::new();
+    let mut merged_paused: Vec<u32> = vec![0; n_nodes];
+    let mut tracers: Vec<Tracer> = Vec::with_capacity(shards);
+    let mut sample_keys: BTreeSet<u128> = BTreeSet::new();
+    let mut end_now = base_now;
+    let mut merged_seq = net.queue.next_seq();
+    let (mut peak, mut slots, mut allocs) = (0u64, 0u64, 0u64);
+
+    for (s, sn) in done_nets.into_iter().enumerate() {
+        let mut sn = sn.expect("missing shard network at merge");
+        end_now = end_now.max(sn.now);
+        net.events_processed += sn.events_processed;
+        merged_seq = merged_seq.max(sn.queue.next_seq());
+        for (id, node) in
+            std::mem::take(&mut sn.nodes).into_iter().enumerate()
+        {
+            if plan[id] == s as u16 {
+                merged_paused[id] = sn.node_paused[id];
+                merged_nodes[id] = Some(node);
+            }
+        }
+        if merged_links.is_empty() {
+            merged_links = (0..sn.links.len()).map(|_| None).collect();
+        }
+        for (li, mut link) in
+            std::mem::take(&mut sn.links).into_iter().enumerate()
+        {
+            if plan[link.from as usize] != s as u16 {
+                continue;
+            }
+            for q in link.queue.iter_mut() {
+                let pkt = sn.arena.take(q.id);
+                q.id = net.arena.alloc(pkt);
+            }
+            merged_links[li] = Some(link);
+        }
+        for (key, ev) in sn.queue.drain_entries() {
+            match ev {
+                Event::Arrive { link, packet } => {
+                    let pkt = sn.arena.take(packet);
+                    let id = net.arena.alloc(pkt);
+                    net.queue.push_keyed(
+                        key,
+                        Event::Arrive { link, packet: id },
+                    );
+                }
+                // every shard carries a lockstep replica of the
+                // sampler tick — keep exactly one per key
+                Event::TraceSample => {
+                    if sample_keys.insert(key) {
+                        net.queue.push_keyed(key, Event::TraceSample);
+                    }
+                }
+                other => net.queue.push_keyed(key, other),
+            }
+        }
+        assert_eq!(
+            sn.arena.live(),
+            0,
+            "shard {s} leaked {} packet(s) across the merge",
+            sn.arena.live()
+        );
+        peak += sn.arena.peak_live() as u64;
+        slots += sn.arena.slot_count() as u64;
+        allocs += sn.arena.allocs();
+        net.metrics.merge(&sn.metrics);
+        for (j, job) in sn.jobs.iter().enumerate() {
+            net.jobs[j].merge_from(job);
+        }
+        tracers.push(std::mem::replace(&mut sn.tracer, Tracer::off()));
+    }
+
+    // handoffs still in the coordinator's inboxes when the run stopped
+    // are in-flight packets: rematerialize them exactly as the serial
+    // engine would hold them (pending Arrive events under their keys)
+    for v in inbox_pkts {
+        for h in v {
+            let id = net.arena.alloc(h.pkt);
+            net.queue
+                .push_keyed(h.key, Event::Arrive { link: h.link, packet: id });
+        }
+    }
+    for v in inbox_flows {
+        for f in v {
+            net.metrics.flows.register(f.flow, f.born, f.expected_pkts);
+        }
+    }
+
+    net.nodes = merged_nodes
+        .into_iter()
+        .map(|n| n.expect("node lost in merge"))
+        .collect();
+    net.links = merged_links
+        .into_iter()
+        .map(|l| l.expect("link lost in merge"))
+        .collect();
+    net.node_paused = merged_paused;
+    net.queue.set_next_seq(merged_seq);
+    net.tracer.merge_shards(tracers);
+    net.now = final_now.unwrap_or(end_now);
+
+    let e = &mut net.metrics.engine;
+    e.events = net.events_processed;
+    e.wall_secs += t0.elapsed().as_secs_f64();
+    e.peak_live_packets = peak;
+    e.arena_slots = slots;
+    e.arena_allocs = allocs;
+
+    net.maybe_audit();
+    net.now
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClosConfig, SimConfig};
+    use crate::loadbalance::LoadBalancer;
+    use crate::util::rng::Rng;
+
+    /// The causality theorem the conservative engine rests on: with
+    /// window width w = min link latency, an event sent at time t
+    /// inside cell [k*w, (k+1)*w) produces cross-shard work no earlier
+    /// than t + w, which is at or past the cell end — so handing
+    /// packets over only at barriers can never deliver into a shard's
+    /// past. Checked over random (t, w) pairs including the u64 edge.
+    #[test]
+    fn lookahead_grid_never_delivers_into_the_past() {
+        let mut rng = Rng::new(0x9DE5);
+        for i in 0..10_000 {
+            let w = 1 + rng.gen_range(1 << 20);
+            let t = if i % 97 == 0 {
+                // near (not at) the u64 edge: cell_end saturates to
+                // MAX, which is still strictly past any t < MAX
+                u64::MAX - 1 - rng.gen_range(1 << 20)
+            } else {
+                rng.next_u64() >> (rng.gen_range(40) + 1)
+            };
+            let end = cell_end(t, w);
+            assert!(end > t, "cell end {end} not past t={t} (w={w})");
+            assert!(
+                end <= t.saturating_add(w),
+                "cell end {end} overshoots t+w (t={t}, w={w})"
+            );
+            // earliest possible cross-shard arrival from this cell
+            assert!(
+                t.saturating_add(w) >= end,
+                "arrival t+w={} inside the sending cell (end {end})",
+                t.saturating_add(w)
+            );
+            // the grid is anchored at 0: cell ends are multiples of w
+            if end != u64::MAX {
+                assert_eq!(end % w, 0, "cell end {end} off-grid (w={w})");
+            }
+            // monotone: later events never land in earlier cells
+            assert!(cell_end(t.saturating_add(1), w) >= end);
+        }
+    }
+
+    fn built(cfg: ClosConfig) -> Network {
+        crate::topology::build(cfg, SimConfig::default(), LoadBalancer::default()).0
+    }
+
+    /// The split plan is total, in-range, pure in its inputs, and
+    /// keeps every non-top-tier link shard-local — the structural fact
+    /// `assert_pause_locality` and the barrier protocol both rest on.
+    #[test]
+    fn shard_plan_is_total_and_pause_local() {
+        for shards in [1usize, 2, 3, 4, 8] {
+            for cfg in [ClosConfig::tiny(), ClosConfig::small3()] {
+                let net = built(cfg);
+                let plan = shard_plan(&net, shards);
+                assert_eq!(plan.len(), net.nodes.len());
+                assert!(plan.iter().all(|&s| (s as usize) < shards.max(1)));
+                assert_eq!(plan, shard_plan(&net, shards), "plan not pure");
+                if shards <= 1 {
+                    assert!(plan.iter().all(|&s| s == 0));
+                }
+                assert_pause_locality(&net, &plan);
+                // only links touching a top-tier switch may cross
+                for l in &net.links {
+                    let top = |id: u32| {
+                        net.shard_group[id as usize] == u32::MAX
+                    };
+                    if !top(l.from) && !top(l.to) {
+                        assert_eq!(
+                            plan[l.from as usize], plan[l.to as usize],
+                            "non-top link {} -> {} crosses shards",
+                            l.from, l.to
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// A network whose shard labels are absent (hand-built fabrics
+    /// that bypass `topology::build`) degrades to one populated shard
+    /// instead of splitting on garbage.
+    #[test]
+    fn missing_labels_degrade_to_one_shard() {
+        let mut net = built(ClosConfig::tiny());
+        net.shard_group.clear();
+        let plan = shard_plan(&net, 4);
+        assert!(plan.iter().all(|&s| s == 0));
+    }
+}

@@ -255,6 +255,42 @@ impl Clos {
         (0..self.n_hosts()).collect()
     }
 
+    /// Per-node space-partition label for the sharded engine
+    /// ([`crate::sim::shard`], DESIGN.md §2.10): hosts and non-top
+    /// switches are labelled with their top-level subtree — the pod in
+    /// a 3-tier fabric, the leaf group in the 2-tier case — and
+    /// top-tier switches get `u32::MAX` (they belong to no subtree and
+    /// are dealt round-robin across shards at run time). Every link
+    /// except host/switch-to-top-tier uplinks and top-tier downlinks
+    /// stays inside one group, so conservative windowing only has to
+    /// hand packets across shards at the core crossing.
+    pub fn shard_groups(&self) -> Vec<u32> {
+        let t_top = self.tiers();
+        // hosts under one top-level subtree
+        let per_pod = self.hosts_below(t_top - 1).max(1);
+        let n_sw: u32 = (1..=t_top).map(|t| self.cfg.tier_size(t)).sum();
+        let mut g = Vec::with_capacity((self.n_hosts() + n_sw) as usize);
+        for h in 0..self.n_hosts() {
+            g.push(h / per_pod);
+        }
+        for t in 1..=t_top {
+            if t == t_top {
+                g.extend(
+                    std::iter::repeat(u32::MAX)
+                        .take(self.cfg.tier_size(t) as usize),
+                );
+                continue;
+            }
+            // tier-t subtrees per pod
+            let per = (per_pod / self.hosts_below(t)).max(1);
+            let w_t = self.w(t);
+            for idx in 0..self.cfg.tier_size(t) {
+                g.push((idx / w_t) / per);
+            }
+        }
+        g
+    }
+
     /// All top-tier switches (the candidate static-tree roots).
     pub fn all_spines(&self) -> Vec<NodeId> {
         let t = self.tiers();
@@ -340,6 +376,8 @@ pub fn build(
             }
         }
     }
+
+    net.shard_group = ft.shard_groups();
 
     (net, ft)
 }
@@ -444,6 +482,58 @@ mod tests {
         }
         assert_eq!(counts, [16, 8, 4]);
         assert_eq!(ft.all_spines().len(), 4);
+    }
+
+    #[test]
+    fn shard_groups_follow_pods() {
+        // 2-tier paper fabric: the "pod" is a leaf group.
+        let (net, ft) = build(
+            FatTreeConfig::paper(),
+            SimConfig::default(),
+            LoadBalancer::default(),
+        );
+        let g = &net.shard_group;
+        assert_eq!(g.len(), net.nodes.len());
+        assert_eq!(g[0], 0);
+        assert_eq!(g[31], 0);
+        assert_eq!(g[32], 1);
+        assert_eq!(g[1023], 31);
+        // leaf l belongs to group l; spines are unpinned
+        assert_eq!(g[ft.leaf_id(7) as usize], 7);
+        assert_eq!(g[ft.spine_id(0) as usize], u32::MAX);
+        assert_eq!(g[ft.spine_id(31) as usize], u32::MAX);
+
+        // 3-tier: hosts, ToRs and aggs of one pod share a group.
+        let (net, ft) = build(
+            ClosConfig::small3(),
+            SimConfig::default(),
+            LoadBalancer::default(),
+        );
+        let g = &net.shard_group;
+        for h in 0..64u32 {
+            assert_eq!(g[h as usize], h / 16, "host {h}");
+        }
+        for tor in 0..16u32 {
+            assert_eq!(g[ft.switch_id(1, tor) as usize], tor / 4, "tor {tor}");
+        }
+        for agg in 0..8u32 {
+            let id = ft.switch_id(2, agg) as usize;
+            assert!(g[id] < 4, "agg {agg} must sit in a pod");
+            // every agg shares its group with the hosts it serves
+            let some_host = (g[id] * 16) as usize;
+            assert_eq!(g[id], g[some_host]);
+        }
+        for core in ft.all_spines() {
+            assert_eq!(g[core as usize], u32::MAX);
+        }
+
+        // a non-core link never crosses groups
+        for l in &net.links {
+            let (a, b) = (g[l.from as usize], g[l.to as usize]);
+            if a != u32::MAX && b != u32::MAX {
+                assert_eq!(a, b, "link {}->{} crosses pods", l.from, l.to);
+            }
+        }
     }
 
     #[test]

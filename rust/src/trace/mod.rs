@@ -118,8 +118,10 @@ pub struct Sample {
     pub links: Vec<LinkSample>,
 }
 
-/// Job-lifecycle span kinds, in rough temporal order.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Job-lifecycle span kinds, in rough temporal order (the derived
+/// `Ord` follows that order — the sharded-engine merge uses it as a
+/// sort tie-breaker).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum SpanKind {
     /// Job installed into the fabric (trees programmed, hosts armed).
     Install,
@@ -256,7 +258,7 @@ pub struct WaitRecord {
 }
 
 /// Seed-derived per-job block selection for the flight recorder.
-#[derive(Debug)]
+#[derive(Clone, Debug)]
 struct TracedJob {
     total_blocks: u32,
     sel: Vec<bool>,
@@ -529,6 +531,121 @@ impl Tracer {
         self.state
             .as_ref()
             .map_or((0, 0), |s| (s.hops_dropped, s.waits_dropped))
+    }
+
+    /// An empty recorder sharing this tracer's spec, block selection
+    /// and sampler baseline — one per shard of a space-parallel run
+    /// (`sim/shard.rs`). Forking a disabled tracer stays disabled, so
+    /// the zero-footprint contract survives sharding.
+    pub fn fork_for_shard(&self) -> Tracer {
+        let Some(s) = self.state.as_ref() else {
+            return Tracer::off();
+        };
+        Tracer {
+            state: Some(Box::new(TraceState {
+                spec: s.spec.clone(),
+                samples: VecDeque::new(),
+                samples_evicted: 0,
+                spans: Vec::new(),
+                spans_dropped: 0,
+                trees: Vec::new(),
+                trees_dropped: 0,
+                hops: Vec::new(),
+                hops_dropped: 0,
+                waits: Vec::new(),
+                waits_dropped: 0,
+                traced: s.traced.clone(),
+                prev_busy: s.prev_busy.clone(),
+                prev_t: s.prev_t,
+            })),
+        }
+    }
+
+    /// Fold per-shard recorders back into this (master) tracer in a
+    /// canonical order, so a sharded run's trace artifacts are a
+    /// deterministic function of (scenario, shard count):
+    ///
+    /// - sampler ticks are unioned by tick time — gauges add (each
+    ///   shard counted only its own arena/descriptors/marks), per-link
+    ///   snapshots concatenate and sort by link id;
+    /// - spans/trees/hops/waits concatenate and stable-sort by their
+    ///   natural time-major keys;
+    /// - drop counters add, and the merged logs are re-capped to the
+    ///   spec limits.
+    ///
+    /// No-op when tracing is off (the forks were all off too).
+    pub fn merge_shards(&mut self, shards: Vec<Tracer>) {
+        let Some(s) = self.state.as_mut() else { return };
+        let mut by_t: BTreeMap<Time, Sample> = BTreeMap::new();
+        let mut absorb = |samples: &mut VecDeque<Sample>| {
+            for sm in samples.drain(..) {
+                let e = by_t.entry(sm.t_ps).or_insert_with(|| Sample {
+                    t_ps: sm.t_ps,
+                    arena_live: 0,
+                    ecn_marks: 0,
+                    live_descriptors: 0,
+                    links: Vec::new(),
+                });
+                e.arena_live += sm.arena_live;
+                e.ecn_marks += sm.ecn_marks;
+                e.live_descriptors += sm.live_descriptors;
+                e.links.extend(sm.links);
+            }
+        };
+        absorb(&mut s.samples);
+        for shard in shards {
+            let Some(mut f) = shard.state else { continue };
+            absorb(&mut f.samples);
+            s.samples_evicted += f.samples_evicted;
+            s.spans.append(&mut f.spans);
+            s.spans_dropped += f.spans_dropped;
+            s.trees.append(&mut f.trees);
+            s.trees_dropped += f.trees_dropped;
+            s.hops.append(&mut f.hops);
+            s.hops_dropped += f.hops_dropped;
+            s.waits.append(&mut f.waits);
+            s.waits_dropped += f.waits_dropped;
+        }
+        for mut sm in by_t.into_values() {
+            sm.links.sort_by_key(|l| l.link);
+            if s.samples.len() >= s.spec.ring_capacity {
+                s.samples.pop_front();
+                s.samples_evicted += 1;
+            }
+            s.samples.push_back(sm);
+        }
+        s.spans.sort_by_key(|sp| {
+            (sp.t_ps, sp.job, sp.node, sp.kind, sp.block, sp.detail)
+        });
+        s.trees.sort_by_key(|t| {
+            (t.t_ps, t.switch, t.tenant, t.block, t.contributed)
+        });
+        s.hops.sort_by_key(|h| {
+            (h.t_enq, h.link, h.tenant, h.block, h.queue_ps)
+        });
+        s.waits.sort_by_key(|w| {
+            (w.t_start, w.node, w.tenant, w.block, w.t_end)
+        });
+        let spans_cap = s.spec.max_spans;
+        if s.spans.len() > spans_cap {
+            s.spans_dropped += (s.spans.len() - spans_cap) as u64;
+            s.spans.truncate(spans_cap);
+        }
+        let trees_cap = s.spec.max_tree_records;
+        if s.trees.len() > trees_cap {
+            s.trees_dropped += (s.trees.len() - trees_cap) as u64;
+            s.trees.truncate(trees_cap);
+        }
+        let hops_cap = s.spec.max_hops;
+        if s.hops.len() > hops_cap {
+            s.hops_dropped += (s.hops.len() - hops_cap) as u64;
+            s.hops.truncate(hops_cap);
+        }
+        let waits_cap = s.spec.max_waits;
+        if s.waits.len() > waits_cap {
+            s.waits_dropped += (s.waits.len() - waits_cap) as u64;
+            s.waits.truncate(waits_cap);
+        }
     }
 }
 

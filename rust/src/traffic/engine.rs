@@ -228,12 +228,8 @@ fn closed_wake(
         th.msg_count += 1;
         th.flow = flow_id(me, th.msg_count);
         let now = ctx.now;
-        ctx.metrics.flows.on_start(
-            th.flow,
-            now,
-            pkts,
-            pkts as u64 * payload,
-        );
+        let flow = th.flow;
+        ctx.flow_start(dst, flow, now, pkts, pkts as u64 * payload);
         track_unacked(th, dst, pkts);
     }
 
@@ -353,7 +349,7 @@ fn open_wake(
         th.msg_count += 1;
         let flow = flow_id(me, th.msg_count);
         // FCT clock starts at *arrival*, so host queueing counts
-        ctx.metrics.flows.on_start(flow, born, pkts, pkts as u64 * payload);
+        ctx.flow_start(dst, flow, born, pkts, pkts as u64 * payload);
         th.backlog.push_back(PendingFlow { dst, pkts, flow });
     }
 

@@ -1,0 +1,209 @@
+//! Sharded bounded-window PDES engine (DESIGN.md §2.10): shard-count
+//! invariance pins and properties. The contract under test:
+//!
+//! * `shards = 1` is **bit-identical** (metrics fingerprint) to the
+//!   serial engine (`shards = 0`) on every scenario — clean, faulted,
+//!   cross-traffic, multi-tier;
+//! * the fingerprint is **invariant in the shard count**: any fixed
+//!   `N` reproduces the serial world, and the same `(seed, N)` is
+//!   deterministic run to run;
+//! * cross-shard packet migration never leaks arena slots and never
+//!   strands events (the scheduler suite's zero-leak bar, space-
+//!   parallel edition). Causality itself — no handoff ever delivered
+//!   into a shard's past — is a debug assertion on the barrier path,
+//!   armed in every run below, plus the grid property tests in
+//!   `sim/shard.rs`.
+
+mod common;
+
+use canary::collectives::{runner, Algo};
+use canary::config::{FatTreeConfig, SimConfig};
+use canary::faults::FaultSpec;
+use canary::sim::US;
+use canary::topology::FatTree;
+use canary::traffic::TrafficSpec;
+use canary::util::proptest_lite::check_property;
+use canary::util::rng::Rng;
+use canary::workload::{JobBuilder, ScenarioBuilder};
+use common::{fingerprint_bounded, lossy_scenario, verify};
+
+/// Rebuildable scenario table: clean, churny (flap + straggler +
+/// timed spine failure), and cross-traffic worlds, each a fresh
+/// builder per call so every engine variant starts identical.
+fn scenario(kind: &str) -> ScenarioBuilder {
+    match kind {
+        "clean" => lossy_scenario(8, 64),
+        "churny" => {
+            let ft = FatTree { cfg: FatTreeConfig::tiny() };
+            lossy_scenario(8, 64).faults(
+                FaultSpec::default()
+                    .with_link_flap(0, 8, 5 * US, 40 * US)
+                    .with_straggler(3, 4)
+                    .with_switch_fail(ft.spine_id(1), 20 * US, Some(60 * US)),
+            )
+        }
+        "traffic" => ScenarioBuilder::new(FatTreeConfig::tiny())
+            .sim(SimConfig::default().with_values(true))
+            .traffic(Some(TrafficSpec::uniform()))
+            .job(
+                JobBuilder::new(Algo::Canary)
+                    .hosts(6)
+                    .data_bytes(64 * 1024)
+                    .record_results(true),
+            ),
+        "tier3" => ScenarioBuilder::new(FatTreeConfig::small3())
+            .sim(SimConfig::default().with_values(true))
+            .job(
+                JobBuilder::new(Algo::Canary)
+                    .hosts(16)
+                    .data_bytes(32 * 1024)
+                    .record_results(true),
+            ),
+        other => panic!("unknown scenario '{other}'"),
+    }
+}
+
+/// Fingerprint of `kind` under a given shard count (0 = serial).
+fn fp(kind: &str, shards: u32, seed: u64) -> u64 {
+    let mut sc = scenario(kind);
+    sc.sim.shards = shards;
+    fingerprint_bounded(&sc, seed, 5_000_000 * US)
+}
+
+// ------------------------------------------------------ invariance pins
+
+/// `--shards 1` runs the full split/barrier/merge machinery with one
+/// worker and must land on the serial engine's exact fingerprint, on
+/// every scenario kind.
+#[test]
+fn one_shard_is_bit_identical_to_serial() {
+    for kind in ["clean", "churny", "traffic", "tier3"] {
+        assert_eq!(
+            fp(kind, 0, 42),
+            fp(kind, 1, 42),
+            "{kind}: shards=1 diverged from the serial engine"
+        );
+    }
+}
+
+/// The shard count is not allowed to be observable: 2 and 4 shards
+/// reproduce the serial fingerprint bit for bit (the conservative
+/// window protocol never reorders anything).
+#[test]
+fn shard_count_is_not_observable_in_the_fingerprint() {
+    for kind in ["clean", "churny", "traffic", "tier3"] {
+        let serial = fp(kind, 0, 42);
+        for shards in [2, 4] {
+            assert_eq!(
+                serial,
+                fp(kind, shards, 42),
+                "{kind}: shards={shards} diverged from serial"
+            );
+        }
+    }
+}
+
+/// Fixed (seed, shard count) is deterministic run to run, and the
+/// seed still matters (the worlds are distinct, not degenerate).
+#[test]
+fn sharded_runs_are_deterministic_from_their_seed() {
+    assert_eq!(
+        fp("churny", 4, 42),
+        fp("churny", 4, 42),
+        "same seed + same shard count diverged"
+    );
+    assert_ne!(
+        fp("churny", 4, 42),
+        fp("churny", 4, 43),
+        "distinct seeds collapsed to one world"
+    );
+}
+
+// --------------------------------------------------------- end to end
+
+/// A sharded 3-tier run completes with exact allreduce values — the
+/// merge path reassembles per-host results, not just counters.
+#[test]
+fn sharded_allreduce_produces_exact_values() {
+    for shards in [1, 3, 4] {
+        let mut sc = scenario("tier3");
+        sc.sim.shards = shards;
+        let mut exp = sc.build(7);
+        let res = runner::run_to_completion(&mut exp.net, u64::MAX);
+        assert!(res[0].completed, "shards={shards}: job did not complete");
+        verify(&exp).unwrap_or_else(|e| {
+            panic!("shards={shards}: values wrong: {e}")
+        });
+    }
+}
+
+/// Canary survives a mid-operation access-link flap under the sharded
+/// engine exactly as it does serially — recovery machinery (retrans
+/// timers, restore traffic) works across the shard boundary.
+#[test]
+fn sharded_canary_survives_a_flap_with_recovery() {
+    let mut sc = scenario("churny");
+    sc.sim.shards = 4;
+    let mut exp = sc.build(31);
+    let res = runner::run_to_completion(&mut exp.net, 5_000_000 * US);
+    assert!(res[0].completed, "sharded canary did not recover");
+    verify(&exp).unwrap();
+    let m = &exp.net.metrics;
+    assert_eq!((m.link_flaps, m.link_recoveries), (1, 1));
+    assert_eq!((m.switch_failures, m.switch_recoveries), (1, 1));
+}
+
+// ------------------------------------------------------ leak property
+
+/// Random scenarios (hosts, payload, faults, shard count): the
+/// sharded engine matches the serial fingerprint, drains every event,
+/// and returns every packet to the arena — including packets that
+/// migrated across shards mid-flight.
+#[test]
+fn random_scenarios_shard_invariant_and_leak_free() {
+    check_property("pdes-invariance", 0x5A4D, 6, |rng: &mut Rng| {
+        let hosts = 4 + rng.gen_range(5) as u32; // 4..=8
+        let kib = 8 << rng.gen_range(3); // 8/16/32 KiB
+        let shards = 2 + rng.gen_range(3) as u32; // 2..=4
+        let seed = rng.next_u64();
+        let mut spec = FaultSpec::default();
+        if rng.chance(0.5) {
+            let down = (1 + rng.gen_range(30)) * US;
+            spec = spec.with_link_flap(0, 8, down, down + 35 * US);
+        }
+        if rng.chance(0.3) {
+            spec = spec.with_straggler(rng.gen_range(hosts as u64) as u32, 3);
+        }
+        // both engines are driven identically: kick, then drain every
+        // event (run_all) so the leak check sees the final world
+        let drained_fp = |n_shards: u32| {
+            let mut sc = lossy_scenario(hosts, kib).faults(spec.clone());
+            sc.sim.shards = n_shards;
+            let mut exp = sc.build(seed);
+            exp.net.kick_jobs();
+            exp.net.run_all(u64::MAX);
+            let f = exp
+                .net
+                .metrics
+                .fingerprint(exp.net.now, exp.net.events_processed);
+            (f, exp)
+        };
+        let (serial, _) = drained_fp(0);
+        let (sharded, exp) = drained_fp(shards);
+        if serial != sharded {
+            return Err(format!(
+                "shards={shards} diverged from serial under {spec:?}"
+            ));
+        }
+        if exp.net.arena.live() != 0 {
+            return Err(format!(
+                "{} packet ids leaked across the shard boundary",
+                exp.net.arena.live()
+            ));
+        }
+        if !exp.net.queue.is_empty() {
+            return Err("events left behind after the merge".into());
+        }
+        Ok(())
+    });
+}
